@@ -1,0 +1,33 @@
+//! Case-2 (§VII.B, Fig. 6): UGVs in motion — Vp = 1 m/s, Va = 3 m/s.
+//!
+//! Runs the dynamic scenario at r ∈ {0.3, 0.7, 1.0}, prints the
+//! distance/latency series, and shows the β cut-off doing its job.
+//!
+//! ```sh
+//! cargo run --release --example dynamic_mobility
+//! ```
+
+use anyhow::Result;
+use heteroedge::experiments::{fig6, Scale};
+
+fn main() -> Result<()> {
+    let out = fig6::run(Scale::Full)?;
+    println!("{}", out.rendered);
+    for s in &out.series {
+        let max_d = s.points.last().map(|p| p.distance_m).unwrap_or(0.0);
+        let stopped = s
+            .points
+            .iter()
+            .find(|p| !p.offloading)
+            .map(|p| format!("β stop at {:.1} m", p.distance_m))
+            .unwrap_or_else(|| "never stopped".into());
+        println!(
+            "r = {:.1}: reached {:.1} m, total ops {:.1} s, {}",
+            s.r,
+            max_d,
+            s.points.last().unwrap().ops_time_s,
+            stopped
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,257 @@
+//! End-to-end driver: the full HeteroEdge stack on a real workload.
+//!
+//! Two node threads, each with its OWN PJRT engine over the AOT
+//! artifacts (L1 Pallas kernels inside), exchanging frames through the
+//! in-tree MQTT broker over loopback TCP — Python nowhere on the path:
+//!
+//! ```text
+//! primary (Nano role)                     auxiliary (Xavier role)
+//!   masker artifact (PJRT)                  subscribe frames/aux
+//!   solver picks r / fixed sweep            decode -> batch -> PJRT
+//!   RLE-encode -> MQTT publish   ----->     segnet+posenet artifacts
+//!   local share -> PJRT                     publish results/primary
+//!   collect results       <-----
+//! ```
+//!
+//! Reports wall-clock latency/throughput for r = 0 (all-local baseline)
+//! vs the solver's r*, plus bandwidth accounting — the headline
+//! experiment, on real model execution. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example full_eval
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use heteroedge::coordinator::profile_exchange::{
+    DeviceProfileMsg, FRAMES_TOPIC_PREFIX, RESULTS_TOPIC_PREFIX,
+};
+use heteroedge::frames::codec::{decode_frame, encode_masked};
+use heteroedge::frames::{stack_frames, Frame, SceneGenerator, FRAME_PIXELS};
+use heteroedge::net::mqtt::{Broker, Client, QoS};
+use heteroedge::runtime::{Engine, ModelPool, Tensor};
+use heteroedge::solver::HeteroEdgeSolver;
+use heteroedge::workload::Workload;
+
+const N_FRAMES: usize = 48;
+const MODELS: [&str; 2] = ["segnet", "posenet"];
+
+/// Device heterogeneity emulation: both node threads share this host's
+/// CPU, so the Nano/Xavier asymmetry the paper exploits (Table I: 68.34 s
+/// vs 19.0 s for the same batch, ≈3.6x) is emulated by dilating the
+/// primary's compute wall-clock by the calibrated speed factor — the
+/// auxiliary thread runs at host speed (it plays the Xavier). See
+/// DESIGN.md's substitution table.
+fn nano_dilation() -> f64 {
+    heteroedge::device::DeviceSpec::xavier().speed_factor
+}
+
+/// Execute on the primary with Nano-speed emulation.
+fn primary_exec(pool: &mut ModelPool, model: &str, batch: &Tensor) -> Result<Vec<Tensor>> {
+    let t0 = Instant::now();
+    let out = pool.run_frames(model, batch)?;
+    let w = t0.elapsed().as_secs_f64();
+    std::thread::sleep(Duration::from_secs_f64(w * (nano_dilation() - 1.0)));
+    Ok(out)
+}
+
+/// Auxiliary node: receive frames until "done", execute the pair, reply.
+fn auxiliary(addr: std::net::SocketAddr, run: usize) -> Result<()> {
+    let mut pool = ModelPool::new(Engine::from_default_dir()?);
+    // warm up: compile executables before declaring ready (the paper's
+    // TensorRT engines are likewise prebuilt; compile time is not T1)
+    for m in MODELS {
+        for b in [1usize, 8] {
+            pool.engine_mut().load(m, b)?;
+        }
+    }
+    let mut client = Client::connect(addr, &format!("auxiliary-{run}"))?;
+    client.subscribe(&format!("{FRAMES_TOPIC_PREFIX}/aux-{run}"))?;
+    // share our profile (retained) like the paper's testbed does
+    let profile = DeviceProfileMsg {
+        at: 0.0,
+        mem_pct: 30.0,
+        power_w: 1.0,
+        busy: 0.0,
+        secs_per_image: 0.0,
+        p_available_w: 20.0,
+    };
+    client.publish(
+        &DeviceProfileMsg::topic("auxiliary"),
+        &profile.encode(),
+        QoS::AtLeastOnce,
+        true,
+    )?;
+    // run-scoped ready handshake: the primary won't stream frames until
+    // our subscription is live (QoS0 frames would otherwise be dropped).
+    // Retained so the order of subscribe/publish between threads doesn't
+    // matter; the topic is unique per run so no stale state leaks.
+    client.publish(
+        &format!("{RESULTS_TOPIC_PREFIX}/primary-{run}"),
+        b"ready",
+        QoS::AtLeastOnce,
+        true,
+    )?;
+
+    let mut pending: Vec<Frame> = Vec::new();
+    let mut done = 0usize;
+    loop {
+        let Some(msg) = client.recv_timeout(Duration::from_secs(30)) else {
+            anyhow::bail!("auxiliary timed out waiting for frames");
+        };
+        if msg.payload == b"done" {
+            break;
+        }
+        let (id, pixels) = decode_frame(&msg.payload)?;
+        pending.push(Frame {
+            id,
+            pixels,
+            truth_mask: vec![0.0; FRAME_PIXELS],
+            classes: vec![],
+        });
+        // execute in compiled-batch-size chunks as they fill
+        if pending.len() == 8 {
+            let batch = stack_frames(&pending);
+            for m in MODELS {
+                pool.run_frames(m, &batch)?;
+            }
+            done += pending.len();
+            pending.clear();
+        }
+    }
+    if !pending.is_empty() {
+        let batch = stack_frames(&pending);
+        for m in MODELS {
+            pool.run_frames(m, &batch)?;
+        }
+        done += pending.len();
+    }
+    client.publish(
+        &format!("{RESULTS_TOPIC_PREFIX}/primary-{run}"),
+        format!("done {done}").as_bytes(),
+        QoS::AtLeastOnce,
+        false,
+    )?;
+    Ok(())
+}
+
+/// Run one configuration on the primary; returns (total_secs, offload_bytes).
+fn primary_run(addr: std::net::SocketAddr, r: f64, run: usize) -> Result<(f64, u64)> {
+    let mut pool = ModelPool::new(Engine::from_default_dir()?);
+    let mut client = Client::connect(addr, &format!("primary-{run}"))?;
+    client.subscribe(&format!("{RESULTS_TOPIC_PREFIX}/primary-{run}"))?;
+    let ready = client
+        .recv_timeout(Duration::from_secs(60))
+        .context("auxiliary never became ready")?;
+    anyhow::ensure!(ready.payload == b"ready", "unexpected handshake");
+
+    // warm up the primary's executables outside the timed window
+    for m in ["masker", MODELS[0], MODELS[1]] {
+        for b in [1usize, 8] {
+            pool.engine_mut().load(m, b)?;
+        }
+    }
+
+    let frames = SceneGenerator::paper_default(run as u64 + 1).batch(N_FRAMES);
+    let n_off = (r * N_FRAMES as f64).round() as usize;
+    let t0 = Instant::now();
+    let mut offload_bytes = 0u64;
+
+    // §VI masking via the PJRT masker artifact (batched through the
+    // model pool), then RLE-encode + publish per frame
+    let offload_frames: Vec<Frame> = frames.iter().take(n_off).cloned().collect();
+    for chunk in offload_frames.chunks(8) {
+        let batch = stack_frames(chunk);
+        let outs = primary_exec(&mut pool, "masker", &batch)?;
+        let masked_all: &Tensor = &outs[1];
+        for (i, f) in chunk.iter().enumerate() {
+            let masked = masked_all.slice_leading(i, i + 1)?;
+            let enc = encode_masked(f.id, masked.data());
+            offload_bytes += enc.wire_bytes() as u64;
+            client.publish(
+                &format!("{FRAMES_TOPIC_PREFIX}/aux-{run}"),
+                &enc.bytes,
+                QoS::AtMostOnce,
+                false,
+            )?;
+        }
+    }
+    client.publish(
+        &format!("{FRAMES_TOPIC_PREFIX}/aux-{run}"),
+        b"done",
+        QoS::AtMostOnce,
+        false,
+    )?;
+
+    // local share through the primary's own engine
+    let local: Vec<Frame> = frames.iter().skip(n_off).cloned().collect();
+    if !local.is_empty() {
+        let batch = stack_frames(&local);
+        for m in MODELS {
+            primary_exec(&mut pool, m, &batch)?;
+        }
+    }
+
+    // wait for the auxiliary's completion report
+    let msg = client
+        .recv_timeout(Duration::from_secs(60))
+        .context("no result from auxiliary")?;
+    let text = String::from_utf8_lossy(&msg.payload);
+    anyhow::ensure!(
+        text == format!("done {n_off}"),
+        "auxiliary reported {text:?}, expected done {n_off}"
+    );
+    Ok((t0.elapsed().as_secs_f64(), offload_bytes))
+}
+
+fn main() -> Result<()> {
+    let broker = Broker::start()?;
+    let addr = broker.addr();
+    println!("broker on {addr}; {N_FRAMES} frames; models {MODELS:?}");
+
+    // the solver's recommendation from the calibrated surfaces
+    let decision = HeteroEdgeSolver::paper_default().solve()?;
+    println!(
+        "solver: r* = {:.2} (paper: 0.70), predicted total {:.1} s on Jetson hw",
+        decision.r, decision.total_secs
+    );
+
+    let mut results = Vec::new();
+    for (run, (label, r)) in [("baseline r=0.0", 0.0), ("heteroedge r=r*", decision.r)]
+        .into_iter()
+        .enumerate()
+    {
+        // fresh auxiliary per run so engines/compile caches are comparable
+        let aux = std::thread::spawn(move || auxiliary(addr, run));
+        let (secs, bytes) = primary_run(addr, r, run)?;
+        aux.join().unwrap()?;
+        println!(
+            "{label}: {secs:.2} s wall  ({:.1} frames/s, offloaded {})",
+            N_FRAMES as f64 / secs,
+            heteroedge::util::fmt_bytes(bytes)
+        );
+        results.push((label, secs));
+    }
+
+    let speedup = results[0].1 / results[1].1;
+    println!(
+        "end-to-end speedup from offloading: {speedup:.2}x \
+         (paper reports 1.9x at r=0.7 on its testbed)"
+    );
+    println!(
+        "broker stats: {} published, {} delivered",
+        broker
+            .stats
+            .published
+            .load(std::sync::atomic::Ordering::Relaxed),
+        broker
+            .stats
+            .delivered
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    anyhow::ensure!(speedup > 1.0, "offloading must beat the local baseline");
+    println!("full_eval OK");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load the AOT artifacts and run one multi-DNN inference —
+//! the smallest possible end-to-end use of the HeteroEdge public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use heteroedge::runtime::{Engine, ModelPool, Tensor};
+use heteroedge::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let engine = Engine::from_default_dir()?;
+    println!(
+        "PJRT platform: {} | artifacts: {}",
+        engine.platform(),
+        engine.manifest().len()
+    );
+    let mut pool = ModelPool::new(engine);
+
+    // A small synthetic batch of camera frames (64x64x3, f32 in [0,1]).
+    let mut rng = Rng::new(0xC0FFEE);
+    let n = 12;
+    let data: Vec<f32> = (0..n * 64 * 64 * 3).map(|_| rng.f32()).collect();
+    let frames = Tensor::new(vec![n, 64, 64, 3], data)?;
+
+    // §VI frame compression: masker -> (mask, masked frames, occupancy).
+    let t0 = std::time::Instant::now();
+    let masked = pool.run_frames("masker", &frames)?;
+    let kept: f32 =
+        masked[0].data().iter().sum::<f32>() / (n as f32 * 64.0 * 64.0);
+    println!(
+        "masker: kept {:.0}% of pixels in {:.1} ms",
+        kept * 100.0,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // Run the paper's exemplar concurrent pair (SegNet + PoseNet) on the
+    // compressed frames.
+    for model in ["segnet", "posenet"] {
+        let t0 = std::time::Instant::now();
+        let outs = pool.run_frames(model, &masked[1])?;
+        println!(
+            "{model:9}: out {:?} in {:.1} ms ({:.2} ms/frame)",
+            outs[0].shape(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            t0.elapsed().as_secs_f64() * 1e3 / n as f64
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Case-1 (§VII.B): static testbed — two nodes parked 4 m apart.
+//!
+//! Sweeps the Table III split ratios on the calibrated testbed, prints
+//! the paper-style table, then lets the solver pick r* and compares
+//! against the best fixed ratio.
+//!
+//! ```sh
+//! cargo run --release --example static_offload
+//! ```
+
+use anyhow::Result;
+use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
+use heteroedge::experiments::{table3, Scale};
+use heteroedge::net::Band;
+use heteroedge::workload::Workload;
+
+fn main() -> Result<()> {
+    // the full Table III sweep (masked pipeline, 100 images per cell)
+    let out = table3::run(Scale::Full)?;
+    println!("{}", out.rendered);
+
+    // solver-driven run on the same testbed
+    let mut tb = Testbed::sim(Band::Ghz5, 4.0, 42);
+    let mut cfg = RunConfig::static_default(Workload::calibration());
+    cfg.masked = true;
+    cfg.split = SplitMode::Solver;
+    let rep = tb.run_static(&cfg)?;
+    println!(
+        "solver-driven: r* = {:.2}, T1+T2 = {:.2} s, T3 = {:.2} s",
+        rep.r, rep.total_serial_s, rep.t3_s
+    );
+
+    let best = out
+        .rows
+        .iter()
+        .min_by(|a, b| a.t1_plus_t2_s.partial_cmp(&b.t1_plus_t2_s).unwrap())
+        .unwrap();
+    println!(
+        "best fixed ratio in sweep: r = {:.2} at {:.2} s (solver within {:.0}%)",
+        best.r,
+        best.t1_plus_t2_s,
+        (rep.total_serial_s / best.t1_plus_t2_s - 1.0).abs() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT compile path: lower every (model, batch) pair to HLO text.
+
+This is the ONLY place Python touches the system. `make artifacts` runs it
+once; afterwards the rust coordinator is self-contained.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per (model, batch):
+    artifacts/<model>.b<batch>.hlo.txt
+plus a manifest the rust runtime parses:
+    artifacts/manifest.txt   lines: <model> <batch> in=<shape:dtype> \
+                             out=<shape:dtype>[,<shape:dtype>...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps a tuple of a known arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _fmt_shape(shape, dtype) -> str:
+    return "x".join(str(d) for d in shape) + ":" + {"float32": "f32"}[str(dtype)]
+
+
+def lower_one(name: str, batch: int):
+    fn = M.build_model(name)
+    spec = M.input_spec(batch)
+    lowered = jax.jit(fn).lower(spec)
+    out_info = jax.eval_shape(fn, spec)
+    return to_hlo_text(lowered), out_info
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models", default=",".join(M.MODELS), help="comma-separated subset"
+    )
+    ap.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in M.BATCH_SIZES),
+        help="comma-separated batch sizes",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    manifest_lines = []
+    for name in names:
+        for batch in batches:
+            t0 = time.time()
+            text, out_info = lower_one(name, batch)
+            path = os.path.join(args.out_dir, f"{name}.b{batch}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            outs = ",".join(_fmt_shape(o.shape, o.dtype) for o in out_info)
+            in_s = _fmt_shape(M.input_spec(batch).shape, "float32")
+            manifest_lines.append(f"{name} {batch} in={in_s} out={outs}")
+            print(
+                f"[aot] {name} b={batch}: {len(text)/1024:.0f} KiB HLO "
+                f"in {time.time()-t0:.1f}s -> {path}",
+                file=sys.stderr,
+            )
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"[aot] wrote {len(manifest_lines)} artifacts + manifest", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: frame masking / compression (paper §VI).
+
+HeteroEdge multiplies each frame element-wise with a binary object mask
+("pixels with detected objects are denoted by bit 1, and 0 elsewhere"),
+isolating regions of interest before offload. The kernel fuses
+
+  masked = image * mask            (elementwise, VPU)
+  occupancy[tile] = sum(mask_tile) (per-tile reduction)
+
+in one HBM->VMEM pass. The per-tile occupancy is what the rust codec uses
+to skip all-zero tiles when serializing the offloaded frame — it is the
+bandwidth-savings signal behind the paper's ~28% reduction.
+
+Tiling: frames are (H, W, C); the grid walks (H/bh, W/bw) tiles with the
+channel axis kept dense — the TPU analogue of a coalesced CUDA elementwise
+pass (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_H = 8
+BLOCK_W = 128  # lane-width tile on the innermost spatial axis
+
+
+def _mask_kernel(img_ref, mask_ref, out_ref, occ_ref):
+    m = mask_ref[...]
+    out_ref[...] = img_ref[...] * m
+    # Occupancy: number of mask-on pixels in this tile (mask is 0/1 per
+    # pixel, broadcast over channels, so divide the channel copies out).
+    occ_ref[0, 0] = jnp.sum(m[..., 0])
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return math.ceil(x / m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "block_w"))
+def mask_compress(
+    img: jax.Array,
+    mask: jax.Array,
+    *,
+    block_h: int = BLOCK_H,
+    block_w: int = BLOCK_W,
+):
+    """Apply a binary mask to a frame and report per-tile occupancy.
+
+    img:  (H, W, C) float32
+    mask: (H, W, 1) float32 in {0, 1}
+    returns (masked (H, W, C), occupancy (H/bh, W/bw) float32)
+    """
+    assert img.ndim == 3 and mask.ndim == 3, (img.shape, mask.shape)
+    assert img.shape[:2] == mask.shape[:2], (img.shape, mask.shape)
+    h, w, c = img.shape
+
+    bh = min(block_h, h)
+    bw = min(block_w, w)
+    hp, wp = _ceil_to(h, bh), _ceil_to(w, bw)
+    if (hp, wp) != (h, w):
+        img = jnp.pad(img, ((0, hp - h), (0, wp - w), (0, 0)))
+        mask = jnp.pad(mask, ((0, hp - h), (0, wp - w), (0, 0)))
+
+    gh, gw = hp // bh, wp // bw
+    masked, occ = pl.pallas_call(
+        _mask_kernel,
+        grid=(gh, gw),
+        in_specs=[
+            pl.BlockSpec((bh, bw, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bh, bw, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bh, bw, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hp, wp, c), img.dtype),
+            jax.ShapeDtypeStruct((gh, gw), jnp.float32),
+        ],
+        interpret=True,
+    )(img, mask)
+    return masked[:h, :w, :], occ

@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot spot of every DNN layer.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's DNNs run
+on Jetson GPUs (CUDA threadblocks + shared memory). On TPU the analogous
+decomposition is an HBM->VMEM block schedule expressed with BlockSpec,
+feeding the MXU systolic array with (bm, bn, bk) tiles. The kernel below
+tiles M/N on the grid and streams K innermost, accumulating into the
+output block (whose index map is K-invariant, so it stays VMEM-resident
+across the K loop) — the canonical Pallas matmul schedule.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifact runs anywhere. Real-TPU performance is estimated
+analytically (see `vmem_footprint_bytes` / `mxu_utilization_estimate`,
+reported in DESIGN.md §Perf and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes. 128 matches both the MXU systolic-array dimension
+# and the VPU lane width; K is streamed in 128-wide slabs.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (m, n, k) grid step: o += x_block @ w_block.
+
+    The grid iterates K innermost; the output BlockSpec ignores the K index
+    so the same output tile is revisited every K step and acts as the
+    accumulator (zeroed on the first step).
+
+    NOTE deliberately select-based, not `@pl.when`: pl.when lowers to an
+    HLO `conditional` with an empty-tuple branch, which xla_extension
+    0.5.1 (the rust `xla` crate's backing XLA) silently mis-executes after
+    the HLO-text round trip. An elementwise select on program_id lowers to
+    plain `select` and round-trips correctly (see DESIGN.md §AOT gotchas).
+    """
+    k = pl.program_id(2)
+    # MXU-shaped contraction; preferred_element_type pins the accumulation
+    # to f32 even when inputs are bf16.
+    part = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    prev = jnp.where(k == 0, jnp.zeros_like(part), o_ref[...])
+    o_ref[...] = prev + part
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return math.ceil(x / m) * m
+
+
+def _pad2d(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _block(dim: int, target: int) -> int:
+    """Block size for one axis: the target when the dim is large enough,
+    otherwise the next power of two >= dim (min 8) so tiny layers do not
+    pay for a mostly-empty 128-wide tile."""
+    if dim >= target:
+        return target
+    return max(8, 1 << (dim - 1).bit_length())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """`x @ w` through the Pallas tiled kernel, padding ragged edges.
+
+    x: (M, K), w: (K, N) -> (M, N). Shapes that do not divide the block
+    sizes are zero-padded up; zero padding is exact for matmul.
+    """
+    assert x.ndim == 2 and w.ndim == 2, (x.shape, w.shape)
+    assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+    m, k = x.shape
+    _, n = w.shape
+
+    bm, bn, bk = _block(m, block_m), _block(n, block_n), _block(k, block_k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad2d(x, mp, kp)
+    wp = _pad2d(w, kp, np_)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# --- analytic TPU performance model (DESIGN.md §Perf, L1) -----------------
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM bytes resident per grid step: x block + w block + out/acc block.
+
+    Must stay well under ~16 MiB (one TPU core's VMEM) with room for
+    double-buffering (x2 on the streamed inputs)."""
+    return dtype_bytes * (2 * bm * bk + 2 * bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(
+    m: int, n: int, k: int, bm: int, bn: int, bk: int
+) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    useful = m * n * k
+    issued = _ceil_to(m, bm) * _ceil_to(n, bn) * _ceil_to(k, bk)
+    return useful / issued

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is checked against these references by
+python/tests/test_kernels.py (exact shapes + hypothesis sweeps). The
+references deliberately use nothing from pallas.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def mask_compress_ref(img, mask, *, block_h: int = 8, block_w: int = 128):
+    """Masked frame + per-tile occupancy, computed with plain jnp ops."""
+    h, w, _ = img.shape
+    bh = min(block_h, h)
+    bw = min(block_w, w)
+    hp = math.ceil(h / bh) * bh
+    wp = math.ceil(w / bw) * bw
+    masked = img * mask
+    mpad = jnp.pad(mask[..., 0], ((0, hp - h), (0, wp - w)))
+    occ = mpad.reshape(hp // bh, bh, wp // bw, bw).sum(axis=(1, 3))
+    return masked, occ
+
+
+def conv2d_ref(x, w, b, *, stride: int = 1):
+    """SAME-padded conv reference via lax.conv_general_dilated.
+
+    x: (B, H, W, C), w: (kh, kw, C, O), b: (O,).
+    """
+    import jax.lax as lax
+
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b

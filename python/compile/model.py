@@ -1,0 +1,279 @@
+"""L2: the HeteroEdge DNN workload zoo, written in JAX on the L1 kernels.
+
+The paper runs five Jetson-Inference models (ImageNet, DetectNet, SegNet,
+PoseNet, DepthNet) plus a faster-RCNN-based frame masker. Those exact
+networks are closed bundles tied to TensorRT; per DESIGN.md's substitution
+table we rebuild each as a tiny convnet with the SAME I/O contract:
+
+  imagenet   (B,64,64,3) -> (B,10)          class logits
+  detectnet  (B,64,64,3) -> (B,8,8,14)      9 cls + 4 box + 1 objness grid
+  segnet     (B,64,64,3) -> (B,64,64,10)    per-pixel logits (9 cls + bg)
+  posenet    (B,64,64,3) -> (B,16,16,17)    17 keypoint heatmaps
+  depthnet   (B,64,64,3) -> (B,64,64,1)     monocular depth
+  masker     (B,64,64,3) -> (mask (B,64,64,1), masked (B,64,64,3),
+                             occupancy (B,8,1))  §VI frame compression
+
+EVERY convolution and dense layer routes through the Pallas tiled-matmul
+kernel (im2col + matmul) so the L1 kernel sits on the hot path of every
+artifact. Weights are generated from fixed seeds and baked into the HLO
+as constants — the artifacts are self-contained; rust feeds images only.
+
+Python here is build-time only: aot.py lowers `build_model(name, batch)`
+once per (model, batch) and the rust runtime replays the HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.mask import mask_compress
+
+IMG_H, IMG_W, IMG_C = 64, 64, 3
+NUM_CLASSES = 10  # 9 Gazebo object classes + background
+NUM_KEYPOINTS = 17
+
+# ---------------------------------------------------------------------------
+# layers (all matmuls through the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1) -> jax.Array:
+    """SAME conv as im2col + Pallas matmul.
+
+    x: (B, H, W, C), w: (kh, kw, C, O), b: (O,).
+    conv_general_dilated_patches emits features channel-major (C, kh, kw),
+    so the weight tensor is transposed to (C, kh, kw, O) before flattening
+    (verified against conv2d_ref in python/tests).
+    """
+    kh, kw, c, o = w.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        (kh, kw),
+        (stride, stride),
+        "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    bsz, oh, ow, feat = patches.shape
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, o)
+    out = matmul(patches.reshape(bsz * oh * ow, feat), wmat)
+    return out.reshape(bsz, oh, ow, o) + b
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, F) @ w: (F, O) + b via the Pallas kernel."""
+    return matmul(x, w) + b
+
+
+def upsample2x(x: jax.Array) -> jax.Array:
+    """Bilinear 2x spatial upsampling (decoder stages of segnet/depthnet)."""
+    b, h, w, c = x.shape
+    return jax.image.resize(x, (b, 2 * h, 2 * w, c), method="bilinear")
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# parameter generation (fixed seeds -> constants baked into the HLO)
+# ---------------------------------------------------------------------------
+
+
+def _he_init(key, shape) -> jax.Array:
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    return jax.random.normal(key, shape, dtype=jnp.float32) * jnp.sqrt(
+        2.0 / max(fan_in, 1)
+    )
+
+
+class ParamGen:
+    """Deterministic parameter stream: one subkey per layer, fixed root seed
+    per model so artifacts are reproducible build-to-build."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.key(seed)
+
+    def conv(self, kh: int, kw: int, cin: int, cout: int):
+        self._key, sub = jax.random.split(self._key)
+        return _he_init(sub, (kh, kw, cin, cout)), jnp.zeros(cout, jnp.float32)
+
+    def dense(self, fin: int, fout: int):
+        self._key, sub = jax.random.split(self._key)
+        return _he_init(sub, (fin, fout)), jnp.zeros(fout, jnp.float32)
+
+
+_MODEL_SEEDS = {
+    "imagenet": 101,
+    "detectnet": 202,
+    "segnet": 303,
+    "posenet": 404,
+    "depthnet": 505,
+    "masker": 606,
+}
+
+
+def _backbone_params(g: ParamGen):
+    return [
+        g.conv(3, 3, IMG_C, 8),  # 64x64x8
+        g.conv(3, 3, 8, 8),  # stride 2 -> 32x32x8
+        g.conv(3, 3, 8, 16),  # stride 2 -> 16x16x16
+    ]
+
+
+def _backbone(x: jax.Array, params) -> jax.Array:
+    (w0, b0), (w1, b1), (w2, b2) = params
+    x = jax.nn.relu(conv2d(x, w0, b0))
+    x = jax.nn.relu(conv2d(x, w1, b1, stride=2))
+    x = jax.nn.relu(conv2d(x, w2, b2, stride=2))
+    return x  # (B, 16, 16, 16)
+
+
+# ---------------------------------------------------------------------------
+# the six workloads
+# ---------------------------------------------------------------------------
+
+
+def imagenet_fn() -> Callable[[jax.Array], Tuple[jax.Array, ...]]:
+    g = ParamGen(_MODEL_SEEDS["imagenet"])
+    bb = _backbone_params(g)
+    wd1, bd1 = g.dense(16, 32)
+    wd2, bd2 = g.dense(32, NUM_CLASSES)
+
+    def fn(img):
+        x = _backbone(img, bb)
+        x = global_avg_pool(x)
+        x = jax.nn.relu(dense(x, wd1, bd1))
+        return (dense(x, wd2, bd2),)
+
+    return fn
+
+
+def detectnet_fn():
+    g = ParamGen(_MODEL_SEEDS["detectnet"])
+    bb = _backbone_params(g)
+    wc, bc = g.conv(3, 3, 16, 16)  # stride 2 -> 8x8
+    wh, bh = g.conv(1, 1, 16, NUM_CLASSES + 4)  # cls + box + objness
+
+    def fn(img):
+        x = _backbone(img, bb)
+        x = jax.nn.relu(conv2d(x, wc, bc, stride=2))
+        return (conv2d(x, wh, bh),)  # (B, 8, 8, 14)
+
+    return fn
+
+
+def segnet_fn():
+    g = ParamGen(_MODEL_SEEDS["segnet"])
+    bb = _backbone_params(g)
+    w1, b1 = g.conv(3, 3, 16, 16)
+    w2, b2 = g.conv(3, 3, 16, 8)
+    w3, b3 = g.conv(1, 1, 8, NUM_CLASSES)
+
+    def fn(img):
+        x = _backbone(img, bb)
+        x = jax.nn.relu(conv2d(x, w1, b1))
+        x = upsample2x(x)  # 32x32
+        x = jax.nn.relu(conv2d(x, w2, b2))
+        x = upsample2x(x)  # 64x64
+        return (conv2d(x, w3, b3),)  # (B, 64, 64, 10)
+
+    return fn
+
+
+def posenet_fn():
+    g = ParamGen(_MODEL_SEEDS["posenet"])
+    bb = _backbone_params(g)
+    w1, b1 = g.conv(3, 3, 16, 16)
+    w2, b2 = g.conv(1, 1, 16, NUM_KEYPOINTS)
+
+    def fn(img):
+        x = _backbone(img, bb)
+        x = jax.nn.relu(conv2d(x, w1, b1))
+        return (conv2d(x, w2, b2),)  # (B, 16, 16, 17)
+
+    return fn
+
+
+def depthnet_fn():
+    g = ParamGen(_MODEL_SEEDS["depthnet"])
+    bb = _backbone_params(g)
+    w1, b1 = g.conv(3, 3, 16, 8)
+    w2, b2 = g.conv(3, 3, 8, 4)
+    w3, b3 = g.conv(1, 1, 4, 1)
+
+    def fn(img):
+        x = _backbone(img, bb)
+        x = jax.nn.relu(conv2d(x, w1, b1))
+        x = upsample2x(x)
+        x = jax.nn.relu(conv2d(x, w2, b2))
+        x = upsample2x(x)
+        return (jax.nn.softplus(conv2d(x, w3, b3)),)  # (B, 64, 64, 1) depth
+
+    return fn
+
+
+def masker_fn():
+    """§VI frame compression: a light detector head emits an objectness map,
+    thresholded to a binary mask, then the Pallas mask_compress kernel fuses
+    mask application with per-tile occupancy (used by the rust codec to drop
+    empty tiles when offloading)."""
+    g = ParamGen(_MODEL_SEEDS["masker"])
+    w0, b0 = g.conv(3, 3, IMG_C, 4)
+    w1, b1 = g.conv(3, 3, 4, 8)
+    w2, b2 = g.conv(1, 1, 8, 1)
+
+    def fn(img):
+        x = jax.nn.relu(conv2d(img, w0, b0, stride=2))  # 32x32
+        x = jax.nn.relu(conv2d(x, w1, b1, stride=2))  # 16x16
+        logits = conv2d(x, w2, b2)  # (B, 16, 16, 1)
+        logits = jax.image.resize(
+            logits, (img.shape[0], IMG_H, IMG_W, 1), method="bilinear"
+        )
+        # Adaptive objectness threshold: keep above-spatial-mean activations.
+        # An absolute sigmoid>0.5 cut is degenerate for a from-scratch head
+        # (all-off or all-on masks); the relative cut yields object-shaped
+        # masks with a stable keep-fraction, which is what §VI's bandwidth
+        # accounting needs.
+        thr = jnp.mean(logits, axis=(1, 2, 3), keepdims=True)
+        mask = (logits > thr).astype(jnp.float32)
+        masked, occ = jax.vmap(mask_compress)(img, mask)
+        return mask, masked, occ  # occ: (B, 8, 1) with 64-wide tiles
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+MODELS: Dict[str, Callable[[], Callable]] = {
+    "imagenet": imagenet_fn,
+    "detectnet": detectnet_fn,
+    "segnet": segnet_fn,
+    "posenet": posenet_fn,
+    "depthnet": depthnet_fn,
+    "masker": masker_fn,
+}
+
+BATCH_SIZES: List[int] = [1, 8]
+
+
+def build_model(name: str):
+    """Return the traced-callable for `name` (weights baked in)."""
+    return MODELS[name]()
+
+
+def input_spec(batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, IMG_H, IMG_W, IMG_C), jnp.float32)
+
+
+def output_arity(name: str) -> int:
+    return 3 if name == "masker" else 1

@@ -1,0 +1,88 @@
+"""L1 perf analysis: block-shape sweep for the Pallas matmul kernel.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the
+kernel is optimized structurally: for each layer shape the model actually
+runs (the im2col matmuls of python/compile/model.py), sweep candidate
+(bm, bn, bk) blocks and report VMEM footprint and MXU utilization (the
+fraction of issued MACs that are useful work, i.e. not shape padding).
+Results are recorded in EXPERIMENTS.md §Perf (L1).
+
+Usage: cd python && python -m compile.perf_l1
+"""
+
+from __future__ import annotations
+
+from .kernels.matmul import (
+    _block,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+
+# (label, M, K, N) — the matmuls the artifacts actually execute at b=8.
+LAYER_SHAPES = [
+    ("backbone conv1 im2col", 8 * 64 * 64, 27, 8),
+    ("backbone conv2 s2", 8 * 32 * 32, 72, 8),
+    ("backbone conv3 s2", 8 * 16 * 16, 72, 16),
+    ("segnet decoder conv", 8 * 32 * 32, 144, 8),
+    ("detect head 1x1", 8 * 8 * 8, 16, 14),
+    ("imagenet dense", 8, 16, 32),
+]
+
+CANDIDATES = [
+    (128, 128, 128),
+    (256, 128, 64),
+    (128, 128, 32),
+    (512, 128, 32),
+    (256, 256, 32),
+    (64, 64, 64),
+]
+
+VMEM_BUDGET = 16 * 2**20  # one TPU core
+
+
+def main() -> None:
+    print(
+        f"{'layer':26} {'M':>7} {'K':>4} {'N':>3} | "
+        f"{'auto blocks':>15}  util   VMEM | naive 128^3"
+    )
+    total_naive, total_auto, total_best = 0.0, 0.0, 0.0
+    for label, m, k, n in LAYER_SHAPES:
+        # what matmul() actually picks (auto-shrink to pow2 >= dim)
+        abm, abn, abk = _block(m, 128), _block(n, 128), _block(k, 128)
+        auto_util = mxu_utilization_estimate(m, n, k, abm, abn, abk)
+        auto_vmem = vmem_footprint_bytes(abm, abn, abk)
+        best = ((abm, abn, abk), auto_util, auto_vmem)
+        for bm, bn, bk in CANDIDATES:
+            bn2 = min(bn, _block(n, bn))
+            bk2 = min(bk, _block(k, bk))
+            vmem = vmem_footprint_bytes(bm, bn2, bk2)
+            if vmem > VMEM_BUDGET:
+                continue
+            util = mxu_utilization_estimate(m, n, k, bm, bn2, bk2)
+            if util > best[1]:
+                best = ((bm, bn2, bk2), util, vmem)
+        naive_util = mxu_utilization_estimate(m, n, k, 128, 128, 128)
+        total_naive += naive_util
+        total_auto += auto_util
+        total_best += best[1]
+        print(
+            f"{label:26} {m:>7} {k:>4} {n:>3} | "
+            f"{str((abm, abn, abk)):>15}  {auto_util:5.1%}  "
+            f"{auto_vmem/1024:5.0f} KiB | {naive_util:5.1%}"
+        )
+    n_layers = len(LAYER_SHAPES)
+    print(
+        f"\nmean MXU utilization: naive-128^3 {total_naive/n_layers:.1%}, "
+        f"auto-shrink (shipped) {total_auto/n_layers:.1%}, "
+        f"swept best {total_best/n_layers:.1%}"
+    )
+    print(
+        "conclusion: _block()'s pow2-shrink on ragged axes recovers the"
+        "\nbulk of the padding waste (the kernel ships with it); remaining"
+        "\nloss is inherent to the models' narrow channel counts (N<=16),"
+        "\nwhich no block shape can fix on a 128-wide MXU."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Exact cases pin known-tricky shapes (ragged edges, tiny dims, block
+boundaries); hypothesis sweeps shapes/dtypes per the repro protocol.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    matmul,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.mask import mask_compress
+from compile.kernels.ref import mask_compress_ref, matmul_ref
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (128, 128, 128),  # exactly one default block
+        (129, 127, 130),  # just over/under block boundaries
+        (100, 37, 130),  # ragged everywhere
+        (4096, 27, 8),  # im2col shape of the first conv layer
+        (1, 2048, 1),  # K-dominant
+        (257, 1, 3),  # K=1 degenerate
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)),
+        np.asarray(matmul_ref(x, w)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 64, 16), (256, 128, 64)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """The result must not depend on the chosen block decomposition."""
+    x = _rand(2, (70, 45))
+    w = _rand(3, (45, 33))
+    got = matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(matmul_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_bf16_inputs_accumulate_in_f32():
+    x = _rand(4, (64, 64), jnp.bfloat16)
+    w = _rand(5, (64, 64), jnp.bfloat16)
+    got = matmul(x, w)
+    assert got.dtype == jnp.float32
+    ref = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_zero_sized_edge():
+    x = jnp.zeros((5, 7))
+    w = jnp.zeros((7, 3))
+    assert matmul(x, w).shape == (5, 3)
+    assert np.all(np.asarray(matmul(x, w)) == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)),
+        np.asarray(matmul_ref(x, w)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    m=st.integers(1, 64),
+    n=st.integers(1, 64),
+)
+def test_matmul_hypothesis_dtypes(dtype, m, n):
+    x = _rand(10, (m, 32), dtype)
+    w = _rand(11, (32, n), dtype)
+    got = np.asarray(matmul(x, w))
+    ref = np.asarray(matmul_ref(x, w))
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol)
+
+
+def test_vmem_footprint_under_budget():
+    """Default blocks must fit comfortably in one core's VMEM (~16 MiB)."""
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20 / 4
+
+
+def test_mxu_utilization_exact_fit_is_one():
+    assert mxu_utilization_estimate(128, 128, 128, 128, 128, 128) == 1.0
+
+
+def test_mxu_utilization_padding_penalty():
+    # 129 on every axis doubles every padded dim -> utilization ~ (129/256)^3
+    u = mxu_utilization_estimate(129, 129, 129, 128, 128, 128)
+    assert abs(u - (129 / 256) ** 3) < 1e-9
+
+
+# ---------------------------------------------------------------- mask
+
+
+@pytest.mark.parametrize("h,w,c", [(64, 64, 3), (64, 64, 1), (8, 128, 3), (16, 50, 2)])
+def test_mask_compress_matches_ref(h, w, c):
+    img = jax.random.uniform(jax.random.key(0), (h, w, c))
+    mask = (jax.random.uniform(jax.random.key(1), (h, w, 1)) > 0.4).astype(jnp.float32)
+    got_m, got_o = mask_compress(img, mask)
+    ref_m, ref_o = mask_compress_ref(img, mask)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(ref_m), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(ref_o), rtol=1e-6)
+
+
+def test_mask_all_zero_blanks_frame():
+    img = jnp.ones((64, 64, 3))
+    mask = jnp.zeros((64, 64, 1))
+    masked, occ = mask_compress(img, mask)
+    assert np.all(np.asarray(masked) == 0)
+    assert np.all(np.asarray(occ) == 0)
+
+
+def test_mask_all_one_is_identity():
+    img = jax.random.uniform(jax.random.key(2), (64, 64, 3))
+    mask = jnp.ones((64, 64, 1))
+    masked, occ = mask_compress(img, mask)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(img), rtol=1e-6)
+    # every tile fully occupied: 8x64 pixels per tile at the default blocks
+    assert np.all(np.asarray(occ) == 8 * 64)
+
+
+def test_mask_occupancy_counts_total_pixels():
+    """Sum of per-tile occupancy == total mask-on pixels (codec invariant)."""
+    img = jax.random.uniform(jax.random.key(3), (64, 64, 3))
+    mask = (jax.random.uniform(jax.random.key(4), (64, 64, 1)) > 0.7).astype(
+        jnp.float32
+    )
+    _, occ = mask_compress(img, mask)
+    assert float(np.asarray(occ).sum()) == float(np.asarray(mask).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 80),
+    w=st.integers(4, 160),
+    c=st.sampled_from([1, 3]),
+    thr=st.floats(0.1, 0.9),
+)
+def test_mask_hypothesis(h, w, c, thr):
+    img = jax.random.uniform(jax.random.key(5), (h, w, c))
+    mask = (jax.random.uniform(jax.random.key(6), (h, w, 1)) > thr).astype(jnp.float32)
+    got_m, got_o = mask_compress(img, mask)
+    ref_m, ref_o = mask_compress_ref(img, mask)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(ref_m), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(ref_o), rtol=1e-6)
+
+
+def test_mask_vmap_batches():
+    """The masker model vmaps the kernel over the batch axis."""
+    imgs = jax.random.uniform(jax.random.key(7), (4, 64, 64, 3))
+    masks = (jax.random.uniform(jax.random.key(8), (4, 64, 64, 1)) > 0.5).astype(
+        jnp.float32
+    )
+    masked, occ = jax.vmap(mask_compress)(imgs, masks)
+    assert masked.shape == (4, 64, 64, 3)
+    assert occ.shape == (4, 8, 1)
+    for i in range(4):
+        ref_m, ref_o = mask_compress_ref(imgs[i], masks[i])
+        np.testing.assert_allclose(np.asarray(masked[i]), np.asarray(ref_m), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(occ[i]), np.asarray(ref_o), rtol=1e-6)

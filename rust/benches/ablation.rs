@@ -1,0 +1,145 @@
+//! Ablation bench: the design choices DESIGN.md calls out, each toggled
+//! independently on the calibrated testbed:
+//!
+//! 1. objective formulation (paper vs concurrent vs serial)
+//! 2. §VI masking on/off
+//! 3. similar-frame dedup on/off
+//! 4. WiFi band
+//! 5. HeteroEdge vs local-only vs cloud offload (crossover sweep)
+//! 6. star topology: 1–4 spokes on one hub (§VIII future work)
+
+use heteroedge::bench::Bench;
+use heteroedge::coordinator::baseline;
+use heteroedge::coordinator::{RunConfig, Spoke, SplitMode, StarTopology, Testbed};
+use heteroedge::metrics::{f, Table};
+use heteroedge::net::Band;
+use heteroedge::solver::{HeteroEdgeSolver, ObjectiveKind};
+use heteroedge::workload::Workload;
+
+fn run(split: SplitMode, masked: bool, dedup: bool, band: Band) -> heteroedge::coordinator::RunReport {
+    let mut tb = Testbed::sim(band, 4.0, 42);
+    let mut cfg = RunConfig::static_default(Workload::calibration());
+    cfg.split = split;
+    cfg.masked = masked;
+    cfg.dedup = dedup;
+    tb.run_static(&cfg).unwrap()
+}
+
+fn main() {
+    // 1. objective formulations
+    let mut t = Table::new(&["objective", "r*", "pred total s", "serial T1+T2 s"]);
+    for kind in [
+        ObjectiveKind::Paper,
+        ObjectiveKind::Concurrent,
+        ObjectiveKind::Serial,
+    ] {
+        let mut s = HeteroEdgeSolver::paper_default();
+        s.objective = kind;
+        let d = s.solve().unwrap();
+        t.row(vec![
+            format!("{kind:?}"),
+            f(d.r, 3),
+            f(d.total_secs, 2),
+            f(s.model.t1(d.r) + s.model.t2(d.r), 2),
+        ]);
+    }
+    println!("Ablation 1: objective formulation\n{}", t.render());
+
+    // 2+3. masking / dedup toggles at r = 0.7
+    let mut t = Table::new(&["masking", "dedup", "T1+T2 s", "T3 s", "offload KiB"]);
+    for (m, d) in [(false, false), (true, false), (false, true), (true, true)] {
+        let rep = run(SplitMode::Fixed(0.7), m, d, Band::Ghz5);
+        t.row(vec![
+            m.to_string(),
+            d.to_string(),
+            f(rep.total_serial_s, 2),
+            f(rep.t3_s, 3),
+            f(rep.offload_bytes as f64 / 1024.0, 0),
+        ]);
+    }
+    println!("Ablation 2/3: §VI masking and dedup\n{}", t.render());
+
+    // 4. band
+    let mut t = Table::new(&["band", "T3 s", "total concurrent s"]);
+    for band in [Band::Ghz2_4, Band::Ghz5] {
+        let rep = run(SplitMode::Fixed(0.7), true, false, band);
+        t.row(vec![
+            band.name().into(),
+            f(rep.t3_s, 3),
+            f(rep.total_concurrent_s, 2),
+        ]);
+    }
+    println!("Ablation 4: WiFi band\n{}", t.render());
+
+    // 5. HeteroEdge vs baselines across uplink quality (crossover sweep)
+    let mut t = Table::new(&["uplink Mbps", "cloud s", "heteroedge s", "local s", "winner"]);
+    let local = baseline::local_only(Workload::calibration(), 100, 1).unwrap();
+    let edge = run(SplitMode::Solver, true, false, Band::Ghz5);
+    for mbps in [1.0, 2.0, 10.0, 50.0, 200.0, 1000.0] {
+        let cloud =
+            baseline::cloud_offload(Workload::calibration(), 100, mbps, 0.04, 1).unwrap();
+        let winner = if cloud.total_secs < edge.total_concurrent_s {
+            "cloud"
+        } else {
+            "heteroedge"
+        };
+        t.row(vec![
+            f(mbps, 0),
+            f(cloud.total_secs, 2),
+            f(edge.total_concurrent_s, 2),
+            f(local.total_secs, 2),
+            winner.into(),
+        ]);
+    }
+    println!("Ablation 5: cloud-offload crossover\n{}", t.render());
+
+    // 6. star topology scaling (§VIII)
+    let mut t = Table::new(&["spokes", "lambda", "hub busy s", "makespan s", "mean r"]);
+    for k in 1..=4 {
+        let spokes: Vec<Spoke> = (0..k)
+            .map(|i| Spoke {
+                name: format!("ugv-{i}"),
+                workload: Workload::calibration(),
+                masked: true,
+                n_frames: 100,
+            })
+            .collect();
+        let plan = StarTopology::new(spokes, 30.0).allocate().unwrap();
+        let mean_r =
+            plan.allocations.iter().map(|a| a.r).sum::<f64>() / plan.allocations.len() as f64;
+        t.row(vec![
+            k.to_string(),
+            f(plan.lambda, 2),
+            f(plan.hub_total_secs, 2),
+            f(plan.makespan_secs, 2),
+            f(mean_r, 3),
+        ]);
+    }
+    println!("Ablation 6: star topology (hub capacity 30 s/round)\n{}", t.render());
+
+    // timing of the ablation drivers themselves
+    let mut b = Bench::new("ablation");
+    b.iter("solver x3 objectives", 50, || {
+        for kind in [
+            ObjectiveKind::Paper,
+            ObjectiveKind::Concurrent,
+            ObjectiveKind::Serial,
+        ] {
+            let mut s = HeteroEdgeSolver::paper_default();
+            s.objective = kind;
+            let _ = s.solve().unwrap();
+        }
+    });
+    b.iter("star allocate 4 spokes", 10, || {
+        let spokes: Vec<Spoke> = (0..4)
+            .map(|i| Spoke {
+                name: format!("s{i}"),
+                workload: Workload::calibration(),
+                masked: false,
+                n_frames: 100,
+            })
+            .collect();
+        let _ = StarTopology::new(spokes, 30.0).allocate().unwrap();
+    });
+    println!("{}", b.report());
+}

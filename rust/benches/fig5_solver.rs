@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Fig_5 and time the driver.
+//! Full-scale output goes to stdout for EXPERIMENTS.md; the timing loop
+//! uses quick scale so `cargo bench` stays fast.
+
+use heteroedge::bench::Bench;
+use heteroedge::experiments::{fig5, Scale};
+
+fn main() {
+    // full-scale regeneration (the paper-facing output)
+    let out = fig5::run(Scale::Full).expect("experiment failed");
+    println!("{}", out.rendered);
+
+    // timing: quick scale, several iterations
+    let mut b = Bench::new("fig5_solver");
+    b.iter("fig5 (quick scale)", 5, || {
+        let _ = fig5::run(Scale::Quick).unwrap();
+    });
+    println!("{}", b.report());
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Fig_7 and time the driver.
+//! Full-scale output goes to stdout for EXPERIMENTS.md; the timing loop
+//! uses quick scale so `cargo bench` stays fast.
+
+use heteroedge::bench::Bench;
+use heteroedge::experiments::{fig7, Scale};
+
+fn main() {
+    // full-scale regeneration (the paper-facing output)
+    let out = fig7::run(Scale::Full).expect("experiment failed");
+    println!("{}", out.rendered);
+
+    // timing: quick scale, several iterations
+    let mut b = Bench::new("fig7_power_memory");
+    b.iter("fig7 (quick scale)", 5, || {
+        let _ = fig7::run(Scale::Quick).unwrap();
+    });
+    println!("{}", b.report());
+}

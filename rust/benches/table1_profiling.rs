@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Table_I and time the driver.
+//! Full-scale output goes to stdout for EXPERIMENTS.md; the timing loop
+//! uses quick scale so `cargo bench` stays fast.
+
+use heteroedge::bench::Bench;
+use heteroedge::experiments::{table1, Scale};
+
+fn main() {
+    // full-scale regeneration (the paper-facing output)
+    let out = table1::run(Scale::Full).expect("experiment failed");
+    println!("{}", out.rendered);
+
+    // timing: quick scale, several iterations
+    let mut b = Bench::new("table1_profiling");
+    b.iter("table1 (quick scale)", 5, || {
+        let _ = table1::run(Scale::Quick).unwrap();
+    });
+    println!("{}", b.report());
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Table_IV and time the driver.
+//! Full-scale output goes to stdout for EXPERIMENTS.md; the timing loop
+//! uses quick scale so `cargo bench` stays fast.
+
+use heteroedge::bench::Bench;
+use heteroedge::experiments::{table4, Scale};
+
+fn main() {
+    // full-scale regeneration (the paper-facing output)
+    let out = table4::run(Scale::Full).expect("experiment failed");
+    println!("{}", out.rendered);
+
+    // timing: quick scale, several iterations
+    let mut b = Bench::new("table4_heterogeneity");
+    b.iter("table4 (quick scale)", 5, || {
+        let _ = table4::run(Scale::Quick).unwrap();
+    });
+    println!("{}", b.report());
+}

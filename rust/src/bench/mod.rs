@@ -1,0 +1,173 @@
+//! Mini-bench harness — S14 (criterion is unavailable offline).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```ignore
+//! let mut b = bench::Bench::new("table1");
+//! b.iter("solver", 100, || { solver.solve().unwrap(); });
+//! println!("{}", b.report());
+//! ```
+//!
+//! Measures wall-clock per iteration with warmup, reports mean/p50/p99,
+//! and supports throughput annotation (items/s, bytes/s).
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// One timed case.
+#[derive(Debug, Clone)]
+pub struct Case {
+    pub name: String,
+    pub iters: u32,
+    pub secs: Vec<f64>,
+    pub items_per_iter: Option<f64>,
+    pub bytes_per_iter: Option<f64>,
+}
+
+impl Case {
+    pub fn mean(&self) -> f64 {
+        self.secs.iter().sum::<f64>() / self.secs.len().max(1) as f64
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        percentile(&self.secs, pct)
+    }
+
+    pub fn throughput_items(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean())
+    }
+
+    pub fn throughput_bytes(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|n| n / self.mean())
+    }
+}
+
+/// A named collection of timed cases.
+#[derive(Debug, Default)]
+pub struct Bench {
+    pub name: String,
+    pub warmup: u32,
+    cases: Vec<Case>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            cases: Vec::new(),
+        }
+    }
+
+    /// Time `f` for `iters` iterations after warmup.
+    pub fn iter<F: FnMut()>(&mut self, name: &str, iters: u32, mut f: F) -> &Case {
+        assert!(iters > 0);
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut secs = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        self.cases.push(Case {
+            name: name.to_string(),
+            iters,
+            secs,
+            items_per_iter: None,
+            bytes_per_iter: None,
+        });
+        self.cases.last().unwrap()
+    }
+
+    /// Like [`iter`] but annotates throughput.
+    pub fn iter_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        iters: u32,
+        items: f64,
+        bytes: f64,
+        f: F,
+    ) -> &Case {
+        self.iter(name, iters, f);
+        let c = self.cases.last_mut().unwrap();
+        if items > 0.0 {
+            c.items_per_iter = Some(items);
+        }
+        if bytes > 0.0 {
+            c.bytes_per_iter = Some(bytes);
+        }
+        self.cases.last().unwrap()
+    }
+
+    pub fn cases(&self) -> &[Case] {
+        &self.cases
+    }
+
+    /// Render a criterion-style report block.
+    pub fn report(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "## bench {}", self.name);
+        for c in &self.cases {
+            let mut extra = String::new();
+            if let Some(t) = c.throughput_items() {
+                extra.push_str(&format!("  {:.0} items/s", t));
+            }
+            if let Some(t) = c.throughput_bytes() {
+                extra.push_str(&format!("  {}/s", crate::util::fmt_bytes(t as u64)));
+            }
+            let _ = writeln!(
+                out,
+                "{:40} {:>12}/iter  p50 {:>12}  p99 {:>12}  (n={}){}",
+                c.name,
+                crate::util::fmt_secs(c.mean()),
+                crate::util::fmt_secs(c.p(50.0)),
+                crate::util::fmt_secs(c.p(99.0)),
+                c.iters,
+                extra
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_case() {
+        let mut b = Bench::new("t");
+        b.warmup = 0;
+        let c = b.iter("sleepless", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(c.iters, 5);
+        assert_eq!(c.secs.len(), 5);
+        assert!(c.mean() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bench::new("t");
+        b.warmup = 0;
+        b.iter_throughput("x", 3, 100.0, 4096.0, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        let c = &b.cases()[0];
+        assert!(c.throughput_items().unwrap() > 0.0);
+        assert!(c.throughput_bytes().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_contains_cases() {
+        let mut b = Bench::new("demo");
+        b.warmup = 0;
+        b.iter("fast", 2, || {});
+        let r = b.report();
+        assert!(r.contains("## bench demo"));
+        assert!(r.contains("fast"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Hand-rolled CLI argument parser (no clap offline): subcommand +
+//! `--flag value` / `--flag` / `--flag=value` options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` ends option parsing
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(raw) => match raw.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => bail!("--{name} {raw:?}: {e}"),
+            },
+        }
+    }
+
+    pub fn opt_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("solve --ratio 0.7 --band=5GHz --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.opt("ratio"), Some("0.7"));
+        assert_eq!(a.opt("band"), Some("5GHz"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = parse("run --n 100 --beta 2.5");
+        assert_eq!(a.opt_or("n", 0usize).unwrap(), 100);
+        assert_eq!(a.opt_or("beta", 0.0f64).unwrap(), 2.5);
+        assert_eq!(a.opt_or("missing", 7i32).unwrap(), 7);
+        assert!(parse("run --n xyz").opt_parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn bare_flag_before_option() {
+        let a = parse("bench --quiet --n 5");
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt("n"), Some("5"));
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run -- --not-an-option");
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

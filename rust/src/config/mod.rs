@@ -1,0 +1,147 @@
+//! Config system — S12: a hand-rolled TOML-subset parser (no serde in the
+//! offline registry) plus the typed HeteroEdge configuration.
+
+pub mod parser;
+
+pub use parser::{ConfigDoc, Value};
+
+use anyhow::{Context, Result};
+
+use crate::net::Band;
+
+/// Typed runtime configuration for the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Artifacts directory containing `manifest.txt`.
+    pub artifacts_dir: String,
+    /// Frame batch per scheduling round.
+    pub batch_size: usize,
+    /// WiFi band for the offload link.
+    pub band: Band,
+    /// Initial node separation (m).
+    pub distance_m: f64,
+    /// Offload-latency threshold β (s); None disables the mobility guard.
+    pub beta_secs: Option<f64>,
+    /// Enable §VI frame masking before offload.
+    pub masking: bool,
+    /// Enable similar-frame elimination.
+    pub dedup: bool,
+    /// Fixed split ratio override; None lets the solver decide.
+    pub split_ratio: Option<f64>,
+    /// RNG seed for all simulation components.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: "artifacts".into(),
+            batch_size: 100,
+            band: Band::Ghz5,
+            distance_m: 4.0,
+            beta_secs: Some(5.0),
+            masking: true,
+            dedup: true,
+            split_ratio: None,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Parse from TOML-subset text. Unknown keys are rejected (typo
+    /// safety); missing keys keep their defaults.
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let doc = ConfigDoc::parse(text)?;
+        let mut cfg = Config::default();
+        for (key, value) in doc.iter() {
+            match key.as_str() {
+                "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
+                "batch_size" => cfg.batch_size = value.as_int()? as usize,
+                "band" => {
+                    cfg.band = match value.as_str()? {
+                        "2.4GHz" | "2.4" => Band::Ghz2_4,
+                        "5GHz" | "5" => Band::Ghz5,
+                        other => anyhow::bail!("unknown band {other:?}"),
+                    }
+                }
+                "distance_m" => cfg.distance_m = value.as_float()?,
+                "beta_secs" => {
+                    let v = value.as_float()?;
+                    cfg.beta_secs = if v <= 0.0 { None } else { Some(v) };
+                }
+                "masking" => cfg.masking = value.as_bool()?,
+                "dedup" => cfg.dedup = value.as_bool()?,
+                "split_ratio" => {
+                    let v = value.as_float()?;
+                    anyhow::ensure!((0.0..=1.0).contains(&v), "split_ratio out of [0,1]");
+                    cfg.split_ratio = Some(v);
+                }
+                "seed" => cfg.seed = value.as_int()? as u64,
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Config::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.batch_size, 100);
+        assert_eq!(c.band, Band::Ghz5);
+        assert!(c.masking);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = Config::from_toml(
+            r#"
+# HeteroEdge run config
+artifacts_dir = "artifacts"
+batch_size = 50
+band = "2.4GHz"
+distance_m = 10.5
+beta_secs = 3.0
+masking = false
+dedup = true
+split_ratio = 0.7
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.batch_size, 50);
+        assert_eq!(c.band, Band::Ghz2_4);
+        assert_eq!(c.distance_m, 10.5);
+        assert_eq!(c.beta_secs, Some(3.0));
+        assert!(!c.masking);
+        assert_eq!(c.split_ratio, Some(0.7));
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(Config::from_toml("batch_sizes = 10").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_ratio() {
+        assert!(Config::from_toml("split_ratio = 1.5").is_err());
+    }
+
+    #[test]
+    fn zero_beta_disables_guard() {
+        let c = Config::from_toml("beta_secs = 0.0").unwrap();
+        assert_eq!(c.beta_secs, None);
+    }
+}

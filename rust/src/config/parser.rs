@@ -1,0 +1,188 @@
+//! A TOML-subset parser: `key = value` lines, `#` comments, strings,
+//! integers, floats, booleans. No tables/arrays — the config surface is
+//! flat by design.
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    /// Floats accept integer literals too (`beta = 3` is fine).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// An ordered key → value document.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigDoc {
+    entries: Vec<(String, Value)>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+            {
+                bail!("line {}: bad key {key:?}", lineno + 1);
+            }
+            if entries.iter().any(|(k, _)| k == key) {
+                bail!("line {}: duplicate key {key:?}", lineno + 1);
+            }
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value for {key:?}", lineno + 1))?;
+            entries.push((key.to_string(), value));
+        }
+        Ok(ConfigDoc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, Value)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .context("unterminated string literal")?;
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        if v.is_finite() {
+            return Ok(Value::Float(v));
+        }
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let d = ConfigDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hello\"\nd = true\ne = false\nneg = -3\n",
+        )
+        .unwrap();
+        assert_eq!(d.get("a"), Some(&Value::Int(1)));
+        assert_eq!(d.get("b"), Some(&Value::Float(2.5)));
+        assert_eq!(d.get("c"), Some(&Value::Str("hello".into())));
+        assert_eq!(d.get("d"), Some(&Value::Bool(true)));
+        assert_eq!(d.get("e"), Some(&Value::Bool(false)));
+        assert_eq!(d.get("neg"), Some(&Value::Int(-3)));
+        assert_eq!(d.len(), 6);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let d = ConfigDoc::parse("# header\n\na = 1 # trailing\ns = \"has # inside\"\n").unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.get("s"), Some(&Value::Str("has # inside".into())));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigDoc::parse("just words").is_err());
+        assert!(ConfigDoc::parse("k = ").is_err());
+        assert!(ConfigDoc::parse("k = \"open").is_err());
+        assert!(ConfigDoc::parse("bad key = 1").is_err());
+        assert!(ConfigDoc::parse("k = nan").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(ConfigDoc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn int_coerces_to_float_only_on_request() {
+        let d = ConfigDoc::parse("x = 3").unwrap();
+        assert_eq!(d.get("x").unwrap().as_float().unwrap(), 3.0);
+        assert!(d.get("x").unwrap().as_str().is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! Baseline comparators — S18.
+//!
+//! * `local_only`: everything on the primary (the paper's r=0 baseline);
+//! * `cloud_offload`: offload to a remote cloud over a WAN-like link —
+//!   the alternative the paper's §I argues against (high latency,
+//!   bandwidth-bound), used by the ablation benches.
+
+use anyhow::Result;
+
+use crate::frames::FRAME_BYTES;
+use crate::workload::Workload;
+
+use super::node::{NodeRuntime, SimBackend};
+use crate::device::DeviceKind;
+use crate::frames::SceneGenerator;
+
+/// Outcome of a baseline run.
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub name: &'static str,
+    pub total_secs: f64,
+    pub offload_secs: f64,
+    pub energy_proxy_w_s: f64,
+}
+
+/// All-local baseline: primary runs the full batch (r = 0).
+pub fn local_only(workload: &'static Workload, n_frames: usize, seed: u64) -> Result<BaselineReport> {
+    let mut node = NodeRuntime::new(DeviceKind::Nano, SimBackend::new(), seed);
+    let frames = SceneGenerator::paper_default(seed).batch(n_frames);
+    let t = node.execute(workload, &frames, 0.0, false)?;
+    let rep = node.profiler.report();
+    Ok(BaselineReport {
+        name: "local-only",
+        total_secs: t,
+        offload_secs: 0.0,
+        energy_proxy_w_s: rep.mean_power_w() * t,
+    })
+}
+
+/// Cloud baseline: ship every frame over a WAN-ish link (tens of ms RTT,
+/// constrained uplink), compute "free" on the cloud side but pay the
+/// transfer. Models the §I remote-cloud alternative.
+pub fn cloud_offload(
+    workload: &'static Workload,
+    n_frames: usize,
+    uplink_mbps: f64,
+    rtt_s: f64,
+    seed: u64,
+) -> Result<BaselineReport> {
+    // a cloud-grade executor: 10× the Xavier calibration
+    let mut cloud = NodeRuntime::new(DeviceKind::Xavier, SimBackend::new(), seed);
+    let frames = SceneGenerator::paper_default(seed).batch(n_frames);
+
+    // WAN link: fixed uplink budget, per-message RTT
+    // latency = rtt + bytes/uplink, per frame
+    let mut offload = 0.0;
+    let mut bytes_sent = 0u64;
+    for _ in 0..n_frames {
+        offload += rtt_s + (FRAME_BYTES as f64 * 8.0) / (uplink_mbps * 1e6);
+        bytes_sent += FRAME_BYTES as u64;
+    }
+    let _ = bytes_sent;
+    let exec = cloud.execute(workload, &frames, 1.0, false)? / 10.0;
+    Ok(BaselineReport {
+        name: "cloud-offload",
+        total_secs: offload + exec,
+        offload_secs: offload,
+        energy_proxy_w_s: 2.0 * offload, // radio energy while transferring
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_matches_table_anchor() {
+        let r = local_only(Workload::calibration(), 100, 1).unwrap();
+        assert!((r.total_secs - 68.34).abs() < 5.0, "{}", r.total_secs);
+        assert_eq!(r.offload_secs, 0.0);
+        assert!(r.energy_proxy_w_s > 0.0);
+    }
+
+    #[test]
+    fn congested_cloud_loses_to_heteroedge() {
+        // §I's premise: low-bandwidth WAN makes the cloud unattractive
+        let cloud = cloud_offload(Workload::calibration(), 100, 2.0, 0.05, 1).unwrap();
+        let local = local_only(Workload::calibration(), 100, 1).unwrap();
+        let edge = {
+            use crate::coordinator::testbed::{RunConfig, SplitMode, Testbed};
+            use crate::net::Band;
+            let mut tb = Testbed::sim(Band::Ghz5, 4.0, 1);
+            let mut cfg = RunConfig::static_default(Workload::calibration());
+            cfg.split = SplitMode::Fixed(0.7);
+            tb.run_static(&cfg).unwrap()
+        };
+        assert!(edge.total_concurrent_s < cloud.total_secs);
+        assert!(edge.total_concurrent_s < local.total_secs);
+    }
+
+    #[test]
+    fn fat_pipe_cloud_can_win_crossover() {
+        // with a fat uplink the cloud becomes competitive — the crossover
+        // the ablation bench sweeps
+        let fat = cloud_offload(Workload::calibration(), 100, 500.0, 0.01, 1).unwrap();
+        let thin = cloud_offload(Workload::calibration(), 100, 2.0, 0.05, 1).unwrap();
+        assert!(fat.total_secs < thin.total_secs);
+    }
+}

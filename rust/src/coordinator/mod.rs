@@ -1,0 +1,28 @@
+//! The L3 coordinator — the paper's system contribution (S11).
+//!
+//! * [`profile_exchange`]: device-profile messages over MQTT (the nodes'
+//!   shared view of memory/power/inference-time).
+//! * [`scheduler`]: Algorithm 1 — the split-ratio selection loop with the
+//!   availability (λ), mobility (β) and battery guards.
+//! * [`batcher`]: dedup → mask → encode → split of a frame batch.
+//! * [`node`]: per-node execution runtime over an [`ExecBackend`]
+//!   (calibrated simulation or real PJRT).
+//! * [`testbed`]: the two-node harness the experiments run on — it owns
+//!   the clocks, the channel, the profilers, and produces [`RunReport`]s.
+//! * [`baseline`]: all-local and cloud-offload comparators.
+
+pub mod baseline;
+pub mod batcher;
+pub mod node;
+pub mod profile_exchange;
+pub mod scheduler;
+pub mod star;
+pub mod testbed;
+
+pub use batcher::{Batcher, BatchPlan};
+pub use node::{ExecBackend, NodeRuntime, PjrtBackend, SimBackend};
+pub use testbed::SplitMode;
+pub use profile_exchange::DeviceProfileMsg;
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use star::{Spoke, StarPlan, StarTopology};
+pub use testbed::{RunConfig, RunReport, Testbed};

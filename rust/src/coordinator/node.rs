@@ -1,0 +1,284 @@
+//! Node runtime: executes a multi-DNN workload share on one device,
+//! charging virtual time through an [`ExecBackend`].
+//!
+//! Two backends:
+//! * [`SimBackend`] — per-image costs from the Table I calibration scaled
+//!   to the workload (fast; drives the table/figure reproductions);
+//! * [`PjrtBackend`] — the real AOT artifacts through the PJRT engine
+//!   (the end-to-end proof path; wall-clock measured, virtual time
+//!   derived by the device speed factor).
+
+use anyhow::Result;
+
+use crate::device::calib::TableICalibration;
+use crate::device::{DeviceKind, DeviceProfiler, DeviceSpec, DeviceState};
+use crate::frames::{stack_frames, Frame};
+use crate::runtime::ModelPool;
+use crate::sim::SimClock;
+use crate::solver::LatencyEnergyModel;
+use crate::workload::Workload;
+
+/// Executes `frames` for `workload` on a given device; returns seconds of
+/// device time charged.
+pub trait ExecBackend {
+    fn execute(
+        &mut self,
+        kind: DeviceKind,
+        workload: &Workload,
+        frames: &[Frame],
+        split_ratio: f64,
+        masked: bool,
+    ) -> Result<f64>;
+
+    /// Human label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Calibrated-simulation backend.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    calib: TableICalibration,
+}
+
+impl SimBackend {
+    pub fn new() -> Self {
+        SimBackend {
+            calib: TableICalibration::fit(),
+        }
+    }
+}
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn execute(
+        &mut self,
+        kind: DeviceKind,
+        workload: &Workload,
+        frames: &[Frame],
+        split_ratio: f64,
+        masked: bool,
+    ) -> Result<f64> {
+        let per_img = match kind {
+            DeviceKind::Xavier => self.calib.xavier_secs_per_image(split_ratio),
+            DeviceKind::Nano => self.calib.nano_secs_per_image(split_ratio),
+        };
+        Ok(per_img * workload.scale(masked) * frames.len() as f64)
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+/// Real-model backend over the PJRT engine.
+pub struct PjrtBackend {
+    pool: ModelPool,
+    /// Wall-clock seconds spent inside PJRT execution.
+    pub wall_secs: f64,
+    /// Virtual-time scale: simulated Jetson seconds per host CPU second,
+    /// per device kind (host CPU ≉ Jetson; Table I anchors the ratio).
+    pub nano_scale: f64,
+    pub xavier_scale: f64,
+}
+
+impl PjrtBackend {
+    pub fn new(pool: ModelPool) -> Self {
+        PjrtBackend {
+            pool,
+            wall_secs: 0.0,
+            // Calibrated in `Testbed::calibrate_pjrt` at startup; defaults
+            // assume host ≈ Xavier and Nano = speed_factor × slower.
+            nano_scale: DeviceSpec::xavier().speed_factor,
+            xavier_scale: 1.0,
+        }
+    }
+
+    pub fn pool_mut(&mut self) -> &mut ModelPool {
+        &mut self.pool
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn execute(
+        &mut self,
+        kind: DeviceKind,
+        workload: &Workload,
+        frames: &[Frame],
+        _split_ratio: f64,
+        _masked: bool,
+    ) -> Result<f64> {
+        if frames.is_empty() {
+            return Ok(0.0);
+        }
+        let batch = stack_frames(frames);
+        let t0 = std::time::Instant::now();
+        for model in workload.models {
+            self.pool.run_frames(model, &batch)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        self.wall_secs += wall;
+        let scale = match kind {
+            DeviceKind::Nano => self.nano_scale,
+            DeviceKind::Xavier => self.xavier_scale,
+        };
+        Ok(wall * scale)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// One node of the testbed: device state + clock + profiler + backend
+/// charge-through.
+pub struct NodeRuntime<B: ExecBackend> {
+    pub kind: DeviceKind,
+    pub state: DeviceState,
+    pub clock: SimClock,
+    pub profiler: DeviceProfiler,
+    pub backend: B,
+    /// Calibrated surfaces used to shape memory/power under load.
+    model: LatencyEnergyModel,
+    /// Frames executed so far.
+    pub frames_done: u64,
+    /// Device-seconds of execution charged so far.
+    pub exec_secs: f64,
+}
+
+impl<B: ExecBackend> NodeRuntime<B> {
+    pub fn new(kind: DeviceKind, backend: B, seed: u64) -> Self {
+        let spec = match kind {
+            DeviceKind::Nano => DeviceSpec::nano(),
+            DeviceKind::Xavier => DeviceSpec::xavier(),
+        };
+        NodeRuntime {
+            kind,
+            state: DeviceState::new(spec, seed),
+            clock: SimClock::new(),
+            profiler: DeviceProfiler::new(kind.name(), 0.5),
+            backend,
+            model: LatencyEnergyModel::from_table_i(),
+            frames_done: 0,
+            exec_secs: 0.0,
+        }
+    }
+
+    /// Execute a share of the workload; advances this node's clock and
+    /// samples the profiler across the execution window.
+    pub fn execute(
+        &mut self,
+        workload: &Workload,
+        frames: &[Frame],
+        split_ratio: f64,
+        masked: bool,
+    ) -> Result<f64> {
+        if frames.is_empty() {
+            return Ok(0.0);
+        }
+        let secs = self
+            .backend
+            .execute(self.kind, workload, frames, split_ratio, masked)?;
+
+        // shape memory/power per the calibrated surfaces for this r
+        let (mem, pow) = match self.kind {
+            DeviceKind::Xavier => (self.model.m1(split_ratio), self.model.p1(split_ratio)),
+            DeviceKind::Nano => (self.model.m2(split_ratio), self.model.p2(split_ratio)),
+        };
+        let load = (frames.len() as f64 / 100.0).min(1.0);
+        self.state.apply_load(load, mem, pow);
+
+        // profile across the window at the sampler's cadence
+        let start = self.clock.now();
+        self.profiler.sample_now(start, &self.state);
+        let steps = ((secs / 0.5).ceil() as usize).clamp(1, 400);
+        for i in 1..=steps {
+            let t = start + secs * i as f64 / steps as f64;
+            self.clock.sync_to(t);
+            self.profiler.sample(t, &self.state);
+        }
+        self.clock.sync_to(start + secs);
+        self.state.set_idle();
+        self.profiler.sample_now(self.clock.now(), &self.state);
+
+        self.frames_done += frames.len() as u64;
+        self.exec_secs += secs;
+        Ok(secs)
+    }
+
+    /// Mean seconds per image on this node so far.
+    pub fn secs_per_image(&self) -> f64 {
+        if self.frames_done == 0 {
+            0.0
+        } else {
+            self.exec_secs / self.frames_done as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frames::SceneGenerator;
+
+    fn frames(n: usize) -> Vec<Frame> {
+        SceneGenerator::paper_default(3).batch(n)
+    }
+
+    #[test]
+    fn sim_backend_matches_table_i_anchors() {
+        let mut b = SimBackend::new();
+        let w = Workload::calibration();
+        // r=1: Xavier does all 100 images in ≈ 19 s
+        let t = b
+            .execute(DeviceKind::Xavier, w, &frames(100), 1.0, false)
+            .unwrap();
+        assert!((t - 19.0).abs() < 2.0, "xavier full batch {t}");
+        // r=0: Nano does all 100 in ≈ 68.3 s
+        let t = b
+            .execute(DeviceKind::Nano, w, &frames(100), 0.0, false)
+            .unwrap();
+        assert!((t - 68.34).abs() < 4.0, "nano full batch {t}");
+    }
+
+    #[test]
+    fn masked_workload_is_cheaper() {
+        let mut b = SimBackend::new();
+        let w = Workload::calibration();
+        let orig = b
+            .execute(DeviceKind::Nano, w, &frames(50), 0.0, false)
+            .unwrap();
+        let masked = b
+            .execute(DeviceKind::Nano, w, &frames(50), 0.0, true)
+            .unwrap();
+        assert!(masked < orig);
+    }
+
+    #[test]
+    fn node_runtime_advances_clock_and_profiles() {
+        let mut n = NodeRuntime::new(DeviceKind::Nano, SimBackend::new(), 1);
+        let w = Workload::calibration();
+        let secs = n.execute(w, &frames(30), 0.7, false).unwrap();
+        assert!(secs > 0.0);
+        assert!((n.clock.now() - secs).abs() < 1e-9);
+        assert!(n.profiler.len() >= 2);
+        assert_eq!(n.frames_done, 30);
+        assert!(n.secs_per_image() > 0.0);
+        // post-run the device is idle again
+        assert_eq!(n.state.busy, 0.0);
+    }
+
+    #[test]
+    fn empty_share_is_free() {
+        let mut n = NodeRuntime::new(DeviceKind::Xavier, SimBackend::new(), 2);
+        let secs = n
+            .execute(Workload::calibration(), &[], 0.5, false)
+            .unwrap();
+        assert_eq!(secs, 0.0);
+        assert_eq!(n.clock.now(), 0.0);
+    }
+}

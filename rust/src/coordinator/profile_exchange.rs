@@ -1,0 +1,119 @@
+//! Profile exchange: the auxiliary node publishes its system parameters
+//! to the primary over MQTT (§III: "an MQTT-based publisher-subscriber
+//! protocol to share the auxiliary node's system parameters").
+//!
+//! Wire format is a fixed-layout little-endian struct (no serde offline);
+//! `TOPIC/<node>` carries the latest profile as a retained message so a
+//! late-joining primary immediately sees the auxiliary's state.
+
+use anyhow::{bail, Result};
+
+/// Topic prefix for profile messages.
+pub const TOPIC_PREFIX: &str = "heteroedge/profile";
+
+/// Frame-offload topic prefix (`heteroedge/frames/<node>`).
+pub const FRAMES_TOPIC_PREFIX: &str = "heteroedge/frames";
+
+/// Result topic prefix (`heteroedge/results/<node>`).
+pub const RESULTS_TOPIC_PREFIX: &str = "heteroedge/results";
+
+/// A device profile snapshot exchanged between nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfileMsg {
+    /// Simulated timestamp (s).
+    pub at: f64,
+    /// Memory utilization percent.
+    pub mem_pct: f64,
+    /// Power draw (W).
+    pub power_w: f64,
+    /// Busy factor [0,1].
+    pub busy: f64,
+    /// Mean per-image inference seconds observed for the current workload.
+    pub secs_per_image: f64,
+    /// Available battery power (Eq. 6), W.
+    pub p_available_w: f64,
+}
+
+const WIRE_LEN: usize = 6 * 8;
+
+impl DeviceProfileMsg {
+    pub fn topic(node: &str) -> String {
+        format!("{TOPIC_PREFIX}/{node}")
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(WIRE_LEN);
+        for v in [
+            self.at,
+            self.mem_pct,
+            self.power_w,
+            self.busy,
+            self.secs_per_image,
+            self.p_available_w,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != WIRE_LEN {
+            bail!("profile message wrong length {}", bytes.len());
+        }
+        let f = |i: usize| {
+            f64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        let msg = DeviceProfileMsg {
+            at: f(0),
+            mem_pct: f(1),
+            power_w: f(2),
+            busy: f(3),
+            secs_per_image: f(4),
+            p_available_w: f(5),
+        };
+        for v in [msg.at, msg.mem_pct, msg.power_w, msg.busy, msg.secs_per_image] {
+            if !v.is_finite() {
+                bail!("non-finite field in profile message");
+            }
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DeviceProfileMsg {
+        DeviceProfileMsg {
+            at: 12.5,
+            mem_pct: 45.61,
+            power_w: 5.42,
+            busy: 0.5,
+            secs_per_image: 0.19,
+            p_available_w: 8.4,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
+        assert_eq!(DeviceProfileMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_bad_length_and_nan() {
+        assert!(DeviceProfileMsg::decode(&[0u8; 10]).is_err());
+        let mut m = sample();
+        m.mem_pct = f64::NAN;
+        assert!(DeviceProfileMsg::decode(&m.encode()).is_err());
+    }
+
+    #[test]
+    fn topics() {
+        assert_eq!(
+            DeviceProfileMsg::topic("xavier"),
+            "heteroedge/profile/xavier"
+        );
+    }
+}

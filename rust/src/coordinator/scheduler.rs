@@ -1,0 +1,291 @@
+//! The split-ratio scheduler — Algorithm 1.
+//!
+//! ```text
+//! Require: profiles of both nodes, inference times, round-trip time
+//! Ensure:  split ratio r for optimal operation time
+//!  1: on the primary node:
+//!  2:   compute availability factor λ from both devices' memory;
+//!       fit the Eq. 1–3 coefficients by curve fitting
+//!  3:   if M1, M2 ≥ λ and latency L ≤ β then
+//!  4:     assemble objective T = r(T1+T3) + (1−r)T2 with constraints
+//!  5:     check battery capacity / available UGV power (Eqs. 5–6)
+//!  6:     solve by interior-point method
+//!  7:     send the derived share to the subscriber node
+//! ```
+
+use crate::device::BatteryModel;
+use crate::mobility::BetaThreshold;
+use crate::solver::{Constraints, HeteroEdgeSolver, LatencyEnergyModel, ObjectiveKind, SplitDecision};
+use crate::workload::Workload;
+
+use super::profile_exchange::DeviceProfileMsg;
+
+/// Why the scheduler picked its ratio.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionReason {
+    /// Interior-point solve succeeded.
+    Solved,
+    /// Auxiliary memory below the availability factor λ → no offload.
+    MemoryUnavailable,
+    /// Offload latency at/over β → no offload (Algorithm 1 line 3).
+    BetaStop,
+    /// Battery pressure → aggressive offload floor applied (§V.A.4).
+    BatteryAggressive,
+    /// Solver infeasible → all-local fallback.
+    FallbackLocal,
+}
+
+/// The scheduler's output for one round.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub r: f64,
+    pub reason: DecisionReason,
+    pub details: Option<SplitDecision>,
+}
+
+/// Tunables of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Availability factor λ: minimum free-memory percent each node must
+    /// retain for offloading to proceed.
+    pub lambda_free_mem_pct: f64,
+    /// Mobility threshold β on observed offload latency.
+    pub beta_secs: Option<f64>,
+    /// Aggressive-offload floor used under battery pressure.
+    pub aggressive_r_floor: f64,
+    /// Objective formulation.
+    pub objective: ObjectiveKind,
+    /// Constraint set (Eq. 4).
+    pub constraints: Constraints,
+}
+
+impl SchedulerConfig {
+    pub fn paper_default() -> Self {
+        SchedulerConfig {
+            lambda_free_mem_pct: 10.0,
+            beta_secs: Some(5.0),
+            aggressive_r_floor: 0.8,
+            objective: ObjectiveKind::Paper,
+            constraints: Constraints::paper_default(),
+        }
+    }
+}
+
+/// Algorithm 1 driver. Owns the β hysteresis state and the battery model.
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pub beta: BetaThreshold,
+    pub battery: BatteryModel,
+    /// Decisions taken, for reporting.
+    pub decisions: Vec<Decision>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let beta = BetaThreshold::new(cfg.beta_secs.unwrap_or(f64::INFINITY));
+        Scheduler {
+            cfg,
+            beta,
+            battery: BatteryModel::ugv_default(),
+            decisions: Vec::new(),
+        }
+    }
+
+    /// One Algorithm-1 round.
+    ///
+    /// * `primary`/`auxiliary`: latest exchanged profiles;
+    /// * `workload`, `masked`: what this round will run;
+    /// * `observed_offload_latency`: last measured T₃ (feeds β);
+    /// * `battery_pressure`: Eq. 6 availability already below threshold?
+    pub fn decide(
+        &mut self,
+        primary: &DeviceProfileMsg,
+        auxiliary: &DeviceProfileMsg,
+        workload: &Workload,
+        masked: bool,
+        observed_offload_latency: f64,
+        battery_pressure: bool,
+    ) -> Decision {
+        // line 3a: availability factor λ over both memories
+        let lam = self.cfg.lambda_free_mem_pct;
+        if 100.0 - auxiliary.mem_pct < lam || 100.0 - primary.mem_pct < lam {
+            let d = Decision {
+                r: 0.0,
+                reason: DecisionReason::MemoryUnavailable,
+                details: None,
+            };
+            self.decisions.push(d.clone());
+            return d;
+        }
+
+        // line 3b: mobility guard L ≤ β (with hysteresis)
+        if !self.beta.observe(observed_offload_latency) {
+            let d = Decision {
+                r: 0.0,
+                reason: DecisionReason::BetaStop,
+                details: None,
+            };
+            self.decisions.push(d.clone());
+            return d;
+        }
+
+        // lines 2/4: fit surfaces (Table I calibration refit to the
+        // workload) and assemble the Eq. 4 problem
+        let model =
+            LatencyEnergyModel::from_table_i().with_workload_scale(workload.t_r0(masked));
+        let mut solver = HeteroEdgeSolver::new(model, self.cfg.constraints.clone());
+        solver.objective = self.cfg.objective;
+        solver.constraints.beta_secs = self.cfg.beta_secs;
+
+        // line 5: battery check → aggressive floor
+        let (mut decision, reason) = match solver.solve() {
+            Ok(sd) if sd.feasible => (sd, DecisionReason::Solved),
+            Ok(sd) => (sd, DecisionReason::FallbackLocal),
+            Err(_) => (
+                SplitDecision {
+                    r: 0.0,
+                    total_secs: 0.0,
+                    offload_secs: 0.0,
+                    p1_w: 0.0,
+                    p2_w: 0.0,
+                    m1_pct: 0.0,
+                    m2_pct: 0.0,
+                    feasible: false,
+                    iterations: 0,
+                },
+                DecisionReason::FallbackLocal,
+            ),
+        };
+
+        let reason = if battery_pressure && reason == DecisionReason::Solved {
+            // §V.A.4: "the UGV starts offloading more aggressively"
+            decision.r = decision.r.max(self.cfg.aggressive_r_floor);
+            DecisionReason::BatteryAggressive
+        } else {
+            reason
+        };
+
+        let d = Decision {
+            r: decision.r,
+            reason,
+            details: Some(decision),
+        };
+        self.decisions.push(d.clone());
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(mem: f64) -> DeviceProfileMsg {
+        DeviceProfileMsg {
+            at: 0.0,
+            mem_pct: mem,
+            power_w: 5.0,
+            busy: 0.3,
+            secs_per_image: 0.3,
+            p_available_w: 10.0,
+        }
+    }
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedulerConfig::paper_default())
+    }
+
+    #[test]
+    fn normal_round_solves_near_paper_optimum() {
+        let mut s = sched();
+        let d = s.decide(
+            &profile(45.0),
+            &profile(30.0),
+            Workload::calibration(),
+            false,
+            0.5,
+            false,
+        );
+        assert_eq!(d.reason, DecisionReason::Solved);
+        assert!((0.6..=0.85).contains(&d.r), "r = {}", d.r);
+    }
+
+    #[test]
+    fn full_auxiliary_memory_blocks_offload() {
+        let mut s = sched();
+        let d = s.decide(
+            &profile(45.0),
+            &profile(95.0),
+            Workload::calibration(),
+            false,
+            0.5,
+            false,
+        );
+        assert_eq!(d.reason, DecisionReason::MemoryUnavailable);
+        assert_eq!(d.r, 0.0);
+    }
+
+    #[test]
+    fn beta_violation_stops_offload_until_recovery() {
+        let mut s = sched();
+        let d = s.decide(
+            &profile(40.0),
+            &profile(40.0),
+            Workload::calibration(),
+            false,
+            10.0, // over β = 5
+            false,
+        );
+        assert_eq!(d.reason, DecisionReason::BetaStop);
+        // latency recovers below the hysteresis band → offloading resumes
+        let d2 = s.decide(
+            &profile(40.0),
+            &profile(40.0),
+            Workload::calibration(),
+            false,
+            1.0,
+            false,
+        );
+        assert_eq!(d2.reason, DecisionReason::Solved);
+        assert!(d2.r > 0.0);
+    }
+
+    #[test]
+    fn battery_pressure_raises_ratio() {
+        let mut s = sched();
+        let normal = s.decide(
+            &profile(40.0),
+            &profile(40.0),
+            Workload::calibration(),
+            false,
+            0.5,
+            false,
+        );
+        let pressured = s.decide(
+            &profile(40.0),
+            &profile(40.0),
+            Workload::calibration(),
+            false,
+            0.5,
+            true,
+        );
+        assert_eq!(pressured.reason, DecisionReason::BatteryAggressive);
+        assert!(pressured.r >= s.cfg.aggressive_r_floor);
+        assert!(pressured.r >= normal.r);
+    }
+
+    #[test]
+    fn decisions_are_recorded() {
+        let mut s = sched();
+        for _ in 0..3 {
+            s.decide(
+                &profile(40.0),
+                &profile(40.0),
+                Workload::calibration(),
+                true,
+                0.2,
+                false,
+            );
+        }
+        assert_eq!(s.decisions.len(), 3);
+    }
+}

@@ -1,0 +1,472 @@
+//! The two-node testbed harness: primary (Nano/UGV) + auxiliary (Xavier),
+//! a simulated wireless channel, the batcher and the scheduler — the
+//! engine behind every experiment (Tables I/III/IV, Figs. 3/5/6/7).
+
+use anyhow::Result;
+
+use crate::device::DeviceKind;
+use crate::frames::SceneGenerator;
+use crate::mobility::MobilityModel;
+use crate::net::{Band, Channel, ChannelConfig};
+use crate::workload::Workload;
+
+use super::batcher::Batcher;
+use super::node::{ExecBackend, NodeRuntime, SimBackend};
+use super::profile_exchange::DeviceProfileMsg;
+use super::scheduler::{Scheduler, SchedulerConfig};
+
+/// How the split ratio is chosen per run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SplitMode {
+    /// Fixed r (the table sweeps).
+    Fixed(f64),
+    /// Algorithm 1 / solver decides.
+    Solver,
+}
+
+/// One experiment run's configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub workload: &'static Workload,
+    pub n_frames: usize,
+    pub masked: bool,
+    pub dedup: bool,
+    pub split: SplitMode,
+    pub band: Band,
+    pub mobility: MobilityModel,
+    /// β threshold for the dynamic case (None disables).
+    pub beta_secs: Option<f64>,
+    pub seed: u64,
+    /// Frames per scheduling round in the dynamic case.
+    pub round_frames: usize,
+}
+
+impl RunConfig {
+    /// Case-1 static defaults: 100 frames, 4 m apart, 5 GHz.
+    pub fn static_default(workload: &'static Workload) -> Self {
+        RunConfig {
+            workload,
+            n_frames: 100,
+            masked: false,
+            dedup: false,
+            split: SplitMode::Solver,
+            band: Band::Ghz5,
+            mobility: MobilityModel::paper_case1(),
+            beta_secs: None,
+            seed: 42,
+            round_frames: 10,
+        }
+    }
+
+    /// Case-2 dynamic defaults: Vp=1, Va=3 m/s, β = 5 s.
+    pub fn dynamic_default(workload: &'static Workload) -> Self {
+        RunConfig {
+            mobility: MobilityModel::paper_case2(),
+            beta_secs: Some(5.0),
+            ..RunConfig::static_default(workload)
+        }
+    }
+}
+
+/// One point of the dynamic (Fig. 6) series.
+#[derive(Debug, Clone)]
+pub struct DynPoint {
+    pub distance_m: f64,
+    pub offload_latency_s: f64,
+    pub ops_time_s: f64,
+    pub offloading: bool,
+}
+
+/// Everything a run measures.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub r: f64,
+    /// Auxiliary execution time (Table notation T1), seconds.
+    pub t1_s: f64,
+    /// Primary execution time (T2), seconds.
+    pub t2_s: f64,
+    /// Offload latency (T3), seconds.
+    pub t3_s: f64,
+    /// Mean power draw during the run (W).
+    pub p1_w: f64,
+    pub p2_w: f64,
+    /// Mean memory utilization during the run (%).
+    pub m1_pct: f64,
+    pub m2_pct: f64,
+    /// Table III's T1+T2.
+    pub total_serial_s: f64,
+    /// Physically-concurrent makespan max(T2, T3+T1).
+    pub total_concurrent_s: f64,
+    pub frames_local: usize,
+    pub frames_offloaded: usize,
+    pub deduped: usize,
+    pub offload_bytes: u64,
+    /// §VI bandwidth savings realized by masking (0 when off).
+    pub bandwidth_savings: f64,
+    /// Primary-side masking overhead (s).
+    pub masking_overhead_s: f64,
+    /// Dynamic-case series (empty for static runs).
+    pub series: Vec<DynPoint>,
+    /// Wall-clock spent in real PJRT execution (0 for the sim backend).
+    pub backend: &'static str,
+}
+
+impl RunReport {
+    /// ms of offload latency per offloaded image (headline metric).
+    pub fn offload_ms_per_image(&self) -> f64 {
+        if self.frames_offloaded == 0 {
+            0.0
+        } else {
+            self.t3_s * 1e3 / self.frames_offloaded as f64
+        }
+    }
+}
+
+/// The two-node testbed.
+pub struct Testbed<B1: ExecBackend, B2: ExecBackend> {
+    pub primary: NodeRuntime<B1>,
+    pub auxiliary: NodeRuntime<B2>,
+    pub channel: Channel,
+    pub scheduler: Scheduler,
+}
+
+impl Testbed<SimBackend, SimBackend> {
+    /// Calibrated-simulation testbed (the experiment default).
+    pub fn sim(band: Band, distance_m: f64, seed: u64) -> Self {
+        Testbed::with_backends(SimBackend::new(), SimBackend::new(), band, distance_m, seed)
+    }
+}
+
+impl<B1: ExecBackend, B2: ExecBackend> Testbed<B1, B2> {
+    pub fn with_backends(
+        primary_backend: B1,
+        auxiliary_backend: B2,
+        band: Band,
+        distance_m: f64,
+        seed: u64,
+    ) -> Self {
+        Testbed {
+            primary: NodeRuntime::new(DeviceKind::Nano, primary_backend, seed ^ 0x1),
+            auxiliary: NodeRuntime::new(DeviceKind::Xavier, auxiliary_backend, seed ^ 0x2),
+            channel: Channel::new(ChannelConfig::wifi(band), distance_m, seed ^ 0x3),
+            scheduler: Scheduler::new(SchedulerConfig::paper_default()),
+        }
+    }
+
+    fn profile_of(node: &NodeRuntime<impl ExecBackend>) -> DeviceProfileMsg {
+        DeviceProfileMsg {
+            at: node.clock.now(),
+            mem_pct: node.state.mem_used_pct,
+            power_w: node.state.power_w,
+            busy: node.state.busy,
+            secs_per_image: node.secs_per_image(),
+            p_available_w: 10.0,
+        }
+    }
+
+    /// Choose r per the run's split mode.
+    fn choose_r(&mut self, cfg: &RunConfig, observed_t3: f64) -> f64 {
+        match cfg.split {
+            SplitMode::Fixed(r) => r,
+            SplitMode::Solver => {
+                self.scheduler.cfg.beta_secs = cfg.beta_secs;
+                let p = Self::profile_of(&self.primary);
+                let a = Self::profile_of(&self.auxiliary);
+                self.scheduler
+                    .decide(&p, &a, cfg.workload, cfg.masked, observed_t3, false)
+                    .r
+            }
+        }
+    }
+
+    /// Case-1 static run: one batch, fixed distance.
+    pub fn run_static(&mut self, cfg: &RunConfig) -> Result<RunReport> {
+        self.channel
+            .set_distance(cfg.mobility.distance_at(0.0));
+        let r = self.choose_r(cfg, self.channel.expected_latency_s(48 * 1024));
+
+        let mut gen = SceneGenerator::paper_default(cfg.seed);
+        let frames = gen.batch(cfg.n_frames);
+
+        let mut batcher = if cfg.masked {
+            Batcher::paper_default()
+        } else {
+            Batcher::without_masking()
+        };
+        if !cfg.dedup {
+            batcher.dedup = None;
+        }
+        let plan = batcher.plan(frames, r);
+
+        // masking runs on the primary before transmission
+        self.primary.clock.advance(plan.masking_overhead_s);
+
+        // offload transfer: one MQTT message per frame (§IV.B)
+        let mut t3 = 0.0;
+        for enc in &plan.offload {
+            t3 += self.channel.send(enc.wire_bytes() as u64);
+        }
+
+        // decode on the auxiliary (its CPU, charged as part of transfer
+        // handling: negligible next to DNN time, but keep it honest)
+        let frames_off: Vec<_> = plan
+            .offload
+            .iter()
+            .map(|enc| {
+                let (id, pixels) = crate::frames::codec::decode_frame(&enc.bytes)?;
+                Ok(crate::frames::Frame {
+                    id,
+                    pixels,
+                    truth_mask: vec![0.0; crate::frames::FRAME_PIXELS],
+                    classes: vec![],
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // primary executes its share now; auxiliary waits for the transfer
+        let t2 = self
+            .primary
+            .execute(cfg.workload, &plan.local, r, cfg.masked)?;
+        self.auxiliary.clock.sync_to(t3);
+        let t1 = self
+            .auxiliary
+            .execute(cfg.workload, &frames_off, r, cfg.masked)?;
+
+        let p_rep = self.primary.profiler.report();
+        let a_rep = self.auxiliary.profiler.report();
+        Ok(RunReport {
+            r,
+            t1_s: t1,
+            t2_s: t2,
+            t3_s: t3,
+            p1_w: a_rep.mean_power_w(),
+            p2_w: p_rep.mean_power_w(),
+            m1_pct: a_rep.mean_mem_pct(),
+            m2_pct: p_rep.mean_mem_pct(),
+            total_serial_s: t1 + t2,
+            total_concurrent_s: t2.max(t3 + t1),
+            frames_local: plan.local.len(),
+            frames_offloaded: frames_off.len(),
+            deduped: plan.deduped,
+            offload_bytes: plan.offload_bytes,
+            bandwidth_savings: plan.bandwidth_savings(),
+            masking_overhead_s: plan.masking_overhead_s,
+            series: Vec::new(),
+            backend: self.primary.backend.name(),
+        })
+    }
+
+    /// Case-2 dynamic run: rounds of `round_frames` while the UGVs move;
+    /// β stops offloading when the link degrades.
+    pub fn run_dynamic(&mut self, cfg: &RunConfig) -> Result<RunReport> {
+        let mut gen = SceneGenerator::paper_default(cfg.seed);
+        let mut batcher = if cfg.masked {
+            Batcher::paper_default()
+        } else {
+            Batcher::without_masking()
+        };
+        if !cfg.dedup {
+            batcher.dedup = None;
+        }
+        let mut beta = crate::mobility::BetaThreshold::new(
+            cfg.beta_secs.unwrap_or(f64::INFINITY),
+        );
+
+        let mut t1 = 0.0;
+        let mut t2 = 0.0;
+        let mut t3 = 0.0;
+        let mut frames_local = 0usize;
+        let mut frames_off = 0usize;
+        let mut deduped = 0usize;
+        let mut offload_bytes = 0u64;
+        let mut mask_overhead = 0.0;
+        let mut series = Vec::new();
+        let mut done = 0usize;
+
+        let mut r = match cfg.split {
+            SplitMode::Fixed(r) => r,
+            SplitMode::Solver => self.choose_r(cfg, 0.0),
+        };
+
+        while done < cfg.n_frames {
+            let n = cfg.round_frames.min(cfg.n_frames - done);
+            done += n;
+            let batch = gen.batch(n);
+
+            // mission time = the slower node's clock
+            let now = self.primary.clock.now().max(self.auxiliary.clock.now());
+            let dist = cfg.mobility.distance_at(now);
+            self.channel.set_distance(dist);
+
+            // probe the link with one frame-sized message cost
+            let probe = self.channel.expected_latency_s(48 * 1024) * n as f64;
+            let offload_ok = beta.observe(probe);
+            let round_r = if offload_ok { r } else { 0.0 };
+
+            let plan = batcher.plan(batch, round_r);
+            deduped += plan.deduped;
+            mask_overhead += plan.masking_overhead_s;
+            self.primary.clock.advance(plan.masking_overhead_s);
+
+            let mut round_t3 = 0.0;
+            for enc in &plan.offload {
+                round_t3 += self.channel.send(enc.wire_bytes() as u64);
+                offload_bytes += enc.wire_bytes() as u64;
+            }
+            t3 += round_t3;
+
+            let frames_off_round: Vec<_> = plan
+                .offload
+                .iter()
+                .map(|enc| {
+                    let (id, pixels) = crate::frames::codec::decode_frame(&enc.bytes)?;
+                    Ok(crate::frames::Frame {
+                        id,
+                        pixels,
+                        truth_mask: vec![0.0; crate::frames::FRAME_PIXELS],
+                        classes: vec![],
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+
+            t2 += self
+                .primary
+                .execute(cfg.workload, &plan.local, round_r, cfg.masked)?;
+            self.auxiliary
+                .clock
+                .sync_to(self.primary.clock.now() + round_t3);
+            t1 += self
+                .auxiliary
+                .execute(cfg.workload, &frames_off_round, round_r, cfg.masked)?;
+
+            frames_local += plan.local.len();
+            frames_off += frames_off_round.len();
+
+            series.push(DynPoint {
+                distance_m: dist,
+                offload_latency_s: round_t3,
+                ops_time_s: t1 + t2,
+                offloading: offload_ok,
+            });
+
+            // re-decide for the next round when the solver drives
+            if cfg.split == SplitMode::Solver {
+                r = self.choose_r(cfg, round_t3.max(probe));
+            }
+        }
+
+        let p_rep = self.primary.profiler.report();
+        let a_rep = self.auxiliary.profiler.report();
+        let r_effective = if frames_local + frames_off == 0 {
+            0.0
+        } else {
+            frames_off as f64 / (frames_local + frames_off) as f64
+        };
+        Ok(RunReport {
+            r: r_effective,
+            t1_s: t1,
+            t2_s: t2,
+            t3_s: t3,
+            p1_w: a_rep.mean_power_w(),
+            p2_w: p_rep.mean_power_w(),
+            m1_pct: a_rep.mean_mem_pct(),
+            m2_pct: p_rep.mean_mem_pct(),
+            total_serial_s: t1 + t2,
+            total_concurrent_s: t2.max(t3 + t1),
+            frames_local,
+            frames_offloaded: frames_off,
+            deduped,
+            offload_bytes,
+            bandwidth_savings: 0.0,
+            masking_overhead_s: mask_overhead,
+            series,
+            backend: self.primary.backend.name(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn static_run(r: f64, masked: bool) -> RunReport {
+        let mut tb = Testbed::sim(Band::Ghz5, 4.0, 1);
+        let mut cfg = RunConfig::static_default(Workload::calibration());
+        cfg.split = SplitMode::Fixed(r);
+        cfg.masked = masked;
+        tb.run_static(&cfg).unwrap()
+    }
+
+    #[test]
+    fn r0_matches_table_i_baseline() {
+        let rep = static_run(0.0, false);
+        assert_eq!(rep.frames_offloaded, 0);
+        assert!((rep.t2_s - 68.34).abs() < 5.0, "T2 = {}", rep.t2_s);
+        assert_eq!(rep.t1_s, 0.0);
+        assert_eq!(rep.t3_s, 0.0);
+    }
+
+    #[test]
+    fn r07_beats_baseline_like_the_headline() {
+        let base = static_run(0.0, false);
+        let off = static_run(0.7, false);
+        assert_eq!(off.frames_offloaded, 70);
+        // headline: ≈47% lower total operation time at r=0.7
+        assert!(
+            off.total_concurrent_s < 0.65 * base.total_concurrent_s,
+            "{} vs {}",
+            off.total_concurrent_s,
+            base.total_concurrent_s
+        );
+        assert!(off.t3_s > 0.0 && off.t3_s < 5.0, "T3 = {}", off.t3_s);
+    }
+
+    #[test]
+    fn solver_mode_picks_good_ratio() {
+        let mut tb = Testbed::sim(Band::Ghz5, 4.0, 2);
+        let cfg = RunConfig::static_default(Workload::calibration());
+        let rep = tb.run_static(&cfg).unwrap();
+        assert!((0.55..=0.9).contains(&rep.r), "r = {}", rep.r);
+    }
+
+    #[test]
+    fn masking_saves_bandwidth_and_time() {
+        let orig = static_run(0.7, false);
+        let masked = static_run(0.7, true);
+        assert!(masked.offload_bytes < orig.offload_bytes);
+        assert!(masked.bandwidth_savings > 0.1);
+        assert!(masked.total_serial_s < orig.total_serial_s);
+        assert!(masked.masking_overhead_s > 0.0);
+    }
+
+    #[test]
+    fn dynamic_run_stops_offloading_far_away() {
+        let mut tb = Testbed::sim(Band::Ghz5, 2.0, 3);
+        let mut cfg = RunConfig::dynamic_default(Workload::calibration());
+        cfg.split = SplitMode::Fixed(0.7);
+        cfg.n_frames = 200;
+        cfg.beta_secs = Some(3.0);
+        let rep = tb.run_dynamic(&cfg).unwrap();
+        assert!(!rep.series.is_empty());
+        // latency grows with distance...
+        let first = &rep.series[0];
+        let last = rep.series.last().unwrap();
+        assert!(last.distance_m > first.distance_m);
+        // ...and the β guard eventually cuts offloading
+        assert!(
+            rep.series.iter().any(|p| !p.offloading),
+            "β never triggered over {} m",
+            last.distance_m
+        );
+        assert!(rep.frames_local > 0);
+    }
+
+    #[test]
+    fn report_accounting_consistent() {
+        let rep = static_run(0.5, false);
+        assert_eq!(rep.frames_local + rep.frames_offloaded, 100);
+        assert!((rep.total_serial_s - (rep.t1_s + rep.t2_s)).abs() < 1e-9);
+        assert!(rep.total_concurrent_s <= rep.total_serial_s + rep.t3_s + 1e-9);
+        assert!(rep.offload_ms_per_image() > 0.0);
+    }
+}

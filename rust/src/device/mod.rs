@@ -1,0 +1,191 @@
+//! Device substrate — S3/S4: heterogeneous edge device models, the power
+//! and battery models (Eqs. 5–6, P = μS³), and the profiling engine.
+//!
+//! The paper's testbed devices (Jetson Nano primary, Jetson Xavier
+//! auxiliary) are replaced by calibrated analytic models: the HeteroEdge
+//! solver only ever consumes the profiled scalars (operation time, watts,
+//! memory %), so a device model that reproduces Table I's surfaces yields
+//! the same optimization problem (DESIGN.md substitution table).
+
+pub mod calib;
+pub mod power;
+pub mod profiler;
+
+pub use calib::TableICalibration;
+pub use power::{BatteryModel, CpuPowerModel};
+pub use profiler::{DeviceProfiler, ProfileReport, ProfileSample};
+
+use crate::util::rng::Rng;
+
+/// Device class in the paper's testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Jetson Nano: quad-core A57, 4 GB LPDDR4, 128-core Maxwell.
+    Nano,
+    /// Jetson Xavier: octa-core Carmel, 8 GB LPDDR5, 512-core Volta.
+    Xavier,
+}
+
+impl DeviceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Nano => "nano",
+            DeviceKind::Xavier => "xavier",
+        }
+    }
+}
+
+/// Static capabilities of one device.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub kind: DeviceKind,
+    /// Max CPU speed S_max in cycles/s (§V.A.1).
+    pub cpu_speed_hz: f64,
+    /// Chip coefficient μ in P = μS³ (§V.A.1, after [20]).
+    pub mu: f64,
+    /// Total memory in MB.
+    pub mem_total_mb: f64,
+    /// Power rating W^k (max watts, constraint C2/C5).
+    pub power_max_w: f64,
+    /// Idle draw in watts.
+    pub idle_power_w: f64,
+    /// Relative DNN throughput (Nano = 1.0; Xavier ≈ 3.6× from Table I:
+    /// 68.34 s vs 19.0 s for the same 100-image workload).
+    pub speed_factor: f64,
+}
+
+impl DeviceSpec {
+    pub fn nano() -> Self {
+        DeviceSpec {
+            kind: DeviceKind::Nano,
+            cpu_speed_hz: 1.43e9,
+            // μ chosen so μS³ ≈ 10 W at full tilt (Nano's 10 W mode)
+            mu: 10.0 / 1.43e9_f64.powi(3),
+            mem_total_mb: 4096.0,
+            power_max_w: 10.0,
+            idle_power_w: 1.25,
+            speed_factor: 1.0,
+        }
+    }
+
+    pub fn xavier() -> Self {
+        DeviceSpec {
+            kind: DeviceKind::Xavier,
+            cpu_speed_hz: 2.26e9,
+            mu: 30.0 / 2.26e9_f64.powi(3),
+            mem_total_mb: 8192.0,
+            power_max_w: 30.0,
+            idle_power_w: 0.95,
+            speed_factor: 68.34 / 19.001,
+        }
+    }
+
+    /// Execution latency T_exec = C_cpu / S for a task of `input_bits`
+    /// with `n_cycles_per_bit` (§V.A.1).
+    pub fn exec_latency(&self, input_bits: f64, n_cycles_per_bit: f64) -> f64 {
+        (input_bits * n_cycles_per_bit) / self.cpu_speed_hz
+    }
+
+    /// Execution energy E_exec = C_cpu · μ · S² (§V.A.1).
+    pub fn exec_energy(&self, input_bits: f64, n_cycles_per_bit: f64) -> f64 {
+        input_bits * n_cycles_per_bit * self.mu * self.cpu_speed_hz.powi(2)
+    }
+}
+
+/// Mutable run-time state of one simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceState {
+    pub spec: DeviceSpec,
+    /// Memory utilization percentage (0–100).
+    pub mem_used_pct: f64,
+    /// Instantaneous power draw in watts.
+    pub power_w: f64,
+    /// Busy factor: fraction of compute currently occupied (0–1).
+    pub busy: f64,
+    rng: Rng,
+}
+
+impl DeviceState {
+    pub fn new(spec: DeviceSpec, seed: u64) -> Self {
+        DeviceState {
+            mem_used_pct: match spec.kind {
+                DeviceKind::Nano => 16.0, // Table I r=1 row: idle Nano 16%
+                DeviceKind::Xavier => 10.2, // Table I r=0 row: idle Xavier
+            },
+            power_w: spec.idle_power_w,
+            busy: 0.0,
+            spec,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Apply a workload level: `load` ∈ [0,1] of this device's capacity.
+    /// Memory/power move toward the calibrated surfaces with ±2% jitter
+    /// (the profiler sees realistic noise, like jetson-stats would).
+    pub fn apply_load(&mut self, load: f64, mem_pct: f64, power_w: f64) {
+        let jm = 1.0 + 0.02 * self.rng.normal();
+        let jp = 1.0 + 0.02 * self.rng.normal();
+        self.busy = load.clamp(0.0, 1.0);
+        self.mem_used_pct = (mem_pct * jm).clamp(0.0, 100.0);
+        self.power_w = (power_w * jp).clamp(0.0, self.spec.power_max_w);
+    }
+
+    pub fn set_idle(&mut self) {
+        self.busy = 0.0;
+        self.power_w = self.spec.idle_power_w;
+    }
+
+    /// Free memory headroom in percent points.
+    pub fn mem_headroom_pct(&self) -> f64 {
+        100.0 - self.mem_used_pct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_heterogeneous() {
+        let nano = DeviceSpec::nano();
+        let xavier = DeviceSpec::xavier();
+        assert!(xavier.speed_factor > 3.0 && xavier.speed_factor < 4.0);
+        assert!(xavier.mem_total_mb > nano.mem_total_mb);
+        assert!(xavier.power_max_w > nano.power_max_w);
+    }
+
+    #[test]
+    fn exec_latency_scales_with_input() {
+        let d = DeviceSpec::nano();
+        let t1 = d.exec_latency(1e6, 100.0);
+        let t2 = d.exec_latency(2e6, 100.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exec_energy_matches_mu_s2() {
+        let d = DeviceSpec::nano();
+        let cycles = 1e6 * 50.0;
+        let e = d.exec_energy(1e6, 50.0);
+        assert!((e - cycles * d.mu * d.cpu_speed_hz.powi(2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_model_consistency() {
+        // P = μ S³ at S_max should be ≈ the device's power rating
+        let d = DeviceSpec::nano();
+        let p = d.mu * d.cpu_speed_hz.powi(3);
+        assert!((p - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn state_load_clamps() {
+        let mut s = DeviceState::new(DeviceSpec::nano(), 1);
+        s.apply_load(2.0, 150.0, 99.0);
+        assert!(s.busy <= 1.0);
+        assert!(s.mem_used_pct <= 100.0);
+        assert!(s.power_w <= s.spec.power_max_w);
+        s.set_idle();
+        assert_eq!(s.power_w, s.spec.idle_power_w);
+    }
+}

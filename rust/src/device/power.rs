@@ -1,0 +1,158 @@
+//! Power and battery models — §V.A.1 (P = μS³) and §V.A.4 (Eqs. 5–6).
+
+/// CPU power model after Zhang et al. [20]: P = μ·S³, energy/cycle = μ·S².
+#[derive(Debug, Clone)]
+pub struct CpuPowerModel {
+    /// Chip-architecture coefficient μ.
+    pub mu: f64,
+    /// Max speed S_max in cycles/s (constraint C4: 0 ≤ S ≤ S_max).
+    pub s_max: f64,
+}
+
+impl CpuPowerModel {
+    pub fn new(mu: f64, s_max: f64) -> Self {
+        assert!(mu > 0.0 && s_max > 0.0);
+        CpuPowerModel { mu, s_max }
+    }
+
+    /// Instantaneous power at speed `s` (clamped to S_max).
+    pub fn power_at(&self, s: f64) -> f64 {
+        let s = s.clamp(0.0, self.s_max);
+        self.mu * s.powi(3)
+    }
+
+    /// Energy to run `cycles` at speed `s`: cycles · μ · s².
+    pub fn energy_for(&self, cycles: f64, s: f64) -> f64 {
+        let s = s.clamp(0.0, self.s_max);
+        cycles * self.mu * s * s
+    }
+
+    /// Latency to run `cycles` at speed `s`.
+    pub fn latency_for(&self, cycles: f64, s: f64) -> f64 {
+        let s = s.clamp(f64::MIN_POSITIVE, self.s_max);
+        cycles / s
+    }
+}
+
+/// Battery + charging constraints of §V.A.4.
+///
+/// The UGVs (RosBot/JetBot) carry a 4000 mAh battery with discharge rate
+/// k = 0.7, drive for 20–25 min losing 15–20 W, and the DNN workload
+/// draws 5–6 W for 50–60 s. Eq. 5–6:
+///
+/// ```text
+/// E_available = C₀·k − E_dnn − E_drive
+/// P_available = E_available / ((1−k)(t_dnn + t_drive)/3600)
+/// ```
+#[derive(Debug, Clone)]
+pub struct BatteryModel {
+    /// Battery capacity C₀ in watt-hours.
+    pub capacity_wh: f64,
+    /// Discharge rate k (fraction of capacity usable before recharge).
+    pub discharge_rate: f64,
+    /// Power threshold below which the UGV offloads aggressively (§V.A.4).
+    pub power_threshold_w: f64,
+}
+
+impl BatteryModel {
+    /// RosBot/JetBot-class battery: 4000 mAh at ~11.1 V ≈ 44.4 Wh.
+    pub fn ugv_default() -> Self {
+        BatteryModel {
+            capacity_wh: 44.4,
+            discharge_rate: 0.7,
+            power_threshold_w: 6.0,
+        }
+    }
+
+    /// Eq. 5: available energy (Wh) after DNN + drive consumption.
+    /// `e_dnn_wh`/`e_drive_wh` are energies already spent, in Wh.
+    pub fn e_available(&self, e_dnn_wh: f64, e_drive_wh: f64) -> f64 {
+        self.capacity_wh * self.discharge_rate - e_dnn_wh - e_drive_wh
+    }
+
+    /// Eq. 6: available power (W) given remaining mission durations in
+    /// seconds.
+    pub fn p_available(&self, e_available_wh: f64, t_dnn_s: f64, t_drive_s: f64) -> f64 {
+        let denom = (1.0 - self.discharge_rate) * (t_dnn_s + t_drive_s) / 3600.0;
+        if denom <= 0.0 {
+            return f64::INFINITY;
+        }
+        e_available_wh / denom
+    }
+
+    /// Energy in Wh consumed by a load of `watts` over `secs`.
+    pub fn wh(watts: f64, secs: f64) -> f64 {
+        watts * secs / 3600.0
+    }
+
+    /// §V.A.4 decision: should the primary offload *aggressively*?
+    /// True when the available power falls below the threshold.
+    pub fn should_offload_aggressively(
+        &self,
+        e_dnn_wh: f64,
+        e_drive_wh: f64,
+        t_dnn_s: f64,
+        t_drive_s: f64,
+    ) -> bool {
+        let e = self.e_available(e_dnn_wh, e_drive_wh);
+        self.p_available(e, t_dnn_s, t_drive_s) < self.power_threshold_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_power_curve() {
+        let m = CpuPowerModel::new(1e-27, 1e9);
+        let p1 = m.power_at(0.5e9);
+        let p2 = m.power_at(1e9);
+        assert!((p2 / p1 - 8.0).abs() < 1e-9, "P∝S³");
+    }
+
+    #[test]
+    fn power_clamps_to_smax() {
+        let m = CpuPowerModel::new(1e-27, 1e9);
+        assert_eq!(m.power_at(2e9), m.power_at(1e9));
+    }
+
+    #[test]
+    fn energy_quadratic_in_speed() {
+        let m = CpuPowerModel::new(1e-27, 1e9);
+        let e1 = m.energy_for(1e9, 0.5e9);
+        let e2 = m.energy_for(1e9, 1e9);
+        assert!((e2 / e1 - 4.0).abs() < 1e-9, "E∝S²");
+    }
+
+    #[test]
+    fn latency_energy_tradeoff() {
+        // halving speed doubles latency but quarters energy — the DVFS
+        // trade the solver's C4 constraint rides on
+        let m = CpuPowerModel::new(1e-27, 1e9);
+        assert!(m.latency_for(1e9, 0.5e9) > m.latency_for(1e9, 1e9));
+        assert!(m.energy_for(1e9, 0.5e9) < m.energy_for(1e9, 1e9));
+    }
+
+    #[test]
+    fn battery_eq5_eq6() {
+        let b = BatteryModel::ugv_default();
+        // paper's numbers: DNN 5.5 W × 55 s, drive 17.5 W × 22.5 min
+        let e_dnn = BatteryModel::wh(5.5, 55.0);
+        let e_drive = BatteryModel::wh(17.5, 22.5 * 60.0);
+        let e_av = b.e_available(e_dnn, e_drive);
+        assert!(e_av > 0.0, "mission should leave energy: {e_av}");
+        let p_av = b.p_available(e_av, 55.0, 22.5 * 60.0);
+        assert!(p_av > 0.0);
+    }
+
+    #[test]
+    fn depleted_battery_triggers_aggressive_offload() {
+        let b = BatteryModel::ugv_default();
+        // drain nearly everything usable
+        let drained = b.capacity_wh * b.discharge_rate - 0.01;
+        assert!(b.should_offload_aggressively(drained, 0.0, 60.0, 1200.0));
+        // fresh battery does not
+        assert!(!b.should_offload_aggressively(0.1, 0.1, 60.0, 1200.0));
+    }
+}

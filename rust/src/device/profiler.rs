@@ -1,0 +1,189 @@
+//! The HeteroEdge profiling engine (§IV): continuous logging of memory
+//! utilization, power and inference time on both nodes.
+//!
+//! In the paper this is jetson-stats sampling the boards; here the
+//! profiler samples [`super::DeviceState`] as the simulation applies
+//! load, producing the per-ratio rows of Table I / Table III.
+
+use super::DeviceState;
+use crate::util::stats::Summary;
+
+/// One profiling sample at a simulated instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSample {
+    pub at: f64,
+    pub mem_pct: f64,
+    pub power_w: f64,
+    pub busy: f64,
+}
+
+/// Aggregated profile over a measurement window.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub device: &'static str,
+    pub samples: usize,
+    pub mem_pct: Summary,
+    pub power_w: Summary,
+    pub busy: Summary,
+    /// Total energy integrated over the window (Wh).
+    pub energy_wh: f64,
+    pub window_secs: f64,
+}
+
+impl ProfileReport {
+    /// Mean power over the window in watts.
+    pub fn mean_power_w(&self) -> f64 {
+        self.power_w.mean()
+    }
+
+    pub fn mean_mem_pct(&self) -> f64 {
+        self.mem_pct.mean()
+    }
+}
+
+/// Periodic sampler over a device's state.
+#[derive(Debug)]
+pub struct DeviceProfiler {
+    device: &'static str,
+    interval: f64,
+    last_at: Option<f64>,
+    samples: Vec<ProfileSample>,
+    energy_wh: f64,
+}
+
+impl DeviceProfiler {
+    /// `interval`: sampling period in simulated seconds (jetson-stats
+    /// defaults to ~1 Hz; we default to 0.5 s).
+    pub fn new(device: &'static str, interval: f64) -> Self {
+        assert!(interval > 0.0);
+        DeviceProfiler {
+            device,
+            interval,
+            last_at: None,
+            samples: Vec::new(),
+            energy_wh: 0.0,
+        }
+    }
+
+    /// Record the state at simulated time `at` if an interval elapsed
+    /// (call freely; sub-interval calls are ignored). Integrates energy
+    /// with the trapezoid rule between accepted samples.
+    pub fn sample(&mut self, at: f64, state: &DeviceState) {
+        if let Some(last) = self.last_at {
+            if at - last < self.interval {
+                return;
+            }
+            if let Some(prev) = self.samples.last() {
+                let dt = at - prev.at;
+                self.energy_wh += (prev.power_w + state.power_w) / 2.0 * dt / 3600.0;
+            }
+        }
+        self.last_at = Some(at);
+        self.samples.push(ProfileSample {
+            at,
+            mem_pct: state.mem_used_pct,
+            power_w: state.power_w,
+            busy: state.busy,
+        });
+    }
+
+    /// Force-record regardless of the interval (used at workload edges).
+    pub fn sample_now(&mut self, at: f64, state: &DeviceState) {
+        self.last_at = None;
+        self.sample(at, state);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Summarize the collected window.
+    pub fn report(&self) -> ProfileReport {
+        let mut mem = Summary::new();
+        let mut pow = Summary::new();
+        let mut busy = Summary::new();
+        for s in &self.samples {
+            mem.record(s.mem_pct);
+            pow.record(s.power_w);
+            busy.record(s.busy);
+        }
+        let window = match (self.samples.first(), self.samples.last()) {
+            (Some(a), Some(b)) => b.at - a.at,
+            _ => 0.0,
+        };
+        ProfileReport {
+            device: self.device,
+            samples: self.samples.len(),
+            mem_pct: mem,
+            power_w: pow,
+            busy,
+            energy_wh: self.energy_wh,
+            window_secs: window,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.samples.clear();
+        self.last_at = None;
+        self.energy_wh = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+
+    fn state() -> DeviceState {
+        DeviceState::new(DeviceSpec::nano(), 42)
+    }
+
+    #[test]
+    fn respects_sampling_interval() {
+        let mut p = DeviceProfiler::new("nano", 1.0);
+        let s = state();
+        p.sample(0.0, &s);
+        p.sample(0.3, &s); // dropped
+        p.sample(0.9, &s); // dropped
+        p.sample(1.0, &s); // kept
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn integrates_energy() {
+        let mut p = DeviceProfiler::new("nano", 1.0);
+        let mut s = state();
+        s.power_w = 10.0;
+        p.sample(0.0, &s);
+        p.sample(3600.0, &s);
+        let r = p.report();
+        assert!((r.energy_wh - 10.0).abs() < 1e-9, "10 W for 1 h = 10 Wh");
+    }
+
+    #[test]
+    fn report_summaries() {
+        let mut p = DeviceProfiler::new("nano", 0.1);
+        let mut s = state();
+        for i in 0..10 {
+            s.mem_used_pct = 40.0 + i as f64;
+            p.sample(i as f64, &s);
+        }
+        let r = p.report();
+        assert_eq!(r.samples, 10);
+        assert!((r.mean_mem_pct() - 44.5).abs() < 1e-9);
+        assert!((r.window_secs - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut p = DeviceProfiler::new("nano", 1.0);
+        p.sample(0.0, &state());
+        p.reset();
+        assert!(p.is_empty());
+        assert_eq!(p.report().samples, 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Fig. 3: MQTT latency (a) by band × payload size, (b) by split ratio,
+//! (c) by distance under differing UGV velocities.
+
+use anyhow::Result;
+
+use crate::coordinator::Batcher;
+use crate::frames::SceneGenerator;
+use crate::metrics::{f, Table};
+use crate::mobility::{MobilityModel, Ugv};
+use crate::net::{Band, Channel, ChannelConfig};
+
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct SizePoint {
+    pub band: Band,
+    pub mbytes: f64,
+    pub latency_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RatioPoint {
+    pub r: f64,
+    pub latency_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DistancePoint {
+    pub velocity_mps: f64,
+    pub distance_m: f64,
+    pub latency_s: f64,
+}
+
+pub struct Output {
+    pub by_size: Vec<SizePoint>,
+    pub by_ratio: Vec<RatioPoint>,
+    pub by_distance: Vec<DistancePoint>,
+    pub rendered: String,
+}
+
+fn channel(band: Band, d: f64) -> Channel {
+    let mut cfg = ChannelConfig::wifi(band);
+    cfg.jitter_rel = 0.0; // figures plot the expectation
+    Channel::new(cfg, d, 0)
+}
+
+pub fn run(scale: Scale) -> Result<Output> {
+    let mut rendered = String::new();
+
+    // (a) payload size × band at 4 m
+    let mut by_size = Vec::new();
+    let mut ta = Table::new(&["size MB", "2.4GHz s", "5GHz s"]);
+    for mb in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        let bytes = (mb * 1024.0 * 1024.0) as u64;
+        let l24 = channel(Band::Ghz2_4, 4.0).expected_latency_s(bytes);
+        let l5 = channel(Band::Ghz5, 4.0).expected_latency_s(bytes);
+        by_size.push(SizePoint {
+            band: Band::Ghz2_4,
+            mbytes: mb,
+            latency_s: l24,
+        });
+        by_size.push(SizePoint {
+            band: Band::Ghz5,
+            mbytes: mb,
+            latency_s: l5,
+        });
+        ta.row(vec![f(mb, 1), f(l24, 3), f(l5, 3)]);
+    }
+    rendered.push_str(&format!("Fig 3(a): MQTT latency by image size & band (4 m)\n{}\n", ta.render()));
+
+    // (b) split ratio sweep: total transfer latency of the offload share
+    // of a 100-frame batch (masked pipeline, per-frame messages)
+    let n = scale.frames(100);
+    let mut by_ratio = Vec::new();
+    let mut tb = Table::new(&["r", "latency s"]);
+    for i in 0..=10 {
+        let r = i as f64 / 10.0;
+        let mut batcher = Batcher::paper_default();
+        batcher.dedup = None;
+        let frames = SceneGenerator::paper_default(7).batch(n);
+        let plan = batcher.plan(frames, r);
+        let ch = channel(Band::Ghz5, 4.0);
+        let mut total = 0.0;
+        for enc in &plan.offload {
+            total += ch.expected_latency_s(enc.wire_bytes() as u64);
+        }
+        total *= 100.0 / n as f64;
+        by_ratio.push(RatioPoint { r, latency_s: total });
+        tb.row(vec![f(r, 1), f(total, 3)]);
+    }
+    rendered.push_str(&format!("Fig 3(b): MQTT latency by split ratio (100-frame batch)\n{}\n", tb.render()));
+
+    // (c) distance sweep under different separation velocities: latency of
+    // one 70-frame offload round as the mission progresses
+    let mut by_distance = Vec::new();
+    let mut tc = Table::new(&["v m/s", "d m", "latency s"]);
+    for v in [0.5, 1.0, 3.0] {
+        let mob = MobilityModel::new(Ugv::new("p", v), Ugv::new("a", v), 2.0);
+        for step in 0..5 {
+            let t = step as f64 * 2.0;
+            let d = mob.distance_at(t);
+            let bytes = (70 * crate::frames::FRAME_BYTES) as u64;
+            let l = channel(Band::Ghz5, d).expected_latency_s(bytes);
+            by_distance.push(DistancePoint {
+                velocity_mps: v,
+                distance_m: d,
+                latency_s: l,
+            });
+            tc.row(vec![f(v, 1), f(d, 1), f(l, 3)]);
+        }
+    }
+    rendered.push_str(&format!("Fig 3(c): MQTT latency by distance & UGV velocity\n{}", tc.render()));
+
+    Ok(Output {
+        by_size,
+        by_ratio,
+        by_distance,
+        rendered,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_fig3() {
+        let out = run(Scale::Quick).unwrap();
+        // (a) higher band is faster at every size; latency grows with size
+        for pair in out.by_size.chunks(2) {
+            assert!(pair[1].latency_s < pair[0].latency_s, "5GHz beats 2.4GHz");
+        }
+        let l24: Vec<f64> = out
+            .by_size
+            .iter()
+            .filter(|p| p.band == Band::Ghz2_4)
+            .map(|p| p.latency_s)
+            .collect();
+        assert!(l24.windows(2).all(|w| w[1] > w[0]), "latency rises with size");
+        // (b) latency rises with split ratio
+        assert!(out.by_ratio[0].latency_s < out.by_ratio[10].latency_s);
+        assert!(out.by_ratio[0].latency_s == 0.0);
+        // (c) latency rises with distance; faster separation reaches
+        // higher latency sooner
+        let at = |v: f64| -> Vec<f64> {
+            out.by_distance
+                .iter()
+                .filter(|p| p.velocity_mps == v)
+                .map(|p| p.latency_s)
+                .collect()
+        };
+        for v in [0.5, 1.0, 3.0] {
+            let series = at(v);
+            assert!(series.windows(2).all(|w| w[1] >= w[0]), "v={v}");
+        }
+        assert!(at(3.0).last().unwrap() > at(0.5).last().unwrap());
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 5: solver outputs — T(r), memory(r), power(r) curves and the
+//! optimum r* ≈ 0.7 with total inference ≈ 34.5 s (17.72 Xavier + 16.79
+//! Nano for 70/30 of 100 images).
+
+use anyhow::Result;
+
+use crate::metrics::{f, Table};
+use crate::solver::{HeteroEdgeSolver, ObjectiveKind};
+
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub r: f64,
+    pub total_s: f64,
+    pub t1_s: f64,
+    pub t2_s: f64,
+    pub m1_pct: f64,
+    pub m2_pct: f64,
+    pub p1_w: f64,
+    pub p2_w: f64,
+}
+
+pub struct Output {
+    pub curve: Vec<CurvePoint>,
+    pub r_star: f64,
+    pub t_at_r_star: f64,
+    /// Serial total T1+T2 at r* (the paper's 34.51 s quote).
+    pub serial_at_r_star: f64,
+    pub iterations: u32,
+    pub rendered: String,
+}
+
+pub fn run(_scale: Scale) -> Result<Output> {
+    let solver = HeteroEdgeSolver::paper_default();
+    let decision = solver.solve()?;
+    let m = &solver.model;
+
+    let mut curve = Vec::new();
+    let mut t = Table::new(&["r", "T(r) s", "T1 s", "T2 s", "M1 %", "M2 %", "P1 W", "P2 W"]);
+    for i in 0..=10 {
+        let r = i as f64 / 10.0;
+        let pt = CurvePoint {
+            r,
+            total_s: m.objective(ObjectiveKind::Paper, r),
+            t1_s: m.t1(r),
+            t2_s: m.t2(r),
+            m1_pct: m.m1(r),
+            m2_pct: m.m2(r),
+            p1_w: m.p1(r),
+            p2_w: m.p2(r),
+        };
+        t.row(vec![
+            f(r, 1),
+            f(pt.total_s, 2),
+            f(pt.t1_s, 2),
+            f(pt.t2_s, 2),
+            f(pt.m1_pct, 1),
+            f(pt.m2_pct, 1),
+            f(pt.p1_w, 2),
+            f(pt.p2_w, 2),
+        ]);
+        curve.push(pt);
+    }
+
+    let serial = m.t1(decision.r) + m.t2(decision.r);
+    let rendered = format!(
+        "Fig 5: HeteroEdge solver curves (paper objective)\n{}\n\
+         optimum r* = {:.2} (paper: 0.70), T(r*) = {:.2} s, \
+         T1+T2 at r* = {:.2} s (paper: 34.51 s), {} barrier iterations\n",
+        t.render(),
+        decision.r,
+        decision.total_secs,
+        serial,
+        decision.iterations
+    );
+
+    Ok(Output {
+        curve,
+        r_star: decision.r,
+        t_at_r_star: decision.total_secs,
+        serial_at_r_star: serial,
+        iterations: decision.iterations,
+        rendered,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_curves_match_paper_shape() {
+        let out = run(Scale::Quick).unwrap();
+        assert!((0.6..=0.85).contains(&out.r_star), "r* = {}", out.r_star);
+        // paper: 34.51 s total serial inference at the optimum
+        assert!(
+            (out.serial_at_r_star - 34.51).abs() < 5.0,
+            "serial at r* = {}",
+            out.serial_at_r_star
+        );
+        // memory on the primary falls with r, on the auxiliary rises
+        assert!(out.curve[0].m2_pct > out.curve[10].m2_pct);
+        assert!(out.curve[0].m1_pct < out.curve[10].m1_pct);
+        // the optimum beats both extremes
+        assert!(out.t_at_r_star <= out.curve[0].total_s);
+        assert!(out.t_at_r_star <= out.curve[10].total_s);
+    }
+}

@@ -1,0 +1,101 @@
+//! Fig. 6: dynamic mobility (Case-2) — total operation time T1+T2 and
+//! offload latency T3 vs distance for r ∈ {0.3, 0.7, 1.0}, with
+//! V_primary = 1 m/s and V_auxiliary = 3 m/s.
+
+use anyhow::Result;
+
+use crate::coordinator::testbed::DynPoint;
+use crate::coordinator::{RunConfig, SplitMode, Testbed};
+use crate::metrics::{f, Table};
+use crate::net::Band;
+use crate::workload::Workload;
+
+use super::Scale;
+
+pub struct Series {
+    pub r: f64,
+    pub points: Vec<DynPoint>,
+    pub beta_stopped: bool,
+}
+
+pub struct Output {
+    pub series: Vec<Series>,
+    pub rendered: String,
+}
+
+pub fn run(scale: Scale) -> Result<Output> {
+    let n = scale.frames(300);
+    let mut series = Vec::new();
+    let mut table = Table::new(&["r", "d m", "T3 round s", "T1+T2 cum s", "offloading"]);
+
+    for (i, r) in [0.3, 0.7, 1.0].into_iter().enumerate() {
+        let mut tb = Testbed::sim(Band::Ghz5, 2.0, 600 + i as u64);
+        let mut cfg = RunConfig::dynamic_default(Workload::calibration());
+        cfg.n_frames = n;
+        cfg.split = SplitMode::Fixed(r);
+        cfg.beta_secs = Some(5.0);
+        cfg.round_frames = 10;
+        let rep = tb.run_dynamic(&cfg)?;
+        let beta_stopped = rep.series.iter().any(|p| !p.offloading);
+        for p in rep.series.iter().step_by(2) {
+            table.row(vec![
+                f(r, 1),
+                f(p.distance_m, 1),
+                f(p.offload_latency_s, 2),
+                f(p.ops_time_s, 2),
+                format!("{}", p.offloading),
+            ]);
+        }
+        series.push(Series {
+            r,
+            points: rep.series,
+            beta_stopped,
+        });
+    }
+
+    Ok(Output {
+        series,
+        rendered: format!(
+            "Fig 6: dynamic case, Vp=1 m/s, Va=3 m/s, β=5 s, {n} frames\n{}",
+            table.render()
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_shape_matches_fig6() {
+        let out = run(Scale::Quick).unwrap();
+        assert_eq!(out.series.len(), 3);
+        for s in &out.series {
+            // distance grows over the mission
+            let d0 = s.points.first().unwrap().distance_m;
+            let d1 = s.points.last().unwrap().distance_m;
+            assert!(d1 > d0, "r={}", s.r);
+            // offload latency rises with distance among offloading rounds
+            let offl: Vec<&DynPoint> =
+                s.points.iter().filter(|p| p.offloading && p.offload_latency_s > 0.0).collect();
+            if offl.len() >= 2 {
+                assert!(
+                    offl.last().unwrap().offload_latency_s
+                        >= offl.first().unwrap().offload_latency_s * 0.8,
+                    "r={}",
+                    s.r
+                );
+            }
+        }
+        // higher split ratio transfers more per round -> larger T3 early
+        let t3_of = |idx: usize| {
+            out.series[idx]
+                .points
+                .iter()
+                .find(|p| p.offload_latency_s > 0.0)
+                .map(|p| p.offload_latency_s)
+                .unwrap_or(0.0)
+        };
+        assert!(t3_of(2) > t3_of(0), "r=1.0 rounds cost more than r=0.3");
+    }
+}

@@ -1,0 +1,31 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md experiment index). Each driver returns structured rows plus
+//! a rendered paper-style table so benches, tests, examples and
+//! EXPERIMENTS.md all consume the same code path.
+
+pub mod battery;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+pub mod table3;
+pub mod table4;
+
+/// Quick mode shrinks workloads so `cargo test` stays fast; benches and
+/// EXPERIMENTS.md runs use full size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn frames(&self, full: usize) -> usize {
+        match self {
+            Scale::Quick => (full / 10).max(10),
+            Scale::Full => full,
+        }
+    }
+}

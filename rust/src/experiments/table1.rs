@@ -1,0 +1,104 @@
+//! Table I: profiling results for the SegNet+PoseNet pair, r ∈
+//! {0, .3, .5, .7, .8, 1}, 100 images.
+
+use anyhow::Result;
+
+use crate::coordinator::{RunConfig, SplitMode, Testbed};
+use crate::device::calib;
+use crate::metrics::{f, Table};
+use crate::net::Band;
+use crate::workload::Workload;
+
+use super::Scale;
+
+/// One measured row of Table I.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub r: f64,
+    pub t1_s: f64,
+    pub p1_w: f64,
+    pub m1_pct: f64,
+    pub t2_s: f64,
+    pub t3_s: f64,
+    pub p2_w: f64,
+    pub m2_pct: f64,
+}
+
+pub struct Output {
+    pub rows: Vec<Row>,
+    pub rendered: String,
+}
+
+pub fn run(scale: Scale) -> Result<Output> {
+    let n = scale.frames(100);
+    let scale_to_100 = 100.0 / n as f64;
+    let mut rows = Vec::new();
+    let mut table = Table::new(&[
+        "r", "T1(Xav) s", "P1 W", "M1 %", "1-r", "T2(Nano) s", "T3(Off) s", "P2 W",
+        "M2 %", "paper T1", "paper T2", "paper T3",
+    ]);
+
+    for (i, &r) in calib::TABLE_I_R.iter().enumerate() {
+        let mut tb = Testbed::sim(Band::Ghz5, 4.0, 100 + i as u64);
+        let mut cfg = RunConfig::static_default(Workload::calibration());
+        cfg.n_frames = n;
+        cfg.split = SplitMode::Fixed(r);
+        let rep = tb.run_static(&cfg)?;
+        let row = Row {
+            r,
+            t1_s: rep.t1_s * scale_to_100,
+            p1_w: rep.p1_w,
+            m1_pct: rep.m1_pct,
+            t2_s: rep.t2_s * scale_to_100,
+            t3_s: rep.t3_s * scale_to_100,
+            p2_w: rep.p2_w,
+            m2_pct: rep.m2_pct,
+        };
+        table.row(vec![
+            f(r, 1),
+            f(row.t1_s, 2),
+            f(row.p1_w, 2),
+            f(row.m1_pct, 1),
+            f(1.0 - r, 1),
+            f(row.t2_s, 2),
+            f(row.t3_s, 2),
+            f(row.p2_w, 2),
+            f(row.m2_pct, 1),
+            f(calib::TABLE_I_T1[i], 2),
+            f(calib::TABLE_I_T2[i], 2),
+            f(calib::TABLE_I_T3[i], 2),
+        ]);
+        rows.push(row);
+    }
+
+    Ok(Output {
+        rows,
+        rendered: format!(
+            "Table I: profiling, SegNet+PoseNet, {n} images (scaled to 100)\n{}",
+            table.render()
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table_i_shape() {
+        let out = run(Scale::Quick).unwrap();
+        assert_eq!(out.rows.len(), 6);
+        // T2 decreases with r, T1 and T3 increase
+        for w in out.rows.windows(2) {
+            assert!(w[1].t2_s <= w[0].t2_s + 2.0, "T2 must fall with r");
+            assert!(w[1].t1_s >= w[0].t1_s - 2.0, "T1 must rise with r");
+        }
+        // anchors within 15% of the paper (quick mode tolerance)
+        let r0 = &out.rows[0];
+        assert!((r0.t2_s - 68.34).abs() / 68.34 < 0.15, "T2@0 = {}", r0.t2_s);
+        let r1 = out.rows.last().unwrap();
+        assert!((r1.t1_s - 19.0).abs() / 19.0 < 0.2, "T1@1 = {}", r1.t1_s);
+        assert!(r1.t3_s < 4.0, "T3@1 = {}", r1.t3_s);
+        assert!(out.rendered.contains("Table I"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Table III: real-time static testbed (Case-1, 4 m apart) for r ∈
+//! {.2, .35, .45, .5, .6, .7, .8, .9}.
+
+use anyhow::Result;
+
+use crate::coordinator::{RunConfig, SplitMode, Testbed};
+use crate::metrics::{f, Table};
+use crate::net::Band;
+use crate::workload::Workload;
+
+use super::Scale;
+
+/// Paper's Table III reference values (r, T3, P1, M1, T1+T2, P2, M2).
+pub const PAPER_ROWS: [(f64, f64, f64, f64, f64, f64, f64); 8] = [
+    (0.20, 0.67, 4.87, 32.09, 55.38, 6.96, 75.12),
+    (0.35, 1.23, 5.12, 41.56, 51.89, 6.11, 70.17),
+    (0.45, 1.98, 5.78, 49.55, 42.87, 6.24, 65.66),
+    (0.50, 2.34, 5.57, 50.09, 43.09, 5.69, 54.65),
+    (0.60, 2.90, 6.35, 53.00, 39.45, 5.88, 57.77),
+    (0.70, 3.23, 6.03, 59.56, 36.43, 5.17, 47.13),
+    (0.80, 3.55, 6.34, 63.45, 34.90, 5.35, 43.34),
+    (0.90, 3.56, 7.12, 69.09, 28.23, 4.89, 40.11),
+];
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub r: f64,
+    pub t3_s: f64,
+    pub p1_w: f64,
+    pub m1_pct: f64,
+    pub t1_plus_t2_s: f64,
+    pub p2_w: f64,
+    pub m2_pct: f64,
+}
+
+pub struct Output {
+    pub rows: Vec<Row>,
+    pub rendered: String,
+}
+
+pub fn run(scale: Scale) -> Result<Output> {
+    let n = scale.frames(100);
+    let to100 = 100.0 / n as f64;
+    let mut rows = Vec::new();
+    let mut table = Table::new(&[
+        "r", "T3 s", "P1 W", "M1 %", "1-r", "T1+T2 s", "P2 W", "M2 %", "paper T1+T2",
+    ]);
+
+    for (i, (r, ..)) in PAPER_ROWS.iter().enumerate() {
+        let mut tb = Testbed::sim(Band::Ghz5, 4.0, 300 + i as u64);
+        let mut cfg = RunConfig::static_default(Workload::calibration());
+        cfg.n_frames = n;
+        cfg.split = SplitMode::Fixed(*r);
+        // Table III runs the full §VI pipeline (masking on)
+        cfg.masked = true;
+        let rep = tb.run_static(&cfg)?;
+        let row = Row {
+            r: *r,
+            t3_s: rep.t3_s * to100,
+            p1_w: rep.p1_w,
+            m1_pct: rep.m1_pct,
+            t1_plus_t2_s: rep.total_serial_s * to100,
+            p2_w: rep.p2_w,
+            m2_pct: rep.m2_pct,
+        };
+        table.row(vec![
+            f(row.r, 2),
+            f(row.t3_s, 2),
+            f(row.p1_w, 2),
+            f(row.m1_pct, 1),
+            f(1.0 - row.r, 2),
+            f(row.t1_plus_t2_s, 2),
+            f(row.p2_w, 2),
+            f(row.m2_pct, 1),
+            f(PAPER_ROWS[i].4, 2),
+        ]);
+        rows.push(row);
+    }
+
+    Ok(Output {
+        rows,
+        rendered: format!(
+            "Table III: real-time static testbed, {n} images (scaled to 100)\n{}",
+            table.render()
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_sweep_matches_paper_shape() {
+        let out = run(Scale::Quick).unwrap();
+        assert_eq!(out.rows.len(), 8);
+        // T1+T2 decreases with r (paper: 55.38 -> 28.23)
+        let first = out.rows.first().unwrap();
+        let last = out.rows.last().unwrap();
+        assert!(
+            last.t1_plus_t2_s < first.t1_plus_t2_s,
+            "{} !< {}",
+            last.t1_plus_t2_s,
+            first.t1_plus_t2_s
+        );
+        // T3 increases with r
+        assert!(last.t3_s > first.t3_s);
+        // primary memory decreases with r
+        assert!(last.m2_pct < first.m2_pct);
+        // r=0.7 total within 25% of the paper's 36.43 s
+        let r07 = out.rows.iter().find(|x| x.r == 0.70).unwrap();
+        assert!(
+            (r07.t1_plus_t2_s - 36.43).abs() / 36.43 < 0.25,
+            "T1+T2@0.7 = {}",
+            r07.t1_plus_t2_s
+        );
+    }
+}

@@ -1,0 +1,135 @@
+//! Table IV: model heterogeneity — five DNN pairs × r ∈ {0, 0.5, 0.7} ×
+//! {original, masked}, 100 images.
+
+use anyhow::Result;
+
+use crate::coordinator::{RunConfig, SplitMode, Testbed};
+use crate::metrics::{f, Table};
+use crate::net::Band;
+use crate::workload::Workload;
+
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub workload: &'static str,
+    pub r: f64,
+    pub masked: bool,
+    pub total_s: f64,
+    pub paper_s: f64,
+}
+
+pub struct Output {
+    pub cells: Vec<Cell>,
+    pub rendered: String,
+}
+
+/// Paper cells: (pair index in Workload::table_iv(), [r0_orig, r0_mask,
+/// r05_orig, r05_mask, r07_orig, r07_mask]).
+const PAPER: [[f64; 6]; 5] = [
+    [74.68, 69.90, 56.74, 49.78, 44.13, 38.98],
+    [76.90, 71.34, 64.20, 57.89, 43.17, 40.32],
+    [71.25, 65.56, 58.43, 53.66, 48.37, 43.20],
+    [69.66, 61.47, 50.64, 46.45, 43.54, 38.43],
+    [67.28, 64.89, 51.59, 46.89, 39.69, 35.90],
+];
+
+pub fn run(scale: Scale) -> Result<Output> {
+    let n = scale.frames(100);
+    let to100 = 100.0 / n as f64;
+    let mut cells = Vec::new();
+    let mut table = Table::new(&[
+        "application", "r", "frames", "T1+T2 s", "paper s",
+    ]);
+
+    for (wi, w) in Workload::table_iv().iter().enumerate() {
+        for (ri, r) in [0.0, 0.5, 0.7].into_iter().enumerate() {
+            for (mi, masked) in [false, true].into_iter().enumerate() {
+                let mut tb = Testbed::sim(Band::Ghz5, 4.0, (wi * 10 + ri * 2 + mi) as u64);
+                let mut cfg = RunConfig::static_default(w);
+                cfg.n_frames = n;
+                cfg.split = SplitMode::Fixed(r);
+                cfg.masked = masked;
+                let rep = tb.run_static(&cfg)?;
+                let total = rep.total_serial_s * to100;
+                let paper = PAPER[wi][ri * 2 + mi];
+                table.row(vec![
+                    format!(
+                        "{}{}",
+                        w.name,
+                        if masked { " (masked)" } else { "" }
+                    ),
+                    f(r, 1),
+                    format!("{n}"),
+                    f(total, 2),
+                    f(paper, 2),
+                ]);
+                cells.push(Cell {
+                    workload: w.name,
+                    r,
+                    masked,
+                    total_s: total,
+                    paper_s: paper,
+                });
+            }
+        }
+    }
+
+    Ok(Output {
+        cells,
+        rendered: format!(
+            "Table IV: model heterogeneity, 5 pairs x r x masking ({n} images)\n{}",
+            table.render()
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heterogeneity_matrix_matches_paper_shape() {
+        let out = run(Scale::Quick).unwrap();
+        assert_eq!(out.cells.len(), 5 * 3 * 2);
+        for c in &out.cells {
+            // every cell within 30% of the paper's measured value
+            let rel = (c.total_s - c.paper_s).abs() / c.paper_s;
+            assert!(
+                rel < 0.30,
+                "{} r={} masked={}: {} vs paper {}",
+                c.workload,
+                c.r,
+                c.masked,
+                c.total_s,
+                c.paper_s
+            );
+        }
+        // orderings: r=0.7 < r=0.5 < r=0 for every pair/mode
+        for w in Workload::table_iv() {
+            for masked in [false, true] {
+                let t = |r: f64| {
+                    out.cells
+                        .iter()
+                        .find(|c| c.workload == w.name && c.r == r && c.masked == masked)
+                        .unwrap()
+                        .total_s
+                };
+                assert!(t(0.7) < t(0.5) && t(0.5) < t(0.0), "{} masked={masked}", w.name);
+            }
+        }
+        // masked beats original in every cell (paper: ~9% mean)
+        for w in Workload::table_iv() {
+            for r in [0.0, 0.5, 0.7] {
+                let find = |m: bool| {
+                    out.cells
+                        .iter()
+                        .find(|c| c.workload == w.name && c.r == r && c.masked == m)
+                        .unwrap()
+                        .total_s
+                };
+                assert!(find(true) < find(false), "{} r={r}", w.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Similar-frame elimination (§I contribution iii: "identifying similar
+//! frames" before offload).
+//!
+//! A cheap perceptual signature — mean luma over an 8×8 grid — is compared
+//! to the last *transmitted* frame; frames whose signature distance falls
+//! under the threshold are dropped from the offload queue. On a slow
+//! moving UGV feed this removes near-duplicate frames and directly
+//! reduces both compute and bandwidth.
+
+use super::{Frame, FRAME_C, FRAME_W};
+
+const GRID: usize = 8;
+
+/// 8×8 mean-luma signature.
+pub fn signature(frame: &Frame) -> [f32; GRID * GRID] {
+    let h = frame.truth_mask.len() / FRAME_W;
+    let cell_h = h / GRID;
+    let cell_w = FRAME_W / GRID;
+    let mut sig = [0.0f32; GRID * GRID];
+    for gy in 0..GRID {
+        for gx in 0..GRID {
+            let mut acc = 0.0f32;
+            for y in gy * cell_h..(gy + 1) * cell_h {
+                for x in gx * cell_w..(gx + 1) * cell_w {
+                    let p = (y * FRAME_W + x) * FRAME_C;
+                    // Rec.601 luma
+                    acc += 0.299 * frame.pixels[p]
+                        + 0.587 * frame.pixels[p + 1]
+                        + 0.114 * frame.pixels[p + 2];
+                }
+            }
+            sig[gy * GRID + gx] = acc / (cell_h * cell_w) as f32;
+        }
+    }
+    sig
+}
+
+/// Mean absolute signature distance.
+pub fn sig_distance(a: &[f32; GRID * GRID], b: &[f32; GRID * GRID]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / (GRID * GRID) as f32
+}
+
+/// Stateful dedup filter over a frame stream.
+#[derive(Debug, Clone)]
+pub struct SimilarityFilter {
+    threshold: f32,
+    last_sig: Option<[f32; GRID * GRID]>,
+    pub accepted: u64,
+    pub dropped: u64,
+}
+
+impl SimilarityFilter {
+    /// `threshold`: mean per-cell luma delta under which a frame counts as
+    /// a duplicate. 0.004 ≈ "object moved less than ~a pixel".
+    pub fn new(threshold: f32) -> Self {
+        SimilarityFilter {
+            threshold,
+            last_sig: None,
+            accepted: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn paper_default() -> Self {
+        SimilarityFilter::new(0.004)
+    }
+
+    /// Returns true if the frame is novel (should be processed/offloaded).
+    pub fn admit(&mut self, frame: &Frame) -> bool {
+        let sig = signature(frame);
+        let novel = match &self.last_sig {
+            None => true,
+            Some(prev) => sig_distance(prev, &sig) >= self.threshold,
+        };
+        if novel {
+            self.last_sig = Some(sig);
+            self.accepted += 1;
+        } else {
+            self.dropped += 1;
+        }
+        novel
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        let total = self.accepted + self.dropped;
+        if total == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / total as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.last_sig = None;
+        self.accepted = 0;
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frames::SceneGenerator;
+
+    #[test]
+    fn identical_frames_dropped() {
+        let mut g = SceneGenerator::paper_default(3);
+        let f = g.next_frame();
+        let mut filt = SimilarityFilter::new(0.001);
+        assert!(filt.admit(&f), "first frame always admitted");
+        assert!(!filt.admit(&f), "identical frame dropped");
+        assert_eq!(filt.dropped, 1);
+    }
+
+    #[test]
+    fn moving_scene_admits_most_frames() {
+        let mut g = SceneGenerator::paper_default(7);
+        let mut filt = SimilarityFilter::paper_default();
+        let frames = g.batch(50);
+        let admitted = frames.iter().filter(|f| filt.admit(f)).count();
+        assert!(admitted > 25, "moving objects should look novel: {admitted}");
+    }
+
+    #[test]
+    fn static_scene_drops_frames() {
+        // zero-velocity scene: only background noise differs
+        let mut g = SceneGenerator::new(11, 0); // no objects at all
+        g.noise = 0.001;
+        let mut filt = SimilarityFilter::new(0.01);
+        let frames = g.batch(20);
+        let admitted = frames.iter().filter(|f| filt.admit(f)).count();
+        assert_eq!(admitted, 1, "static noise-only scene collapses to 1");
+        assert!(filt.drop_rate() > 0.9);
+    }
+
+    #[test]
+    fn signature_is_local() {
+        let mut g = SceneGenerator::paper_default(13);
+        let a = g.next_frame();
+        let sig_a = signature(&a);
+        let mut b = a.clone();
+        // brighten one corner cell only
+        for y in 0..8 {
+            for x in 0..8 {
+                let p = (y * FRAME_W + x) * 3;
+                b.pixels[p] = 1.0;
+            }
+        }
+        let sig_b = signature(&b);
+        let changed: usize = sig_a
+            .iter()
+            .zip(&sig_b)
+            .filter(|(x, y)| (*x - *y).abs() > 1e-6)
+            .count();
+        assert_eq!(changed, 1, "only one grid cell should move");
+    }
+}

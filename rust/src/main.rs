@@ -1,0 +1,174 @@
+//! HeteroEdge CLI — the leader entrypoint.
+//!
+//! ```text
+//! heteroedge solve   [--workload <name>] [--masked] [--beta <s>]
+//! heteroedge static  [--ratio <r>] [--frames <n>] [--masked] [--band <b>]
+//! heteroedge dynamic [--ratio <r>] [--frames <n>] [--beta <s>]
+//! heteroedge table   --id <table1|fig3|fig4|fig5|table3|fig6|table4|fig7|battery> [--full]
+//! ```
+
+use anyhow::{bail, Result};
+
+use heteroedge::cli::Args;
+use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
+use heteroedge::experiments::{self, Scale};
+use heteroedge::net::Band;
+use heteroedge::solver::HeteroEdgeSolver;
+use heteroedge::workload::Workload;
+
+fn band_of(args: &Args) -> Result<Band> {
+    Ok(match args.opt("band").unwrap_or("5GHz") {
+        "2.4GHz" | "2.4" => Band::Ghz2_4,
+        "5GHz" | "5" => Band::Ghz5,
+        other => bail!("unknown band {other:?}"),
+    })
+}
+
+fn workload_of(args: &Args) -> Result<&'static Workload> {
+    match args.opt("workload") {
+        None => Ok(Workload::calibration()),
+        Some(name) => Workload::by_name(name).map(|w| w as _),
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let w = workload_of(args)?;
+    let masked = args.flag("masked");
+    let mut solver = HeteroEdgeSolver::paper_default();
+    solver.model = solver.model.with_workload_scale(w.t_r0(masked));
+    if let Some(beta) = args.opt_parse::<f64>("beta")? {
+        solver.constraints.beta_secs = Some(beta);
+    }
+    let d = solver.solve()?;
+    println!("workload: {} (masked={masked})", w.name);
+    println!(
+        "r* = {:.3}  T = {:.2}s  T3 = {:.2}s  feasible = {}  iters = {}",
+        d.r, d.total_secs, d.offload_secs, d.feasible, d.iterations
+    );
+    println!(
+        "predicted: P1 {:.2} W  P2 {:.2} W  M1 {:.1}%  M2 {:.1}%",
+        d.p1_w, d.p2_w, d.m1_pct, d.m2_pct
+    );
+    Ok(())
+}
+
+fn cmd_static(args: &Args) -> Result<()> {
+    let w = workload_of(args)?;
+    let mut tb = Testbed::sim(
+        band_of(args)?,
+        args.opt_or("distance", 4.0)?,
+        args.opt_or("seed", 42u64)?,
+    );
+    let mut cfg = RunConfig::static_default(w);
+    cfg.n_frames = args.opt_or("frames", 100usize)?;
+    cfg.masked = args.flag("masked");
+    cfg.dedup = args.flag("dedup");
+    if let Some(r) = args.opt_parse::<f64>("ratio")? {
+        cfg.split = SplitMode::Fixed(r);
+    }
+    let rep = tb.run_static(&cfg)?;
+    print_report(&rep);
+    Ok(())
+}
+
+fn cmd_dynamic(args: &Args) -> Result<()> {
+    let w = workload_of(args)?;
+    let mut tb = Testbed::sim(band_of(args)?, 2.0, args.opt_or("seed", 42u64)?);
+    let mut cfg = RunConfig::dynamic_default(w);
+    cfg.n_frames = args.opt_or("frames", 300usize)?;
+    cfg.masked = args.flag("masked");
+    cfg.beta_secs = Some(args.opt_or("beta", 5.0)?);
+    if let Some(r) = args.opt_parse::<f64>("ratio")? {
+        cfg.split = SplitMode::Fixed(r);
+    }
+    let rep = tb.run_dynamic(&cfg)?;
+    print_report(&rep);
+    for p in rep.series.iter().step_by(3) {
+        println!(
+            "  d={:6.1} m  T3={:6.2} s  T1+T2={:7.2} s  offloading={}",
+            p.distance_m, p.offload_latency_s, p.ops_time_s, p.offloading
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let scale = if args.flag("full") {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let id = args.opt("id").unwrap_or("all");
+    let run = |id: &str| -> Result<String> {
+        Ok(match id {
+            "table1" => experiments::table1::run(scale)?.rendered,
+            "fig3" => experiments::fig3::run(scale)?.rendered,
+            "fig4" => experiments::fig4::run(scale)?.rendered,
+            "fig5" => experiments::fig5::run(scale)?.rendered,
+            "table3" => experiments::table3::run(scale)?.rendered,
+            "fig6" => experiments::fig6::run(scale)?.rendered,
+            "table4" => experiments::table4::run(scale)?.rendered,
+            "fig7" => experiments::fig7::run(scale)?.rendered,
+            "battery" => experiments::battery::run(scale)?.rendered,
+            other => bail!("unknown experiment {other:?}"),
+        })
+    };
+    if id == "all" {
+        for id in [
+            "table1", "fig3", "fig4", "fig5", "table3", "fig6", "table4", "fig7",
+            "battery",
+        ] {
+            println!("{}\n", run(id)?);
+        }
+    } else {
+        println!("{}", run(id)?);
+    }
+    Ok(())
+}
+
+fn print_report(rep: &heteroedge::coordinator::RunReport) {
+    println!(
+        "r = {:.2}  backend = {}  frames: {} local / {} offloaded / {} deduped",
+        rep.r, rep.backend, rep.frames_local, rep.frames_offloaded, rep.deduped
+    );
+    println!(
+        "T1 (aux) = {:.2} s   T2 (pri) = {:.2} s   T3 (offload) = {:.2} s",
+        rep.t1_s, rep.t2_s, rep.t3_s
+    );
+    println!(
+        "total: serial {:.2} s, concurrent {:.2} s   offload {:.2} ms/image",
+        rep.total_serial_s,
+        rep.total_concurrent_s,
+        rep.offload_ms_per_image()
+    );
+    println!(
+        "P1 {:.2} W  P2 {:.2} W  M1 {:.1}%  M2 {:.1}%  bytes {}  savings {:.1}%",
+        rep.p1_w,
+        rep.p2_w,
+        rep.m1_pct,
+        rep.m2_pct,
+        heteroedge::util::fmt_bytes(rep.offload_bytes),
+        rep.bandwidth_savings * 100.0
+    );
+}
+
+fn usage() {
+    eprintln!(
+        "heteroedge <solve|static|dynamic|table> [options]\n\
+         see rust/src/main.rs header for the full option list"
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("solve") => cmd_solve(&args),
+        Some("static") => cmd_static(&args),
+        Some("dynamic") => cmd_dynamic(&args),
+        Some("table") => cmd_table(&args),
+        _ => {
+            usage();
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Metrics — S13: counters, histograms and table rendering for the
+//! experiment reports.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::stats::{percentile, Summary};
+
+/// A latency histogram with raw-sample retention (experiments need exact
+/// percentiles; cardinality is bounded by run length).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    summary: Summary,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            samples: Vec::new(),
+            summary: Summary::new(),
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.summary.record(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.summary.min()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.summary.max()
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        percentile(&self.samples, pct)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.summary.sum()
+    }
+}
+
+/// A named metrics registry for one experiment run.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(Histogram::new)
+            .record(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.get(name).unwrap_or(&0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Plain-text dump (stable ordering) for logs and EXPERIMENTS.md.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let _ = writeln!(out, "counter {k} = {v}");
+        }
+        for (k, v) in &self.gauges {
+            let _ = writeln!(out, "gauge   {k} = {v:.6}");
+        }
+        for (k, h) in &self.histograms {
+            let _ = writeln!(
+                out,
+                "hist    {k}: n={} mean={:.6} p50={:.6} p99={:.6} max={:.6}",
+                h.count(),
+                h.mean(),
+                h.p(50.0),
+                h.p(99.0),
+                h.max()
+            );
+        }
+        out
+    }
+}
+
+/// Fixed-width ASCII table renderer for paper-style tables.
+#[derive(Debug)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            let mut parts = Vec::new();
+            for (i, c) in cells.iter().enumerate() {
+                parts.push(format!("{:>width$}", c, width = widths[i]));
+            }
+            let _ = writeln!(out, "| {} |", parts.join(" | "));
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Format a float cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.p(50.0) - 50.0).abs() <= 1.0);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.min(), 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut r = Registry::new();
+        r.inc("frames", 10);
+        r.inc("frames", 5);
+        r.set("split_ratio", 0.7);
+        r.observe("latency", 0.5);
+        r.observe("latency", 1.5);
+        assert_eq!(r.counter("frames"), 15);
+        assert_eq!(r.gauge("split_ratio"), Some(0.7));
+        assert_eq!(r.histogram("latency").unwrap().count(), 2);
+        let text = r.render();
+        assert!(text.contains("counter frames = 15"));
+        assert!(text.contains("hist    latency"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["r", "T1 (s)", "T2 (s)"]);
+        t.row(vec!["0.7".into(), f(16.64, 2), f(19.54, 2)]);
+        let s = t.render();
+        assert!(s.contains("| 0.7 |"));
+        assert!(s.contains("16.64"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Mobility substrate — S7: UGV kinematics and the mobility constraints of
+//! §V.A.5.
+//!
+//! The paper's dynamic scenario (Case-2, Fig. 6) has two UGVs separating
+//! at velocities V_primary/V_auxiliary; distance follows
+//! `d = (V_primary + V_auxiliary) · t`, offload latency follows a fitted
+//! quadratic `L = a₁d² − a₂d + a₃`, and offloading stops once `L ≥ β`.
+
+use crate::solvefit::{polyfit, Poly};
+
+/// One UGV: position is abstracted to scalar separation contribution.
+#[derive(Debug, Clone)]
+pub struct Ugv {
+    pub name: String,
+    /// Speed in m/s (paper: V_primary = 1, V_auxiliary = 3).
+    pub velocity_mps: f64,
+}
+
+impl Ugv {
+    pub fn new(name: &str, velocity_mps: f64) -> Self {
+        assert!(velocity_mps >= 0.0);
+        Ugv {
+            name: name.to_string(),
+            velocity_mps,
+        }
+    }
+}
+
+/// Relative motion of a UGV pair (§V.A.5): `d(t) = d₀ + (Vp + Va)·t`.
+#[derive(Debug, Clone)]
+pub struct MobilityModel {
+    pub primary: Ugv,
+    pub auxiliary: Ugv,
+    pub initial_distance_m: f64,
+}
+
+impl MobilityModel {
+    pub fn new(primary: Ugv, auxiliary: Ugv, initial_distance_m: f64) -> Self {
+        MobilityModel {
+            primary,
+            auxiliary,
+            initial_distance_m: initial_distance_m.max(0.0),
+        }
+    }
+
+    /// Paper defaults: Vp = 1 m/s, Va = 3 m/s, starting adjacent.
+    pub fn paper_case2() -> Self {
+        MobilityModel::new(Ugv::new("primary", 1.0), Ugv::new("auxiliary", 3.0), 2.0)
+    }
+
+    /// Static Case-1: both parked 4 m apart.
+    pub fn paper_case1() -> Self {
+        MobilityModel::new(Ugv::new("primary", 0.0), Ugv::new("auxiliary", 0.0), 4.0)
+    }
+
+    /// Separation speed (the paper's worst-case diverging geometry).
+    pub fn closing_speed(&self) -> f64 {
+        self.primary.velocity_mps + self.auxiliary.velocity_mps
+    }
+
+    /// Distance at time `t` seconds.
+    pub fn distance_at(&self, t: f64) -> f64 {
+        self.initial_distance_m + self.closing_speed() * t
+    }
+
+    /// Time at which distance reaches `d` (None if unreachable/static).
+    pub fn time_to_distance(&self, d: f64) -> Option<f64> {
+        let v = self.closing_speed();
+        if d < self.initial_distance_m {
+            return None;
+        }
+        if v == 0.0 {
+            return if d == self.initial_distance_m {
+                Some(0.0)
+            } else {
+                None
+            };
+        }
+        Some((d - self.initial_distance_m) / v)
+    }
+}
+
+/// The distance→latency curve of §V.A.5: `L(d) = a₁d² − a₂d + a₃`,
+/// obtained by curve fitting over measured (d, latency) pairs.
+#[derive(Debug, Clone)]
+pub struct LatencyCurve {
+    poly: Poly,
+}
+
+impl LatencyCurve {
+    /// Fit a quadratic to measured (distance, latency) samples.
+    pub fn fit(distances: &[f64], latencies: &[f64]) -> anyhow::Result<Self> {
+        Ok(LatencyCurve {
+            poly: polyfit(distances, latencies, 2)?,
+        })
+    }
+
+    /// From explicit coefficients (a1 d² − a2 d + a3 form).
+    pub fn from_coeffs(a1: f64, a2: f64, a3: f64) -> Self {
+        LatencyCurve {
+            poly: Poly::new(vec![a3, -a2, a1]),
+        }
+    }
+
+    /// Predicted offload latency at distance `d` (clamped ≥ 0).
+    pub fn latency_at(&self, d: f64) -> f64 {
+        self.poly.eval(d).max(0.0)
+    }
+
+    pub fn coeffs(&self) -> &[f64] {
+        self.poly.coeffs()
+    }
+}
+
+/// The β cut-off controller of §V.A.5/§VII.B: stop offloading when the
+/// observed latency reaches the threshold; resume below a hysteresis
+/// band (β·resume_frac) so the decision doesn't flap on jitter.
+#[derive(Debug, Clone)]
+pub struct BetaThreshold {
+    pub beta_s: f64,
+    pub resume_frac: f64,
+    offloading: bool,
+    pub stops: u64,
+    pub resumes: u64,
+}
+
+impl BetaThreshold {
+    pub fn new(beta_s: f64) -> Self {
+        BetaThreshold {
+            beta_s,
+            resume_frac: 0.8,
+            offloading: true,
+            stops: 0,
+            resumes: 0,
+        }
+    }
+
+    /// Feed an observed offload latency; returns whether offloading is
+    /// currently allowed.
+    pub fn observe(&mut self, latency_s: f64) -> bool {
+        if self.offloading && latency_s >= self.beta_s {
+            self.offloading = false;
+            self.stops += 1;
+        } else if !self.offloading && latency_s < self.beta_s * self.resume_frac {
+            self.offloading = true;
+            self.resumes += 1;
+        }
+        self.offloading
+    }
+
+    pub fn is_offloading(&self) -> bool {
+        self.offloading
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_grows_linearly() {
+        let m = MobilityModel::paper_case2();
+        assert_eq!(m.closing_speed(), 4.0);
+        assert_eq!(m.distance_at(0.0), 2.0);
+        assert_eq!(m.distance_at(6.0), 26.0);
+    }
+
+    #[test]
+    fn static_case_distance_constant() {
+        let m = MobilityModel::paper_case1();
+        assert_eq!(m.distance_at(100.0), 4.0);
+        assert_eq!(m.time_to_distance(4.0), Some(0.0));
+        assert_eq!(m.time_to_distance(10.0), None);
+    }
+
+    #[test]
+    fn time_to_distance_inverts() {
+        let m = MobilityModel::paper_case2();
+        let t = m.time_to_distance(26.0).unwrap();
+        assert!((m.distance_at(t) - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_curve_fit_and_eval() {
+        // synthesize from a known quadratic, recover it
+        let truth = LatencyCurve::from_coeffs(0.02, 0.05, 0.4);
+        let ds: Vec<f64> = (1..=13).map(|i| i as f64 * 2.0).collect();
+        let ls: Vec<f64> = ds.iter().map(|&d| truth.latency_at(d)).collect();
+        let fit = LatencyCurve::fit(&ds, &ls).unwrap();
+        for d in [2.0, 10.0, 26.0] {
+            assert!((fit.latency_at(d) - truth.latency_at(d)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn latency_clamped_nonnegative() {
+        let c = LatencyCurve::from_coeffs(0.0, 1.0, 0.0); // L = -d
+        assert_eq!(c.latency_at(5.0), 0.0);
+    }
+
+    #[test]
+    fn beta_stops_and_resumes_with_hysteresis() {
+        let mut b = BetaThreshold::new(5.0);
+        assert!(b.observe(1.0));
+        assert!(!b.observe(5.0), "at threshold -> stop");
+        assert!(!b.observe(4.5), "within hysteresis band -> still stopped");
+        assert!(b.observe(3.9), "below 0.8β -> resume");
+        assert_eq!(b.stops, 1);
+        assert_eq!(b.resumes, 1);
+    }
+}

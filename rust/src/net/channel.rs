@@ -1,0 +1,211 @@
+//! The simulated wireless link between primary and auxiliary nodes.
+//!
+//! Combines the Shannon–Hartley capacity with per-message protocol
+//! overhead and jitter, calibrated so Fig. 3's measured MQTT latencies
+//! are reproduced in shape: 5 GHz beats 2.4 GHz, latency grows with
+//! payload size and with distance, and UGV velocity shifts the distance
+//! over time.
+
+use super::shannon;
+use crate::util::rng::Rng;
+
+/// WiFi band, per Fig. 3(a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Band {
+    /// 2.4 GHz: narrower channel, stronger range, higher noise floor.
+    Ghz2_4,
+    /// 5 GHz: wider channel, lower noise, faster falloff with distance.
+    Ghz5,
+}
+
+impl Band {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Band::Ghz2_4 => "2.4GHz",
+            Band::Ghz5 => "5GHz",
+        }
+    }
+
+    /// Channel bandwidth in Hz (20 MHz vs 80 MHz typical widths).
+    pub fn bandwidth_hz(&self) -> f64 {
+        match self {
+            Band::Ghz2_4 => 20e6,
+            Band::Ghz5 => 80e6,
+        }
+    }
+
+    /// Path-loss exponent: 5 GHz attenuates faster.
+    pub fn path_loss_exp(&self) -> f64 {
+        match self {
+            Band::Ghz2_4 => 2.4,
+            Band::Ghz5 => 2.8,
+        }
+    }
+
+    /// Effective noise-plus-interference power (2.4 GHz is the more
+    /// congested band). Calibrated jointly with `efficiency` so that
+    /// (a) Table I's T3 ≈ 1.56 s for a 100-frame batch at 4 m and
+    /// (b) Fig. 6's ≈ 13.9 s average offload latency at 26 m both hold.
+    pub fn noise_power_w(&self) -> f64 {
+        match self {
+            Band::Ghz2_4 => 8e-5,
+            Band::Ghz5 => 2.6e-5,
+        }
+    }
+}
+
+/// Static link parameters.
+#[derive(Debug, Clone)]
+pub struct ChannelConfig {
+    pub band: Band,
+    /// Transmit power P_t in watts (§V.A.2).
+    pub tx_power_w: f64,
+    /// Fixed per-message protocol overhead (MQTT + TCP + ACK turnaround).
+    pub per_msg_overhead_s: f64,
+    /// Relative jitter std-dev applied to each transfer (0 disables).
+    pub jitter_rel: f64,
+    /// Link efficiency: fraction of Shannon capacity achieved by real
+    /// 802.11 MAC (rate adaptation, contention) — calibrated ≈ 0.08 so a
+    /// 2 MB frame batch at 4 m on 5 GHz costs ≈ Table I's T3.
+    pub efficiency: f64,
+}
+
+impl ChannelConfig {
+    pub fn wifi(band: Band) -> Self {
+        ChannelConfig {
+            band,
+            tx_power_w: 0.1,
+            per_msg_overhead_s: 0.004,
+            jitter_rel: 0.05,
+            efficiency: 0.08,
+        }
+    }
+}
+
+/// A point-to-point simulated link with time-varying distance.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub cfg: ChannelConfig,
+    distance_m: f64,
+    rng: Rng,
+    /// Total payload bytes sent (bandwidth accounting for Fig. 4/§VI).
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+impl Channel {
+    pub fn new(cfg: ChannelConfig, distance_m: f64, seed: u64) -> Self {
+        Channel {
+            cfg,
+            distance_m: distance_m.max(0.0),
+            rng: Rng::new(seed),
+            bytes_sent: 0,
+            msgs_sent: 0,
+        }
+    }
+
+    pub fn distance_m(&self) -> f64 {
+        self.distance_m
+    }
+
+    /// Update the distance (mobility model drives this).
+    pub fn set_distance(&mut self, d: f64) {
+        self.distance_m = d.max(0.0);
+    }
+
+    /// Effective data rate at the current distance, in bits/s.
+    pub fn rate_bps(&self) -> f64 {
+        let b = self.cfg.band;
+        self.cfg.efficiency
+            * shannon::data_rate_bps(
+                b.bandwidth_hz(),
+                self.distance_m,
+                b.path_loss_exp(),
+                self.cfg.tx_power_w,
+                b.noise_power_w(),
+            )
+    }
+
+    /// Deterministic expected latency for `bytes` (no jitter) — what the
+    /// solver's T₃ model sees.
+    pub fn expected_latency_s(&self, bytes: u64) -> f64 {
+        self.cfg.per_msg_overhead_s + shannon::transfer_secs(bytes, self.rate_bps())
+    }
+
+    /// Simulate one transfer of `bytes`; returns the charged latency
+    /// (expected + jitter) and records bandwidth accounting.
+    pub fn send(&mut self, bytes: u64) -> f64 {
+        let base = self.expected_latency_s(bytes);
+        let jitter = 1.0 + self.cfg.jitter_rel * self.rng.normal();
+        self.bytes_sent += bytes;
+        self.msgs_sent += 1;
+        base * jitter.max(0.2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ch(band: Band, d: f64) -> Channel {
+        let mut cfg = ChannelConfig::wifi(band);
+        cfg.jitter_rel = 0.0;
+        Channel::new(cfg, d, 7)
+    }
+
+    #[test]
+    fn five_ghz_beats_two_four_up_close() {
+        // Fig 3(a): the higher band offers lower latencies
+        let bytes = 2 * 1024 * 1024;
+        let l24 = ch(Band::Ghz2_4, 4.0).expected_latency_s(bytes);
+        let l5 = ch(Band::Ghz5, 4.0).expected_latency_s(bytes);
+        assert!(l5 < l24, "5GHz {l5} vs 2.4GHz {l24}");
+    }
+
+    #[test]
+    fn latency_grows_with_size_and_distance() {
+        // Fig 3(a)/(c)
+        let c = ch(Band::Ghz5, 4.0);
+        assert!(c.expected_latency_s(8 << 20) > c.expected_latency_s(1 << 20));
+        let far = ch(Band::Ghz5, 30.0);
+        assert!(far.expected_latency_s(1 << 20) > c.expected_latency_s(1 << 20));
+    }
+
+    #[test]
+    fn table1_t3_magnitude() {
+        // Table I: offloading 100% of a 100-image batch costs ≈1.56 s.
+        // 100 frames × 48 KiB ≈ 4.7 MB at 4 m on 5 GHz.
+        let c = ch(Band::Ghz5, 4.0);
+        let bytes = 100 * 64 * 64 * 3 * 4;
+        let t = c.expected_latency_s(bytes as u64) + 99.0 * c.cfg.per_msg_overhead_s;
+        assert!((0.5..4.0).contains(&t), "T3 ≈ 1.56 s, got {t}");
+    }
+
+    #[test]
+    fn send_accounts_bandwidth() {
+        let mut c = ch(Band::Ghz5, 4.0);
+        c.send(1000);
+        c.send(500);
+        assert_eq!(c.bytes_sent, 1500);
+        assert_eq!(c.msgs_sent, 2);
+    }
+
+    #[test]
+    fn jitter_varies_but_stays_positive() {
+        let mut cfg = ChannelConfig::wifi(Band::Ghz5);
+        cfg.jitter_rel = 0.3;
+        let mut c = Channel::new(cfg, 4.0, 9);
+        let ls: Vec<f64> = (0..50).map(|_| c.send(1 << 20)).collect();
+        assert!(ls.iter().all(|&l| l > 0.0));
+        let first = ls[0];
+        assert!(ls.iter().any(|&l| (l - first).abs() > 1e-9));
+    }
+
+    #[test]
+    fn distance_update_changes_rate() {
+        let mut c = ch(Band::Ghz5, 2.0);
+        let near = c.rate_bps();
+        c.set_distance(26.0);
+        assert!(c.rate_bps() < near);
+    }
+}

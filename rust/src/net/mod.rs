@@ -1,0 +1,16 @@
+//! Network substrate — S5/S6: the wireless channel model and the MQTT
+//! pub/sub layer.
+//!
+//! The paper models its WiFi link with the Shannon–Hartley theorem
+//! (§V.A.2): `D_R = B·log₂(1 + d^-u·P_t/N₀)`, and measures MQTT latency
+//! across bands (2.4/5 GHz), payload sizes, split ratios and distances
+//! (Fig. 3). [`Channel`] implements exactly that model; [`mqtt`] is an
+//! MQTT-like broker/client written from scratch over TCP so the offload
+//! data path has real pub/sub semantics.
+
+pub mod channel;
+pub mod mqtt;
+pub mod shannon;
+
+pub use channel::{Band, Channel, ChannelConfig};
+pub use shannon::{data_rate_bps, path_loss_gain};

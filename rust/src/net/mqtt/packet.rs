@@ -1,0 +1,311 @@
+//! Wire format: a faithful MQTT-3.1.1-style framing (type nibble + flags,
+//! varint remaining length, u16-prefixed strings).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Quality of service for PUBLISH.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QoS {
+    /// Fire and forget.
+    AtMostOnce = 0,
+    /// Acknowledged delivery (PUBACK).
+    AtLeastOnce = 1,
+}
+
+impl QoS {
+    pub fn from_u8(v: u8) -> Result<QoS> {
+        match v {
+            0 => Ok(QoS::AtMostOnce),
+            1 => Ok(QoS::AtLeastOnce),
+            _ => bail!("unsupported QoS {v}"),
+        }
+    }
+}
+
+/// Control packets (the subset HeteroEdge uses).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Packet {
+    Connect { client_id: String },
+    ConnAck,
+    Publish {
+        topic: String,
+        payload: Vec<u8>,
+        qos: QoS,
+        packet_id: u16,
+        retain: bool,
+    },
+    PubAck { packet_id: u16 },
+    Subscribe { packet_id: u16, filter: String },
+    SubAck { packet_id: u16 },
+    PingReq,
+    PingResp,
+    Disconnect,
+}
+
+const T_CONNECT: u8 = 1;
+const T_CONNACK: u8 = 2;
+const T_PUBLISH: u8 = 3;
+const T_PUBACK: u8 = 4;
+const T_SUBSCRIBE: u8 = 8;
+const T_SUBACK: u8 = 9;
+const T_PINGREQ: u8 = 12;
+const T_PINGRESP: u8 = 13;
+const T_DISCONNECT: u8 = 14;
+
+/// Maximum payload we will accept (guards the broker against garbage
+/// frames claiming absurd lengths).
+pub const MAX_PACKET: usize = 64 << 20;
+
+fn write_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_be_bytes());
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    write_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_u16(buf: &[u8], at: &mut usize) -> Result<u16> {
+    if *at + 2 > buf.len() {
+        bail!("truncated u16");
+    }
+    let v = u16::from_be_bytes([buf[*at], buf[*at + 1]]);
+    *at += 2;
+    Ok(v)
+}
+
+fn read_str(buf: &[u8], at: &mut usize) -> Result<String> {
+    let n = read_u16(buf, at)? as usize;
+    if *at + n > buf.len() {
+        bail!("truncated string");
+    }
+    let s = String::from_utf8(buf[*at..*at + n].to_vec()).context("non-utf8 string")?;
+    *at += n;
+    Ok(s)
+}
+
+/// Encode the MQTT variable-length "remaining length" (7 bits per byte,
+/// MSB = continuation).
+pub fn encode_varint(mut n: usize, out: &mut Vec<u8>) {
+    loop {
+        let mut byte = (n % 128) as u8;
+        n /= 128;
+        if n > 0 {
+            byte |= 0x80;
+        }
+        out.push(byte);
+        if n == 0 {
+            break;
+        }
+    }
+}
+
+/// Decode a varint from a reader (1–4 bytes per the MQTT spec).
+pub fn decode_varint(r: &mut impl Read) -> Result<usize> {
+    let mut mult: usize = 1;
+    let mut value: usize = 0;
+    for _ in 0..4 {
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b).context("reading varint")?;
+        value += (b[0] & 0x7F) as usize * mult;
+        if b[0] & 0x80 == 0 {
+            return Ok(value);
+        }
+        mult *= 128;
+    }
+    bail!("varint too long")
+}
+
+impl Packet {
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let (ty, flags, body) = match self {
+            Packet::Connect { client_id } => {
+                let mut b = Vec::new();
+                write_str(&mut b, client_id);
+                (T_CONNECT, 0, b)
+            }
+            Packet::ConnAck => (T_CONNACK, 0, Vec::new()),
+            Packet::Publish {
+                topic,
+                payload,
+                qos,
+                packet_id,
+                retain,
+            } => {
+                let mut b = Vec::new();
+                write_str(&mut b, topic);
+                write_u16(&mut b, *packet_id);
+                b.extend_from_slice(payload);
+                let flags = ((*qos as u8) << 1) | (*retain as u8);
+                (T_PUBLISH, flags, b)
+            }
+            Packet::PubAck { packet_id } => {
+                let mut b = Vec::new();
+                write_u16(&mut b, *packet_id);
+                (T_PUBACK, 0, b)
+            }
+            Packet::Subscribe { packet_id, filter } => {
+                let mut b = Vec::new();
+                write_u16(&mut b, *packet_id);
+                write_str(&mut b, filter);
+                (T_SUBSCRIBE, 0, b)
+            }
+            Packet::SubAck { packet_id } => {
+                let mut b = Vec::new();
+                write_u16(&mut b, *packet_id);
+                (T_SUBACK, 0, b)
+            }
+            Packet::PingReq => (T_PINGREQ, 0, Vec::new()),
+            Packet::PingResp => (T_PINGRESP, 0, Vec::new()),
+            Packet::Disconnect => (T_DISCONNECT, 0, Vec::new()),
+        };
+        let mut out = Vec::with_capacity(body.len() + 5);
+        out.push((ty << 4) | (flags & 0x0F));
+        encode_varint(body.len(), &mut out);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Read one packet from a stream (blocking).
+    pub fn read_from(r: &mut impl Read) -> Result<Packet> {
+        let mut head = [0u8; 1];
+        r.read_exact(&mut head).context("reading packet header")?;
+        let ty = head[0] >> 4;
+        let flags = head[0] & 0x0F;
+        let len = decode_varint(r)?;
+        if len > MAX_PACKET {
+            bail!("packet too large: {len}");
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).context("reading packet body")?;
+        let mut at = 0usize;
+        let pkt = match ty {
+            T_CONNECT => Packet::Connect {
+                client_id: read_str(&body, &mut at)?,
+            },
+            T_CONNACK => Packet::ConnAck,
+            T_PUBLISH => {
+                let topic = read_str(&body, &mut at)?;
+                let packet_id = read_u16(&body, &mut at)?;
+                let payload = body[at..].to_vec();
+                Packet::Publish {
+                    topic,
+                    payload,
+                    qos: QoS::from_u8((flags >> 1) & 0x3)?,
+                    packet_id,
+                    retain: flags & 1 == 1,
+                }
+            }
+            T_PUBACK => Packet::PubAck {
+                packet_id: read_u16(&body, &mut at)?,
+            },
+            T_SUBSCRIBE => {
+                let packet_id = read_u16(&body, &mut at)?;
+                let filter = read_str(&body, &mut at)?;
+                Packet::Subscribe { packet_id, filter }
+            }
+            T_SUBACK => Packet::SubAck {
+                packet_id: read_u16(&body, &mut at)?,
+            },
+            T_PINGREQ => Packet::PingReq,
+            T_PINGRESP => Packet::PingResp,
+            T_DISCONNECT => Packet::Disconnect,
+            other => bail!("unknown packet type {other}"),
+        };
+        Ok(pkt)
+    }
+
+    /// Write to a stream and flush.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(p: Packet) -> Packet {
+        let bytes = p.encode();
+        Packet::read_from(&mut Cursor::new(bytes)).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_types() {
+        let pkts = vec![
+            Packet::Connect {
+                client_id: "nano-1".into(),
+            },
+            Packet::ConnAck,
+            Packet::Publish {
+                topic: "heteroedge/frames".into(),
+                payload: vec![1, 2, 3, 255],
+                qos: QoS::AtLeastOnce,
+                packet_id: 42,
+                retain: true,
+            },
+            Packet::PubAck { packet_id: 42 },
+            Packet::Subscribe {
+                packet_id: 7,
+                filter: "profile/#".into(),
+            },
+            Packet::SubAck { packet_id: 7 },
+            Packet::PingReq,
+            Packet::PingResp,
+            Packet::Disconnect,
+        ];
+        for p in pkts {
+            assert_eq!(roundtrip(p.clone()), p, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for n in [0usize, 1, 127, 128, 16383, 16384, 2097151, 2097152] {
+            let mut buf = Vec::new();
+            encode_varint(n, &mut buf);
+            let got = decode_varint(&mut Cursor::new(buf)).unwrap();
+            assert_eq!(got, n);
+        }
+    }
+
+    #[test]
+    fn large_payload_roundtrip() {
+        let payload = vec![0xAB; 1 << 20];
+        let p = Packet::Publish {
+            topic: "t".into(),
+            payload: payload.clone(),
+            qos: QoS::AtMostOnce,
+            packet_id: 0,
+            retain: false,
+        };
+        match roundtrip(p) {
+            Packet::Publish { payload: got, .. } => assert_eq!(got, payload),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = Packet::Subscribe {
+            packet_id: 1,
+            filter: "a/b".into(),
+        };
+        let mut bytes = p.encode();
+        bytes.truncate(bytes.len() - 2);
+        assert!(Packet::read_from(&mut Cursor::new(bytes)).is_err());
+    }
+
+    #[test]
+    fn qos_from_u8() {
+        assert_eq!(QoS::from_u8(0).unwrap(), QoS::AtMostOnce);
+        assert_eq!(QoS::from_u8(1).unwrap(), QoS::AtLeastOnce);
+        assert!(QoS::from_u8(2).is_err());
+    }
+}

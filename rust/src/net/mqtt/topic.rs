@@ -1,0 +1,75 @@
+//! Topic filter matching with MQTT `+`/`#` wildcard semantics.
+
+/// Does `filter` match `topic`?
+///
+/// * `+` matches exactly one level;
+/// * `#` matches any number of trailing levels (must be last);
+/// * otherwise levels compare literally.
+pub fn topic_matches(filter: &str, topic: &str) -> bool {
+    let mut f = filter.split('/');
+    let mut t = topic.split('/');
+    loop {
+        match (f.next(), t.next()) {
+            (Some("#"), _) => return f.next().is_none(), // '#' must be last
+            (Some("+"), Some(_)) => continue,
+            (Some(fl), Some(tl)) if fl == tl => continue,
+            (None, None) => return true,
+            _ => return false,
+        }
+    }
+}
+
+/// Is this a valid filter? (`#` only final, no empty string)
+pub fn filter_valid(filter: &str) -> bool {
+    if filter.is_empty() {
+        return false;
+    }
+    let levels: Vec<&str> = filter.split('/').collect();
+    for (i, l) in levels.iter().enumerate() {
+        if l.contains('#') && (*l != "#" || i != levels.len() - 1) {
+            return false;
+        }
+        if l.contains('+') && *l != "+" {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_match() {
+        assert!(topic_matches("a/b/c", "a/b/c"));
+        assert!(!topic_matches("a/b/c", "a/b"));
+        assert!(!topic_matches("a/b", "a/b/c"));
+    }
+
+    #[test]
+    fn plus_single_level() {
+        assert!(topic_matches("profile/+", "profile/nano"));
+        assert!(topic_matches("profile/+/mem", "profile/nano/mem"));
+        assert!(!topic_matches("profile/+", "profile/nano/mem"));
+    }
+
+    #[test]
+    fn hash_multi_level() {
+        assert!(topic_matches("#", "anything/at/all"));
+        assert!(topic_matches("heteroedge/#", "heteroedge/frames/batch1"));
+        assert!(topic_matches("heteroedge/#", "heteroedge"));
+        assert!(!topic_matches("heteroedge/#", "other/frames"));
+    }
+
+    #[test]
+    fn hash_must_be_last() {
+        assert!(!filter_valid("a/#/b"));
+        assert!(filter_valid("a/#"));
+        assert!(filter_valid("#"));
+        assert!(!filter_valid(""));
+        assert!(!filter_valid("a/b#"));
+        assert!(!filter_valid("a/b+"));
+        assert!(filter_valid("a/+/c"));
+    }
+}

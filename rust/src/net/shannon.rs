@@ -1,0 +1,75 @@
+//! Shannon–Hartley channel capacity (§V.A.2).
+//!
+//! `D_R = B · log₂(1 + d^(−u) · P_t / N₀)` where `B` is bandwidth (Hz),
+//! `d` distance (m), `u` the path-loss exponent (0 for a lossless
+//! medium), `P_t` transmit power and `N₀` noise power.
+
+/// Path-loss channel gain `d^(−u)` (dimensionless). `d` is clamped to
+/// ≥ 1 m so the near-field doesn't produce gain > 1.
+pub fn path_loss_gain(distance_m: f64, exponent: f64) -> f64 {
+    let d = distance_m.max(1.0);
+    d.powf(-exponent)
+}
+
+/// Achievable data rate in bits/s.
+pub fn data_rate_bps(
+    bandwidth_hz: f64,
+    distance_m: f64,
+    path_loss_exp: f64,
+    tx_power_w: f64,
+    noise_power_w: f64,
+) -> f64 {
+    assert!(bandwidth_hz > 0.0 && tx_power_w >= 0.0 && noise_power_w > 0.0);
+    let snr = path_loss_gain(distance_m, path_loss_exp) * tx_power_w / noise_power_w;
+    bandwidth_hz * (1.0 + snr).log2()
+}
+
+/// Transfer latency in seconds for `bytes` at `rate_bps`.
+pub fn transfer_secs(bytes: u64, rate_bps: f64) -> f64 {
+    if rate_bps <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 * 8.0 / rate_bps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_medium_distance_invariant() {
+        // u = 0 ⇒ d^-u = 1: the paper's lossless special case
+        let r1 = data_rate_bps(20e6, 2.0, 0.0, 0.1, 1e-9);
+        let r2 = data_rate_bps(20e6, 50.0, 0.0, 0.1, 1e-9);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let r2 = data_rate_bps(20e6, 2.0, 2.7, 0.1, 1e-9);
+        let r10 = data_rate_bps(20e6, 10.0, 2.7, 0.1, 1e-9);
+        let r26 = data_rate_bps(20e6, 26.0, 2.7, 0.1, 1e-9);
+        assert!(r2 > r10 && r10 > r26);
+    }
+
+    #[test]
+    fn rate_increases_with_bandwidth() {
+        let narrow = data_rate_bps(20e6, 5.0, 2.7, 0.1, 1e-9);
+        let wide = data_rate_bps(80e6, 5.0, 2.7, 0.1, 1e-9);
+        assert!(wide > narrow);
+    }
+
+    #[test]
+    fn near_field_clamped() {
+        assert_eq!(path_loss_gain(0.1, 2.7), 1.0);
+        assert!(path_loss_gain(2.0, 2.7) < 1.0);
+    }
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let t1 = transfer_secs(1_000_000, 10e6);
+        let t2 = transfer_secs(2_000_000, 10e6);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+        assert_eq!(transfer_secs(1, 0.0), f64::INFINITY);
+    }
+}

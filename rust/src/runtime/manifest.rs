@@ -1,0 +1,212 @@
+//! Parser for `artifacts/manifest.txt`, the contract between the Python
+//! AOT path and the rust runtime.
+//!
+//! Line grammar (written by `python/compile/aot.py`):
+//! ```text
+//! <model> <batch> in=<d0>x<d1>...:f32 out=<shape:dtype>[,<shape:dtype>...]
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Shape + dtype of one tensor in the artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dims, dtype) = s
+            .split_once(':')
+            .with_context(|| format!("tensor spec missing dtype: {s:?}"))?;
+        let shape = dims
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        if shape.is_empty() {
+            bail!("empty shape in {s:?}");
+        }
+        Ok(TensorSpec {
+            shape,
+            dtype: dtype.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One (model, batch) artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub model: String,
+    pub batch: usize,
+    pub input: TensorSpec,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn parse_line(line: &str) -> Result<Self> {
+        let mut parts = line.split_whitespace();
+        let model = parts.next().context("missing model")?.to_string();
+        let batch: usize = parts.next().context("missing batch")?.parse()?;
+        let in_part = parts.next().context("missing in=")?;
+        let out_part = parts.next().context("missing out=")?;
+        let input = TensorSpec::parse(
+            in_part.strip_prefix("in=").context("expected in=")?,
+        )?;
+        let outputs = out_part
+            .strip_prefix("out=")
+            .context("expected out=")?
+            .split(',')
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        if input.shape[0] != batch {
+            bail!("leading input dim {} != batch {batch}", input.shape[0]);
+        }
+        Ok(ArtifactSpec {
+            model,
+            batch,
+            input,
+            outputs,
+        })
+    }
+
+    /// Path of the HLO text artifact relative to the artifacts dir.
+    pub fn hlo_file(&self) -> String {
+        format!("{}.b{}.hlo.txt", self.model, self.batch)
+    }
+}
+
+/// The full manifest: all (model, batch) artifacts in an artifacts dir.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<(String, usize), ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let spec = ArtifactSpec::parse_line(line)
+                .with_context(|| format!("parsing manifest line {line:?}"))?;
+            entries.insert((spec.model.clone(), spec.batch), spec);
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, model: &str, batch: usize) -> Option<&ArtifactSpec> {
+        self.entries.get(&(model.to_string(), batch))
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .entries
+            .keys()
+            .map(|(m, _)| m.clone())
+            .collect();
+        v.dedup();
+        v
+    }
+
+    /// Batch sizes available for `model`, ascending.
+    pub fn batches(&self, model: &str) -> Vec<usize> {
+        self.entries
+            .keys()
+            .filter(|(m, _)| m == model)
+            .map(|(_, b)| *b)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.entries.values()
+    }
+
+    /// Locate the artifacts directory: `$HETEROEDGE_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (tests run from target dirs).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("HETEROEDGE_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.txt").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+imagenet 1 in=1x64x64x3:f32 out=1x10:f32
+masker 8 in=8x64x64x3:f32 out=8x64x64x1:f32,8x64x64x3:f32,8x8x1:f32
+";
+
+    #[test]
+    fn parses_single_output() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let s = m.get("imagenet", 1).unwrap();
+        assert_eq!(s.input.shape, vec![1, 64, 64, 3]);
+        assert_eq!(s.outputs.len(), 1);
+        assert_eq!(s.outputs[0].shape, vec![1, 10]);
+        assert_eq!(s.hlo_file(), "imagenet.b1.hlo.txt");
+    }
+
+    #[test]
+    fn parses_multi_output() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let s = m.get("masker", 8).unwrap();
+        assert_eq!(s.outputs.len(), 3);
+        assert_eq!(s.outputs[2].shape, vec![8, 8, 1]);
+        assert_eq!(s.outputs[2].elements(), 64);
+    }
+
+    #[test]
+    fn rejects_batch_mismatch() {
+        assert!(ArtifactSpec::parse_line("m 2 in=1x3:f32 out=1x3:f32").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ArtifactSpec::parse_line("nonsense").is_err());
+        assert!(Manifest::parse("", PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn lists_models_and_batches() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models(), vec!["imagenet".to_string(), "masker".into()]);
+        assert_eq!(m.batches("masker"), vec![8]);
+        assert_eq!(m.len(), 2);
+    }
+}

@@ -1,0 +1,172 @@
+//! L3 runtime: load AOT HLO artifacts and execute them on a PJRT client.
+//!
+//! Flow (see `/opt/xla-example/load_hlo/` for the reference wiring):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 serialized protos
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (gotcha documented in the reference README).
+//!
+//! `Engine` is deliberately **not** `Send`: PJRT handles are raw pointers.
+//! Each simulated node thread constructs its own engine (mirroring the
+//! paper's testbed, where each Jetson runs its own TensorRT runtime).
+
+pub mod manifest;
+pub mod pool;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use pool::ModelPool;
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// Statistics for one compiled executable.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// One compiled (model, batch) executable plus its signature.
+pub struct CompiledModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub stats: ExecStats,
+}
+
+impl CompiledModel {
+    /// Execute on a batch tensor shaped per `spec.input`; returns one
+    /// tensor per declared output.
+    pub fn run(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
+        if input.shape() != self.spec.input.shape.as_slice() {
+            bail!(
+                "{}: input shape {:?} != expected {:?}",
+                self.spec.model,
+                input.shape(),
+                self.spec.input.shape
+            );
+        }
+        let t0 = Instant::now();
+        let dims: Vec<i64> = input.shape().iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input.data()).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even arity 1.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.model,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&self.spec.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            out.push(Tensor::new(ospec.shape.clone(), v)?);
+        }
+        self.stats.executions += 1;
+        self.stats.total_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Mean wall-clock seconds per execution so far.
+    pub fn mean_exec_secs(&self) -> f64 {
+        if self.stats.executions == 0 {
+            0.0
+        } else {
+            self.stats.total_secs / self.stats.executions as f64
+        }
+    }
+}
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<(String, usize), CompiledModel>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (must contain
+    /// `manifest.txt`; run `make artifacts` first).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Engine::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `(model, batch)`.
+    pub fn load(&mut self, model: &str, batch: usize) -> Result<&mut CompiledModel> {
+        let key = (model.to_string(), batch);
+        if !self.compiled.contains_key(&key) {
+            let spec = self
+                .manifest
+                .get(model, batch)
+                .with_context(|| format!("no artifact for {model} b={batch}"))?
+                .clone();
+            let path = self.manifest.dir.join(spec.hlo_file());
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {model} b={batch}"))?;
+            let mut cm = CompiledModel {
+                spec,
+                exe,
+                stats: ExecStats::default(),
+            };
+            cm.stats.compile_secs = t0.elapsed().as_secs_f64();
+            self.compiled.insert(key.clone(), cm);
+        }
+        Ok(self.compiled.get_mut(&key).unwrap())
+    }
+
+    /// Run `(model, batch)` on `input` (compiling on first use).
+    pub fn run(&mut self, model: &str, batch: usize, input: &Tensor) -> Result<Vec<Tensor>> {
+        self.load(model, batch)?.run(input)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn loaded_count(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// Aggregate execution stats keyed by `(model, batch)`.
+    pub fn stats(&self) -> Vec<((String, usize), ExecStats)> {
+        let mut v: Vec<_> = self
+            .compiled
+            .iter()
+            .map(|(k, cm)| (k.clone(), cm.stats.clone()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}

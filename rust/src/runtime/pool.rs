@@ -1,0 +1,106 @@
+//! Model pool: batch-size-aware dispatch of image batches onto the
+//! engine's compiled executables.
+//!
+//! Artifacts exist for a fixed set of batch sizes (currently {1, 8}); an
+//! arbitrary request of `n` frames is decomposed greedily into the largest
+//! compiled batches (8+8+…+1+1), mirroring how a serving runtime packs a
+//! dynamic queue onto fixed-shape compiled graphs.
+
+use anyhow::{bail, Result};
+
+use super::{Engine, Tensor};
+
+/// Greedy decomposition of `n` into the available batch sizes (descending).
+/// Returns e.g. `n=21, sizes=[1,8]` → `[8, 8, 1, 1, 1, 1, 1]`.
+pub fn plan_batches(n: usize, mut sizes: Vec<usize>) -> Result<Vec<usize>> {
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    if sizes.is_empty() {
+        bail!("no batch sizes available");
+    }
+    if *sizes.last().unwrap() != 1 && n % sizes.iter().min().unwrap() != 0 {
+        // without a b=1 artifact we can only serve multiples
+        bail!("cannot decompose {n} into batches {sizes:?}");
+    }
+    let mut plan = Vec::new();
+    let mut rem = n;
+    for &s in &sizes {
+        while rem >= s {
+            plan.push(s);
+            rem -= s;
+        }
+    }
+    if rem != 0 {
+        bail!("cannot decompose {n} into batches {sizes:?}");
+    }
+    Ok(plan)
+}
+
+/// Pool wrapper around [`Engine`] that serves arbitrary-size frame batches.
+pub struct ModelPool {
+    engine: Engine,
+}
+
+impl ModelPool {
+    pub fn new(engine: Engine) -> Self {
+        ModelPool { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Run `model` over `frames` (a `[n, H, W, C]` tensor for any `n ≥ 1`),
+    /// decomposing into compiled batch sizes and re-concatenating outputs
+    /// along the leading axis.
+    pub fn run_frames(&mut self, model: &str, frames: &Tensor) -> Result<Vec<Tensor>> {
+        let n = frames.shape()[0];
+        let sizes = self.engine.manifest().batches(model);
+        let plan = plan_batches(n, sizes)?;
+        let mut pieces: Vec<Vec<Tensor>> = Vec::with_capacity(plan.len());
+        let mut off = 0;
+        for b in plan {
+            let chunk = frames.slice_leading(off, off + b)?;
+            pieces.push(self.engine.run(model, b, &chunk)?);
+            off += b;
+        }
+        // concatenate along leading axis, per output position
+        let arity = pieces[0].len();
+        let mut outs = Vec::with_capacity(arity);
+        for i in 0..arity {
+            let items: Vec<Tensor> = pieces
+                .iter()
+                .flat_map(|p| p[i].unstack().unwrap())
+                .collect();
+            outs.push(Tensor::stack(&items)?);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_greedy_mix() {
+        assert_eq!(plan_batches(21, vec![1, 8]).unwrap(), vec![8, 8, 1, 1, 1, 1, 1]);
+        assert_eq!(plan_batches(1, vec![1, 8]).unwrap(), vec![1]);
+        assert_eq!(plan_batches(8, vec![1, 8]).unwrap(), vec![8]);
+        assert_eq!(plan_batches(16, vec![1, 8]).unwrap(), vec![8, 8]);
+    }
+
+    #[test]
+    fn plan_rejects_impossible() {
+        assert!(plan_batches(3, vec![8]).is_err());
+        assert!(plan_batches(5, vec![]).is_err());
+    }
+
+    #[test]
+    fn plan_zero_is_empty() {
+        assert_eq!(plan_batches(0, vec![1, 8]).unwrap(), Vec::<usize>::new());
+    }
+}

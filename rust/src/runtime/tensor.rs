@@ -1,0 +1,145 @@
+//! A minimal dense f32 tensor — the interchange type between the
+//! coordinator's frame pipeline and the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of bytes of raw payload (f32).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Stack a batch of equally-shaped tensors along a new leading axis.
+    pub fn stack(items: &[Tensor]) -> Result<Tensor> {
+        if items.is_empty() {
+            bail!("cannot stack zero tensors");
+        }
+        let inner = items[0].shape.clone();
+        let mut data = Vec::with_capacity(items.len() * items[0].len());
+        for t in items {
+            if t.shape != inner {
+                bail!("ragged stack: {:?} vs {:?}", t.shape, inner);
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = vec![items.len()];
+        shape.extend(inner);
+        Tensor::new(shape, data)
+    }
+
+    /// Split the leading axis back into per-item tensors.
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        if self.shape.is_empty() {
+            bail!("cannot unstack a scalar");
+        }
+        let n = self.shape[0];
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let chunk = self.len() / n.max(1);
+        Ok((0..n)
+            .map(|i| Tensor {
+                shape: inner.clone(),
+                data: self.data[i * chunk..(i + 1) * chunk].to_vec(),
+            })
+            .collect())
+    }
+
+    /// Slice `[lo, hi)` of the leading axis.
+    pub fn slice_leading(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            bail!("bad slice [{lo},{hi}) of {:?}", self.shape);
+        }
+        let chunk = self.len() / self.shape[0];
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::new(shape, self.data[lo * chunk..hi * chunk].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        let back = s.unstack().unwrap();
+        assert_eq!(back, vec![a, b]);
+    }
+
+    #[test]
+    fn stack_rejects_ragged() {
+        let a = Tensor::zeros(vec![2]);
+        let b = Tensor::zeros(vec![3]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn slice_leading_works() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let s = t.slice_leading(1, 3).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert!(t.slice_leading(2, 5).is_err());
+    }
+}

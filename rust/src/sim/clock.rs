@@ -1,0 +1,76 @@
+//! Virtual clock: monotone simulated seconds.
+
+/// A monotone virtual clock. Units are seconds of simulated testbed time.
+///
+/// Every node owns a `SimClock`; `advance` charges work time, `sync_to`
+/// models waiting on an external event (never moves backwards).
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now: 0.0 }
+    }
+
+    pub fn at(t: f64) -> Self {
+        assert!(t >= 0.0 && t.is_finite());
+        SimClock { now: t }
+    }
+
+    /// Current simulated time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Charge `dt` seconds of work. Panics on negative or non-finite time
+    /// (a negative charge is always a bug in a cost model).
+    pub fn advance(&mut self, dt: f64) -> f64 {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad time charge: {dt}");
+        self.now += dt;
+        self.now
+    }
+
+    /// Wait until `t` (no-op if `t` is in the past — waiting cannot move
+    /// time backwards).
+    pub fn sync_to(&mut self, t: f64) -> f64 {
+        if t > self.now {
+            self.now = t;
+        }
+        self.now
+    }
+
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_advances() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.5);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn sync_never_goes_backwards() {
+        let mut c = SimClock::at(10.0);
+        c.sync_to(5.0);
+        assert_eq!(c.now(), 10.0);
+        c.sync_to(12.0);
+        assert_eq!(c.now(), 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        SimClock::new().advance(-1.0);
+    }
+}

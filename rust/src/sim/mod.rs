@@ -1,0 +1,14 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's evaluation runs on physical hardware whose *time* is the
+//! measurement. Our substrate executes the real DNNs (via PJRT) but takes
+//! device-time from calibrated models (DESIGN.md §Calibration), so the
+//! experiments need a virtual clock: each node advances its own timeline,
+//! and cross-node interactions (offload transfers, profile exchange) are
+//! ordered by a shared event queue.
+
+pub mod clock;
+pub mod events;
+
+pub use clock::SimClock;
+pub use events::{Event, EventQueue};

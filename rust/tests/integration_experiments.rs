@@ -1,0 +1,129 @@
+//! Integration: run every paper experiment at quick scale and check the
+//! cross-experiment consistency the paper's narrative relies on.
+
+use heteroedge::experiments::{fig3, fig4, fig5, fig6, fig7, table1, table3, table4, Scale};
+
+#[test]
+fn all_experiments_render() {
+    assert!(table1::run(Scale::Quick).unwrap().rendered.contains("Table I"));
+    assert!(fig3::run(Scale::Quick).unwrap().rendered.contains("Fig 3"));
+    assert!(fig4::run(Scale::Quick).unwrap().rendered.contains("Fig 4"));
+    assert!(fig5::run(Scale::Quick).unwrap().rendered.contains("Fig 5"));
+    assert!(table3::run(Scale::Quick).unwrap().rendered.contains("Table III"));
+    assert!(fig6::run(Scale::Quick).unwrap().rendered.contains("Fig 6"));
+    assert!(table4::run(Scale::Quick).unwrap().rendered.contains("Table IV"));
+    assert!(fig7::run(Scale::Quick).unwrap().rendered.contains("Fig 7"));
+}
+
+#[test]
+fn solver_optimum_consistent_with_measured_sweep() {
+    // Fig 5's r* should coincide with the best ratio of the Table III
+    // measured sweep (±0.15 — the fit is the paper's own approximation).
+    let f5 = fig5::run(Scale::Quick).unwrap();
+    let t3 = table3::run(Scale::Quick).unwrap();
+    // exclude r=0.9: the paper's own sweep also keeps improving slightly
+    // past the solver optimum, the constraint set stops it
+    let best = t3
+        .rows
+        .iter()
+        .min_by(|a, b| a.t1_plus_t2_s.partial_cmp(&b.t1_plus_t2_s).unwrap())
+        .unwrap();
+    assert!(
+        (best.r - f5.r_star).abs() <= 0.25,
+        "solver r* {} vs measured best {}",
+        f5.r_star,
+        best.r
+    );
+}
+
+#[test]
+fn table1_and_fig5_agree_on_surfaces() {
+    // the measured Table-I reproduction and the fitted Fig-5 curves must
+    // tell the same story at matching ratios
+    let t1 = table1::run(Scale::Quick).unwrap();
+    let f5 = fig5::run(Scale::Quick).unwrap();
+    for row in &t1.rows {
+        let curve = f5
+            .curve
+            .iter()
+            .min_by(|a, b| {
+                (a.r - row.r).abs().partial_cmp(&(b.r - row.r).abs()).unwrap()
+            })
+            .unwrap();
+        assert!(
+            (row.t2_s - curve.t2_s).abs() < 8.0,
+            "r={}: measured T2 {} vs fitted {}",
+            row.r,
+            row.t2_s,
+            curve.t2_s
+        );
+    }
+}
+
+#[test]
+fn masking_savings_consistent_between_fig4_and_table4() {
+    let f4 = fig4::run(Scale::Quick).unwrap();
+    let t4 = table4::run(Scale::Quick).unwrap();
+    // Table IV masked cells must save roughly what Fig 4 predicts for
+    // compute (both derive from the same §VI mechanism)
+    let mut ratios = Vec::new();
+    for w in heteroedge::workload::Workload::table_iv() {
+        for r in [0.0, 0.5, 0.7] {
+            let orig = t4
+                .cells
+                .iter()
+                .find(|c| c.workload == w.name && c.r == r && !c.masked)
+                .unwrap()
+                .total_s;
+            let masked = t4
+                .cells
+                .iter()
+                .find(|c| c.workload == w.name && c.r == r && c.masked)
+                .unwrap()
+                .total_s;
+            ratios.push(1.0 - masked / orig);
+        }
+    }
+    let mean_saving = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        (mean_saving - f4.compute_savings).abs() < 0.08,
+        "Table IV mean {mean_saving} vs Fig 4 {}",
+        f4.compute_savings
+    );
+}
+
+#[test]
+fn fig6_latency_exceeds_static_t3_far_out() {
+    // the dynamic scenario must eventually cost more per round than the
+    // static 4 m testbed ever does
+    let t3_static = table3::run(Scale::Quick).unwrap();
+    let max_static = t3_static
+        .rows
+        .iter()
+        .map(|r| r.t3_s)
+        .fold(0.0f64, f64::max);
+    let f6 = fig6::run(Scale::Quick).unwrap();
+    let max_dynamic = f6
+        .series
+        .iter()
+        .flat_map(|s| s.points.iter())
+        .map(|p| p.offload_latency_s)
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_dynamic > max_static / 100.0 * 10.0,
+        "dynamic max {max_dynamic} vs static max {max_static} (per-100 scale)"
+    );
+}
+
+#[test]
+fn fig7_memory_story_holds() {
+    let f7 = fig7::run(Scale::Quick).unwrap();
+    let base = f7.points.iter().find(|p| p.r == 0.0).unwrap();
+    let best = f7
+        .points
+        .iter()
+        .filter(|p| p.r > 0.0)
+        .min_by(|a, b| a.avg_mem_pct.partial_cmp(&b.avg_mem_pct).unwrap())
+        .unwrap();
+    assert!(best.avg_mem_pct < base.avg_mem_pct, "offloading must relieve memory");
+}

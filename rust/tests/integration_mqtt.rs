@@ -1,0 +1,201 @@
+//! Integration: the from-scratch MQTT substrate over real loopback TCP.
+
+use std::time::Duration;
+
+use heteroedge::net::mqtt::{Broker, Client, QoS};
+
+fn setup() -> (Broker, std::net::SocketAddr) {
+    let b = Broker::start().unwrap();
+    let addr = b.addr();
+    (b, addr)
+}
+
+#[test]
+fn basic_pub_sub() {
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("frames/aux").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("frames/aux", b"hello", QoS::AtMostOnce, false)
+        .unwrap();
+    let msg = sub.recv_timeout(Duration::from_secs(5)).expect("no message");
+    assert_eq!(msg.topic, "frames/aux");
+    assert_eq!(msg.payload, b"hello");
+}
+
+#[test]
+fn wildcard_subscriptions() {
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("heteroedge/profile/+").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("heteroedge/profile/nano", b"a", QoS::AtMostOnce, false)
+        .unwrap();
+    publ.publish("heteroedge/profile/xavier", b"b", QoS::AtMostOnce, false)
+        .unwrap();
+    publ.publish("heteroedge/frames/aux", b"c", QoS::AtMostOnce, false)
+        .unwrap();
+    let m1 = sub.recv_timeout(Duration::from_secs(5)).unwrap();
+    let m2 = sub.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(m1.payload, b"a");
+    assert_eq!(m2.payload, b"b");
+    // the frames message must NOT arrive
+    assert!(sub.recv_timeout(Duration::from_millis(200)).is_none());
+}
+
+#[test]
+fn qos1_blocks_for_ack() {
+    let (b, addr) = setup();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    // no subscriber needed: PUBACK comes from the broker
+    publ.publish("t", b"payload", QoS::AtLeastOnce, false)
+        .unwrap();
+    assert_eq!(
+        b.stats.published.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn retained_message_reaches_late_subscriber() {
+    let (_b, addr) = setup();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("profile/xavier", b"state-1", QoS::AtLeastOnce, true)
+        .unwrap();
+    // subscriber joins AFTER the publish
+    let mut sub = Client::connect(addr, "late").unwrap();
+    sub.subscribe("profile/#").unwrap();
+    let msg = sub
+        .recv_timeout(Duration::from_secs(5))
+        .expect("retained not delivered");
+    assert_eq!(msg.payload, b"state-1");
+}
+
+#[test]
+fn retained_message_updates() {
+    let (_b, addr) = setup();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("p", b"old", QoS::AtLeastOnce, true).unwrap();
+    publ.publish("p", b"new", QoS::AtLeastOnce, true).unwrap();
+    let mut sub = Client::connect(addr, "late").unwrap();
+    sub.subscribe("p").unwrap();
+    assert_eq!(
+        sub.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"new"
+    );
+}
+
+#[test]
+fn multiple_subscribers_fan_out() {
+    let (b, addr) = setup();
+    let mut s1 = Client::connect(addr, "s1").unwrap();
+    let mut s2 = Client::connect(addr, "s2").unwrap();
+    s1.subscribe("fan").unwrap();
+    s2.subscribe("fan").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("fan", b"x", QoS::AtMostOnce, false).unwrap();
+    assert_eq!(s1.recv_timeout(Duration::from_secs(5)).unwrap().payload, b"x");
+    assert_eq!(s2.recv_timeout(Duration::from_secs(5)).unwrap().payload, b"x");
+    assert_eq!(b.stats.delivered.load(std::sync::atomic::Ordering::Relaxed), 2);
+}
+
+#[test]
+fn frame_sized_payload_roundtrips() {
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("big").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    let payload: Vec<u8> = (0..heteroedge::frames::FRAME_BYTES)
+        .map(|i| (i % 251) as u8)
+        .collect();
+    publ.publish("big", &payload, QoS::AtLeastOnce, false)
+        .unwrap();
+    let msg = sub.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(msg.payload, payload);
+}
+
+#[test]
+fn disconnected_subscriber_is_pruned() {
+    let (b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("x").unwrap();
+    assert_eq!(b.subscription_count(), 1);
+    sub.disconnect().unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(b.subscription_count(), 0, "broker must prune on disconnect");
+}
+
+#[test]
+fn many_messages_in_order() {
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("seq").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    for i in 0..100u32 {
+        publ.publish("seq", &i.to_le_bytes(), QoS::AtMostOnce, false)
+            .unwrap();
+    }
+    for i in 0..100u32 {
+        let msg = sub
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|| panic!("missing message {i}"));
+        assert_eq!(msg.payload, i.to_le_bytes());
+    }
+}
+
+#[test]
+fn concurrent_publishers() {
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("load/#").unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr, &format!("pub{t}")).unwrap();
+                for i in 0..25 {
+                    c.publish(
+                        &format!("load/{t}"),
+                        &[t as u8, i as u8],
+                        QoS::AtLeastOnce,
+                        false,
+                    )
+                    .unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut got = 0;
+    while sub.recv_timeout(Duration::from_millis(500)).is_some() {
+        got += 1;
+    }
+    assert_eq!(got, 100, "all concurrent publishes delivered");
+}
+
+#[test]
+fn profile_exchange_message_over_broker() {
+    use heteroedge::coordinator::DeviceProfileMsg;
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "primary").unwrap();
+    sub.subscribe(&DeviceProfileMsg::topic("auxiliary")).unwrap();
+    let mut publ = Client::connect(addr, "auxiliary").unwrap();
+    let msg = DeviceProfileMsg {
+        at: 1.0,
+        mem_pct: 45.6,
+        power_w: 5.4,
+        busy: 0.7,
+        secs_per_image: 0.19,
+        p_available_w: 9.0,
+    };
+    publ.publish(
+        &DeviceProfileMsg::topic("auxiliary"),
+        &msg.encode(),
+        QoS::AtLeastOnce,
+        true,
+    )
+    .unwrap();
+    let got = sub.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(DeviceProfileMsg::decode(&got.payload).unwrap(), msg);
+}

@@ -1,0 +1,147 @@
+//! Integration: the coordinator over the simulated two-node testbed —
+//! the paper's headline claims, the Algorithm-1 guards, the baselines
+//! and the config system working together.
+
+use heteroedge::config::Config;
+use heteroedge::coordinator::baseline;
+use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
+use heteroedge::net::Band;
+use heteroedge::workload::Workload;
+
+fn run_fixed(r: f64, masked: bool, seed: u64) -> heteroedge::coordinator::RunReport {
+    let mut tb = Testbed::sim(Band::Ghz5, 4.0, seed);
+    let mut cfg = RunConfig::static_default(Workload::calibration());
+    cfg.split = SplitMode::Fixed(r);
+    cfg.masked = masked;
+    tb.run_static(&cfg).unwrap()
+}
+
+#[test]
+fn headline_total_time_reduction() {
+    // Abstract: total operation time drops ≈47% (69.32 s → 36.43 s) at
+    // r = 0.7 vs the all-on-primary baseline.
+    let base = run_fixed(0.0, false, 1);
+    let off = run_fixed(0.7, true, 1);
+    let reduction = 1.0 - off.total_serial_s / base.total_serial_s;
+    assert!(
+        (0.30..0.65).contains(&reduction),
+        "total-time reduction {reduction} (base {}, off {})",
+        base.total_serial_s,
+        off.total_serial_s
+    );
+}
+
+#[test]
+fn headline_offload_latency_per_image() {
+    // Abstract: offload latency ≈12.5 ms/image at r=0.7 (masked), down
+    // ≈33% from 18.7 ms/image. Our channel is calibrated to T3≈1.25 s
+    // per 70 masked images → same order of magnitude.
+    let rep = run_fixed(0.7, true, 2);
+    let ms = rep.offload_ms_per_image();
+    assert!((4.0..40.0).contains(&ms), "offload ms/image = {ms}");
+    // masking must lower the per-image offload cost vs dense
+    let dense = run_fixed(0.7, false, 2);
+    assert!(ms < dense.offload_ms_per_image());
+}
+
+#[test]
+fn solver_driven_run_close_to_best_fixed() {
+    let mut best = f64::INFINITY;
+    for i in 0..=10 {
+        let rep = run_fixed(i as f64 / 10.0, false, 3);
+        best = best.min(rep.total_concurrent_s);
+    }
+    let mut tb = Testbed::sim(Band::Ghz5, 4.0, 3);
+    let cfg = RunConfig::static_default(Workload::calibration());
+    let solver_run = tb.run_static(&cfg).unwrap();
+    assert!(
+        solver_run.total_concurrent_s < best * 1.2,
+        "solver {} vs best fixed {}",
+        solver_run.total_concurrent_s,
+        best
+    );
+}
+
+#[test]
+fn all_workloads_run_and_order_sanely() {
+    for w in &heteroedge::workload::WORKLOADS {
+        let mut tb = Testbed::sim(Band::Ghz5, 4.0, 5);
+        let mut cfg = RunConfig::static_default(w);
+        cfg.n_frames = 20;
+        cfg.split = SplitMode::Fixed(0.5);
+        let rep = tb.run_static(&cfg).unwrap();
+        assert!(rep.t1_s > 0.0 && rep.t2_s > 0.0, "{}", w.name);
+    }
+}
+
+#[test]
+fn dedup_reduces_work_on_slow_scenes() {
+    let mut tb = Testbed::sim(Band::Ghz5, 4.0, 7);
+    let mut cfg = RunConfig::static_default(Workload::calibration());
+    cfg.split = SplitMode::Fixed(0.5);
+    cfg.dedup = true;
+    cfg.masked = true;
+    let rep = tb.run_static(&cfg).unwrap();
+    assert_eq!(
+        rep.frames_local + rep.frames_offloaded + rep.deduped,
+        cfg.n_frames
+    );
+}
+
+#[test]
+fn baselines_bracket_heteroedge() {
+    let local = baseline::local_only(Workload::calibration(), 100, 9).unwrap();
+    let cloud = baseline::cloud_offload(Workload::calibration(), 100, 2.0, 0.05, 9).unwrap();
+    let edge = run_fixed(0.7, true, 9);
+    assert!(edge.total_concurrent_s < local.total_secs);
+    assert!(edge.total_concurrent_s < cloud.total_secs);
+}
+
+#[test]
+fn dynamic_beta_protects_against_runaway_latency() {
+    let mut tb = Testbed::sim(Band::Ghz5, 2.0, 11);
+    let mut cfg = RunConfig::dynamic_default(Workload::calibration());
+    cfg.n_frames = 150;
+    cfg.split = SplitMode::Fixed(0.7);
+    cfg.beta_secs = Some(2.0);
+    let rep = tb.run_dynamic(&cfg).unwrap();
+    // once offloading stops, per-round offload latency must be zero
+    let mut stopped = false;
+    for p in &rep.series {
+        if !p.offloading {
+            stopped = true;
+            assert_eq!(p.offload_latency_s, 0.0);
+        }
+    }
+    assert!(stopped, "β never engaged");
+}
+
+#[test]
+fn config_drives_a_run() {
+    let cfg = Config::from_toml(
+        "batch_size = 30\nband = \"2.4GHz\"\ndistance_m = 6.0\nsplit_ratio = 0.5\nmasking = true\ndedup = false\nseed = 4",
+    )
+    .unwrap();
+    let mut tb = Testbed::sim(cfg.band, cfg.distance_m, cfg.seed);
+    let mut run = RunConfig::static_default(Workload::calibration());
+    run.n_frames = cfg.batch_size;
+    run.masked = cfg.masking;
+    run.dedup = cfg.dedup;
+    if let Some(r) = cfg.split_ratio {
+        run.split = SplitMode::Fixed(r);
+    }
+    let rep = tb.run_static(&run).unwrap();
+    assert_eq!(rep.frames_local + rep.frames_offloaded, 30);
+    assert_eq!(rep.frames_offloaded, 15);
+}
+
+#[test]
+fn band_choice_affects_offload_latency() {
+    let mut tb24 = Testbed::sim(Band::Ghz2_4, 4.0, 13);
+    let mut tb5 = Testbed::sim(Band::Ghz5, 4.0, 13);
+    let mut cfg = RunConfig::static_default(Workload::calibration());
+    cfg.split = SplitMode::Fixed(0.7);
+    let r24 = tb24.run_static(&cfg).unwrap();
+    let r5 = tb5.run_static(&cfg).unwrap();
+    assert!(r5.t3_s < r24.t3_s, "5 GHz {} vs 2.4 GHz {}", r5.t3_s, r24.t3_s);
+}

@@ -1,0 +1,164 @@
+//! Integration: PJRT engine over the real AOT artifacts.
+//!
+//! Requires `make artifacts`. These tests are the rust half of the
+//! L1/L2↔L3 contract: every model artifact loads, compiles, executes, and
+//! honours the manifest signature; the masker's §VI semantics survive the
+//! AOT round trip.
+
+use heteroedge::runtime::{Engine, Manifest, ModelPool, Tensor};
+use heteroedge::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::from_default_dir().expect("run `make artifacts` first")
+}
+
+fn rand_frames(n: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..n * 64 * 64 * 3).map(|_| rng.f32()).collect();
+    Tensor::new(vec![n, 64, 64, 3], data).unwrap()
+}
+
+#[test]
+fn manifest_lists_all_models() {
+    let m = Manifest::load(Manifest::default_dir()).unwrap();
+    let models = m.models();
+    for name in ["imagenet", "detectnet", "segnet", "posenet", "depthnet", "masker"] {
+        assert!(models.iter().any(|x| x == name), "missing {name}");
+    }
+    assert_eq!(m.len(), 12, "6 models x 2 batch sizes");
+}
+
+#[test]
+fn every_artifact_loads_and_runs() {
+    let mut eng = engine();
+    let specs: Vec<_> = eng.manifest().iter().cloned().collect();
+    for spec in specs {
+        let input = rand_frames(spec.batch, 7);
+        let outs = eng
+            .run(&spec.model, spec.batch, &input)
+            .unwrap_or_else(|e| panic!("{} b={}: {e:?}", spec.model, spec.batch));
+        assert_eq!(outs.len(), spec.outputs.len(), "{}", spec.model);
+        for (o, os) in outs.iter().zip(&spec.outputs) {
+            assert_eq!(o.shape(), os.shape.as_slice(), "{}", spec.model);
+            assert!(
+                o.data().iter().all(|x| x.is_finite()),
+                "{} emitted non-finite values",
+                spec.model
+            );
+        }
+    }
+}
+
+#[test]
+fn outputs_are_deterministic() {
+    let mut eng = engine();
+    let input = rand_frames(1, 42);
+    let a = eng.run("imagenet", 1, &input).unwrap();
+    let b = eng.run("imagenet", 1, &input).unwrap();
+    assert_eq!(a[0].data(), b[0].data());
+}
+
+#[test]
+fn batch1_and_batch8_agree() {
+    // The same frame through the b=1 artifact and replicated through the
+    // b=8 artifact must produce the same logits (weights are baked in).
+    let mut eng = engine();
+    let one = rand_frames(1, 3);
+    let mut rep = Vec::new();
+    for _ in 0..8 {
+        rep.extend_from_slice(one.data());
+    }
+    let eight = Tensor::new(vec![8, 64, 64, 3], rep).unwrap();
+    let a = eng.run("imagenet", 1, &one).unwrap();
+    let b = eng.run("imagenet", 8, &eight).unwrap();
+    let la = a[0].data();
+    let lb = &b[0].data()[0..10];
+    for (x, y) in la.iter().zip(lb) {
+        assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn rejects_wrong_input_shape() {
+    let mut eng = engine();
+    let bad = Tensor::zeros(vec![1, 32, 32, 3]);
+    assert!(eng.run("imagenet", 1, &bad).is_err());
+}
+
+#[test]
+fn masker_outputs_binary_mask_and_consistent_product() {
+    let mut eng = engine();
+    let input = rand_frames(1, 11);
+    let outs = eng.run("masker", 1, &input).unwrap();
+    let (mask, masked) = (&outs[0], &outs[1]);
+    assert!(mask.data().iter().all(|&v| v == 0.0 || v == 1.0));
+    // masked == img * mask, pixelwise (mask broadcasts over channels)
+    for p in 0..64 * 64 {
+        let m = mask.data()[p];
+        for c in 0..3 {
+            let idx = p * 3 + c;
+            let expect = input.data()[idx] * m;
+            assert!((masked.data()[idx] - expect).abs() < 1e-6);
+        }
+    }
+    // occupancy totals the mask-on pixel count (codec invariant)
+    let occ_total: f32 = outs[2].data().iter().sum();
+    let mask_total: f32 = mask.data().iter().sum();
+    assert!((occ_total - mask_total).abs() < 0.5);
+}
+
+#[test]
+fn pool_serves_arbitrary_batch_sizes() {
+    let mut pool = ModelPool::new(engine());
+    for n in [1usize, 3, 8, 11] {
+        let frames = rand_frames(n, n as u64);
+        let outs = pool.run_frames("posenet", &frames).unwrap();
+        assert_eq!(outs[0].shape(), &[n, 16, 16, 17], "n={n}");
+    }
+}
+
+#[test]
+fn pool_batching_matches_single_frame_results() {
+    let mut pool = ModelPool::new(engine());
+    let frames = rand_frames(10, 99);
+    let batched = pool.run_frames("imagenet", &frames).unwrap();
+    for i in 0..10 {
+        let single = frames.slice_leading(i, i + 1).unwrap();
+        let out = pool.run_frames("imagenet", &single).unwrap();
+        let a = &batched[0].data()[i * 10..(i + 1) * 10];
+        let b = out[0].data();
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let mut eng = engine();
+    let input = rand_frames(1, 1);
+    eng.run("segnet", 1, &input).unwrap();
+    eng.run("segnet", 1, &input).unwrap();
+    assert_eq!(eng.loaded_count(), 1);
+    let stats = eng.stats();
+    assert_eq!(stats[0].1.executions, 2);
+    assert!(stats[0].1.compile_secs > 0.0);
+}
+
+#[test]
+fn cross_language_numerics_fixture() {
+    // Same ramp input as python/tests/test_aot.py::test_cross_language_fixture.
+    // Guards the whole AOT chain (constants included — see the
+    // print_large_constants regression) against silent numeric drift.
+    let mut eng = engine();
+    let data: Vec<f32> = (0..64 * 64 * 3).map(|i| (i % 97) as f32 / 97.0).collect();
+    let t = Tensor::new(vec![1, 64, 64, 3], data).unwrap();
+    let logits = eng.run("imagenet", 1, &t).unwrap();
+    let expect = [
+        -0.2180408f32, -0.0071708, -0.4033906, -0.8960611, 1.3898717,
+        1.8550086, 1.2385212, 0.3272269, 1.0556343, -0.7350476,
+    ];
+    for (got, want) in logits[0].data().iter().zip(expect.iter()) {
+        assert!((got - want).abs() < 2e-4, "{got} vs {want}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Property tests: coordinator invariants — batching conservation,
+//! scheduler output ranges, β hysteresis, testbed accounting.
+
+use heteroedge::coordinator::{Batcher, RunConfig, SplitMode, Testbed};
+use heteroedge::frames::SceneGenerator;
+use heteroedge::mobility::BetaThreshold;
+use heteroedge::net::Band;
+use heteroedge::testkit::{check, prop_assert};
+use heteroedge::workload::Workload;
+
+#[test]
+fn prop_batcher_conserves_frames() {
+    check("batcher conservation", 60, |g| {
+        let n = g.usize_in(1, 120);
+        let r = g.f64_in(0.0, 1.0);
+        let masked = g.bool();
+        let mut b = if masked {
+            Batcher::paper_default()
+        } else {
+            Batcher::without_masking()
+        };
+        b.dedup = None;
+        let frames = SceneGenerator::paper_default(g.usize_in(0, 1000) as u64).batch(n);
+        let plan = b.plan(frames, r);
+        prop_assert(
+            plan.local.len() + plan.offload.len() == n,
+            format!("{} + {} != {n}", plan.local.len(), plan.offload.len()),
+        )?;
+        let want_off = (r * n as f64).round() as usize;
+        prop_assert(
+            plan.offload.len() == want_off,
+            format!("off {} want {want_off}", plan.offload.len()),
+        )
+    });
+}
+
+#[test]
+fn prop_batcher_with_dedup_conserves() {
+    check("batcher dedup conservation", 30, |g| {
+        let n = g.usize_in(2, 60);
+        let r = g.f64_in(0.0, 1.0);
+        let mut b = Batcher::paper_default();
+        let frames =
+            SceneGenerator::paper_default(g.usize_in(0, 1000) as u64).batch(n);
+        let plan = b.plan(frames, r);
+        prop_assert(
+            plan.local.len() + plan.offload.len() + plan.deduped == n,
+            "dedup accounting broken",
+        )
+    });
+}
+
+#[test]
+fn prop_offloaded_frames_always_decode() {
+    check("offload frames decode", 30, |g| {
+        let n = g.usize_in(1, 40);
+        let masked = g.bool();
+        let mut b = if masked {
+            Batcher::paper_default()
+        } else {
+            Batcher::without_masking()
+        };
+        b.dedup = None;
+        let frames =
+            SceneGenerator::paper_default(g.usize_in(0, 500) as u64).batch(n);
+        let plan = b.plan(frames, 1.0);
+        for enc in &plan.offload {
+            let (_, px) =
+                heteroedge::frames::codec::decode_frame(&enc.bytes).map_err(|e| e.to_string())?;
+            prop_assert(px.len() == 64 * 64 * 3, "bad decode size")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masking_never_increases_wire_bytes() {
+    check("masking saves bytes", 30, |g| {
+        let n = g.usize_in(1, 40);
+        let seed = g.usize_in(0, 500) as u64;
+        let mut bm = Batcher::paper_default();
+        bm.dedup = None;
+        let mut bd = Batcher::without_masking();
+        let pm = bm.plan(SceneGenerator::paper_default(seed).batch(n), 1.0);
+        let pd = bd.plan(SceneGenerator::paper_default(seed).batch(n), 1.0);
+        prop_assert(
+            pm.offload_bytes <= pd.offload_bytes,
+            format!("{} > {}", pm.offload_bytes, pd.offload_bytes),
+        )
+    });
+}
+
+#[test]
+fn prop_beta_threshold_state_machine() {
+    check("beta hysteresis", 60, |g| {
+        let beta = g.f64_in(0.5, 10.0);
+        let mut t = BetaThreshold::new(beta);
+        let mut was_offloading = true;
+        for _ in 0..30 {
+            let latency = g.f64_in(0.0, beta * 2.0);
+            let now = t.observe(latency);
+            if was_offloading && latency >= beta {
+                prop_assert(!now, "must stop at/over beta")?;
+            }
+            if !was_offloading && latency < beta * t.resume_frac {
+                prop_assert(now, "must resume under the hysteresis band")?;
+            }
+            was_offloading = now;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_static_run_accounting() {
+    check("testbed accounting", 12, |g| {
+        let r = g.f64_in(0.0, 1.0);
+        let n = g.usize_in(10, 60);
+        let mut tb = Testbed::sim(Band::Ghz5, g.f64_in(2.0, 10.0), g.usize_in(0, 99) as u64);
+        let mut cfg = RunConfig::static_default(Workload::calibration());
+        cfg.n_frames = n;
+        cfg.split = SplitMode::Fixed(r);
+        let rep = tb.run_static(&cfg).map_err(|e| e.to_string())?;
+        prop_assert(
+            rep.frames_local + rep.frames_offloaded == n,
+            "frame conservation",
+        )?;
+        prop_assert(rep.t1_s >= 0.0 && rep.t2_s >= 0.0 && rep.t3_s >= 0.0, "negative time")?;
+        prop_assert(
+            (rep.total_serial_s - (rep.t1_s + rep.t2_s)).abs() < 1e-9,
+            "serial total mismatch",
+        )?;
+        prop_assert(
+            rep.total_concurrent_s <= rep.total_serial_s + rep.t3_s + 1e-9,
+            "concurrent exceeds serial+transfer",
+        )?;
+        // no offloaded frames -> no transfer cost
+        if rep.frames_offloaded == 0 {
+            prop_assert(rep.t3_s == 0.0, "phantom offload latency")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_offload_means_less_primary_time() {
+    check("monotone primary relief", 15, |g| {
+        let seed = g.usize_in(0, 99) as u64;
+        let r1 = g.f64_in(0.0, 0.45);
+        let r2 = g.f64_in(0.55, 1.0);
+        let run = |r: f64| {
+            let mut tb = Testbed::sim(Band::Ghz5, 4.0, seed);
+            let mut cfg = RunConfig::static_default(Workload::calibration());
+            cfg.split = SplitMode::Fixed(r);
+            tb.run_static(&cfg).unwrap()
+        };
+        let lo = run(r1);
+        let hi = run(r2);
+        prop_assert(
+            hi.t2_s <= lo.t2_s + 1e-9,
+            format!("T2({r2})={} > T2({r1})={}", hi.t2_s, lo.t2_s),
+        )
+    });
+}

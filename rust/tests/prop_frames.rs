@@ -1,0 +1,155 @@
+//! Property tests: frame substrate — codec round trips, mask algebra,
+//! similarity filter invariants, scene statistics.
+
+use heteroedge::frames::codec::{decode_frame, encode_dense, encode_masked};
+use heteroedge::frames::mask::{apply_mask, dilate, mask_stats, mask_with_truth};
+use heteroedge::frames::{SceneGenerator, SimilarityFilter, FRAME_PIXELS};
+use heteroedge::testkit::{check, prop_assert};
+
+#[test]
+fn prop_dense_codec_roundtrip() {
+    check("dense codec roundtrip", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let enc = encode_dense(f.id, &f.pixels);
+        let (id, px) = decode_frame(&enc.bytes).map_err(|e| e.to_string())?;
+        prop_assert(id == f.id && px == f.pixels, "dense roundtrip broken")
+    });
+}
+
+#[test]
+fn prop_rle_codec_roundtrip_random_masks() {
+    check("rle codec roundtrip", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let thr = g.f64_in(0.0, 1.0) as f32;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        // random mask from the frame's own noise
+        let mask: Vec<f32> = (0..FRAME_PIXELS)
+            .map(|p| if f.pixels[p * 3] > thr { 1.0 } else { 0.0 })
+            .collect();
+        let mut px = f.pixels.clone();
+        apply_mask(&mut px, &mask);
+        let enc = encode_masked(f.id, &px);
+        let (id, back) = decode_frame(&enc.bytes).map_err(|e| e.to_string())?;
+        prop_assert(id == f.id && back == px, "rle roundtrip broken")
+    });
+}
+
+#[test]
+fn prop_rle_size_decreases_with_sparser_masks() {
+    check("rle monotone in sparsity", 25, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let keep = |frac: f32| -> usize {
+            let mask: Vec<f32> = (0..FRAME_PIXELS)
+                .map(|p| if (p as f32 / FRAME_PIXELS as f32) < frac { 1.0 } else { 0.0 })
+                .collect();
+            let mut px = f.pixels.clone();
+            apply_mask(&mut px, &mask);
+            encode_masked(f.id, &px).wire_bytes()
+        };
+        let lo = g.f64_in(0.05, 0.4) as f32;
+        let hi = g.f64_in(0.6, 0.95) as f32;
+        prop_assert(
+            keep(lo) <= keep(hi),
+            format!("sparser mask encoded larger: {} vs {}", keep(lo), keep(hi)),
+        )
+    });
+}
+
+#[test]
+fn prop_mask_stats_total_matches_tiles() {
+    check("mask stats consistency", 40, |g| {
+        let thr = g.f64_in(0.0, 1.0) as f32;
+        let seed = g.usize_in(0, 10_000) as u64;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let mask: Vec<f32> = (0..FRAME_PIXELS)
+            .map(|p| if f.pixels[p * 3] > thr { 1.0 } else { 0.0 })
+            .collect();
+        let s = mask_stats(&mask);
+        let tile_sum: u32 = s.tile_occupancy.iter().sum();
+        prop_assert(
+            tile_sum as usize == s.on_pixels,
+            format!("tiles {} != total {}", tile_sum, s.on_pixels),
+        )
+    });
+}
+
+#[test]
+fn prop_dilation_monotone() {
+    check("dilation monotone", 25, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let r1 = g.usize_in(0, 3);
+        let r2 = r1 + g.usize_in(1, 3);
+        let d1 = dilate(&f.truth_mask, r1);
+        let d2 = dilate(&f.truth_mask, r2);
+        // d1 ⊆ d2
+        for p in 0..FRAME_PIXELS {
+            if d1[p] == 1.0 {
+                prop_assert(d2[p] == 1.0, format!("dilation lost pixel {p}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truth_masking_preserves_objects() {
+    check("truth masking preserves objects", 25, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let margin = g.usize_in(0, 3);
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let (masked, stats) = mask_with_truth(&f, margin);
+        for p in 0..FRAME_PIXELS {
+            if f.truth_mask[p] == 1.0 {
+                for c in 0..3 {
+                    prop_assert(
+                        masked[p * 3 + c] == f.pixels[p * 3 + c],
+                        "object pixel altered",
+                    )?;
+                }
+            }
+        }
+        prop_assert(stats.keep_frac >= f.coverage() - 1e-9, "keep < coverage")
+    });
+}
+
+#[test]
+fn prop_similarity_zero_threshold_admits_everything() {
+    check("similarity zero threshold", 15, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let mut filt = SimilarityFilter::new(0.0);
+        let frames = SceneGenerator::paper_default(seed).batch(10);
+        for f in &frames {
+            prop_assert(filt.admit(f), "zero threshold must admit all")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_similarity_huge_threshold_admits_only_first() {
+    check("similarity huge threshold", 15, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let mut filt = SimilarityFilter::new(f32::MAX);
+        let frames = SceneGenerator::paper_default(seed).batch(10);
+        let admitted = frames.iter().filter(|f| filt.admit(f)).count();
+        prop_assert(admitted == 1, format!("admitted {admitted}"))
+    });
+}
+
+#[test]
+fn prop_scene_coverage_bounded() {
+    check("scene coverage bounded", 20, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let n_obj = g.usize_in(1, 8);
+        let mut gen = SceneGenerator::new(seed, n_obj);
+        let f = gen.next_frame();
+        let cov = f.coverage();
+        prop_assert(
+            (0.0..=0.95).contains(&cov),
+            format!("coverage {cov} with {n_obj} objects"),
+        )
+    });
+}

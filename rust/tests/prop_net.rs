@@ -1,0 +1,175 @@
+//! Property tests: network substrate — Shannon capacity monotonicity,
+//! channel accounting, topic-matching algebra, packet codec fuzz.
+
+use heteroedge::net::mqtt::packet::{decode_varint, encode_varint, Packet, QoS};
+use heteroedge::net::mqtt::topic_matches;
+use heteroedge::net::{shannon, Band, Channel, ChannelConfig};
+use heteroedge::testkit::{check, prop_assert};
+
+#[test]
+fn prop_capacity_monotone_in_bandwidth_and_power() {
+    check("shannon monotone", 80, |g| {
+        let d = g.f64_in(1.0, 50.0);
+        let u = g.f64_in(0.0, 3.5);
+        let b1 = g.f64_in(1e6, 40e6);
+        let b2 = b1 * g.f64_in(1.1, 4.0);
+        let p1 = g.f64_in(0.01, 0.2);
+        let p2 = p1 * g.f64_in(1.1, 4.0);
+        let n0 = g.f64_in(1e-9, 1e-4);
+        let base = shannon::data_rate_bps(b1, d, u, p1, n0);
+        prop_assert(
+            shannon::data_rate_bps(b2, d, u, p1, n0) > base,
+            "wider channel must be faster",
+        )?;
+        prop_assert(
+            shannon::data_rate_bps(b1, d, u, p2, n0) > base,
+            "more power must be faster",
+        )
+    });
+}
+
+#[test]
+fn prop_capacity_decreases_with_distance_and_noise() {
+    check("shannon decay", 80, |g| {
+        let u = g.f64_in(0.5, 3.5);
+        let d1 = g.f64_in(1.0, 25.0);
+        let d2 = d1 * g.f64_in(1.1, 3.0);
+        let n1 = g.f64_in(1e-9, 1e-5);
+        let n2 = n1 * g.f64_in(1.1, 10.0);
+        let base = shannon::data_rate_bps(20e6, d1, u, 0.1, n1);
+        prop_assert(
+            shannon::data_rate_bps(20e6, d2, u, 0.1, n1) < base,
+            "farther must be slower",
+        )?;
+        prop_assert(
+            shannon::data_rate_bps(20e6, d1, u, 0.1, n2) < base,
+            "noisier must be slower",
+        )
+    });
+}
+
+#[test]
+fn prop_channel_latency_superadditive_in_bytes() {
+    check("channel transfer linearity", 50, |g| {
+        let mut cfg = ChannelConfig::wifi(*g.pick(&[Band::Ghz2_4, Band::Ghz5]));
+        cfg.jitter_rel = 0.0;
+        let ch = Channel::new(cfg, g.f64_in(1.0, 30.0), 0);
+        let a = g.usize_in(1, 1 << 20) as u64;
+        let b = g.usize_in(1, 1 << 20) as u64;
+        let la = ch.expected_latency_s(a);
+        let lb = ch.expected_latency_s(b);
+        let lab = ch.expected_latency_s(a + b);
+        // one message of a+b saves one per-message overhead
+        prop_assert(
+            lab <= la + lb + 1e-12,
+            format!("{lab} > {la} + {lb}"),
+        )
+    });
+}
+
+#[test]
+fn prop_channel_send_accounts_every_byte() {
+    check("channel accounting", 30, |g| {
+        let mut ch = Channel::new(
+            ChannelConfig::wifi(Band::Ghz5),
+            g.f64_in(1.0, 20.0),
+            g.usize_in(0, 1000) as u64,
+        );
+        let mut total = 0u64;
+        let n = g.usize_in(1, 20);
+        for _ in 0..n {
+            let bytes = g.usize_in(1, 100_000) as u64;
+            total += bytes;
+            let l = ch.send(bytes);
+            prop_assert(l > 0.0 && l.is_finite(), "bad latency")?;
+        }
+        prop_assert(
+            ch.bytes_sent == total && ch.msgs_sent == n as u64,
+            "accounting mismatch",
+        )
+    });
+}
+
+#[test]
+fn prop_topic_matching_reflexive_for_literals() {
+    check("topic reflexivity", 60, |g| {
+        let depth = g.usize_in(1, 5);
+        let topic: Vec<String> = (0..depth)
+            .map(|_| format!("l{}", g.usize_in(0, 10)))
+            .collect();
+        let t = topic.join("/");
+        prop_assert(topic_matches(&t, &t), format!("{t} !~ itself"))?;
+        // hash at any level-prefix matches
+        for cut in 0..depth {
+            let filter = if cut == 0 {
+                "#".to_string()
+            } else {
+                format!("{}/#", topic[..cut].join("/"))
+            };
+            prop_assert(topic_matches(&filter, &t), format!("{filter} !~ {t}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plus_matches_exactly_one_level() {
+    check("plus wildcard", 60, |g| {
+        let a = format!("x{}", g.usize_in(0, 50));
+        let b = format!("y{}", g.usize_in(0, 50));
+        prop_assert(topic_matches(&format!("{a}/+"), &format!("{a}/{b}")), "one level")?;
+        prop_assert(
+            !topic_matches(&format!("{a}/+"), &format!("{a}/{b}/z")),
+            "must not span levels",
+        )
+    });
+}
+
+#[test]
+fn prop_varint_roundtrip() {
+    check("varint roundtrip", 200, |g| {
+        let n = g.usize_in(0, 200_000_000);
+        let mut buf = Vec::new();
+        encode_varint(n, &mut buf);
+        let got = decode_varint(&mut std::io::Cursor::new(buf)).map_err(|e| e.to_string())?;
+        prop_assert(got == n, format!("{got} != {n}"))
+    });
+}
+
+#[test]
+fn prop_publish_packet_roundtrip_fuzz() {
+    check("publish packet fuzz", 100, |g| {
+        let topic: String = format!("t/{}", g.usize_in(0, 999));
+        let len = g.usize_in(0, 5000);
+        let payload: Vec<u8> = (0..len).map(|_| (g.rng().next_u64() & 0xFF) as u8).collect();
+        let p = Packet::Publish {
+            topic: topic.clone(),
+            payload: payload.clone(),
+            qos: if g.bool() { QoS::AtMostOnce } else { QoS::AtLeastOnce },
+            packet_id: g.usize_in(0, 65535) as u16,
+            retain: g.bool(),
+        };
+        let back =
+            Packet::read_from(&mut std::io::Cursor::new(p.encode())).map_err(|e| e.to_string())?;
+        prop_assert(back == p, "packet roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_truncated_packets_never_panic() {
+    check("truncation safety", 100, |g| {
+        let p = Packet::Publish {
+            topic: "a/b".into(),
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            qos: QoS::AtLeastOnce,
+            packet_id: 9,
+            retain: false,
+        };
+        let mut bytes = p.encode();
+        let cut = g.usize_in(0, bytes.len());
+        bytes.truncate(cut);
+        // must error or return a packet, never panic
+        let _ = Packet::read_from(&mut std::io::Cursor::new(bytes));
+        Ok(())
+    });
+}

@@ -1,0 +1,161 @@
+//! Property tests: solver, barrier method, curve fitting (testkit-based,
+//! proptest is unavailable offline).
+
+use heteroedge::solvefit::{polyfit, Poly};
+use heteroedge::solver::ipopt::BarrierSolver;
+use heteroedge::solver::{Constraints, HeteroEdgeSolver, LatencyEnergyModel, ObjectiveKind};
+use heteroedge::testkit::{check, prop_assert};
+
+#[test]
+fn prop_polyfit_recovers_random_quadratics() {
+    check("polyfit recovers quadratics", 100, |g| {
+        let (a, b, c) = (
+            g.f64_in(-10.0, 10.0),
+            g.f64_in(-10.0, 10.0),
+            g.f64_in(-10.0, 10.0),
+        );
+        let xs: Vec<f64> = (0..12).map(|i| i as f64 / 3.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| a + b * x + c * x * x).collect();
+        let p = polyfit(&xs, &ys, 2).map_err(|e| e.to_string())?;
+        prop_assert(
+            (p.coeffs()[0] - a).abs() < 1e-6
+                && (p.coeffs()[1] - b).abs() < 1e-6
+                && (p.coeffs()[2] - c).abs() < 1e-6,
+            format!("recovered {:?} for ({a},{b},{c})", p.coeffs()),
+        )
+    });
+}
+
+#[test]
+fn prop_poly_derivative_matches_finite_difference() {
+    check("poly derivative", 100, |g| {
+        let coeffs = g.vec_f64(4, -5.0, 5.0);
+        let p = Poly::new(coeffs);
+        let d = p.derivative();
+        let x = g.f64_in(-3.0, 3.0);
+        let h = 1e-6;
+        let fd = (p.eval(x + h) - p.eval(x - h)) / (2.0 * h);
+        prop_assert(
+            (d.eval(x) - fd).abs() < 1e-3,
+            format!("d={} fd={fd}", d.eval(x)),
+        )
+    });
+}
+
+#[test]
+fn prop_barrier_respects_constraints() {
+    check("barrier feasibility", 60, |g| {
+        // minimize (x - target)^2 s.t. x <= cap, on [0, 1]
+        let target = g.f64_in(0.0, 1.0);
+        let cap = g.f64_in(0.1, 0.95);
+        let f = move |x: f64| (x - target) * (x - target);
+        let gs: Vec<Box<dyn Fn(f64) -> f64>> = vec![Box::new(move |x| x - cap)];
+        let s = BarrierSolver::default();
+        match s.minimize(&f, &gs, (0.0, 1.0)) {
+            None => prop_assert(false, "feasible problem reported infeasible"),
+            Some(res) => {
+                let expected = target.min(cap);
+                prop_assert(
+                    res.x <= cap + 1e-9 && (res.x - expected).abs() < 0.02,
+                    format!("x={} expected≈{expected} cap={cap}", res.x),
+                )
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_barrier_never_beats_true_minimum() {
+    check("barrier lower bound", 60, |g| {
+        let target = g.f64_in(0.2, 0.8);
+        let f = move |x: f64| (x - target) * (x - target);
+        let s = BarrierSolver::default();
+        let res = s.minimize(&f, &[], (0.0, 1.0)).unwrap();
+        prop_assert(res.value >= -1e-12, format!("value {}", res.value))
+    });
+}
+
+#[test]
+fn prop_solver_decision_in_unit_interval_and_feasible() {
+    check("solver feasibility", 40, |g| {
+        let mut s = HeteroEdgeSolver::paper_default();
+        s.constraints = Constraints {
+            tau_secs: g.f64_in(40.0, 120.0),
+            k_devices: 2,
+            p1_max_w: g.f64_in(5.0, 30.0),
+            p2_max_w: g.f64_in(4.0, 10.0),
+            m1_max_pct: g.f64_in(30.0, 95.0),
+            m2_max_pct: g.f64_in(30.0, 95.0),
+            beta_secs: if g.bool() {
+                Some(g.f64_in(0.5, 5.0))
+            } else {
+                None
+            },
+        };
+        let d = s.solve().map_err(|e| e.to_string())?;
+        prop_assert(
+            (0.0..=1.0).contains(&d.r),
+            format!("r out of range: {}", d.r),
+        )?;
+        if d.feasible {
+            // the returned point must satisfy the constraints it claims
+            prop_assert(d.m1_pct <= s.constraints.m1_max_pct + 0.6, "M1 violated")?;
+            prop_assert(d.m2_pct <= s.constraints.m2_max_pct + 0.6, "M2 violated")?;
+            prop_assert(d.p1_w <= s.constraints.p1_max_w + 0.1, "P1 violated")?;
+            if let Some(beta) = s.constraints.beta_secs {
+                prop_assert(d.offload_secs <= beta + 1e-6, "beta violated")?;
+            }
+        } else {
+            prop_assert(d.r == 0.0, "infeasible must fall back to local")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_optimum_beats_random_feasible_points() {
+    check("solver optimality", 30, |g| {
+        let s = HeteroEdgeSolver::paper_default();
+        let d = s.solve().map_err(|e| e.to_string())?;
+        let r = g.f64_in(0.0, 1.0);
+        let obj = s.model.objective(ObjectiveKind::Paper, r);
+        // tolerance: the candidate might be infeasible, which only helps it
+        prop_assert(
+            d.total_secs <= obj + 0.35,
+            format!("solver {} beaten at r={r} ({obj})", d.total_secs),
+        )
+    });
+}
+
+#[test]
+fn prop_workload_scaling_is_linear() {
+    check("workload scale linearity", 50, |g| {
+        let t0 = g.f64_in(30.0, 150.0);
+        let m = LatencyEnergyModel::from_table_i().with_workload_scale(t0);
+        let base = LatencyEnergyModel::from_table_i();
+        let r = g.f64_in(0.0, 1.0);
+        let expect = base.t2(r) * (t0 / base.t2(0.0));
+        prop_assert(
+            (m.t2(r) - expect).abs() < 1e-6,
+            format!("{} vs {expect}", m.t2(r)),
+        )
+    });
+}
+
+#[test]
+fn prop_objectives_nonnegative_and_finite() {
+    check("objective sanity", 80, |g| {
+        let m = LatencyEnergyModel::from_table_i()
+            .with_workload_scale(g.f64_in(20.0, 200.0));
+        let r = g.f64_in(0.0, 1.0);
+        for kind in [
+            ObjectiveKind::Paper,
+            ObjectiveKind::Concurrent,
+            ObjectiveKind::Serial,
+        ] {
+            let v = m.objective(kind, r);
+            prop_assert(v.is_finite() && v >= 0.0, format!("{kind:?}@{r} = {v}"))?;
+        }
+        Ok(())
+    });
+}
