@@ -1,0 +1,46 @@
+//! Fleet scaling sweep: the same stream set served by a growing pool of
+//! auxiliaries — the split-ratio advantage at fleet scale.
+//!
+//! ```sh
+//! cargo run --release --example fleet_scale
+//! ```
+
+use anyhow::Result;
+use heteroedge::fleet::{Dispatcher, FleetConfig};
+
+fn main() -> Result<()> {
+    // identical stream set (no shedding) so makespans compare directly
+    let mut base = FleetConfig::new(1, 6);
+    base.rounds = 4;
+    base.frames_per_round = 8;
+    base.admission_control = false;
+
+    println!("streams: {} cameras, {} rounds\n", base.n_streams, base.rounds);
+    println!("{:>11} | {:>12} | {:>10} | {:>8}", "auxiliaries", "makespan (s)", "p99 (s)", "vs r=0");
+
+    let mut baseline = None;
+    for aux in 0..=4usize {
+        let cfg = FleetConfig {
+            n_nodes: aux + 1,
+            ..base.clone()
+        };
+        let rep = Dispatcher::new(cfg)?.run()?;
+        let ops = rep.total_ops_secs();
+        let base_ops = *baseline.get_or_insert(ops);
+        println!(
+            "{:>11} | {:>12.2} | {:>10.3} | {:>7.1}%",
+            aux,
+            ops,
+            rep.p99_latency_s(),
+            (ops / base_ops - 1.0) * 100.0
+        );
+    }
+
+    // one admission-controlled overloaded run, with the full report
+    let mut hot = FleetConfig::new(3, 6);
+    hot.rounds = 3;
+    hot.frames_per_round = 40;
+    println!("\noverloaded 3-node fleet (admission control on):");
+    println!("{}", Dispatcher::new(hot)?.run()?.render());
+    Ok(())
+}

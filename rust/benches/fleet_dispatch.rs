@@ -1,0 +1,44 @@
+//! Fleet dispatcher benchmarks: admission planning, the odds-form share
+//! partition via a full dispatch round, and MQTT work-queue shipping.
+//!
+//! Targets: a dispatch round's coordination overhead (admission + per-pair
+//! solves + partition) must stay far below the execution time it
+//! schedules.
+
+use heteroedge::bench::Bench;
+use heteroedge::fleet::{Dispatcher, FleetConfig, StreamRegistry, StreamSpec, Transport};
+
+fn main() {
+    let mut b = Bench::new("fleet_dispatch");
+
+    // --- admission planning over many streams ---
+    let mut reg = StreamRegistry::new();
+    for i in 0..64 {
+        reg.register(StreamSpec::camera(i, 10 + i % 7)).unwrap();
+    }
+    b.iter("admission_plan (64 streams)", 500, || {
+        let plan = reg.admission_plan(200.0);
+        assert_eq!(plan.len(), 64);
+    });
+
+    // --- full simulated fleet round: 4 nodes x 8 streams ---
+    b.iter("dispatch run (4x8, 1 round, sim)", 20, || {
+        let mut cfg = FleetConfig::new(4, 8);
+        cfg.rounds = 1;
+        cfg.frames_per_round = 8;
+        let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+        assert!(rep.total_completed() > 0);
+    });
+
+    // --- the same round with frames physically over the MQTT broker ---
+    b.iter("dispatch run (3x4, 1 round, mqtt)", 5, || {
+        let mut cfg = FleetConfig::new(3, 4);
+        cfg.rounds = 1;
+        cfg.frames_per_round = 4;
+        cfg.transport = Transport::Mqtt;
+        let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+        assert!(rep.mqtt_delivered > 0);
+    });
+
+    println!("{}", b.report());
+}

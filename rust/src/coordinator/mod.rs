@@ -20,7 +20,7 @@ pub mod star;
 pub mod testbed;
 
 pub use batcher::{Batcher, BatchPlan};
-pub use node::{ExecBackend, NodeRuntime, PjrtBackend, SimBackend};
+pub use node::{ExecBackend, NodeHandle, NodeRuntime, PjrtBackend, SimBackend};
 pub use testbed::SplitMode;
 pub use profile_exchange::DeviceProfileMsg;
 pub use scheduler::{Scheduler, SchedulerConfig};

@@ -18,6 +18,67 @@ use crate::sim::SimClock;
 use crate::solver::LatencyEnergyModel;
 use crate::workload::Workload;
 
+use super::profile_exchange::DeviceProfileMsg;
+
+/// Uniform handle over one executing node — the seam shared by the
+/// two-node [`super::Testbed`] and the N-node [`crate::fleet`] path.
+///
+/// A `NodeHandle` owns a virtual clock, produces the profile snapshot the
+/// scheduler's availability guard consumes, and charges workload shares
+/// through whatever backend sits underneath. `NodeRuntime<B>` is the
+/// canonical implementation; fleets hold `Box<dyn NodeHandle>` so
+/// heterogeneous device kinds and backends mix freely.
+pub trait NodeHandle {
+    /// Device class of this node.
+    fn device_kind(&self) -> DeviceKind;
+
+    /// Current simulated time on this node's clock (s).
+    fn now(&self) -> f64;
+
+    /// Wait until absolute simulated time `t` (never moves backwards).
+    fn sync_to(&mut self, t: f64);
+
+    /// Charge `dt` seconds of non-inference work (masking, admin).
+    fn advance(&mut self, dt: f64);
+
+    /// Latest device-profile snapshot — exactly what
+    /// [`DeviceProfileMsg`] publishes over MQTT in the real testbed.
+    fn profile(&self) -> DeviceProfileMsg;
+
+    /// Execute a workload share; returns device-seconds charged.
+    fn run(
+        &mut self,
+        workload: &Workload,
+        frames: &[Frame],
+        split_ratio: f64,
+        masked: bool,
+    ) -> Result<f64>;
+
+    /// Frames executed over this node's lifetime.
+    fn frames_done(&self) -> u64;
+
+    /// Device-seconds of execution charged so far.
+    fn exec_secs(&self) -> f64;
+
+    /// Backend label for reports.
+    fn backend_name(&self) -> &'static str;
+
+    /// Mean observed seconds/image, falling back to the Table I anchors
+    /// for a cold node (the fleet admission control needs a rate estimate
+    /// before the first frame lands).
+    fn secs_per_image_est(&self) -> f64 {
+        if self.frames_done() > 0 {
+            self.exec_secs() / self.frames_done() as f64
+        } else {
+            match self.device_kind() {
+                // Table I: 68.34 s (Nano) / 19.0 s (Xavier) per 100 images.
+                DeviceKind::Nano => 0.6834,
+                DeviceKind::Xavier => 0.19,
+            }
+        }
+    }
+}
+
 /// Executes `frames` for `workload` on a given device; returns seconds of
 /// device time charged.
 pub trait ExecBackend {
@@ -220,6 +281,57 @@ impl<B: ExecBackend> NodeRuntime<B> {
     }
 }
 
+impl<B: ExecBackend> NodeHandle for NodeRuntime<B> {
+    fn device_kind(&self) -> DeviceKind {
+        self.kind
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn sync_to(&mut self, t: f64) {
+        self.clock.sync_to(t);
+    }
+
+    fn advance(&mut self, dt: f64) {
+        self.clock.advance(dt);
+    }
+
+    fn profile(&self) -> DeviceProfileMsg {
+        DeviceProfileMsg {
+            at: self.clock.now(),
+            mem_pct: self.state.mem_used_pct,
+            power_w: self.state.power_w,
+            busy: self.state.busy,
+            secs_per_image: self.secs_per_image(),
+            p_available_w: 10.0,
+        }
+    }
+
+    fn run(
+        &mut self,
+        workload: &Workload,
+        frames: &[Frame],
+        split_ratio: f64,
+        masked: bool,
+    ) -> Result<f64> {
+        self.execute(workload, frames, split_ratio, masked)
+    }
+
+    fn frames_done(&self) -> u64 {
+        self.frames_done
+    }
+
+    fn exec_secs(&self) -> f64 {
+        self.exec_secs
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +382,27 @@ mod tests {
         assert!(n.secs_per_image() > 0.0);
         // post-run the device is idle again
         assert_eq!(n.state.busy, 0.0);
+    }
+
+    #[test]
+    fn node_handle_seam_matches_runtime() {
+        let mut n: Box<dyn NodeHandle> =
+            Box::new(NodeRuntime::new(DeviceKind::Nano, SimBackend::new(), 4));
+        // cold node: estimate falls back to the Table I anchor
+        assert!((n.secs_per_image_est() - 0.6834).abs() < 1e-12);
+        let p = n.profile();
+        assert_eq!(p.secs_per_image, 0.0);
+        assert!(p.mem_pct > 0.0);
+        let w = Workload::calibration();
+        let secs = n.run(w, &frames(10), 0.0, false).unwrap();
+        assert!(secs > 0.0);
+        assert_eq!(n.frames_done(), 10);
+        assert!((n.now() - secs).abs() < 1e-9);
+        // warm node: estimate is the observed mean
+        assert!((n.secs_per_image_est() - secs / 10.0).abs() < 1e-9);
+        n.sync_to(1e6);
+        assert_eq!(n.now(), 1e6);
+        assert_eq!(n.backend_name(), "sim");
     }
 
     #[test]

@@ -11,8 +11,7 @@ use crate::net::{Band, Channel, ChannelConfig};
 use crate::workload::Workload;
 
 use super::batcher::Batcher;
-use super::node::{ExecBackend, NodeRuntime, SimBackend};
-use super::profile_exchange::DeviceProfileMsg;
+use super::node::{ExecBackend, NodeHandle, NodeRuntime, SimBackend};
 use super::scheduler::{Scheduler, SchedulerConfig};
 
 /// How the split ratio is chosen per run.
@@ -153,25 +152,15 @@ impl<B1: ExecBackend, B2: ExecBackend> Testbed<B1, B2> {
         }
     }
 
-    fn profile_of(node: &NodeRuntime<impl ExecBackend>) -> DeviceProfileMsg {
-        DeviceProfileMsg {
-            at: node.clock.now(),
-            mem_pct: node.state.mem_used_pct,
-            power_w: node.state.power_w,
-            busy: node.state.busy,
-            secs_per_image: node.secs_per_image(),
-            p_available_w: 10.0,
-        }
-    }
-
-    /// Choose r per the run's split mode.
+    /// Choose r per the run's split mode. Profiles come from the shared
+    /// [`NodeHandle`] seam (the same snapshot the fleet dispatcher uses).
     fn choose_r(&mut self, cfg: &RunConfig, observed_t3: f64) -> f64 {
         match cfg.split {
             SplitMode::Fixed(r) => r,
             SplitMode::Solver => {
                 self.scheduler.cfg.beta_secs = cfg.beta_secs;
-                let p = Self::profile_of(&self.primary);
-                let a = Self::profile_of(&self.auxiliary);
+                let p = self.primary.profile();
+                let a = self.auxiliary.profile();
                 self.scheduler
                     .decide(&p, &a, cfg.workload, cfg.masked, observed_t3, false)
                     .r

@@ -1,0 +1,133 @@
+//! Per-node bounded inboxes with backpressure signaling.
+//!
+//! Each fleet node fronts its executor with a bounded queue. `push`
+//! hands the item back instead of growing without bound; the dispatcher
+//! treats that as a backpressure event and re-routes the frame to the
+//! primary. Occupancy also feeds the scheduler's availability guard λ:
+//! [`BoundedInbox::pressure_mem_pct`] inflates the node's reported memory
+//! utilization in proportion to queue fill, so a congested node stops
+//! attracting offload *before* it starts shedding.
+
+/// A bounded FIFO of pending work items for one node.
+#[derive(Debug, Clone)]
+pub struct BoundedInbox<T> {
+    capacity: usize,
+    queue: Vec<T>,
+    /// Items turned away because the inbox was full (cumulative).
+    pub rejected: u64,
+    /// Items accepted (cumulative).
+    pub accepted: u64,
+    /// Deepest simultaneous fill observed.
+    pub high_watermark: usize,
+}
+
+impl<T> BoundedInbox<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "inbox capacity must be positive");
+        BoundedInbox {
+            capacity,
+            queue: Vec::new(),
+            rejected: 0,
+            accepted: 0,
+            high_watermark: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.queue.len()
+    }
+
+    /// Queue fill fraction in `[0, 1]`.
+    pub fn occupancy(&self) -> f64 {
+        self.queue.len() as f64 / self.capacity as f64
+    }
+
+    /// Accept `item`, or hand it back when full (backpressure).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return Err(item);
+        }
+        self.queue.push(item);
+        self.accepted += 1;
+        self.high_watermark = self.high_watermark.max(self.queue.len());
+        Ok(())
+    }
+
+    /// Take everything queued, FIFO order.
+    pub fn drain(&mut self) -> Vec<T> {
+        std::mem::take(&mut self.queue)
+    }
+
+    /// Map queue occupancy onto the memory-percent scale the scheduler's
+    /// λ guard reads: an empty inbox reports the device's real
+    /// `base_mem_pct`; a full one reports 100%, which trips the guard and
+    /// zeroes this node's split ratio for the round.
+    pub fn pressure_mem_pct(&self, base_mem_pct: f64) -> f64 {
+        let base = base_mem_pct.clamp(0.0, 100.0);
+        base + self.occupancy() * (100.0 - base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_bounds_and_counts() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(2);
+        assert!(ib.push(1).is_ok());
+        assert!(ib.push(2).is_ok());
+        assert_eq!(ib.push(3), Err(3), "full inbox hands the item back");
+        assert_eq!(ib.len(), 2);
+        assert_eq!(ib.accepted, 2);
+        assert_eq!(ib.rejected, 1);
+        assert_eq!(ib.high_watermark, 2);
+        assert_eq!(ib.free(), 0);
+    }
+
+    #[test]
+    fn drain_empties_fifo() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(4);
+        for v in [10, 20, 30] {
+            ib.push(v).unwrap();
+        }
+        assert_eq!(ib.drain(), vec![10, 20, 30]);
+        assert!(ib.is_empty());
+        assert_eq!(ib.high_watermark, 3, "watermark survives drain");
+        // freed capacity accepts again
+        ib.push(40).unwrap();
+        assert_eq!(ib.len(), 1);
+    }
+
+    #[test]
+    fn pressure_scales_with_occupancy() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(4);
+        assert_eq!(ib.pressure_mem_pct(40.0), 40.0, "empty = real memory");
+        ib.push(1).unwrap();
+        ib.push(2).unwrap();
+        let half = ib.pressure_mem_pct(40.0);
+        assert!((half - 70.0).abs() < 1e-9, "half full: {half}");
+        ib.push(3).unwrap();
+        ib.push(4).unwrap();
+        assert_eq!(ib.pressure_mem_pct(40.0), 100.0, "full trips λ");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_is_a_bug() {
+        let _ = BoundedInbox::<u32>::new(0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Fleet ingest subsystem — N-node, M-stream offload serving.
+//!
+//! The paper's testbed is one primary, one auxiliary, one frame source.
+//! This module generalizes it into a serving fleet for the large-area
+//! surveillance regime the paper motivates (many cameras, many
+//! heterogeneous devices, contention):
+//!
+//! * [`registry`]: stream admission — per-stream rate/priority, with
+//!   drop-to-keyframe degradation and outright rejection under overload;
+//! * [`inbox`]: per-node bounded inboxes whose occupancy feeds back into
+//!   the scheduler's availability guard λ (backpressure before loss);
+//! * [`dispatcher`]: the work-queue dispatcher — per-pair split ratios
+//!   from the existing Algorithm-1 scheduler against live node profiles,
+//!   combined in odds form across multiple auxiliaries, batched through
+//!   the dedup→mask→encode pipeline, optionally shipped through the
+//!   in-tree MQTT broker;
+//! * [`report`]: per-stream latency percentiles, shed counters and
+//!   per-node utilization, exportable into [`crate::metrics`].
+//!
+//! Node execution rides the [`crate::coordinator::NodeHandle`] seam, so
+//! the fleet and the two-node testbed share one node runtime.
+
+pub mod dispatcher;
+pub mod inbox;
+pub mod registry;
+pub mod report;
+
+pub use dispatcher::{Dispatcher, FleetConfig, Transport};
+pub use inbox::BoundedInbox;
+pub use registry::{AdmissionDecision, StreamRegistry, StreamSpec};
+pub use report::{FleetReport, NodeReport, StreamReport};

@@ -1,0 +1,243 @@
+//! Stream admission control: which camera streams get how much of the
+//! fleet's per-round frame budget.
+//!
+//! Streams register with a rate (frames per dispatch round) and a
+//! priority. Every round the dispatcher computes the fleet's remaining
+//! frame capacity and asks the registry for an admission plan: streams
+//! are served in priority order; when demand exceeds capacity a stream is
+//! *degraded* — drop-to-keyframe decimation, keeping every `stride`-th
+//! frame — and past the decimation floor it is *rejected* for the round.
+
+use anyhow::{bail, Result};
+
+use crate::frames::Frame;
+use crate::workload::{Workload, WORKLOADS};
+
+/// One registered camera stream.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    /// Unique stream name (`cam-3`).
+    pub name: String,
+    /// Multi-DNN application this stream's frames run.
+    pub workload: &'static Workload,
+    /// §VI masking on the offload path.
+    pub masked: bool,
+    /// Frames produced per dispatch round.
+    pub rate: usize,
+    /// Admission priority — higher admits first under overload.
+    pub priority: u8,
+    /// Arrival phase within a round, in `[0, 1)` — staggers the fleet's
+    /// event ordering so streams don't all land at the same instant.
+    pub phase: f64,
+}
+
+impl StreamSpec {
+    /// A synthetic camera: workloads cycle through the Table IV pairs,
+    /// priorities cycle 2/1/0, phases stagger deterministically.
+    pub fn camera(i: usize, rate: usize) -> StreamSpec {
+        StreamSpec {
+            name: format!("cam-{i}"),
+            workload: &WORKLOADS[i % WORKLOADS.len()],
+            masked: false,
+            rate,
+            priority: (2 - (i % 3)) as u8,
+            phase: (i as f64 * 0.137).fract(),
+        }
+    }
+}
+
+/// Per-round admission outcome for one stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Full rate admitted.
+    Admit,
+    /// Drop-to-keyframe: keep every `stride`-th frame.
+    Degrade { stride: usize },
+    /// No capacity at any degradation level — stream sheds this round.
+    Reject,
+}
+
+impl AdmissionDecision {
+    /// Frames kept out of `rate` under this decision.
+    pub fn kept_of(&self, rate: usize) -> usize {
+        match self {
+            AdmissionDecision::Admit => rate,
+            AdmissionDecision::Degrade { stride } => (rate + stride - 1) / stride,
+            AdmissionDecision::Reject => 0,
+        }
+    }
+
+    /// Apply the decision to a raw batch: `(kept, dropped)`.
+    pub fn apply(&self, frames: Vec<Frame>) -> (Vec<Frame>, usize) {
+        match self {
+            AdmissionDecision::Admit => (frames, 0),
+            AdmissionDecision::Reject => {
+                let n = frames.len();
+                (Vec::new(), n)
+            }
+            AdmissionDecision::Degrade { stride } => {
+                let n = frames.len();
+                let kept: Vec<Frame> = frames
+                    .into_iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % stride == 0)
+                    .map(|(_, f)| f)
+                    .collect();
+                let dropped = n - kept.len();
+                (kept, dropped)
+            }
+        }
+    }
+}
+
+/// The registry of admitted streams plus the overload policy.
+#[derive(Debug, Clone, Default)]
+pub struct StreamRegistry {
+    pub streams: Vec<StreamSpec>,
+    /// Deepest drop-to-keyframe stride before outright rejection.
+    pub max_stride: usize,
+}
+
+impl StreamRegistry {
+    pub fn new() -> Self {
+        StreamRegistry {
+            streams: Vec::new(),
+            max_stride: 4,
+        }
+    }
+
+    /// Register a stream; rejects duplicates and degenerate specs.
+    pub fn register(&mut self, spec: StreamSpec) -> Result<()> {
+        if spec.rate == 0 {
+            bail!("stream {} has zero rate", spec.name);
+        }
+        if !(0.0..1.0).contains(&spec.phase) {
+            bail!("stream {} phase {} outside [0,1)", spec.name, spec.phase);
+        }
+        if self.streams.iter().any(|s| s.name == spec.name) {
+            bail!("duplicate stream name {}", spec.name);
+        }
+        self.streams.push(spec);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+
+    /// Total frames/round the registered streams offer.
+    pub fn offered_per_round(&self) -> usize {
+        self.streams.iter().map(|s| s.rate).sum()
+    }
+
+    /// Build the round's admission plan against `capacity_frames`.
+    ///
+    /// Streams are considered in (priority desc, registration order)
+    /// and each takes the best service level that still fits: full rate,
+    /// then strides 2..=`max_stride`, then rejection. Returns one
+    /// decision per stream, in registration order.
+    pub fn admission_plan(&self, capacity_frames: f64) -> Vec<AdmissionDecision> {
+        let mut order: Vec<usize> = (0..self.streams.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(self.streams[i].priority), i));
+
+        let mut remaining = capacity_frames.max(0.0);
+        let mut plan = vec![AdmissionDecision::Reject; self.streams.len()];
+        for i in order {
+            let rate = self.streams[i].rate;
+            let mut chosen = AdmissionDecision::Reject;
+            if rate as f64 <= remaining {
+                chosen = AdmissionDecision::Admit;
+            } else {
+                for stride in 2..=self.max_stride.max(1) {
+                    let kept = AdmissionDecision::Degrade { stride }.kept_of(rate);
+                    if kept as f64 <= remaining {
+                        chosen = AdmissionDecision::Degrade { stride };
+                        break;
+                    }
+                }
+            }
+            remaining -= chosen.kept_of(rate) as f64;
+            plan[i] = chosen;
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(rates: &[usize]) -> StreamRegistry {
+        let mut r = StreamRegistry::new();
+        for (i, &rate) in rates.iter().enumerate() {
+            r.register(StreamSpec::camera(i, rate)).unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn register_validates() {
+        let mut r = StreamRegistry::new();
+        r.register(StreamSpec::camera(0, 10)).unwrap();
+        assert!(r.register(StreamSpec::camera(0, 10)).is_err(), "dup name");
+        let mut bad = StreamSpec::camera(1, 10);
+        bad.rate = 0;
+        assert!(r.register(bad).is_err());
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.offered_per_round(), 10);
+    }
+
+    #[test]
+    fn plenty_of_capacity_admits_all() {
+        let r = reg(&[10, 10, 10]);
+        let plan = r.admission_plan(1e9);
+        assert!(plan.iter().all(|d| *d == AdmissionDecision::Admit));
+    }
+
+    #[test]
+    fn overload_degrades_then_rejects_lowest_priority_first() {
+        // camera(0) has priority 2, camera(1) 1, camera(2) 0
+        let r = reg(&[10, 10, 10]);
+        let plan = r.admission_plan(16.0);
+        assert_eq!(plan[0], AdmissionDecision::Admit, "highest prio rides");
+        assert!(
+            matches!(plan[1], AdmissionDecision::Degrade { .. }),
+            "{:?}",
+            plan[1]
+        );
+        // decision order follows priority: the lowest-priority stream gets
+        // whatever is left (deep degrade or rejection)
+        let kept: usize = plan
+            .iter()
+            .zip(&r.streams)
+            .map(|(d, s)| d.kept_of(s.rate))
+            .sum();
+        assert!(kept as f64 <= 16.0, "plan overcommits: {kept}");
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything() {
+        let r = reg(&[5, 5]);
+        let plan = r.admission_plan(0.0);
+        assert!(plan.iter().all(|d| *d == AdmissionDecision::Reject));
+    }
+
+    #[test]
+    fn degrade_keeps_keyframes() {
+        use crate::frames::SceneGenerator;
+        let frames = SceneGenerator::paper_default(1).batch(10);
+        let ids: Vec<u64> = frames.iter().map(|f| f.id).collect();
+        let d = AdmissionDecision::Degrade { stride: 3 };
+        assert_eq!(d.kept_of(10), 4);
+        let (kept, dropped) = d.apply(frames);
+        assert_eq!(kept.len(), 4);
+        assert_eq!(dropped, 6);
+        // keyframes are the 0th, 3rd, 6th, 9th of the original batch
+        let kept_ids: Vec<u64> = kept.iter().map(|f| f.id).collect();
+        assert_eq!(kept_ids, vec![ids[0], ids[3], ids[6], ids[9]]);
+    }
+}

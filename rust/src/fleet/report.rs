@@ -1,0 +1,255 @@
+//! Fleet run accounting: per-stream latency percentiles, admission
+//! drops, per-node utilization — rendered as paper-style tables and
+//! exportable into a [`crate::metrics::Registry`].
+
+use crate::metrics::{f, Histogram, Registry, Table};
+
+/// One stream's round-trip accounting for the run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub name: String,
+    pub workload: &'static str,
+    /// Frames the camera produced.
+    pub offered: u64,
+    /// Frames past admission (full or degraded service).
+    pub admitted: u64,
+    /// Frames dropped by drop-to-keyframe degradation.
+    pub degraded: u64,
+    /// Frames rejected outright under overload.
+    pub rejected: u64,
+    /// Frames eliminated by the similarity filter.
+    pub deduped: u64,
+    /// Frames that finished execution somewhere in the fleet.
+    pub completed: u64,
+    /// Arrival→completion latency per completed frame (s).
+    pub latency: Histogram,
+}
+
+impl StreamReport {
+    pub fn new(name: String, workload: &'static str) -> Self {
+        StreamReport {
+            name,
+            workload,
+            offered: 0,
+            admitted: 0,
+            degraded: 0,
+            rejected: 0,
+            deduped: 0,
+            completed: 0,
+            latency: Histogram::new(),
+        }
+    }
+}
+
+/// One node's share of the run.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub name: String,
+    pub kind: &'static str,
+    pub frames: u64,
+    pub exec_secs: f64,
+    /// exec_secs / makespan — how busy this node was over the mission.
+    pub utilization: f64,
+    /// Frames its bounded inbox turned away (backpressure).
+    pub inbox_rejections: u64,
+    /// Deepest inbox fill observed.
+    pub inbox_high_watermark: usize,
+}
+
+/// Everything a fleet run measures.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub streams: Vec<StreamReport>,
+    pub nodes: Vec<NodeReport>,
+    /// Mission makespan: the latest node clock at the end of the run (s).
+    pub makespan_secs: f64,
+    /// All completed frames' latencies pooled across streams.
+    pub latency: Histogram,
+    pub rounds: usize,
+    pub offload_bytes: u64,
+    /// Frames re-routed to the primary because an aux inbox was full.
+    pub backpressure_events: u64,
+    /// Frames physically round-tripped through the MQTT broker (0 when
+    /// the run used the simulated transport).
+    pub mqtt_delivered: u64,
+}
+
+impl FleetReport {
+    /// Headline number the paper optimizes: total operation time.
+    pub fn total_ops_secs(&self) -> f64 {
+        self.makespan_secs
+    }
+
+    pub fn total_offered(&self) -> u64 {
+        self.streams.iter().map(|s| s.offered).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.streams.iter().map(|s| s.completed).sum()
+    }
+
+    pub fn total_rejected(&self) -> u64 {
+        self.streams.iter().map(|s| s.rejected).sum()
+    }
+
+    pub fn total_degraded(&self) -> u64 {
+        self.streams.iter().map(|s| s.degraded).sum()
+    }
+
+    /// Fleet-wide p99 arrival→completion latency (s).
+    pub fn p99_latency_s(&self) -> f64 {
+        self.latency.p(99.0)
+    }
+
+    /// Export counters/gauges/histograms into a metrics registry.
+    pub fn to_registry(&self, reg: &mut Registry) {
+        reg.inc("fleet.frames.offered", self.total_offered());
+        reg.inc("fleet.frames.completed", self.total_completed());
+        reg.inc("fleet.frames.rejected", self.total_rejected());
+        reg.inc("fleet.frames.degraded", self.total_degraded());
+        reg.inc("fleet.backpressure.events", self.backpressure_events);
+        reg.inc("fleet.offload.bytes", self.offload_bytes);
+        reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
+        reg.set("fleet.makespan_secs", self.makespan_secs);
+        reg.set("fleet.latency.p99_s", self.p99_latency_s());
+        for s in &self.streams {
+            reg.set(&format!("fleet.stream.{}.p99_s", s.name), s.latency.p(99.0));
+            reg.inc(&format!("fleet.stream.{}.rejected", s.name), s.rejected);
+        }
+        for n in &self.nodes {
+            reg.set(&format!("fleet.node.{}.utilization", n.name), n.utilization);
+            reg.inc(
+                &format!("fleet.node.{}.inbox_rejections", n.name),
+                n.inbox_rejections,
+            );
+        }
+    }
+
+    /// Paper-style ASCII rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet: {} nodes x {} streams, {} rounds | makespan {:.2} s | \
+             offered {} completed {} rejected {} degraded {} | \
+             backpressure {} | offload {} | p99 {:.3} s\n",
+            self.nodes.len(),
+            self.streams.len(),
+            self.rounds,
+            self.makespan_secs,
+            self.total_offered(),
+            self.total_completed(),
+            self.total_rejected(),
+            self.total_degraded(),
+            self.backpressure_events,
+            crate::util::fmt_bytes(self.offload_bytes),
+            self.p99_latency_s(),
+        ));
+        if self.mqtt_delivered > 0 {
+            out.push_str(&format!(
+                "mqtt: {} frames routed through the broker\n",
+                self.mqtt_delivered
+            ));
+        }
+
+        let mut st = Table::new(&[
+            "stream", "workload", "offered", "admitted", "deduped", "degraded", "rejected",
+            "completed", "p50 (s)", "p99 (s)",
+        ]);
+        for s in &self.streams {
+            st.row(vec![
+                s.name.clone(),
+                s.workload.to_string(),
+                s.offered.to_string(),
+                s.admitted.to_string(),
+                s.deduped.to_string(),
+                s.degraded.to_string(),
+                s.rejected.to_string(),
+                s.completed.to_string(),
+                f(s.latency.p(50.0), 3),
+                f(s.latency.p(99.0), 3),
+            ]);
+        }
+        out.push_str(&st.render());
+
+        let mut nt = Table::new(&[
+            "node", "kind", "frames", "exec (s)", "util", "inbox rej", "inbox hwm",
+        ]);
+        for n in &self.nodes {
+            nt.row(vec![
+                n.name.clone(),
+                n.kind.to_string(),
+                n.frames.to_string(),
+                f(n.exec_secs, 2),
+                f(n.utilization, 3),
+                n.inbox_rejections.to_string(),
+                n.inbox_high_watermark.to_string(),
+            ]);
+        }
+        out.push_str(&nt.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FleetReport {
+        let mut s = StreamReport::new("cam-0".into(), "calib");
+        s.offered = 100;
+        s.admitted = 80;
+        s.degraded = 10;
+        s.rejected = 10;
+        s.completed = 78;
+        s.deduped = 2;
+        let mut latency = Histogram::new();
+        for i in 1..=78 {
+            let v = i as f64 * 0.01;
+            s.latency.record(v);
+            latency.record(v);
+        }
+        FleetReport {
+            streams: vec![s],
+            nodes: vec![NodeReport {
+                name: "node-0".into(),
+                kind: "nano",
+                frames: 78,
+                exec_secs: 30.0,
+                utilization: 0.75,
+                inbox_rejections: 3,
+                inbox_high_watermark: 12,
+            }],
+            makespan_secs: 40.0,
+            latency,
+            rounds: 5,
+            offload_bytes: 1 << 20,
+            backpressure_events: 3,
+            mqtt_delivered: 0,
+        }
+    }
+
+    #[test]
+    fn totals_and_render() {
+        let r = sample();
+        assert_eq!(r.total_offered(), 100);
+        assert_eq!(r.total_completed(), 78);
+        assert_eq!(r.total_rejected(), 10);
+        assert!(r.p99_latency_s() > 0.7);
+        let text = r.render();
+        assert!(text.contains("cam-0"), "{text}");
+        assert!(text.contains("node-0"), "{text}");
+        assert!(text.contains("makespan 40.00 s"), "{text}");
+    }
+
+    #[test]
+    fn registry_export() {
+        let r = sample();
+        let mut reg = Registry::new();
+        r.to_registry(&mut reg);
+        assert_eq!(reg.counter("fleet.frames.offered"), 100);
+        assert_eq!(reg.counter("fleet.frames.rejected"), 10);
+        assert_eq!(reg.gauge("fleet.makespan_secs"), Some(40.0));
+        assert!(reg.gauge("fleet.stream.cam-0.p99_s").unwrap() > 0.0);
+        assert!(reg.render().contains("fleet.node.node-0.utilization"));
+    }
+}

@@ -4,6 +4,9 @@
 //! heteroedge solve   [--workload <name>] [--masked] [--beta <s>]
 //! heteroedge static  [--ratio <r>] [--frames <n>] [--masked] [--band <b>]
 //! heteroedge dynamic [--ratio <r>] [--frames <n>] [--beta <s>]
+//! heteroedge fleet   --nodes <N> --streams <M> [--rounds <k>] [--rate <f>]
+//!                    [--inbox <cap>] [--masked] [--dedup] [--no-mqtt]
+//!                    [--no-baseline] [--seed <s>] [--band <b>]
 //! heteroedge table   --id <table1|fig3|fig4|fig5|table3|fig6|table4|fig7|battery> [--full]
 //! ```
 
@@ -12,6 +15,7 @@ use anyhow::{bail, Result};
 use heteroedge::cli::Args;
 use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
 use heteroedge::experiments::{self, Scale};
+use heteroedge::fleet::{Dispatcher, FleetConfig, Transport};
 use heteroedge::net::Band;
 use heteroedge::solver::HeteroEdgeSolver;
 use heteroedge::workload::Workload;
@@ -92,6 +96,51 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let n_nodes = args.opt_or("nodes", 4usize)?;
+    let n_streams = args.opt_or("streams", 8usize)?;
+    let mut cfg = FleetConfig::new(n_nodes, n_streams);
+    cfg.band = band_of(args)?;
+    cfg.rounds = args.opt_or("rounds", 6usize)?;
+    cfg.frames_per_round = args.opt_or("rate", 10usize)?;
+    cfg.inbox_capacity = args.opt_or("inbox", 64usize)?;
+    cfg.seed = args.opt_or("seed", 42u64)?;
+    cfg.masked = args.flag("masked");
+    cfg.dedup = args.flag("dedup");
+    cfg.transport = if args.flag("no-mqtt") {
+        Transport::Sim
+    } else {
+        Transport::Mqtt
+    };
+
+    println!(
+        "fleet: {} nodes (1 primary + {} auxiliaries), {} streams, transport {:?}",
+        cfg.n_nodes,
+        cfg.n_nodes.saturating_sub(1),
+        cfg.n_streams,
+        cfg.transport
+    );
+    let report = Dispatcher::new(cfg.clone())?.run()?;
+    println!("{}", report.render());
+
+    if !args.flag("no-baseline") {
+        // apples-to-apples split-ratio advantage: identical stream set,
+        // admission off, fleet vs everything-on-the-primary
+        let mut full = cfg.clone();
+        full.admission_control = false;
+        full.transport = Transport::Sim;
+        let fleet_ops = Dispatcher::new(full.clone())?.run()?.total_ops_secs();
+        let base_ops = Dispatcher::new(full.all_primary())?.run()?.total_ops_secs();
+        println!(
+            "baseline (same stream set, no shedding): fleet {:.2} s vs all-primary {:.2} s ({:+.1}%)",
+            fleet_ops,
+            base_ops,
+            (fleet_ops / base_ops - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}
+
 fn cmd_table(args: &Args) -> Result<()> {
     let scale = if args.flag("full") {
         Scale::Full
@@ -154,7 +203,7 @@ fn print_report(rep: &heteroedge::coordinator::RunReport) {
 
 fn usage() {
     eprintln!(
-        "heteroedge <solve|static|dynamic|table> [options]\n\
+        "heteroedge <solve|static|dynamic|fleet|table> [options]\n\
          see rust/src/main.rs header for the full option list"
     );
 }
@@ -165,6 +214,7 @@ fn main() -> Result<()> {
         Some("solve") => cmd_solve(&args),
         Some("static") => cmd_static(&args),
         Some("dynamic") => cmd_dynamic(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("table") => cmd_table(&args),
         _ => {
             usage();

@@ -1,10 +1,21 @@
-//! The broker: TCP listener, one thread per connection, shared
-//! subscription registry, retained messages.
+//! The broker: TCP listener, one reader thread per connection, shared
+//! subscription registry, retained messages — and a bounded per-connection
+//! dispatch queue so one slow subscriber cannot head-of-line-block the
+//! publisher's connection thread.
+//!
+//! Every connection gets exactly one writer thread that owns the socket's
+//! write half; all packets (control acks and routed PUBLISHes) funnel
+//! through its queue, so writes never interleave mid-packet. Routing uses
+//! `try_send`: a full queue drops the message on the QoS-0
+//! broker→subscriber leg and counts the shed in
+//! [`BrokerStats::backpressure_dropped`] (observable from tests/benches,
+//! like the other broker stats).
 
 use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -13,11 +24,19 @@ use anyhow::{Context, Result};
 use super::packet::{Packet, QoS};
 use super::topic::{filter_valid, topic_matches};
 
-/// Registered subscriber: its filter and a handle to its socket.
+/// Depth of each connection's dispatch queue (packets). Beyond this the
+/// broker sheds load instead of blocking the publishing connection.
+pub const DISPATCH_QUEUE_DEPTH: usize = 1024;
+
+/// Registered subscriber: its filter and the owning connection's
+/// dispatch-queue handle.
 struct Subscriber {
     client_id: String,
     filter: String,
-    stream: TcpStream,
+    queue: SyncSender<Vec<u8>>,
+    /// Cleared by the writer thread when the socket dies; routing prunes
+    /// dead entries lazily.
+    alive: Arc<AtomicBool>,
 }
 
 #[derive(Default)]
@@ -34,6 +53,8 @@ pub struct BrokerStats {
     pub published: AtomicU64,
     pub delivered: AtomicU64,
     pub bytes_routed: AtomicU64,
+    /// Messages shed because a subscriber's dispatch queue was full.
+    pub backpressure_dropped: AtomicU64,
 }
 
 /// An MQTT-like broker bound to a local TCP port.
@@ -96,105 +117,169 @@ impl Broker {
         stats: Arc<BrokerStats>,
     ) -> Result<()> {
         let mut reader = BufReader::new(stream.try_clone()?);
-        let mut writer = stream.try_clone()?;
 
-        // Handshake.
-        let client_id = match Packet::read_from(&mut reader)? {
-            Packet::Connect { client_id } => client_id,
-            other => anyhow::bail!("expected CONNECT, got {other:?}"),
+        // Single-writer discipline: this queue + thread own all writes to
+        // the socket. Control packets from this connection's reader loop
+        // use a blocking `send`; PUBLISH routing from other connections
+        // uses `try_send` (see `route`).
+        let (tx, rx) = sync_channel::<Vec<u8>>(DISPATCH_QUEUE_DEPTH);
+        let alive = Arc::new(AtomicBool::new(true));
+        let writer_alive = alive.clone();
+        let mut writer = stream;
+        let writer_thread = std::thread::Builder::new()
+            .name("mqtt-broker-writer".into())
+            .spawn(move || {
+                use std::io::Write;
+                for bytes in rx.iter() {
+                    if writer
+                        .write_all(&bytes)
+                        .and_then(|_| writer.flush())
+                        .is_err()
+                    {
+                        writer_alive.store(false, Ordering::Relaxed);
+                        break;
+                    }
+                }
+                // keep draining so senders holding clones never block
+                for _ in rx.iter() {}
+            })?;
+        let send_ctl = |pkt: Packet| -> Result<()> {
+            tx.send(pkt.encode())
+                .map_err(|_| anyhow::anyhow!("connection writer gone"))
         };
-        Packet::ConnAck.write_to(&mut writer)?;
 
-        loop {
-            let pkt = match Packet::read_from(&mut reader) {
-                Ok(p) => p,
-                Err(_) => break, // peer went away
+        // The serving loop runs in a closure so that cleanup below
+        // (subscription removal + writer join) covers every exit path.
+        let mut client_id: Option<String> = None;
+        let result = (|| -> Result<()> {
+            let cid = match Packet::read_from(&mut reader)? {
+                Packet::Connect { client_id } => client_id,
+                other => anyhow::bail!("expected CONNECT, got {other:?}"),
             };
-            match pkt {
-                Packet::Subscribe { packet_id, filter } => {
-                    if !filter_valid(&filter) {
-                        anyhow::bail!("invalid filter {filter:?}");
-                    }
-                    let retained: Vec<(String, Vec<u8>, QoS)> = {
-                        let mut sh = shared.lock().unwrap();
-                        sh.subscribers.push(Subscriber {
-                            client_id: client_id.clone(),
-                            filter: filter.clone(),
-                            stream: stream.try_clone()?,
-                        });
-                        sh.retained
-                            .iter()
-                            .filter(|(t, _)| topic_matches(&filter, t))
-                            .map(|(t, (p, q))| (t.clone(), p.clone(), *q))
-                            .collect()
-                    };
-                    Packet::SubAck { packet_id }.write_to(&mut writer)?;
-                    // deliver retained messages to the new subscriber
-                    for (topic, payload, qos) in retained {
-                        let _ = Packet::Publish {
-                            topic,
-                            payload,
-                            qos,
-                            packet_id: 0,
-                            retain: true,
+            client_id = Some(cid.clone());
+            send_ctl(Packet::ConnAck)?;
+
+            loop {
+                let pkt = match Packet::read_from(&mut reader) {
+                    Ok(p) => p,
+                    Err(_) => return Ok(()), // peer went away
+                };
+                match pkt {
+                    Packet::Subscribe { packet_id, filter } => {
+                        if !filter_valid(&filter) {
+                            anyhow::bail!("invalid filter {filter:?}");
                         }
-                        .write_to(&mut writer);
+                        let retained: Vec<(String, Vec<u8>, QoS)> = {
+                            let mut sh = shared.lock().unwrap();
+                            sh.subscribers.push(Subscriber {
+                                client_id: cid.clone(),
+                                filter: filter.clone(),
+                                queue: tx.clone(),
+                                alive: alive.clone(),
+                            });
+                            sh.retained
+                                .iter()
+                                .filter(|(t, _)| topic_matches(&filter, t))
+                                .map(|(t, (p, q))| (t.clone(), p.clone(), *q))
+                                .collect()
+                        };
+                        send_ctl(Packet::SubAck { packet_id })?;
+                        // deliver retained messages to the new subscriber
+                        // (in queue order, after the SUBACK)
+                        for (topic, payload, qos) in retained {
+                            let _ = send_ctl(Packet::Publish {
+                                topic,
+                                payload,
+                                qos,
+                                packet_id: 0,
+                                retain: true,
+                            });
+                        }
                     }
-                }
-                Packet::Publish {
-                    topic,
-                    payload,
-                    qos,
-                    packet_id,
-                    retain,
-                } => {
-                    stats.published.fetch_add(1, Ordering::Relaxed);
-                    if qos == QoS::AtLeastOnce {
-                        Packet::PubAck { packet_id }.write_to(&mut writer)?;
-                    }
-                    let mut sh = shared.lock().unwrap();
-                    if retain {
-                        sh.retained.insert(topic.clone(), (payload.clone(), qos));
-                    }
-                    // route to matching subscribers; drop dead ones
-                    let pkt = Packet::Publish {
-                        topic: topic.clone(),
+                    Packet::Publish {
+                        topic,
                         payload,
-                        qos: QoS::AtMostOnce, // broker->subscriber leg is q0
-                        packet_id: 0,
-                        retain: false,
-                    };
-                    let bytes = pkt.encode();
-                    sh.subscribers.retain_mut(|sub| {
-                        if !topic_matches(&sub.filter, &topic) {
-                            return true;
+                        qos,
+                        packet_id,
+                        retain,
+                    } => {
+                        stats.published.fetch_add(1, Ordering::Relaxed);
+                        // ack before routing — and before taking the shared
+                        // lock, so a full own-queue can't stall the registry
+                        if qos == QoS::AtLeastOnce {
+                            send_ctl(Packet::PubAck { packet_id })?;
                         }
-                        use std::io::Write;
-                        match sub.stream.write_all(&bytes).and_then(|_| sub.stream.flush()) {
-                            Ok(()) => {
-                                stats.delivered.fetch_add(1, Ordering::Relaxed);
-                                stats
-                                    .bytes_routed
-                                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
-                                true
-                            }
-                            Err(_) => false, // unsubscribe dead peer
-                        }
-                    });
+                        Self::route(&shared, &stats, topic, payload, qos, retain);
+                    }
+                    Packet::PingReq => send_ctl(Packet::PingResp)?,
+                    Packet::Disconnect => return Ok(()),
+                    Packet::PubAck { .. } => {} // qos1 ack from a subscriber leg
+                    other => anyhow::bail!("unexpected packet {other:?}"),
                 }
-                Packet::PingReq => Packet::PingResp.write_to(&mut writer)?,
-                Packet::Disconnect => break,
-                Packet::PubAck { .. } => {} // qos1 ack from a subscriber leg
-                other => anyhow::bail!("unexpected packet {other:?}"),
             }
+        })();
+
+        // connection closed: remove this client's subscriptions (dropping
+        // their queue handles), then release ours so the writer exits
+        alive.store(false, Ordering::Relaxed);
+        if let Some(cid) = &client_id {
+            shared
+                .lock()
+                .unwrap()
+                .subscribers
+                .retain(|s| s.client_id != *cid);
         }
-        // connection closed: remove this client's subscriptions
-        shared
-            .lock()
-            .unwrap()
-            .subscribers
-            .retain(|s| s.client_id != client_id);
-        Ok(())
+        drop(send_ctl);
+        drop(tx);
+        let _ = writer_thread.join();
+        result
+    }
+
+    /// Route one published message: retain bookkeeping, then fan out to
+    /// matching subscribers via their bounded dispatch queues.
+    fn route(
+        shared: &Arc<Mutex<Shared>>,
+        stats: &Arc<BrokerStats>,
+        topic: String,
+        payload: Vec<u8>,
+        qos: QoS,
+        retain: bool,
+    ) {
+        let mut sh = shared.lock().unwrap();
+        if retain {
+            sh.retained.insert(topic.clone(), (payload.clone(), qos));
+        }
+        let pkt = Packet::Publish {
+            topic: topic.clone(),
+            payload,
+            qos: QoS::AtMostOnce, // broker->subscriber leg is q0
+            packet_id: 0,
+            retain: false,
+        };
+        let bytes = pkt.encode();
+        sh.subscribers.retain(|sub| {
+            if !sub.alive.load(Ordering::Relaxed) {
+                return false; // writer saw the socket die
+            }
+            if !topic_matches(&sub.filter, &topic) {
+                return true;
+            }
+            match sub.queue.try_send(bytes.clone()) {
+                Ok(()) => {
+                    stats.delivered.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .bytes_routed
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    true
+                }
+                // bounded queue full: shed on the q0 leg, keep subscriber
+                Err(TrySendError::Full(_)) => {
+                    stats.backpressure_dropped.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+                Err(TrySendError::Disconnected(_)) => false,
+            }
+        });
     }
 
     /// Current number of live subscriptions.

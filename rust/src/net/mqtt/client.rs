@@ -1,11 +1,12 @@
 //! Client: connect/subscribe/publish with a background reader thread and
-//! a polling receive queue (the node loops poll between work items).
+//! a condvar-backed receive queue — `recv_timeout` blocks on a wakeup
+//! from the reader thread instead of spin-polling.
 
 use std::collections::VecDeque;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -19,11 +20,62 @@ pub struct Message {
     pub payload: Vec<u8>,
 }
 
+/// The receive queue shared between the reader thread and the consumer.
+/// `closed` flips when the reader exits so blocked receivers wake up
+/// immediately instead of riding out their timeout.
+#[derive(Default)]
+struct InboxState {
+    queue: VecDeque<Message>,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct Inbox {
+    state: Mutex<InboxState>,
+    ready: Condvar,
+}
+
+impl Inbox {
+    fn push(&self, m: Message) {
+        let mut s = self.state.lock().unwrap();
+        s.queue.push_back(m);
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    fn try_pop(&self) -> Option<Message> {
+        self.state.lock().unwrap().queue.pop_front()
+    }
+
+    fn pop_timeout(&self, timeout: Duration) -> Option<Message> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = s.queue.pop_front() {
+                return Some(m);
+            }
+            if s.closed {
+                return None;
+            }
+            let remain = deadline.saturating_duration_since(Instant::now());
+            if remain.is_zero() {
+                return None;
+            }
+            let (guard, _timed_out) = self.ready.wait_timeout(s, remain).unwrap();
+            s = guard;
+        }
+    }
+}
+
 /// MQTT-like client handle.
 pub struct Client {
     id: String,
     writer: TcpStream,
-    inbox: Arc<Mutex<VecDeque<Message>>>,
+    inbox: Arc<Inbox>,
     acks: Receiver<Packet>,
     next_packet_id: u16,
 }
@@ -46,27 +98,31 @@ impl Client {
             other => bail!("expected CONNACK, got {other:?}"),
         }
 
-        // Reader thread: pushes PUBLISHes to the inbox, control acks to a
-        // channel the caller-thread ops wait on.
-        let inbox: Arc<Mutex<VecDeque<Message>>> = Arc::new(Mutex::new(VecDeque::new()));
+        // Reader thread: pushes PUBLISHes to the inbox (waking any blocked
+        // receiver), control acks to a channel the caller-thread ops wait
+        // on. Closing the inbox on exit unblocks receivers right away.
+        let inbox: Arc<Inbox> = Arc::new(Inbox::default());
         let (ack_tx, ack_rx): (Sender<Packet>, Receiver<Packet>) = mpsc::channel();
         let inbox_bg = inbox.clone();
         std::thread::Builder::new()
             .name(format!("mqtt-client-{client_id}"))
-            .spawn(move || loop {
-                match Packet::read_from(&mut reader) {
-                    Ok(Packet::Publish { topic, payload, .. }) => {
-                        inbox_bg.lock().unwrap().push_back(Message { topic, payload });
-                    }
-                    Ok(Packet::PingResp) | Ok(Packet::ConnAck) => {}
-                    Ok(p @ (Packet::PubAck { .. } | Packet::SubAck { .. })) => {
-                        if ack_tx.send(p).is_err() {
-                            break;
+            .spawn(move || {
+                loop {
+                    match Packet::read_from(&mut reader) {
+                        Ok(Packet::Publish { topic, payload, .. }) => {
+                            inbox_bg.push(Message { topic, payload });
                         }
+                        Ok(Packet::PingResp) | Ok(Packet::ConnAck) => {}
+                        Ok(p @ (Packet::PubAck { .. } | Packet::SubAck { .. })) => {
+                            if ack_tx.send(p).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(Packet::Disconnect) | Err(_) => break,
+                        Ok(_) => {}
                     }
-                    Ok(Packet::Disconnect) | Err(_) => break,
-                    Ok(_) => {}
                 }
+                inbox_bg.close();
             })?;
 
         Ok(Client {
@@ -136,21 +192,14 @@ impl Client {
 
     /// Non-blocking poll of the receive queue.
     pub fn try_recv(&self) -> Option<Message> {
-        self.inbox.lock().unwrap().pop_front()
+        self.inbox.try_pop()
     }
 
-    /// Blocking receive with timeout.
+    /// Blocking receive with timeout. Parks on a condvar until the reader
+    /// thread delivers a message, the connection dies, or the deadline
+    /// passes — no busy-wait.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Message> {
-        let deadline = Instant::now() + timeout;
-        loop {
-            if let Some(m) = self.try_recv() {
-                return Some(m);
-            }
-            if Instant::now() >= deadline {
-                return None;
-            }
-            std::thread::sleep(Duration::from_micros(200));
-        }
+        self.inbox.pop_timeout(timeout)
     }
 
     /// Round-trip liveness probe; returns the measured RTT.

@@ -102,20 +102,35 @@ pub fn encode_varint(mut n: usize, out: &mut Vec<u8>) {
     }
 }
 
+/// Largest remaining-length value the 4-byte MQTT varint can carry
+/// (`0xFF 0xFF 0xFF 0x7F`).
+pub const MAX_REMAINING_LENGTH: usize = 268_435_455;
+
 /// Decode a varint from a reader (1–4 bytes per the MQTT spec).
+///
+/// Returns an error — never panics — on a truncated stream, on a fourth
+/// byte that still has its continuation bit set (a 5-byte encoding is
+/// malformed per MQTT-3.1.1 §2.2.3), and on values past
+/// [`MAX_REMAINING_LENGTH`].
 pub fn decode_varint(r: &mut impl Read) -> Result<usize> {
     let mut mult: usize = 1;
     let mut value: usize = 0;
-    for _ in 0..4 {
+    for i in 0..4 {
         let mut b = [0u8; 1];
-        r.read_exact(&mut b).context("reading varint")?;
+        r.read_exact(&mut b).context("truncated remaining length")?;
         value += (b[0] & 0x7F) as usize * mult;
         if b[0] & 0x80 == 0 {
+            if value > MAX_REMAINING_LENGTH {
+                bail!("remaining length {value} exceeds MQTT maximum");
+            }
             return Ok(value);
+        }
+        if i == 3 {
+            bail!("malformed remaining length: continuation bit in 4th byte");
         }
         mult *= 128;
     }
-    bail!("varint too long")
+    unreachable!("loop always returns or bails by the 4th byte")
 }
 
 impl Packet {
@@ -267,12 +282,76 @@ mod tests {
 
     #[test]
     fn varint_boundaries() {
-        for n in [0usize, 1, 127, 128, 16383, 16384, 2097151, 2097152] {
+        for n in [
+            0usize,
+            1,
+            127,
+            128,
+            16383,
+            16384,
+            2097151,
+            2097152,
+            MAX_REMAINING_LENGTH,
+        ] {
             let mut buf = Vec::new();
             encode_varint(n, &mut buf);
             let got = decode_varint(&mut Cursor::new(buf)).unwrap();
             assert_eq!(got, n);
         }
+    }
+
+    #[test]
+    fn varint_rejects_truncated_streams() {
+        // continuation bit promises more bytes that never arrive
+        for bytes in [&[0x80u8][..], &[0xFF, 0xFF], &[0x80, 0x80, 0x80], &[]] {
+            assert!(
+                decode_varint(&mut Cursor::new(bytes.to_vec())).is_err(),
+                "{bytes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn varint_rejects_over_four_bytes() {
+        // a 5-byte encoding is malformed even when more bytes are
+        // available to read
+        for bytes in [
+            &[0xFFu8, 0xFF, 0xFF, 0xFF, 0x7F][..],
+            &[0x80, 0x80, 0x80, 0x80, 0x01],
+            &[0xFF, 0xFF, 0xFF, 0x80, 0x00],
+        ] {
+            assert!(
+                decode_varint(&mut Cursor::new(bytes.to_vec())).is_err(),
+                "{bytes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn varint_four_byte_max_roundtrips() {
+        // exactly 0xFF 0xFF 0xFF 0x7F == MAX_REMAINING_LENGTH
+        let bytes = [0xFFu8, 0xFF, 0xFF, 0x7F];
+        assert_eq!(
+            decode_varint(&mut Cursor::new(bytes.to_vec())).unwrap(),
+            MAX_REMAINING_LENGTH
+        );
+        // a terminated varint stops consuming: trailing bytes stay
+        let mut cur = Cursor::new(vec![0x05u8, 0xAB, 0xCD]);
+        assert_eq!(decode_varint(&mut cur).unwrap(), 5);
+        assert_eq!(cur.position(), 1);
+    }
+
+    #[test]
+    fn malformed_bodies_error_not_panic() {
+        // a PUBLISH whose topic-length field points past the body
+        let mut bytes = vec![(T_PUBLISH << 4), 4, 0xFF, 0xFF, b'a', b'b'];
+        assert!(Packet::read_from(&mut Cursor::new(bytes.clone())).is_err());
+        // a SUBSCRIBE with a body too short for its packet id
+        bytes = vec![(T_SUBSCRIBE << 4), 1, 0x07];
+        assert!(Packet::read_from(&mut Cursor::new(bytes)).is_err());
+        // a header that claims more body than the stream holds
+        let bytes = vec![(T_PUBACK << 4), 2, 0x00];
+        assert!(Packet::read_from(&mut Cursor::new(bytes)).is_err());
     }
 
     #[test]

@@ -72,6 +72,18 @@ impl<T> EventQueue<T> {
         self.heap.pop()
     }
 
+    /// Pop the earliest event only if it is due at or before `t`.
+    ///
+    /// The N-node fleet loop advances a global mission clock round by
+    /// round; this is the primitive that releases exactly the stream
+    /// arrivals whose time has come, in deterministic order.
+    pub fn pop_due(&mut self, t: f64) -> Option<Event<T>> {
+        match self.peek_time() {
+            Some(at) if at <= t => self.heap.pop(),
+            _ => None,
+        }
+    }
+
     /// Time of the next event without popping.
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.at)
@@ -108,6 +120,22 @@ mod tests {
         q.schedule(1.0, 3);
         let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
         assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pop_due_releases_only_ripe_events() {
+        let mut q = EventQueue::new();
+        q.schedule(0.5, "a");
+        q.schedule(1.0, "b");
+        q.schedule(1.0, "c");
+        q.schedule(2.5, "d");
+        assert!(q.pop_due(0.25).is_none());
+        let due: Vec<&str> =
+            std::iter::from_fn(|| q.pop_due(1.0).map(|e| e.payload)).collect();
+        assert_eq!(due, vec!["a", "b", "c"]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_due(3.0).unwrap().payload, "d");
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -28,7 +28,9 @@ pub struct Workload {
 }
 
 /// Table IV's five application pairs plus the Table I calibration pair.
-pub const WORKLOADS: [Workload; 6] = [
+/// (`static`, not `const`: callers hand out `&'static Workload` borrows,
+/// which a `const` item cannot provide.)
+pub static WORKLOADS: [Workload; 6] = [
     Workload {
         name: "segmentation+pose (Table I)",
         models: ["segnet", "posenet"],

@@ -1,0 +1,165 @@
+//! Integration: the fleet ingest subsystem — N nodes × M streams through
+//! overload, backpressure, and the MQTT work-queue fabric.
+
+use heteroedge::fleet::{
+    AdmissionDecision, Dispatcher, FleetConfig, StreamRegistry, StreamSpec, Transport,
+};
+
+/// ≥3 nodes × ≥4 streams driven well past capacity: admission must shed,
+/// nothing may be lost, and the run must complete (the zero-deadlock
+/// proof for the single-threaded dispatch path).
+#[test]
+fn overloaded_fleet_sheds_but_conserves() {
+    let mut cfg = FleetConfig::new(3, 4);
+    cfg.rounds = 4;
+    cfg.frames_per_round = 50; // »  the 3-node round budget
+    let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+
+    assert!(rep.total_rejected() > 0, "overload must reject streams");
+    assert!(
+        rep.total_rejected() + rep.total_degraded() > rep.total_completed() / 4,
+        "shedding should be substantial under 3x overload"
+    );
+    for s in &rep.streams {
+        assert_eq!(
+            s.offered,
+            s.admitted + s.degraded + s.rejected,
+            "conservation for {}",
+            s.name
+        );
+        assert_eq!(
+            s.completed,
+            s.admitted - s.deduped,
+            "every admitted frame completes for {}",
+            s.name
+        );
+    }
+    assert!(rep.makespan_secs > 0.0);
+    assert_eq!(rep.nodes.len(), 3);
+}
+
+/// Adding auxiliaries to the same stream set must not worsen tail
+/// latency: p99 is monotone non-increasing in the auxiliary count.
+#[test]
+fn p99_latency_monotone_in_auxiliaries() {
+    // moderate load that even the smallest fleet fully admits, so the
+    // configurations process identical frame sets
+    let run = |n_nodes: usize| {
+        let mut cfg = FleetConfig::new(n_nodes, 4);
+        cfg.rounds = 3;
+        cfg.frames_per_round = 4;
+        cfg.admission_control = false;
+        Dispatcher::new(cfg).unwrap().run().unwrap()
+    };
+    let reps: Vec<_> = (2..=4).map(run).collect();
+    for rep in &reps {
+        assert_eq!(rep.total_completed(), rep.total_offered());
+        assert_eq!(rep.total_rejected(), 0);
+    }
+    let p99: Vec<f64> = reps.iter().map(|r| r.p99_latency_s()).collect();
+    for w in p99.windows(2) {
+        assert!(
+            w[1] <= w[0] * 1.02,
+            "p99 must not regress with more auxiliaries: {p99:?}"
+        );
+    }
+    assert!(
+        p99[2] < p99[0],
+        "3 auxiliaries must strictly beat 1: {p99:?}"
+    );
+    // makespan tells the same story
+    let ops: Vec<f64> = reps.iter().map(|r| r.total_ops_secs()).collect();
+    assert!(ops[2] <= ops[0] * 1.02, "{ops:?}");
+}
+
+/// The split-ratio advantage at fleet scale: 1 primary + 3 auxiliaries
+/// beats the all-primary baseline on the same stream set.
+#[test]
+fn fleet_beats_all_primary_baseline() {
+    let mut cfg = FleetConfig::new(4, 8);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 6;
+    cfg.admission_control = false;
+    let fleet = Dispatcher::new(cfg.clone()).unwrap().run().unwrap();
+    let baseline = Dispatcher::new(cfg.all_primary()).unwrap().run().unwrap();
+
+    assert_eq!(fleet.total_completed(), baseline.total_completed());
+    assert!(
+        fleet.total_ops_secs() < 0.65 * baseline.total_ops_secs(),
+        "fleet {:.2} s vs all-primary {:.2} s",
+        fleet.total_ops_secs(),
+        baseline.total_ops_secs()
+    );
+    assert!(fleet.p99_latency_s() < baseline.p99_latency_s());
+}
+
+/// Tiny inboxes under load: backpressure re-routes to the primary and
+/// the λ guard sheds congested auxiliaries, with zero frame loss.
+#[test]
+fn backpressure_feeds_availability_guard() {
+    let mut cfg = FleetConfig::new(3, 4);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 20;
+    cfg.inbox_capacity = 4;
+    cfg.admission_control = false;
+    let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+    assert!(rep.backpressure_events > 0, "inboxes never filled");
+    assert_eq!(rep.total_completed(), rep.total_offered(), "no loss");
+    let aux_rejections: u64 = rep.nodes[1..].iter().map(|n| n.inbox_rejections).sum();
+    assert_eq!(aux_rejections, rep.backpressure_events);
+    for n in &rep.nodes[1..] {
+        assert!(n.inbox_high_watermark <= 4);
+    }
+}
+
+/// Frames physically traverse the in-tree MQTT broker when the fabric is
+/// on, and the run still completes cleanly (threads join, no deadlock).
+#[test]
+fn mqtt_work_queue_delivers_every_offloaded_frame() {
+    let mut cfg = FleetConfig::new(3, 4);
+    cfg.rounds = 2;
+    cfg.frames_per_round = 4;
+    cfg.admission_control = false;
+    cfg.transport = Transport::Mqtt;
+    let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+    assert!(rep.mqtt_delivered > 0, "no frames crossed the broker");
+    let aux_frames: u64 = rep.nodes[1..].iter().map(|n| n.frames).sum();
+    assert_eq!(
+        rep.mqtt_delivered, aux_frames,
+        "every aux-executed frame rode the broker"
+    );
+    assert_eq!(rep.total_completed(), rep.total_offered());
+}
+
+/// Custom stream registries work end-to-end: mixed priorities and rates,
+/// highest priority served first under pressure.
+#[test]
+fn explicit_registry_respects_priorities_under_pressure() {
+    let mut reg = StreamRegistry::new();
+    let mut vip = StreamSpec::camera(0, 12);
+    vip.priority = 9;
+    reg.register(vip).unwrap();
+    let mut bulk = StreamSpec::camera(1, 60);
+    bulk.priority = 0;
+    reg.register(bulk).unwrap();
+
+    let mut cfg = FleetConfig::new(2, 0);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 0; // ignored: explicit registry
+    let rep = Dispatcher::with_streams(cfg, reg).unwrap().run().unwrap();
+
+    let vip_rep = &rep.streams[0];
+    let bulk_rep = &rep.streams[1];
+    assert_eq!(vip_rep.rejected, 0, "vip stream must never be rejected");
+    assert!(
+        bulk_rep.rejected + bulk_rep.degraded > 0,
+        "bulk stream absorbs the overload"
+    );
+    // sanity on the admission API itself
+    let plan = StreamRegistry {
+        streams: vec![StreamSpec::camera(0, 10)],
+        max_stride: 4,
+    }
+    .admission_plan(3.0);
+    assert_eq!(plan, vec![AdmissionDecision::Degrade { stride: 4 }]);
+}
