@@ -1,12 +1,31 @@
-//! Fleet dispatcher benchmarks: admission planning, the odds-form share
-//! partition via a full dispatch round, and MQTT work-queue shipping.
+//! Fleet dispatcher benchmarks: admission planning, batched-vs-pipelined
+//! drain at high arrival rates, and MQTT work-queue shipping.
 //!
 //! Targets: a dispatch round's coordination overhead (admission + per-pair
 //! solves + partition) must stay far below the execution time it
-//! schedules.
+//! schedules, and the event-driven pipelined drain must cut mean
+//! per-frame queueing delay versus the legacy round-close batched drain
+//! when arrivals run hot.
 
 use heteroedge::bench::Bench;
-use heteroedge::fleet::{Dispatcher, FleetConfig, StreamRegistry, StreamSpec, Transport};
+use heteroedge::fleet::{
+    Dispatcher, DrainMode, FleetConfig, FleetReport, StreamRegistry, StreamSpec, Transport,
+};
+
+/// A hot fleet: 4 nodes, 8 streams, arrivals well above the per-round
+/// service rate so inboxes actually queue.
+fn hot_config(drain: DrainMode) -> FleetConfig {
+    let mut cfg = FleetConfig::new(4, 8);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 16;
+    cfg.admission_control = false;
+    cfg.drain = drain;
+    cfg
+}
+
+fn run(cfg: FleetConfig) -> FleetReport {
+    Dispatcher::new(cfg).unwrap().run().unwrap()
+}
 
 fn main() {
     let mut b = Bench::new("fleet_dispatch");
@@ -21,14 +40,35 @@ fn main() {
         assert_eq!(plan.len(), 64);
     });
 
-    // --- full simulated fleet round: 4 nodes x 8 streams ---
-    b.iter("dispatch run (4x8, 1 round, sim)", 20, || {
-        let mut cfg = FleetConfig::new(4, 8);
-        cfg.rounds = 1;
-        cfg.frames_per_round = 8;
-        let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+    // --- the drain disciplines head-to-head at high arrival rates ---
+    b.iter("dispatch run (4x8 hot, batched)", 10, || {
+        let rep = run(hot_config(DrainMode::Batched));
         assert!(rep.total_completed() > 0);
     });
+    b.iter("dispatch run (4x8 hot, pipelined)", 10, || {
+        let rep = run(hot_config(DrainMode::Pipelined));
+        assert!(rep.total_completed() > 0);
+    });
+
+    // the figure of merit: mean per-frame queueing delay (inbox wait)
+    let batched = run(hot_config(DrainMode::Batched));
+    let pipelined = run(hot_config(DrainMode::Pipelined));
+    assert!(
+        pipelined.mean_queue_delay_s() < batched.mean_queue_delay_s(),
+        "pipelined drain must cut queueing delay: {:.4}s vs batched {:.4}s",
+        pipelined.mean_queue_delay_s(),
+        batched.mean_queue_delay_s()
+    );
+    println!(
+        "queueing delay (hot 4x8): batched mean {:.3} s p99 {:.3} s | \
+         pipelined mean {:.3} s p99 {:.3} s | stolen {} fallbacks {}",
+        batched.mean_queue_delay_s(),
+        batched.queue_delay.p(99.0),
+        pipelined.mean_queue_delay_s(),
+        pipelined.queue_delay.p(99.0),
+        pipelined.stolen_frames,
+        pipelined.primary_fallbacks,
+    );
 
     // --- the same round with frames physically over the MQTT broker ---
     b.iter("dispatch run (3x4, 1 round, mqtt)", 5, || {

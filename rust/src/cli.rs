@@ -78,6 +78,25 @@ impl Args {
     {
         Ok(self.opt_parse(name)?.unwrap_or(default))
     }
+
+    /// A closed-vocabulary option (`--drain batched|pipelined`): returns
+    /// the matching entry of `allowed`, `default` when absent, and a
+    /// listing of the legal values on anything else.
+    pub fn opt_choice(
+        &self,
+        name: &str,
+        allowed: &[&'static str],
+        default: &'static str,
+    ) -> Result<&'static str> {
+        debug_assert!(allowed.contains(&default));
+        match self.opt(name) {
+            None => Ok(default),
+            Some(raw) => match allowed.iter().find(|a| **a == raw) {
+                Some(choice) => Ok(choice),
+                None => bail!("--{name} {raw:?}: expected one of {allowed:?}"),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +138,25 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn choice_options() {
+        let a = parse("fleet --drain batched");
+        assert_eq!(
+            a.opt_choice("drain", &["batched", "pipelined"], "pipelined")
+                .unwrap(),
+            "batched"
+        );
+        assert_eq!(
+            parse("fleet")
+                .opt_choice("drain", &["batched", "pipelined"], "pipelined")
+                .unwrap(),
+            "pipelined"
+        );
+        assert!(parse("fleet --drain turbo")
+            .opt_choice("drain", &["batched", "pipelined"], "pipelined")
+            .is_err());
     }
 
     #[test]

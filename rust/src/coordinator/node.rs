@@ -54,6 +54,19 @@ pub trait NodeHandle {
         masked: bool,
     ) -> Result<f64>;
 
+    /// Execute a single frame — the per-frame service seam the fleet's
+    /// event-driven drain pops through: one inbox job, one service
+    /// completion, clock advanced by exactly that frame's cost.
+    fn run_one(
+        &mut self,
+        workload: &Workload,
+        frame: &Frame,
+        split_ratio: f64,
+        masked: bool,
+    ) -> Result<f64> {
+        self.run(workload, std::slice::from_ref(frame), split_ratio, masked)
+    }
+
     /// Frames executed over this node's lifetime.
     fn frames_done(&self) -> u64;
 
@@ -403,6 +416,21 @@ mod tests {
         n.sync_to(1e6);
         assert_eq!(n.now(), 1e6);
         assert_eq!(n.backend_name(), "sim");
+    }
+
+    #[test]
+    fn run_one_matches_single_frame_run() {
+        let w = Workload::calibration();
+        let batch = frames(1);
+        let mut a: Box<dyn NodeHandle> =
+            Box::new(NodeRuntime::new(DeviceKind::Xavier, SimBackend::new(), 7));
+        let mut b: Box<dyn NodeHandle> =
+            Box::new(NodeRuntime::new(DeviceKind::Xavier, SimBackend::new(), 7));
+        let sa = a.run_one(w, &batch[0], 0.7, false).unwrap();
+        let sb = b.run(w, &batch, 0.7, false).unwrap();
+        assert_eq!(sa, sb, "per-frame seam charges the same cost");
+        assert_eq!(a.frames_done(), 1);
+        assert_eq!(a.now(), b.now());
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! Generalizes the two-node [`crate::coordinator::Testbed`] into a
 //! serving fleet. Node 0 is the ingest primary (Nano-class — every
 //! camera stream lands there); nodes 1.. are auxiliaries (Xavier-class).
-//! Per round, per stream, the dispatcher:
+//! The run is one continuous discrete-event simulation over the
+//! deterministic [`EventQueue`]: stream *arrival* events and per-frame
+//! aux *service* events interleave on a single timeline, so an auxiliary
+//! can be executing round-k frames while round-k+1 streams are still
+//! being admitted. Per arrival event the dispatcher:
 //!
 //! 1. admits the stream's batch through the [`StreamRegistry`]
 //!    (full rate / drop-to-keyframe / reject);
@@ -12,20 +16,26 @@
 //!    [`NodeHandle`] profiles) for each (primary, aux) split ratio —
 //!    an aux whose bounded inbox is filling reports inflated memory, so
 //!    the availability guard λ sheds it *before* it overflows;
-//! 3. combines the pairwise ratios in odds form
-//!    (`r/(1-r)` = the aux's effective service rate relative to the
+//! 3. combines the pairwise ratios in odds form ([`combine_odds`]:
+//!    `r/(1-r)` = the aux's effective service rate relative to the
 //!    primary) into one offload fraction and per-aux shares, then runs
 //!    the [`Batcher`] dedup→mask→encode→split pipeline;
-//! 4. pushes each aux's share through its bounded inbox — overflow
-//!    backpressures the frame onto the primary — and charges transfer
-//!    time on the pairwise channel (optionally also routing the encoded
-//!    bytes through the real in-tree MQTT broker);
-//! 5. executes: the primary immediately, auxiliaries as a batched
-//!    work-queue drain at round close, with per-frame
-//!    arrival→completion latencies recorded per stream.
+//! 4. pushes each aux's share through its bounded inbox, charging
+//!    transfer time on the pairwise channel (optionally also routing the
+//!    encoded bytes through the real in-tree MQTT broker). On overflow
+//!    the frame is *re-offered to sibling auxiliaries cheapest-first*
+//!    (ranked by the same odds-form service rate), paying that sibling's
+//!    channel transfer; only when every aux refuses does it land on the
+//!    primary;
+//! 5. executes: the primary runs its share (plus fallback frames)
+//!    immediately; each auxiliary pops its inbox as frames become ready
+//!    ([`DrainMode::Pipelined`], the default) — one service event per
+//!    frame, queueing delay recorded per node. The legacy
+//!    [`DrainMode::Batched`] round-close drain remains as the
+//!    comparator (`--drain batched`).
 //!
-//! Cross-stream arrival ordering inside a round runs through the
-//! deterministic [`EventQueue`].
+//! Service events carry across round boundaries (cross-round
+//! pipelining); the run only ends once every queued frame has executed.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -55,6 +65,27 @@ pub enum Transport {
     Mqtt,
 }
 
+/// How auxiliaries consume their inboxes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainMode {
+    /// Legacy comparator: inboxes drain as one batched work-queue at
+    /// round close (high queueing delay at high arrival rates).
+    Batched,
+    /// Continuous event-driven drain: one service event per frame, an
+    /// aux starts executing as soon as the frame's transfer completes
+    /// and carries work across round boundaries.
+    Pipelined,
+}
+
+impl DrainMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DrainMode::Batched => "batched",
+            DrainMode::Pipelined => "pipelined",
+        }
+    }
+}
+
 /// Fleet run configuration.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -81,6 +112,11 @@ pub struct FleetConfig {
     /// mode for baseline comparisons on an identical stream set).
     pub admission_control: bool,
     pub transport: Transport,
+    /// Auxiliary drain discipline.
+    pub drain: DrainMode,
+    /// Re-offer backpressured frames to sibling auxes before falling
+    /// back to the primary.
+    pub work_stealing: bool,
 }
 
 impl FleetConfig {
@@ -99,6 +135,8 @@ impl FleetConfig {
             jitter: false,
             admission_control: true,
             transport: Transport::Sim,
+            drain: DrainMode::Pipelined,
+            work_stealing: true,
         }
     }
 
@@ -114,11 +152,51 @@ impl FleetConfig {
     }
 }
 
+/// Ceiling on any single pairwise split ratio: keeps the odds `r/(1-r)`
+/// finite and stops one aux from monopolizing the batch. The single
+/// source of truth for both the odds combination and `last_r` shaping.
+pub const MAX_PAIR_RATIO: f64 = 0.98;
+
+/// Combine per-pair Algorithm-1 split ratios into one fleet-level
+/// offload decision, in odds form.
+///
+/// Each pairwise ratio `r` is this aux's share of a *two-node* split, so
+/// `r/(1-r)` is its effective service rate relative to the primary's
+/// rate of 1. Summing the odds over all auxiliaries and renormalizing
+/// gives the total offload fraction `Σo/(1+Σo)` and each aux's share of
+/// the whole batch `o_i/(1+Σo)`. Properties (see `tests/prop_fleet.rs`):
+/// the fraction lives in `[0, 1)`, the shares are non-negative and sum
+/// to it, and both are monotone in each pairwise ratio.
+pub fn combine_odds(ratios: &[f64]) -> (f64, Vec<f64>) {
+    let odds: Vec<f64> = ratios
+        .iter()
+        .map(|&r| {
+            let r = if r.is_finite() {
+                r.clamp(0.0, MAX_PAIR_RATIO)
+            } else {
+                0.0
+            };
+            if r > 0.0 {
+                r / (1.0 - r)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let sum: f64 = odds.iter().sum();
+    let shares = odds.iter().map(|o| o / (1.0 + sum)).collect();
+    (sum / (1.0 + sum), shares)
+}
+
 /// One queued work item on an auxiliary.
 struct Job {
     frame: Frame,
     stream: usize,
+    /// Stream arrival time (latency measurement baseline).
     arrived: f64,
+    /// When the frame's transfer to this aux completes (service can
+    /// start no earlier).
+    ready: f64,
 }
 
 /// One fleet node: shared-seam handle + bounded inbox + pairwise link
@@ -133,6 +211,34 @@ struct NodeSlot {
     scheduler: Scheduler,
     /// Last pairwise split ratio decided for this aux (surface shaping).
     last_r: f64,
+    /// Overflow frames of this node that a sibling absorbed.
+    stolen_out: u64,
+    /// Inbox wait per served frame (ready → service start).
+    queue_delay: Histogram,
+}
+
+/// The discrete events the fleet timeline interleaves.
+#[derive(Debug, Clone, Copy)]
+enum FleetEvent {
+    /// A stream's batch lands on the primary.
+    Arrival { stream: usize },
+    /// Auxiliary `aux` (tail index; node `aux + 1`) is free to serve its
+    /// next queued frame.
+    Service { aux: usize },
+}
+
+/// Mutable accounting for one `run()`.
+struct RunState {
+    stream_reports: Vec<StreamReport>,
+    pooled: Histogram,
+    queue_delay: Histogram,
+    events: EventQueue<FleetEvent>,
+    /// Per-aux (tail index): a Service event is queued or executing.
+    busy: Vec<bool>,
+    offload_bytes: u64,
+    backpressure_events: u64,
+    stolen_frames: u64,
+    primary_fallbacks: u64,
 }
 
 /// Physical MQTT work-queue fabric: one broker, a dispatcher publisher,
@@ -276,6 +382,8 @@ impl Dispatcher {
                 link: Channel::new(ch_cfg, distance_m, cfg.seed ^ (0x100 + j as u64)),
                 scheduler: Scheduler::new(SchedulerConfig::paper_default()),
                 last_r: 0.7,
+                stolen_out: 0,
+                queue_delay: Histogram::new(),
             });
         }
 
@@ -311,18 +419,40 @@ impl Dispatcher {
         })
     }
 
+    /// Override one auxiliary's inbox depth before the run — lets tests
+    /// and asymmetric deployments congest a single node.
+    pub fn set_inbox_capacity(&mut self, node: usize, capacity: usize) -> Result<()> {
+        ensure!(node >= 1, "node 0 (primary) has no inbox");
+        ensure!(node < self.nodes.len(), "node {node} out of range");
+        ensure!(capacity >= 1, "inbox capacity must be positive");
+        ensure!(
+            self.nodes[node].inbox.is_empty(),
+            "cannot resize a non-empty inbox"
+        );
+        self.nodes[node].inbox = BoundedInbox::new(capacity);
+        Ok(())
+    }
+
     /// Fleet frame capacity for the round ending at `round_end`:
     /// every node contributes its remaining wall-clock budget divided by
     /// its (estimated) per-image cost. Each node's budget is capped at
     /// one round period — a node whose clock idles (e.g. an aux the λ
     /// guard kept at r=0 for several rounds) must not accumulate
     /// phantom multi-round capacity it can never actually absorb.
+    /// Queued inbox work is committed but (under the pipelined drain)
+    /// not yet on the clock, so it is charged against the budget
+    /// explicitly — otherwise a backlogged aux would report a full
+    /// round of free capacity every round and admission would never
+    /// shed under sustained overload.
     fn capacity_frames(&self, round_end: f64, round_secs: f64) -> f64 {
         self.nodes
             .iter()
             .map(|slot| {
-                let avail = (round_end - slot.handle.now()).clamp(0.0, round_secs);
-                avail / slot.handle.secs_per_image_est().max(1e-6)
+                let per_img = slot.handle.secs_per_image_est().max(1e-6);
+                let backlog = slot.inbox.len() as f64 * per_img;
+                let avail =
+                    (round_end - slot.handle.now() - backlog).clamp(0.0, round_secs);
+                avail / per_img
             })
             .sum()
     }
@@ -330,16 +460,22 @@ impl Dispatcher {
     /// Drive the full run; consumes the configured rounds.
     pub fn run(&mut self) -> Result<FleetReport> {
         let cfg = self.cfg.clone();
-        let mut stream_reports: Vec<StreamReport> = self
-            .registry
-            .streams
-            .iter()
-            .map(|s| StreamReport::new(s.name.clone(), s.workload.name))
-            .collect();
-        let mut pooled = Histogram::new();
-        let mut offload_bytes = 0u64;
-        let mut backpressure_events = 0u64;
-        let mut arrivals: EventQueue<usize> = EventQueue::new();
+        let mut st = RunState {
+            stream_reports: self
+                .registry
+                .streams
+                .iter()
+                .map(|s| StreamReport::new(s.name.clone(), s.workload.name))
+                .collect(),
+            pooled: Histogram::new(),
+            queue_delay: Histogram::new(),
+            events: EventQueue::new(),
+            busy: vec![false; self.nodes.len().saturating_sub(1)],
+            offload_bytes: 0,
+            backpressure_events: 0,
+            stolen_frames: 0,
+            primary_fallbacks: 0,
+        };
 
         for round in 0..cfg.rounds {
             let round_start = round as f64 * cfg.round_secs;
@@ -352,154 +488,34 @@ impl Dispatcher {
                 vec![AdmissionDecision::Admit; self.registry.len()]
             };
 
-            // stagger stream arrivals across the round; the event queue
-            // fixes the cross-stream service order deterministically
+            // stagger stream arrivals across the round; the shared event
+            // queue interleaves them with aux service completions in
+            // deterministic order
             for (s, spec) in self.registry.streams.iter().enumerate() {
-                arrivals.schedule(round_start + spec.phase * cfg.round_secs, s);
+                st.events.schedule(
+                    round_start + spec.phase * cfg.round_secs,
+                    FleetEvent::Arrival { stream: s },
+                );
             }
 
-            while let Some(ev) = arrivals.pop_due(round_end) {
-                let s = ev.payload;
-                let t_arr = ev.at;
-                let spec = self.registry.streams[s].clone();
-                stream_reports[s].offered += spec.rate as u64;
-
-                let raw = self.gens[s].batch(spec.rate);
-                if admission[s] == AdmissionDecision::Reject {
-                    stream_reports[s].rejected += raw.len() as u64;
-                    continue;
-                }
-                let (kept, dropped) = admission[s].apply(raw);
-                stream_reports[s].degraded += dropped as u64;
-                stream_reports[s].admitted += kept.len() as u64;
-                if kept.is_empty() {
-                    continue;
-                }
-
-                let (head, tail) = self.nodes.split_at_mut(1);
-                let primary = &mut head[0];
-                primary.handle.sync_to(t_arr);
-                let pprof = primary.handle.profile();
-
-                // pairwise Algorithm-1 decisions; inbox pressure feeds λ
-                let mut odds: Vec<f64> = Vec::with_capacity(tail.len());
-                for aux in tail.iter_mut() {
-                    let mut aprof = aux.handle.profile();
-                    aprof.mem_pct = aux.inbox.pressure_mem_pct(aprof.mem_pct);
-                    let probe = aux.link.expected_latency_s(48 * 1024);
-                    let d = aux.scheduler.decide(
-                        &pprof,
-                        &aprof,
-                        spec.workload,
-                        spec.masked,
-                        probe,
-                        false,
-                    );
-                    let r = d.r.clamp(0.0, 0.98);
-                    if r > 0.0 {
-                        aux.last_r = r;
-                    }
-                    // odds form: r/(1-r) is this aux's service weight
-                    // relative to the primary's weight of 1
-                    odds.push(if r > 0.0 { r / (1.0 - r) } else { 0.0 });
-                }
-                let odds_sum: f64 = odds.iter().sum();
-                let offload_frac = odds_sum / (1.0 + odds_sum);
-
-                // dedup → mask → encode → split
-                let plan = self.batchers[s].plan(kept, offload_frac);
-                stream_reports[s].deduped += plan.deduped as u64;
-                primary.handle.advance(plan.masking_overhead_s);
-
-                let shares = partition_by_weight(plan.offload.len(), &odds);
-                let mut local = plan.local;
-                let mut cursor = 0usize;
-                for (k, aux) in tail.iter_mut().enumerate() {
-                    let share = shares[k];
-                    if share == 0 {
-                        continue;
-                    }
-                    let encs = &plan.offload[cursor..cursor + share];
-                    cursor += share;
-                    let mut t3 = 0.0;
-                    for enc in encs {
-                        let (id, pixels) = codec::decode_frame(&enc.bytes)?;
-                        let frame = Frame {
-                            id,
-                            pixels,
-                            truth_mask: vec![0.0; FRAME_PIXELS],
-                            classes: vec![],
-                        };
-                        // inbox admission BEFORE wire time: a full queue
-                        // hands the frame straight back to the primary
-                        match aux.inbox.push(Job {
-                            frame,
-                            stream: s,
-                            arrived: t_arr,
-                        }) {
-                            Ok(()) => {
-                                t3 += aux.link.send(enc.wire_bytes() as u64);
-                                offload_bytes += enc.wire_bytes() as u64;
-                                if let Some(fab) = self.fabric.as_mut() {
-                                    fab.ship(k + 1, &enc.bytes)?;
-                                }
-                            }
-                            Err(job) => {
-                                backpressure_events += 1;
-                                local.push(job.frame);
-                            }
-                        }
-                    }
-                    // the share's transfer completes before the aux can
-                    // see those frames
-                    aux.handle.sync_to(primary.handle.now() + t3);
-                }
-                debug_assert_eq!(cursor, plan.offload.len());
-
-                // primary executes its share (plus backpressured frames)
-                if !local.is_empty() {
-                    let n_local = local.len() as u64;
-                    primary
-                        .handle
-                        .run(spec.workload, &local, offload_frac, spec.masked)?;
-                    let done = primary.handle.now();
-                    stream_reports[s].completed += n_local;
-                    for _ in 0..n_local {
-                        stream_reports[s].latency.record(done - t_arr);
-                        pooled.record(done - t_arr);
-                    }
-                }
+            while let Some(ev) = st.events.pop_due(round_end) {
+                self.dispatch_event(ev.payload, ev.at, Some(admission.as_slice()), &mut st)?;
             }
 
-            // round close: every auxiliary drains its work-queue, batched
-            // per stream (deterministic stream order)
-            let (_, tail) = self.nodes.split_at_mut(1);
-            for aux in tail.iter_mut() {
-                let jobs = aux.inbox.drain();
-                if jobs.is_empty() {
-                    continue;
-                }
-                let mut groups: BTreeMap<usize, Vec<Job>> = BTreeMap::new();
-                for job in jobs {
-                    groups.entry(job.stream).or_default().push(job);
-                }
-                for (s, jobs) in groups {
-                    let spec = &self.registry.streams[s];
-                    let (frames, arrived): (Vec<Frame>, Vec<f64>) = jobs
-                        .into_iter()
-                        .map(|j| (j.frame, j.arrived))
-                        .unzip();
-                    aux.handle
-                        .run(spec.workload, &frames, aux.last_r, spec.masked)?;
-                    let done = aux.handle.now();
-                    stream_reports[s].completed += frames.len() as u64;
-                    for t in arrived {
-                        stream_reports[s].latency.record(done - t);
-                        pooled.record(done - t);
-                    }
-                }
+            if cfg.drain == DrainMode::Batched {
+                self.drain_batched(&mut st)?;
             }
         }
+
+        // cross-round tail: service events past the last round boundary
+        // still execute (pipelined mode only; batched drains each round)
+        while let Some(ev) = st.events.pop() {
+            self.dispatch_event(ev.payload, ev.at, None, &mut st)?;
+        }
+        ensure!(
+            self.nodes.iter().all(|n| n.inbox.is_empty()),
+            "run ended with undrained inbox jobs"
+        );
 
         let makespan = self
             .nodes
@@ -521,19 +537,308 @@ impl Dispatcher {
                 },
                 inbox_rejections: slot.inbox.rejected,
                 inbox_high_watermark: slot.inbox.high_watermark,
+                stolen_in: slot.inbox.stolen,
+                stolen_out: slot.stolen_out,
+                queue_delay_mean_s: slot.queue_delay.mean(),
             })
             .collect();
 
         Ok(FleetReport {
-            streams: stream_reports,
+            streams: st.stream_reports,
             nodes,
             makespan_secs: makespan,
-            latency: pooled,
+            latency: st.pooled,
+            queue_delay: st.queue_delay,
             rounds: cfg.rounds,
-            offload_bytes,
-            backpressure_events,
+            drain: cfg.drain,
+            offload_bytes: st.offload_bytes,
+            backpressure_events: st.backpressure_events,
+            stolen_frames: st.stolen_frames,
+            primary_fallbacks: st.primary_fallbacks,
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
         })
+    }
+
+    fn dispatch_event(
+        &mut self,
+        ev: FleetEvent,
+        at: f64,
+        admission: Option<&[AdmissionDecision]>,
+        st: &mut RunState,
+    ) -> Result<()> {
+        match ev {
+            FleetEvent::Arrival { stream } => {
+                let decision = match admission {
+                    Some(plan) => plan[stream],
+                    None => bail!("arrival event after the final round"),
+                };
+                self.handle_arrival(stream, at, decision, st)
+            }
+            FleetEvent::Service { aux } => self.serve_one(aux, at, st),
+        }
+    }
+
+    /// One stream batch lands on the primary: admit, split, encode,
+    /// place every offloaded frame (stealing on overflow), run the
+    /// primary's share.
+    fn handle_arrival(
+        &mut self,
+        s: usize,
+        t_arr: f64,
+        decision: AdmissionDecision,
+        st: &mut RunState,
+    ) -> Result<()> {
+        let (drain, work_stealing) = (self.cfg.drain, self.cfg.work_stealing);
+        let spec = self.registry.streams[s].clone();
+        st.stream_reports[s].offered += spec.rate as u64;
+
+        let raw = self.gens[s].batch(spec.rate);
+        if decision == AdmissionDecision::Reject {
+            st.stream_reports[s].rejected += raw.len() as u64;
+            return Ok(());
+        }
+        let (kept, dropped) = decision.apply(raw);
+        st.stream_reports[s].degraded += dropped as u64;
+        st.stream_reports[s].admitted += kept.len() as u64;
+        if kept.is_empty() {
+            return Ok(());
+        }
+
+        let (head, tail) = self.nodes.split_at_mut(1);
+        let primary = &mut head[0];
+        primary.handle.sync_to(t_arr);
+        let pprof = primary.handle.profile();
+
+        // pairwise Algorithm-1 decisions; inbox pressure feeds λ
+        let mut ratios: Vec<f64> = Vec::with_capacity(tail.len());
+        for aux in tail.iter_mut() {
+            let mut aprof = aux.handle.profile();
+            aprof.mem_pct = aux.inbox.pressure_mem_pct(aprof.mem_pct);
+            let probe = aux.link.expected_latency_s(48 * 1024);
+            let d = aux
+                .scheduler
+                .decide(&pprof, &aprof, spec.workload, spec.masked, probe, false);
+            let r = d.r.clamp(0.0, MAX_PAIR_RATIO);
+            if r > 0.0 {
+                aux.last_r = r;
+            }
+            ratios.push(r);
+        }
+        let (offload_frac, aux_shares) = combine_odds(&ratios);
+
+        // steal order: siblings ranked cheapest-first by the same
+        // odds-form service rate (ties broken by index, deterministic)
+        let mut steal_order: Vec<usize> = (0..tail.len()).filter(|&j| aux_shares[j] > 0.0).collect();
+        steal_order.sort_by(|&a, &b| {
+            aux_shares[b]
+                .partial_cmp(&aux_shares[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+
+        // dedup → mask → encode → split
+        let plan = self.batchers[s].plan(kept, offload_frac);
+        st.stream_reports[s].deduped += plan.deduped as u64;
+        primary.handle.advance(plan.masking_overhead_s);
+        let base = primary.handle.now();
+
+        let shares = partition_by_weight(plan.offload.len(), &aux_shares);
+        let mut local = plan.local;
+        // per-link serialized transfer clock for this arrival batch
+        let mut xfer = vec![0.0f64; tail.len()];
+        // earliest accepted frame per aux (service wake-up time)
+        let mut first_ready: Vec<Option<f64>> = vec![None; tail.len()];
+        let mut cursor = 0usize;
+        for k in 0..tail.len() {
+            let share = shares[k];
+            if share == 0 {
+                continue;
+            }
+            let encs = &plan.offload[cursor..cursor + share];
+            cursor += share;
+            for enc in encs {
+                let (id, pixels) = codec::decode_frame(&enc.bytes)?;
+                let mut job_opt = Some(Job {
+                    frame: Frame {
+                        id,
+                        pixels,
+                        truth_mask: vec![0.0; FRAME_PIXELS],
+                        classes: vec![],
+                    },
+                    stream: s,
+                    arrived: t_arr,
+                    ready: 0.0,
+                });
+                // candidate destinations: the planned aux first, then —
+                // with stealing — its siblings cheapest-first
+                let mut dest: Option<usize> = None;
+                let mut first_choice = true;
+                let candidates = std::iter::once(k).chain(
+                    steal_order
+                        .iter()
+                        .copied()
+                        .filter(|&j| j != k && work_stealing),
+                );
+                for d in candidates {
+                    let aux = &mut tail[d];
+                    if aux.inbox.free() == 0 {
+                        aux.inbox.refuse();
+                        st.backpressure_events += 1;
+                        first_choice = false;
+                        continue;
+                    }
+                    // inbox admission BEFORE wire time: the channel is
+                    // only charged for frames a node accepts
+                    let w = aux.link.send(enc.wire_bytes() as u64);
+                    xfer[d] += w;
+                    let mut job = job_opt.take().expect("job in flight");
+                    job.ready = base + xfer[d];
+                    let res = if first_choice {
+                        aux.inbox.push(job)
+                    } else {
+                        aux.inbox.push_stolen(job)
+                    };
+                    match res {
+                        Ok(()) => {
+                            dest = Some(d);
+                            break;
+                        }
+                        Err(j) => {
+                            job_opt = Some(j);
+                            first_choice = false;
+                        }
+                    }
+                }
+                match dest {
+                    Some(d) => {
+                        st.offload_bytes += enc.wire_bytes() as u64;
+                        if first_ready[d].is_none() {
+                            first_ready[d] = Some(base + xfer[d]);
+                        }
+                        if d != k {
+                            st.stolen_frames += 1;
+                            tail[k].stolen_out += 1;
+                        }
+                        if let Some(fab) = self.fabric.as_mut() {
+                            fab.ship(d + 1, &enc.bytes)?;
+                        }
+                    }
+                    None => {
+                        // every aux refused — the primary absorbs it
+                        let job = job_opt.take().expect("unplaced job");
+                        st.primary_fallbacks += 1;
+                        local.push(job.frame);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(cursor, plan.offload.len());
+
+        match drain {
+            DrainMode::Batched => {
+                // legacy timing: each receiving aux waits out its share's
+                // transfer, then executes at round close
+                for (d, aux) in tail.iter_mut().enumerate() {
+                    if xfer[d] > 0.0 {
+                        aux.handle.sync_to(base + xfer[d]);
+                    }
+                }
+            }
+            DrainMode::Pipelined => {
+                // wake idle receiving auxes at their first frame's
+                // transfer-complete time
+                for (d, ready) in first_ready.iter().enumerate() {
+                    let Some(t) = ready else { continue };
+                    if !st.busy[d] {
+                        st.busy[d] = true;
+                        st.events.schedule(*t, FleetEvent::Service { aux: d });
+                    }
+                }
+            }
+        }
+
+        // primary executes its share (plus fallback frames)
+        if !local.is_empty() {
+            let n_local = local.len() as u64;
+            primary
+                .handle
+                .run(spec.workload, &local, offload_frac, spec.masked)?;
+            let done = primary.handle.now();
+            st.stream_reports[s].completed += n_local;
+            for _ in 0..n_local {
+                st.stream_reports[s].latency.record(done - t_arr);
+                st.pooled.record(done - t_arr);
+            }
+        }
+        Ok(())
+    }
+
+    /// One service event: auxiliary `k` (tail index) pops and executes
+    /// its oldest queued frame, then re-arms if more work is queued.
+    fn serve_one(&mut self, k: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let slot = &mut self.nodes[k + 1];
+        let Some(job) = slot.inbox.pop() else {
+            st.busy[k] = false;
+            return Ok(());
+        };
+        let start = slot.handle.now().max(at).max(job.ready);
+        slot.handle.sync_to(start);
+        let wait = (start - job.ready).max(0.0);
+        slot.queue_delay.record(wait);
+        st.queue_delay.record(wait);
+
+        let spec = &self.registry.streams[job.stream];
+        let r = slot.last_r;
+        slot.handle.run_one(spec.workload, &job.frame, r, spec.masked)?;
+        let done = slot.handle.now();
+        st.stream_reports[job.stream].completed += 1;
+        st.stream_reports[job.stream].latency.record(done - job.arrived);
+        st.pooled.record(done - job.arrived);
+
+        if slot.inbox.is_empty() {
+            st.busy[k] = false;
+        } else {
+            st.events.schedule(done, FleetEvent::Service { aux: k });
+        }
+        Ok(())
+    }
+
+    /// Legacy round-close drain: every auxiliary executes its queued
+    /// work batched per stream (deterministic stream order).
+    fn drain_batched(&mut self, st: &mut RunState) -> Result<()> {
+        let (_, tail) = self.nodes.split_at_mut(1);
+        for aux in tail.iter_mut() {
+            let jobs = aux.inbox.drain();
+            if jobs.is_empty() {
+                continue;
+            }
+            let mut groups: BTreeMap<usize, Vec<Job>> = BTreeMap::new();
+            for job in jobs {
+                groups.entry(job.stream).or_default().push(job);
+            }
+            for (s, jobs) in groups {
+                let spec = &self.registry.streams[s];
+                let group_start = aux.handle.now();
+                let mut frames = Vec::with_capacity(jobs.len());
+                let mut arrived = Vec::with_capacity(jobs.len());
+                for j in jobs {
+                    let wait = (group_start - j.ready).max(0.0);
+                    aux.queue_delay.record(wait);
+                    st.queue_delay.record(wait);
+                    frames.push(j.frame);
+                    arrived.push(j.arrived);
+                }
+                aux.handle
+                    .run(spec.workload, &frames, aux.last_r, spec.masked)?;
+                let done = aux.handle.now();
+                st.stream_reports[s].completed += frames.len() as u64;
+                for t in arrived {
+                    st.stream_reports[s].latency.record(done - t);
+                    st.pooled.record(done - t);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -555,6 +860,23 @@ mod tests {
             partition_by_weight(4, &[f64::NAN, 1.0, f64::INFINITY]),
             vec![0, 4, 0]
         );
+    }
+
+    #[test]
+    fn combine_odds_matches_two_node_split() {
+        // one aux at ratio r must reproduce the pairwise split exactly
+        let (frac, shares) = combine_odds(&[0.7]);
+        assert!((frac - 0.7).abs() < 1e-12, "{frac}");
+        assert_eq!(shares.len(), 1);
+        assert!((shares[0] - 0.7).abs() < 1e-12);
+        // no auxes, or all shed, means no offload
+        assert_eq!(combine_odds(&[]), (0.0, vec![]));
+        let (frac, shares) = combine_odds(&[0.0, 0.0]);
+        assert_eq!(frac, 0.0);
+        assert_eq!(shares, vec![0.0, 0.0]);
+        // non-finite ratios are treated as shed, not propagated
+        let (frac, _) = combine_odds(&[f64::NAN, 0.5]);
+        assert!((frac - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -605,6 +927,9 @@ mod tests {
         let mut d = Dispatcher::new(cfg).unwrap();
         let rep = d.run().unwrap();
         assert!(rep.backpressure_events > 0, "inboxes never filled");
+        // a single aux has no siblings to steal from
+        assert_eq!(rep.stolen_frames, 0);
+        assert_eq!(rep.primary_fallbacks, rep.backpressure_events);
         // every offered frame still completes — shed to the primary,
         // never lost
         assert_eq!(rep.total_completed(), rep.total_offered());
@@ -613,6 +938,36 @@ mod tests {
             "inbox accounting matches dispatcher accounting"
         );
         assert_eq!(rep.nodes[1].inbox_high_watermark, 3);
+    }
+
+    #[test]
+    fn pipelined_drain_cuts_queueing_delay() {
+        let run = |drain: DrainMode| {
+            let mut cfg = FleetConfig::new(3, 4);
+            cfg.rounds = 2;
+            cfg.frames_per_round = 10;
+            cfg.admission_control = false;
+            cfg.drain = drain;
+            Dispatcher::new(cfg).unwrap().run().unwrap()
+        };
+        let batched = run(DrainMode::Batched);
+        let pipelined = run(DrainMode::Pipelined);
+        assert_eq!(pipelined.total_completed(), batched.total_completed());
+        assert!(
+            pipelined.queue_delay.mean() < batched.queue_delay.mean(),
+            "pipelined {:.3}s vs batched {:.3}s",
+            pipelined.queue_delay.mean(),
+            batched.queue_delay.mean()
+        );
+    }
+
+    #[test]
+    fn set_inbox_capacity_validates() {
+        let mut d = Dispatcher::new(FleetConfig::new(3, 2)).unwrap();
+        assert!(d.set_inbox_capacity(0, 4).is_err(), "primary has no inbox");
+        assert!(d.set_inbox_capacity(3, 4).is_err(), "out of range");
+        assert!(d.set_inbox_capacity(2, 0).is_err(), "zero capacity");
+        d.set_inbox_capacity(2, 4).unwrap();
     }
 
     #[test]

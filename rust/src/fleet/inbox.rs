@@ -1,22 +1,37 @@
 //! Per-node bounded inboxes with backpressure signaling.
 //!
-//! Each fleet node fronts its executor with a bounded queue. `push`
+//! Each fleet node fronts its executor with a bounded FIFO. `push`
 //! hands the item back instead of growing without bound; the dispatcher
-//! treats that as a backpressure event and re-routes the frame to the
-//! primary. Occupancy also feeds the scheduler's availability guard λ:
-//! [`BoundedInbox::pressure_mem_pct`] inflates the node's reported memory
-//! utilization in proportion to queue fill, so a congested node stops
-//! attracting offload *before* it starts shedding.
+//! treats that as a backpressure event and re-offers the frame to a
+//! sibling auxiliary ([`BoundedInbox::push_stolen`]) before falling back
+//! to the primary. The event-driven drain pops one item at a time
+//! ([`BoundedInbox::pop`]) so a node serves work continuously instead of
+//! in round-close batches. Occupancy also feeds the scheduler's
+//! availability guard λ: [`BoundedInbox::pressure_mem_pct`] inflates the
+//! node's reported memory utilization in proportion to queue fill, so a
+//! congested node stops attracting offload *before* it starts shedding.
+//!
+//! Counter invariants (checked by `tests/prop_fleet.rs`):
+//! `offered == accepted + stolen + rejected` and
+//! `accepted + stolen == served + len`.
+
+use std::collections::VecDeque;
 
 /// A bounded FIFO of pending work items for one node.
 #[derive(Debug, Clone)]
 pub struct BoundedInbox<T> {
     capacity: usize,
-    queue: Vec<T>,
+    queue: VecDeque<T>,
+    /// Placement attempts of any kind (cumulative).
+    pub offered: u64,
     /// Items turned away because the inbox was full (cumulative).
     pub rejected: u64,
-    /// Items accepted (cumulative).
+    /// Items accepted as the first-choice destination (cumulative).
     pub accepted: u64,
+    /// Items accepted via work-stealing re-dispatch (cumulative).
+    pub stolen: u64,
+    /// Items handed to the executor by `pop`/`drain` (cumulative).
+    pub served: u64,
     /// Deepest simultaneous fill observed.
     pub high_watermark: usize,
 }
@@ -26,9 +41,12 @@ impl<T> BoundedInbox<T> {
         assert!(capacity > 0, "inbox capacity must be positive");
         BoundedInbox {
             capacity,
-            queue: Vec::new(),
+            queue: VecDeque::new(),
+            offered: 0,
             rejected: 0,
             accepted: 0,
+            stolen: 0,
+            served: 0,
             high_watermark: 0,
         }
     }
@@ -54,21 +72,52 @@ impl<T> BoundedInbox<T> {
         self.queue.len() as f64 / self.capacity as f64
     }
 
-    /// Accept `item`, or hand it back when full (backpressure).
-    pub fn push(&mut self, item: T) -> Result<(), T> {
+    fn admit(&mut self, item: T) -> Result<(), T> {
+        self.offered += 1;
         if self.queue.len() >= self.capacity {
             self.rejected += 1;
             return Err(item);
         }
-        self.queue.push(item);
-        self.accepted += 1;
+        self.queue.push_back(item);
         self.high_watermark = self.high_watermark.max(self.queue.len());
         Ok(())
     }
 
-    /// Take everything queued, FIFO order.
+    /// Accept `item` as the first-choice destination, or hand it back
+    /// when full (backpressure).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        self.admit(item).map(|()| self.accepted += 1)
+    }
+
+    /// Accept `item` re-dispatched from an overflowing sibling, or hand
+    /// it back when this inbox is full too.
+    pub fn push_stolen(&mut self, item: T) -> Result<(), T> {
+        self.admit(item).map(|()| self.stolen += 1)
+    }
+
+    /// Record a placement attempt the caller abandoned because this
+    /// inbox is full — same counter effect as a failed `push`, without
+    /// constructing the item (the dispatcher checks fullness before
+    /// paying the frame's channel transfer).
+    pub fn refuse(&mut self) {
+        debug_assert!(self.queue.len() >= self.capacity, "refusing a non-full inbox");
+        self.offered += 1;
+        self.rejected += 1;
+    }
+
+    /// Take the oldest queued item — the event-driven drain hook.
+    pub fn pop(&mut self) -> Option<T> {
+        let item = self.queue.pop_front();
+        if item.is_some() {
+            self.served += 1;
+        }
+        item
+    }
+
+    /// Take everything queued, FIFO order (the batched drain hook).
     pub fn drain(&mut self) -> Vec<T> {
-        std::mem::take(&mut self.queue)
+        self.served += self.queue.len() as u64;
+        self.queue.drain(..).collect()
     }
 
     /// Map queue occupancy onto the memory-percent scale the scheduler's
@@ -92,10 +141,51 @@ mod tests {
         assert!(ib.push(2).is_ok());
         assert_eq!(ib.push(3), Err(3), "full inbox hands the item back");
         assert_eq!(ib.len(), 2);
+        assert_eq!(ib.offered, 3);
         assert_eq!(ib.accepted, 2);
         assert_eq!(ib.rejected, 1);
         assert_eq!(ib.high_watermark, 2);
         assert_eq!(ib.free(), 0);
+    }
+
+    #[test]
+    fn stolen_items_count_separately() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(2);
+        assert!(ib.push(1).is_ok());
+        assert!(ib.push_stolen(2).is_ok());
+        assert_eq!(ib.push_stolen(3), Err(3), "full inbox refuses steals too");
+        assert_eq!(ib.accepted, 1);
+        assert_eq!(ib.stolen, 1);
+        assert_eq!(ib.rejected, 1);
+        assert_eq!(ib.offered, 3);
+    }
+
+    #[test]
+    fn refuse_counts_like_a_failed_push() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(1);
+        ib.push(1).unwrap();
+        ib.refuse();
+        assert_eq!(ib.offered, 2);
+        assert_eq!(ib.rejected, 1);
+        assert_eq!(ib.accepted, 1);
+        assert_eq!(ib.len(), 1);
+    }
+
+    #[test]
+    fn pop_serves_fifo_one_at_a_time() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(4);
+        for v in [10, 20, 30] {
+            ib.push(v).unwrap();
+        }
+        assert_eq!(ib.pop(), Some(10));
+        assert_eq!(ib.pop(), Some(20));
+        assert_eq!(ib.served, 2);
+        // freed capacity accepts again, behind the remaining item
+        ib.push(40).unwrap();
+        assert_eq!(ib.pop(), Some(30));
+        assert_eq!(ib.pop(), Some(40));
+        assert_eq!(ib.pop(), None);
+        assert_eq!(ib.served, 4);
     }
 
     #[test]
@@ -106,6 +196,7 @@ mod tests {
         }
         assert_eq!(ib.drain(), vec![10, 20, 30]);
         assert!(ib.is_empty());
+        assert_eq!(ib.served, 3);
         assert_eq!(ib.high_watermark, 3, "watermark survives drain");
         // freed capacity accepts again
         ib.push(40).unwrap();

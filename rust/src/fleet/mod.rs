@@ -9,13 +9,17 @@
 //!   drop-to-keyframe degradation and outright rejection under overload;
 //! * [`inbox`]: per-node bounded inboxes whose occupancy feeds back into
 //!   the scheduler's availability guard λ (backpressure before loss);
-//! * [`dispatcher`]: the work-queue dispatcher — per-pair split ratios
+//! * [`dispatcher`]: the event-driven dispatcher — per-pair split ratios
 //!   from the existing Algorithm-1 scheduler against live node profiles,
 //!   combined in odds form across multiple auxiliaries, batched through
 //!   the dedup→mask→encode pipeline, optionally shipped through the
-//!   in-tree MQTT broker;
-//! * [`report`]: per-stream latency percentiles, shed counters and
-//!   per-node utilization, exportable into [`crate::metrics`].
+//!   in-tree MQTT broker. Auxiliaries drain continuously (one service
+//!   event per frame, pipelined across rounds) and backpressured frames
+//!   are work-stolen by sibling auxes before falling back to the
+//!   primary;
+//! * [`report`]: per-stream latency percentiles, queueing delay,
+//!   steal/re-dispatch counts and per-node utilization, exportable into
+//!   [`crate::metrics`].
 //!
 //! Node execution rides the [`crate::coordinator::NodeHandle`] seam, so
 //! the fleet and the two-node testbed share one node runtime.
@@ -25,7 +29,7 @@ pub mod inbox;
 pub mod registry;
 pub mod report;
 
-pub use dispatcher::{Dispatcher, FleetConfig, Transport};
+pub use dispatcher::{combine_odds, Dispatcher, DrainMode, FleetConfig, Transport};
 pub use inbox::BoundedInbox;
 pub use registry::{AdmissionDecision, StreamRegistry, StreamSpec};
 pub use report::{FleetReport, NodeReport, StreamReport};

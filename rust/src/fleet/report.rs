@@ -1,11 +1,17 @@
 //! Fleet run accounting: per-stream latency percentiles, admission
-//! drops, per-node utilization — rendered as paper-style tables and
-//! exportable into a [`crate::metrics::Registry`].
+//! drops, queueing delay, steal/re-dispatch counts and per-node
+//! utilization — rendered as paper-style tables and exportable into a
+//! [`crate::metrics::Registry`].
+//!
+//! Every type derives `PartialEq` so determinism tests can assert two
+//! same-seed runs produce byte-identical reports.
 
 use crate::metrics::{f, Histogram, Registry, Table};
 
+use super::dispatcher::DrainMode;
+
 /// One stream's round-trip accounting for the run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StreamReport {
     pub name: String,
     pub workload: &'static str,
@@ -42,7 +48,7 @@ impl StreamReport {
 }
 
 /// One node's share of the run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NodeReport {
     pub name: String,
     pub kind: &'static str,
@@ -54,10 +60,17 @@ pub struct NodeReport {
     pub inbox_rejections: u64,
     /// Deepest inbox fill observed.
     pub inbox_high_watermark: usize,
+    /// Frames this node accepted via work-stealing re-dispatch.
+    pub stolen_in: u64,
+    /// Overflow frames of this node that a sibling absorbed.
+    pub stolen_out: u64,
+    /// Mean inbox wait per served frame (transfer-complete → service
+    /// start, s).
+    pub queue_delay_mean_s: f64,
 }
 
 /// Everything a fleet run measures.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetReport {
     pub streams: Vec<StreamReport>,
     pub nodes: Vec<NodeReport>,
@@ -65,10 +78,20 @@ pub struct FleetReport {
     pub makespan_secs: f64,
     /// All completed frames' latencies pooled across streams.
     pub latency: Histogram,
+    /// Inbox wait per aux-served frame, pooled across auxiliaries (s).
+    pub queue_delay: Histogram,
     pub rounds: usize,
+    /// Drain discipline the run used.
+    pub drain: DrainMode,
     pub offload_bytes: u64,
-    /// Frames re-routed to the primary because an aux inbox was full.
+    /// Inbox-refusal events across all placement attempts (first-choice
+    /// and steal re-offers).
     pub backpressure_events: u64,
+    /// Backpressured frames a sibling auxiliary absorbed.
+    pub stolen_frames: u64,
+    /// Backpressured frames that landed on the primary after every aux
+    /// refused them.
+    pub primary_fallbacks: u64,
     /// Frames physically round-tripped through the MQTT broker (0 when
     /// the run used the simulated transport).
     pub mqtt_delivered: u64,
@@ -101,6 +124,12 @@ impl FleetReport {
         self.latency.p(99.0)
     }
 
+    /// Mean per-frame queueing delay on the auxiliaries (s) — the number
+    /// the pipelined drain exists to cut.
+    pub fn mean_queue_delay_s(&self) -> f64 {
+        self.queue_delay.mean()
+    }
+
     /// Export counters/gauges/histograms into a metrics registry.
     pub fn to_registry(&self, reg: &mut Registry) {
         reg.inc("fleet.frames.offered", self.total_offered());
@@ -108,10 +137,14 @@ impl FleetReport {
         reg.inc("fleet.frames.rejected", self.total_rejected());
         reg.inc("fleet.frames.degraded", self.total_degraded());
         reg.inc("fleet.backpressure.events", self.backpressure_events);
+        reg.inc("fleet.steal.frames", self.stolen_frames);
+        reg.inc("fleet.steal.primary_fallbacks", self.primary_fallbacks);
         reg.inc("fleet.offload.bytes", self.offload_bytes);
         reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
         reg.set("fleet.makespan_secs", self.makespan_secs);
         reg.set("fleet.latency.p99_s", self.p99_latency_s());
+        reg.set("fleet.queue_delay.mean_s", self.mean_queue_delay_s());
+        reg.set("fleet.queue_delay.p99_s", self.queue_delay.p(99.0));
         for s in &self.streams {
             reg.set(&format!("fleet.stream.{}.p99_s", s.name), s.latency.p(99.0));
             reg.inc(&format!("fleet.stream.{}.rejected", s.name), s.rejected);
@@ -122,6 +155,8 @@ impl FleetReport {
                 &format!("fleet.node.{}.inbox_rejections", n.name),
                 n.inbox_rejections,
             );
+            reg.inc(&format!("fleet.node.{}.stolen_in", n.name), n.stolen_in);
+            reg.inc(&format!("fleet.node.{}.stolen_out", n.name), n.stolen_out);
         }
     }
 
@@ -129,20 +164,25 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "fleet: {} nodes x {} streams, {} rounds | makespan {:.2} s | \
+            "fleet: {} nodes x {} streams, {} rounds ({} drain) | makespan {:.2} s | \
              offered {} completed {} rejected {} degraded {} | \
-             backpressure {} | offload {} | p99 {:.3} s\n",
+             backpressure {} stolen {} fallbacks {} | offload {} | \
+             p99 {:.3} s | qdelay mean {:.3} s\n",
             self.nodes.len(),
             self.streams.len(),
             self.rounds,
+            self.drain.name(),
             self.makespan_secs,
             self.total_offered(),
             self.total_completed(),
             self.total_rejected(),
             self.total_degraded(),
             self.backpressure_events,
+            self.stolen_frames,
+            self.primary_fallbacks,
             crate::util::fmt_bytes(self.offload_bytes),
             self.p99_latency_s(),
+            self.mean_queue_delay_s(),
         ));
         if self.mqtt_delivered > 0 {
             out.push_str(&format!(
@@ -173,6 +213,7 @@ impl FleetReport {
 
         let mut nt = Table::new(&[
             "node", "kind", "frames", "exec (s)", "util", "inbox rej", "inbox hwm",
+            "stolen in", "stolen out", "qwait (s)",
         ]);
         for n in &self.nodes {
             nt.row(vec![
@@ -183,6 +224,9 @@ impl FleetReport {
                 f(n.utilization, 3),
                 n.inbox_rejections.to_string(),
                 n.inbox_high_watermark.to_string(),
+                n.stolen_in.to_string(),
+                n.stolen_out.to_string(),
+                f(n.queue_delay_mean_s, 3),
             ]);
         }
         out.push_str(&nt.render());
@@ -208,6 +252,9 @@ mod tests {
             s.latency.record(v);
             latency.record(v);
         }
+        let mut queue_delay = Histogram::new();
+        queue_delay.record(0.25);
+        queue_delay.record(0.75);
         FleetReport {
             streams: vec![s],
             nodes: vec![NodeReport {
@@ -218,12 +265,19 @@ mod tests {
                 utilization: 0.75,
                 inbox_rejections: 3,
                 inbox_high_watermark: 12,
+                stolen_in: 2,
+                stolen_out: 1,
+                queue_delay_mean_s: 0.5,
             }],
             makespan_secs: 40.0,
             latency,
+            queue_delay,
             rounds: 5,
+            drain: DrainMode::Pipelined,
             offload_bytes: 1 << 20,
             backpressure_events: 3,
+            stolen_frames: 2,
+            primary_fallbacks: 1,
             mqtt_delivered: 0,
         }
     }
@@ -235,10 +289,22 @@ mod tests {
         assert_eq!(r.total_completed(), 78);
         assert_eq!(r.total_rejected(), 10);
         assert!(r.p99_latency_s() > 0.7);
+        assert!((r.mean_queue_delay_s() - 0.5).abs() < 1e-12);
         let text = r.render();
         assert!(text.contains("cam-0"), "{text}");
         assert!(text.contains("node-0"), "{text}");
         assert!(text.contains("makespan 40.00 s"), "{text}");
+        assert!(text.contains("pipelined drain"), "{text}");
+        assert!(text.contains("stolen 2 fallbacks 1"), "{text}");
+    }
+
+    #[test]
+    fn reports_compare_equal_only_when_identical() {
+        let a = sample();
+        let mut b = sample();
+        assert_eq!(a, b);
+        b.nodes[0].stolen_in += 1;
+        assert_ne!(a, b);
     }
 
     #[test]
@@ -248,7 +314,11 @@ mod tests {
         r.to_registry(&mut reg);
         assert_eq!(reg.counter("fleet.frames.offered"), 100);
         assert_eq!(reg.counter("fleet.frames.rejected"), 10);
+        assert_eq!(reg.counter("fleet.steal.frames"), 2);
+        assert_eq!(reg.counter("fleet.steal.primary_fallbacks"), 1);
+        assert_eq!(reg.counter("fleet.node.node-0.stolen_in"), 2);
         assert_eq!(reg.gauge("fleet.makespan_secs"), Some(40.0));
+        assert_eq!(reg.gauge("fleet.queue_delay.mean_s"), Some(0.5));
         assert!(reg.gauge("fleet.stream.cam-0.p99_s").unwrap() > 0.0);
         assert!(reg.render().contains("fleet.node.node-0.utilization"));
     }

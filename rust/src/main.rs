@@ -5,7 +5,8 @@
 //! heteroedge static  [--ratio <r>] [--frames <n>] [--masked] [--band <b>]
 //! heteroedge dynamic [--ratio <r>] [--frames <n>] [--beta <s>]
 //! heteroedge fleet   --nodes <N> --streams <M> [--rounds <k>] [--rate <f>]
-//!                    [--inbox <cap>] [--masked] [--dedup] [--no-mqtt]
+//!                    [--inbox <cap>] [--drain batched|pipelined] [--no-steal]
+//!                    [--masked] [--dedup] [--no-mqtt]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
 //! heteroedge table   --id <table1|fig3|fig4|fig5|table3|fig6|table4|fig7|battery> [--full]
 //! ```
@@ -15,7 +16,7 @@ use anyhow::{bail, Result};
 use heteroedge::cli::Args;
 use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
 use heteroedge::experiments::{self, Scale};
-use heteroedge::fleet::{Dispatcher, FleetConfig, Transport};
+use heteroedge::fleet::{Dispatcher, DrainMode, FleetConfig, Transport};
 use heteroedge::net::Band;
 use heteroedge::solver::HeteroEdgeSolver;
 use heteroedge::workload::Workload;
@@ -112,13 +113,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     } else {
         Transport::Mqtt
     };
+    cfg.drain = match args.opt_choice("drain", &["pipelined", "batched"], "pipelined")? {
+        "batched" => DrainMode::Batched,
+        _ => DrainMode::Pipelined,
+    };
+    cfg.work_stealing = !args.flag("no-steal");
 
     println!(
-        "fleet: {} nodes (1 primary + {} auxiliaries), {} streams, transport {:?}",
+        "fleet: {} nodes (1 primary + {} auxiliaries), {} streams, transport {:?}, {} drain{}",
         cfg.n_nodes,
         cfg.n_nodes.saturating_sub(1),
         cfg.n_streams,
-        cfg.transport
+        cfg.transport,
+        cfg.drain.name(),
+        if cfg.work_stealing { "" } else { ", stealing off" }
     );
     let report = Dispatcher::new(cfg.clone())?.run()?;
     println!("{}", report.render());

@@ -7,8 +7,9 @@ use std::fmt::Write as _;
 use crate::util::stats::{percentile, Summary};
 
 /// A latency histogram with raw-sample retention (experiments need exact
-/// percentiles; cardinality is bounded by run length).
-#[derive(Debug, Clone, Default)]
+/// percentiles; cardinality is bounded by run length). `PartialEq` makes
+/// whole reports byte-comparable in determinism tests.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Histogram {
     samples: Vec<f64>,
     summary: Summary,

@@ -75,18 +75,26 @@ impl<T> EventQueue<T> {
     /// Pop the earliest event only if it is due at or before `t`.
     ///
     /// The N-node fleet loop advances a global mission clock round by
-    /// round; this is the primitive that releases exactly the stream
-    /// arrivals whose time has come, in deterministic order.
+    /// round; this is the primitive that releases exactly the events
+    /// (stream arrivals, aux service completions) whose time has come,
+    /// in deterministic order.
     pub fn pop_due(&mut self, t: f64) -> Option<Event<T>> {
-        match self.peek_time() {
-            Some(at) if at <= t => self.heap.pop(),
+        match self.peek() {
+            Some(ev) if ev.at <= t => self.heap.pop(),
             _ => None,
         }
     }
 
+    /// The next event without popping it — lets an event loop inspect
+    /// what is coming (e.g. whether an arrival or a service completion
+    /// fires next) before deciding to advance time.
+    pub fn peek(&self) -> Option<&Event<T>> {
+        self.heap.peek()
+    }
+
     /// Time of the next event without popping.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.at)
+        self.peek().map(|e| e.at)
     }
 
     pub fn len(&self) -> usize {
@@ -141,8 +149,12 @@ mod tests {
     #[test]
     fn peek_does_not_pop() {
         let mut q = EventQueue::new();
-        q.schedule(5.0, ());
+        q.schedule(5.0, "x");
         assert_eq!(q.peek_time(), Some(5.0));
+        let ev = q.peek().unwrap();
+        assert_eq!(ev.at, 5.0);
+        assert_eq!(ev.payload, "x");
         assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().payload, "x");
     }
 }

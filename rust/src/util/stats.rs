@@ -2,7 +2,7 @@
 //! experiment reports.
 
 /// Online mean/min/max/variance accumulator (Welford).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Summary {
     n: u64,
     mean: f64,

@@ -1,8 +1,11 @@
 //! Integration: the fleet ingest subsystem — N nodes × M streams through
-//! overload, backpressure, and the MQTT work-queue fabric.
+//! overload, backpressure, work stealing, and the MQTT work-queue
+//! fabric, plus the deterministic fleet test harness (same-seed
+//! byte-identity, transport parity).
 
 use heteroedge::fleet::{
-    AdmissionDecision, Dispatcher, FleetConfig, StreamRegistry, StreamSpec, Transport,
+    AdmissionDecision, Dispatcher, DrainMode, FleetConfig, FleetReport, StreamRegistry,
+    StreamSpec, Transport,
 };
 
 /// ≥3 nodes × ≥4 streams driven well past capacity: admission must shed,
@@ -129,6 +132,105 @@ fn mqtt_work_queue_delivers_every_offloaded_frame() {
         "every aux-executed frame rode the broker"
     );
     assert_eq!(rep.total_completed(), rep.total_offered());
+}
+
+/// One congested auxiliary: stolen frames must land on sibling auxes
+/// before the primary — the primary-fallback count with stealing on is
+/// strictly below the no-stealing run on the identical workload.
+#[test]
+fn stolen_frames_land_on_siblings_before_the_primary() {
+    let run = |steal: bool| -> FleetReport {
+        let mut cfg = FleetConfig::new(4, 4);
+        cfg.rounds = 3;
+        cfg.frames_per_round = 18;
+        cfg.inbox_capacity = 24;
+        cfg.admission_control = false;
+        cfg.work_stealing = steal;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        // congest exactly one aux; its siblings keep the default depth
+        d.set_inbox_capacity(1, 2).unwrap();
+        d.run().unwrap()
+    };
+    let with = run(true);
+    let without = run(false);
+
+    assert!(with.stolen_frames > 0, "nothing was stolen");
+    assert!(without.primary_fallbacks > 0, "aux never overflowed");
+    assert_eq!(without.stolen_frames, 0, "stealing was off");
+    assert!(
+        with.primary_fallbacks < without.primary_fallbacks,
+        "stealing must absorb overflow before the primary: {} vs {}",
+        with.primary_fallbacks,
+        without.primary_fallbacks
+    );
+    // the congested aux's overflow went somewhere concrete, and the
+    // per-node ledgers balance fleet-wide
+    assert!(with.nodes[1].stolen_out > 0, "congested aux never re-dispatched");
+    let stolen_out: u64 = with.nodes[1..].iter().map(|n| n.stolen_out).sum();
+    let stolen_in: u64 = with.nodes[1..].iter().map(|n| n.stolen_in).sum();
+    assert_eq!(stolen_out, with.stolen_frames);
+    assert_eq!(stolen_in, with.stolen_frames);
+    // zero loss either way
+    assert_eq!(with.total_completed(), with.total_offered());
+    assert_eq!(without.total_completed(), without.total_offered());
+}
+
+/// The deterministic harness core: two `Transport::Sim` runs with the
+/// same seed and config produce byte-identical reports — percentiles,
+/// per-node counters, everything — for both drain disciplines.
+#[test]
+fn same_seed_sim_runs_are_byte_identical() {
+    for drain in [DrainMode::Batched, DrainMode::Pipelined] {
+        let mut cfg = FleetConfig::new(3, 4);
+        cfg.rounds = 3;
+        cfg.frames_per_round = 12;
+        cfg.inbox_capacity = 8;
+        cfg.drain = drain;
+        let a = Dispatcher::new(cfg.clone()).unwrap().run().unwrap();
+        let b = Dispatcher::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a, b, "{} drain diverged across same-seed runs", drain.name());
+        assert_eq!(a.render(), b.render());
+    }
+}
+
+/// Transport parity: shipping every frame through the real MQTT broker
+/// must not change any timing-independent count — admission, offload,
+/// stealing and fallback decisions are all virtual-time-driven.
+#[test]
+fn mqtt_and_sim_transports_agree_on_counts() {
+    let run = |transport: Transport| -> FleetReport {
+        let mut cfg = FleetConfig::new(3, 4);
+        cfg.rounds = 2;
+        cfg.frames_per_round = 10;
+        cfg.inbox_capacity = 6; // tight enough to exercise stealing
+        cfg.admission_control = false;
+        cfg.transport = transport;
+        Dispatcher::new(cfg).unwrap().run().unwrap()
+    };
+    let sim = run(Transport::Sim);
+    let mqtt = run(Transport::Mqtt);
+
+    for (s, m) in sim.streams.iter().zip(&mqtt.streams) {
+        assert_eq!(s.name, m.name);
+        assert_eq!(s.offered, m.offered, "{}", s.name);
+        assert_eq!(s.admitted, m.admitted, "{}", s.name);
+        assert_eq!(s.degraded, m.degraded, "{}", s.name);
+        assert_eq!(s.rejected, m.rejected, "{}", s.name);
+        assert_eq!(s.deduped, m.deduped, "{}", s.name);
+        assert_eq!(s.completed, m.completed, "{}", s.name);
+    }
+    for (s, m) in sim.nodes.iter().zip(&mqtt.nodes) {
+        assert_eq!(s.frames, m.frames, "{}", s.name);
+        assert_eq!(s.inbox_rejections, m.inbox_rejections, "{}", s.name);
+        assert_eq!(s.stolen_in, m.stolen_in, "{}", s.name);
+        assert_eq!(s.stolen_out, m.stolen_out, "{}", s.name);
+    }
+    assert_eq!(sim.backpressure_events, mqtt.backpressure_events);
+    assert_eq!(sim.stolen_frames, mqtt.stolen_frames);
+    assert_eq!(sim.primary_fallbacks, mqtt.primary_fallbacks);
+    assert_eq!(sim.offload_bytes, mqtt.offload_bytes);
+    assert_eq!(sim.mqtt_delivered, 0);
+    assert!(mqtt.mqtt_delivered > 0, "no frames crossed the broker");
 }
 
 /// Custom stream registries work end-to-end: mixed priorities and rates,

@@ -1,0 +1,134 @@
+//! Property tests: fleet invariants — odds-form split combination and
+//! bounded-inbox conservation under random interleavings.
+
+use heteroedge::fleet::{combine_odds, BoundedInbox};
+use heteroedge::testkit::{check, prop_assert};
+
+#[test]
+fn prop_odds_combination_is_a_valid_split() {
+    check("odds combination valid", 150, |g| {
+        let n = g.usize_in(1, 7);
+        let ratios = g.vec_f64(n, 0.0, 0.98);
+        let (frac, shares) = combine_odds(&ratios);
+        prop_assert(
+            (0.0..=1.0).contains(&frac),
+            format!("offload fraction {frac} outside [0,1]"),
+        )?;
+        prop_assert(shares.len() == n, "one share per auxiliary")?;
+        prop_assert(
+            shares.iter().all(|s| *s >= 0.0 && *s <= frac + 1e-12),
+            format!("share outside [0, frac]: {shares:?}"),
+        )?;
+        let sum: f64 = shares.iter().sum();
+        prop_assert(
+            (sum - frac).abs() < 1e-9,
+            format!("shares sum {sum} != offload fraction {frac}"),
+        )
+    });
+}
+
+#[test]
+fn prop_odds_combination_monotone_in_each_ratio() {
+    check("odds combination monotone", 150, |g| {
+        let n = g.usize_in(1, 6);
+        let mut ratios = g.vec_f64(n, 0.0, 0.9);
+        let (frac0, shares0) = combine_odds(&ratios);
+        let i = g.usize_in(0, n);
+        let bump = g.f64_in(0.0, 0.98 - ratios[i]);
+        ratios[i] += bump;
+        let (frac1, shares1) = combine_odds(&ratios);
+        prop_assert(
+            frac1 >= frac0 - 1e-12,
+            format!("fraction fell {frac0} -> {frac1} after raising ratio {i}"),
+        )?;
+        prop_assert(
+            shares1[i] >= shares0[i] - 1e-12,
+            format!(
+                "aux {i}'s own share fell {} -> {}",
+                shares0[i], shares1[i]
+            ),
+        )?;
+        // the other auxes' shares can only shrink: the raised aux takes
+        // a larger slice of a pool the primary cedes sublinearly
+        for j in 0..n {
+            if j != i {
+                prop_assert(
+                    shares1[j] <= shares0[j] + 1e-12,
+                    format!("sibling {j} share grew: {} -> {}", shares0[j], shares1[j]),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inbox_bounded_and_conserving() {
+    check("inbox invariants", 150, |g| {
+        let cap = g.usize_in(1, 9);
+        let mut ib: BoundedInbox<u64> = BoundedInbox::new(cap);
+        let mut popped = 0u64;
+        let steps = g.usize_in(1, 150);
+        for step in 0..steps {
+            // bias toward pushes so small inboxes actually overflow
+            match g.usize_in(0, 4) {
+                0 => {
+                    if ib.pop().is_some() {
+                        popped += 1;
+                    }
+                }
+                1 => {
+                    let _ = ib.push_stolen(step as u64);
+                }
+                _ => {
+                    let _ = ib.push(step as u64);
+                }
+            }
+            prop_assert(ib.len() <= cap, format!("len {} > cap {cap}", ib.len()))?;
+            prop_assert(
+                ib.high_watermark <= cap,
+                format!("watermark {} > cap {cap}", ib.high_watermark),
+            )?;
+            // accepted + backpressured + stolen == offered
+            prop_assert(
+                ib.offered == ib.accepted + ib.stolen + ib.rejected,
+                format!(
+                    "offered {} != accepted {} + stolen {} + rejected {}",
+                    ib.offered, ib.accepted, ib.stolen, ib.rejected
+                ),
+            )?;
+            // nothing queued is lost or double-served
+            prop_assert(
+                ib.accepted + ib.stolen == ib.served + ib.len() as u64,
+                format!(
+                    "in {} != served {} + queued {}",
+                    ib.accepted + ib.stolen,
+                    ib.served,
+                    ib.len()
+                ),
+            )?;
+            prop_assert(ib.served == popped, "served must track pops")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inbox_preserves_fifo_order() {
+    check("inbox fifo", 80, |g| {
+        let cap = g.usize_in(1, 8);
+        let mut ib: BoundedInbox<u64> = BoundedInbox::new(cap);
+        let mut expect = std::collections::VecDeque::new();
+        for step in 0..g.usize_in(1, 60) {
+            if g.bool() {
+                if ib.push(step as u64).is_ok() {
+                    expect.push_back(step as u64);
+                }
+            } else {
+                let got = ib.pop();
+                prop_assert(got == expect.pop_front(), "pop order diverged")?;
+            }
+        }
+        Ok(())
+    });
+}
