@@ -1,6 +1,8 @@
 //! Fleet scaling sweep: the same stream set served by a growing pool of
 //! auxiliaries — the split-ratio advantage at fleet scale — then the
-//! drain disciplines head-to-head under a hot arrival rate.
+//! drain disciplines head-to-head under a hot arrival rate, then
+//! multi-primary sharded ingest soaking up an overload a single
+//! collector has to reject.
 //!
 //! ```sh
 //! cargo run --release --example fleet_scale
@@ -62,11 +64,37 @@ fn main() -> Result<()> {
         );
     }
 
+    // multi-primary sharded ingest: the same overloaded stream set,
+    // the same 3-auxiliary pool, one more Nano-class collector per step
+    println!("\nsharded ingest under overload (24 streams, aux pool = 3):");
+    println!(
+        "{:>9} | {:>8} | {:>8} | {:>8} | {:>8} | {:>12}",
+        "primaries", "admitted", "degraded", "rejected", "handoffs", "makespan (s)"
+    );
+    for primaries in 1..=3usize {
+        let mut cfg = FleetConfig::new(3 + primaries, 24);
+        cfg.primaries = primaries;
+        cfg.rounds = 3;
+        cfg.frames_per_round = 4;
+        let rep = Dispatcher::new(cfg)?.run()?;
+        println!(
+            "{:>9} | {:>8} | {:>8} | {:>8} | {:>8} | {:>12.2}",
+            primaries,
+            rep.total_admitted(),
+            rep.total_degraded(),
+            rep.total_rejected(),
+            rep.stream_handoffs,
+            rep.total_ops_secs()
+        );
+    }
+
     // one admission-controlled overloaded run, with the full report
-    let mut hot = FleetConfig::new(3, 6);
+    // (two primaries so the sharded-ingest ledger renders too)
+    let mut hot = FleetConfig::new(4, 6);
+    hot.primaries = 2;
     hot.rounds = 3;
     hot.frames_per_round = 40;
-    println!("\noverloaded 3-node fleet (admission control on):");
+    println!("\noverloaded 4-node fleet (2 primaries, admission control on):");
     println!("{}", Dispatcher::new(hot)?.run()?.render());
     Ok(())
 }

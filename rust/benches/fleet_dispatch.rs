@@ -1,11 +1,14 @@
 //! Fleet dispatcher benchmarks: admission planning, batched-vs-pipelined
-//! drain at high arrival rates, and MQTT work-queue shipping.
+//! drain at high arrival rates, multi-primary sharded ingest under
+//! overload, and MQTT work-queue shipping.
 //!
 //! Targets: a dispatch round's coordination overhead (admission + per-pair
 //! solves + partition) must stay far below the execution time it
-//! schedules, and the event-driven pipelined drain must cut mean
-//! per-frame queueing delay versus the legacy round-close batched drain
-//! when arrivals run hot.
+//! schedules, the event-driven pipelined drain must cut mean per-frame
+//! queueing delay versus the legacy round-close batched drain when
+//! arrivals run hot, and adding a second ingest primary (one more
+//! collector over the same auxiliary pool) must raise admitted-frame
+//! throughput or cut rejections at overload arrival rates.
 
 use heteroedge::bench::Bench;
 use heteroedge::fleet::{
@@ -68,6 +71,52 @@ fn main() {
         pipelined.queue_delay.p(99.0),
         pipelined.stolen_frames,
         pipelined.primary_fallbacks,
+    );
+
+    // --- multi-primary sharded ingest at overload arrival rates ---
+    // the aux pool stays fixed (3 Xavier-class); each extra primary is
+    // one more Nano-class collector sharding the same stream set. Many
+    // small streams (24 cameras, rates 4..8) keep admission packing
+    // fine-grained, so admitted frames track capacity rather than
+    // stream-rate quantization.
+    let overloaded = |primaries: usize| -> FleetReport {
+        let mut cfg = FleetConfig::new(3 + primaries, 24);
+        cfg.primaries = primaries;
+        cfg.rounds = 4;
+        cfg.frames_per_round = 4; // 144 frames/round offered — far past budget
+        Dispatcher::new(cfg).unwrap().run().unwrap()
+    };
+    b.iter("dispatch run (overloaded, 1 primary)", 5, || {
+        assert!(overloaded(1).total_completed() > 0);
+    });
+    b.iter("dispatch run (overloaded, 2 primaries)", 5, || {
+        assert!(overloaded(2).total_completed() > 0);
+    });
+
+    let single = overloaded(1);
+    let sharded = overloaded(2);
+    assert!(
+        single.total_rejected() > 0,
+        "the arrival rate must actually overload the single-primary fleet"
+    );
+    assert!(
+        sharded.total_admitted() > single.total_admitted()
+            || sharded.total_rejected() < single.total_rejected(),
+        "sharded ingest must admit more or reject less under overload: \
+         admitted {} vs {}, rejected {} vs {}",
+        sharded.total_admitted(),
+        single.total_admitted(),
+        sharded.total_rejected(),
+        single.total_rejected()
+    );
+    println!(
+        "overload (24 streams, aux pool 3): 1 primary admitted {} rejected {} | \
+         2 primaries admitted {} rejected {} handoffs {}",
+        single.total_admitted(),
+        single.total_rejected(),
+        sharded.total_admitted(),
+        sharded.total_rejected(),
+        sharded.stream_handoffs,
     );
 
     // --- the same round with frames physically over the MQTT broker ---

@@ -76,19 +76,29 @@ pub trait NodeHandle {
     /// Backend label for reports.
     fn backend_name(&self) -> &'static str;
 
+    /// Mean observed seconds/image over this node's lifetime, `None`
+    /// until the first frame lands. The fleet's admission path prefers
+    /// its per-round EWMA ([`crate::fleet::ThroughputEwma`]) and only
+    /// consults this to seed cold nodes.
+    fn observed_secs_per_image(&self) -> Option<f64> {
+        if self.frames_done() > 0 {
+            Some(self.exec_secs() / self.frames_done() as f64)
+        } else {
+            None
+        }
+    }
+
     /// Mean observed seconds/image, falling back to the Table I anchors
     /// for a cold node (the fleet admission control needs a rate estimate
     /// before the first frame lands).
     fn secs_per_image_est(&self) -> f64 {
-        if self.frames_done() > 0 {
-            self.exec_secs() / self.frames_done() as f64
-        } else {
+        self.observed_secs_per_image().unwrap_or_else(|| {
             match self.device_kind() {
                 // Table I: 68.34 s (Nano) / 19.0 s (Xavier) per 100 images.
                 DeviceKind::Nano => 0.6834,
                 DeviceKind::Xavier => 0.19,
             }
-        }
+        })
     }
 }
 
@@ -403,6 +413,7 @@ mod tests {
             Box::new(NodeRuntime::new(DeviceKind::Nano, SimBackend::new(), 4));
         // cold node: estimate falls back to the Table I anchor
         assert!((n.secs_per_image_est() - 0.6834).abs() < 1e-12);
+        assert_eq!(n.observed_secs_per_image(), None);
         let p = n.profile();
         assert_eq!(p.secs_per_image, 0.0);
         assert!(p.mem_pct > 0.0);
@@ -413,6 +424,7 @@ mod tests {
         assert!((n.now() - secs).abs() < 1e-9);
         // warm node: estimate is the observed mean
         assert!((n.secs_per_image_est() - secs / 10.0).abs() < 1e-9);
+        assert_eq!(n.observed_secs_per_image(), Some(n.secs_per_image_est()));
         n.sync_to(1e6);
         assert_eq!(n.now(), 1e6);
         assert_eq!(n.backend_name(), "sim");

@@ -2,40 +2,56 @@
 //! machinery.
 //!
 //! Generalizes the two-node [`crate::coordinator::Testbed`] into a
-//! serving fleet. Node 0 is the ingest primary (Nano-class — every
-//! camera stream lands there); nodes 1.. are auxiliaries (Xavier-class).
-//! The run is one continuous discrete-event simulation over the
-//! deterministic [`EventQueue`]: stream *arrival* events and per-frame
-//! aux *service* events interleave on a single timeline, so an auxiliary
+//! serving fleet. Nodes `0..primaries` are ingest primaries
+//! (Nano-class collectors); the remaining nodes form the shared
+//! auxiliary pool (Xavier-class). Every camera stream is owned by
+//! exactly one primary — a weighted rendezvous [`ShardMap`] over the
+//! stream names, weighted by each primary's profiled secs/image — and
+//! lands there on arrival. The run is one continuous discrete-event
+//! simulation over the deterministic [`EventQueue`]: stream *arrival*
+//! events and per-frame aux *service* events interleave on a single
+//! timeline regardless of how many primaries feed it, so an auxiliary
 //! can be executing round-k frames while round-k+1 streams are still
-//! being admitted. Per arrival event the dispatcher:
+//! being admitted. Per round the dispatcher:
 //!
-//! 1. admits the stream's batch through the [`StreamRegistry`]
-//!    (full rate / drop-to-keyframe / reject);
-//! 2. asks the per-pair [`Scheduler`] (Algorithm 1 against live
-//!    [`NodeHandle`] profiles) for each (primary, aux) split ratio —
-//!    an aux whose bounded inbox is filling reports inflated memory, so
-//!    the availability guard λ sheds it *before* it overflows;
-//! 3. combines the pairwise ratios in odds form ([`combine_odds`]:
-//!    `r/(1-r)` = the aux's effective service rate relative to the
-//!    primary) into one offload fraction and per-aux shares, then runs
-//!    the [`Batcher`] dedup→mask→encode→split pipeline;
-//! 4. pushes each aux's share through its bounded inbox, charging
-//!    transfer time on the pairwise channel (optionally also routing the
-//!    encoded bytes through the real in-tree MQTT broker). On overflow
-//!    the frame is *re-offered to sibling auxiliaries cheapest-first*
-//!    (ranked by the same odds-form service rate), paying that sibling's
-//!    channel transfer; only when every aux refuses does it land on the
-//!    primary;
-//! 5. executes: the primary runs its share (plus fallback frames)
-//!    immediately; each auxiliary pops its inbox as frames become ready
-//!    ([`DrainMode::Pipelined`], the default) — one service event per
-//!    frame, queueing delay recorded per node. The legacy
-//!    [`DrainMode::Batched`] round-close drain remains as the
+//! 1. plans admission **per primary**: each primary budgets its shard
+//!    against its own remaining round time plus an equal `1/P` share of
+//!    the auxiliary pool, with per-node secs/image tracked by a
+//!    [`ThroughputEwma`] over observed round throughput (a node that
+//!    slows mid-run stops being over-budgeted within a couple rounds);
+//! 2. re-homes overloaded streams **primary-to-primary**: a stream its
+//!    owner cannot fully admit moves wholesale to the least-loaded
+//!    sibling primary that still has full-rate headroom — *before* any
+//!    frame is dropped to keyframe or rejected (see
+//!    [`super::shard`] for the protocol);
+//! 3. per arrival, asks the owning primary's per-pair [`Scheduler`]
+//!    (Algorithm 1 against live [`NodeHandle`] profiles) for each
+//!    (primary, aux) split ratio — an aux whose bounded inbox is
+//!    filling reports inflated memory, so the availability guard λ
+//!    sheds it *before* it overflows;
+//! 4. combines the pairwise ratios in odds form ([`combine_odds`]) into
+//!    one offload fraction and per-aux shares, runs the [`Batcher`]
+//!    dedup→mask→encode→split pipeline, and pushes each aux's share
+//!    through its bounded inbox, charging transfer time on that
+//!    primary's pairwise channel (optionally also routing the encoded
+//!    bytes through the real in-tree MQTT broker). On overflow the
+//!    frame is re-offered to sibling auxiliaries cheapest-first; only
+//!    when every aux refuses does it land back on the owning primary;
+//! 5. executes: the owning primary runs its share (plus fallback
+//!    frames) immediately; each auxiliary pops its inbox as frames
+//!    become ready ([`DrainMode::Pipelined`], the default) — one
+//!    service event per frame, queueing delay recorded per node. The
+//!    legacy [`DrainMode::Batched`] round-close drain remains as the
 //!    comparator (`--drain batched`).
 //!
 //! Service events carry across round boundaries (cross-round
 //! pipelining); the run only ends once every queued frame has executed.
+//! With `primaries == 1` (the default) the multi-primary machinery —
+//! shard map, pair matrix, capacity split, handoff — is behavior-neutral
+//! and reduces to the single-primary dispatcher of PRs 1–2; the one
+//! deliberate change for every primary count is the admission
+//! estimator, which now tracks round throughput (EWMA) instead of the
+//! lifetime mean and can therefore re-tune warm-run admission.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -51,9 +67,11 @@ use crate::net::mqtt::{Broker, Client, QoS};
 use crate::net::{Band, Channel, ChannelConfig};
 use crate::sim::EventQueue;
 
+use super::estimator::ThroughputEwma;
 use super::inbox::BoundedInbox;
 use super::registry::{AdmissionDecision, StreamRegistry, StreamSpec};
 use super::report::{FleetReport, NodeReport, StreamReport};
+use super::shard::ShardMap;
 
 /// How offloaded frames travel to the auxiliaries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,8 +107,14 @@ impl DrainMode {
 /// Fleet run configuration.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
-    /// Total nodes; node 0 is the primary, the rest are auxiliaries.
+    /// Total nodes; nodes `0..primaries` are ingest primaries, the rest
+    /// are auxiliaries.
     pub n_nodes: usize,
+    /// Ingest primaries sharding the streams between them. Default 1 —
+    /// the single-primary topology of PRs 1–2 (the sharding/handoff
+    /// machinery is behavior-neutral at P=1; only the EWMA admission
+    /// estimator deliberately shifts warm-run capacity estimates).
+    pub primaries: usize,
     /// Camera streams (used by [`Dispatcher::new`]'s default stream set).
     pub n_streams: usize,
     /// Base frames per stream per round (streams vary ±50% around it).
@@ -111,6 +135,9 @@ pub struct FleetConfig {
     /// When false, the registry admits everything (the apples-to-apples
     /// mode for baseline comparisons on an identical stream set).
     pub admission_control: bool,
+    /// EWMA weight for the admission path's per-node secs/image
+    /// estimate (newest round's observation), in (0, 1].
+    pub ewma_alpha: f64,
     pub transport: Transport,
     /// Auxiliary drain discipline.
     pub drain: DrainMode,
@@ -123,6 +150,7 @@ impl FleetConfig {
     pub fn new(n_nodes: usize, n_streams: usize) -> Self {
         FleetConfig {
             n_nodes,
+            primaries: 1,
             n_streams,
             frames_per_round: 10,
             rounds: 6,
@@ -134,6 +162,7 @@ impl FleetConfig {
             dedup: false,
             jitter: false,
             admission_control: true,
+            ewma_alpha: 0.5,
             transport: Transport::Sim,
             drain: DrainMode::Pipelined,
             work_stealing: true,
@@ -145,6 +174,7 @@ impl FleetConfig {
     pub fn all_primary(&self) -> FleetConfig {
         FleetConfig {
             n_nodes: 1,
+            primaries: 1,
             admission_control: false,
             transport: Transport::Sim,
             ..self.clone()
@@ -199,31 +229,44 @@ struct Job {
     ready: f64,
 }
 
-/// One fleet node: shared-seam handle + bounded inbox + pairwise link
-/// and scheduler state (link/inbox/scheduler are unused on node 0).
+/// One fleet node: shared-seam handle + bounded inbox. The inbox and
+/// `last_r` are auxiliary-side state; the ingest/handoff ledger is
+/// primary-side state. Pairwise link/scheduler state lives in the
+/// dispatcher's `pairs` matrix, one row per ingest primary.
 struct NodeSlot {
     name: String,
     handle: Box<dyn NodeHandle>,
     inbox: BoundedInbox<Job>,
-    /// Primary↔this-node link.
-    link: Channel,
-    /// Per-pair Algorithm-1 state (β hysteresis is per link).
-    scheduler: Scheduler,
-    /// Last pairwise split ratio decided for this aux (surface shaping).
+    /// Last pairwise split ratio any primary decided for this aux
+    /// (surface shaping on the service path).
     last_r: f64,
     /// Overflow frames of this node that a sibling absorbed.
     stolen_out: u64,
     /// Inbox wait per served frame (ready → service start).
     queue_delay: Histogram,
+    /// Admitted frames ingested through this node (primaries only).
+    ingest_frames: u64,
+    /// Streams re-homed onto this primary by admission-time handoff.
+    handoffs_in: u64,
+    /// Streams this primary shed to a sibling by handoff.
+    handoffs_out: u64,
+}
+
+/// Per-(primary, auxiliary) pair state: the physical link the transfer
+/// rides and the Algorithm-1 scheduler whose β hysteresis is scoped to
+/// exactly this pair.
+struct PairState {
+    link: Channel,
+    scheduler: Scheduler,
 }
 
 /// The discrete events the fleet timeline interleaves.
 #[derive(Debug, Clone, Copy)]
 enum FleetEvent {
-    /// A stream's batch lands on the primary.
+    /// A stream's batch lands on its owning primary.
     Arrival { stream: usize },
-    /// Auxiliary `aux` (tail index; node `aux + 1`) is free to serve its
-    /// next queued frame.
+    /// Auxiliary `aux` (pool index; node `aux + primaries`) is free to
+    /// serve its next queued frame.
     Service { aux: usize },
 }
 
@@ -233,12 +276,14 @@ struct RunState {
     pooled: Histogram,
     queue_delay: Histogram,
     events: EventQueue<FleetEvent>,
-    /// Per-aux (tail index): a Service event is queued or executing.
+    /// Per-aux (pool index): a Service event is queued or executing.
     busy: Vec<bool>,
     offload_bytes: u64,
     backpressure_events: u64,
     stolen_frames: u64,
     primary_fallbacks: u64,
+    /// Admission-time primary-to-primary stream re-homes.
+    handoffs: u64,
 }
 
 /// Physical MQTT work-queue fabric: one broker, a dispatcher publisher,
@@ -246,17 +291,18 @@ struct RunState {
 struct MqttFabric {
     _broker: Broker,
     publisher: Client,
-    /// Index k serves auxiliary node k+1.
+    /// Index k serves auxiliary node `k + primaries`.
     subscribers: Vec<Client>,
+    primaries: usize,
     pub delivered: u64,
 }
 
 impl MqttFabric {
-    fn start(n_nodes: usize) -> Result<MqttFabric> {
+    fn start(n_nodes: usize, primaries: usize) -> Result<MqttFabric> {
         let broker = Broker::start().context("starting fleet broker")?;
         let addr = broker.addr();
         let mut subscribers = Vec::new();
-        for j in 1..n_nodes {
+        for j in primaries..n_nodes {
             let mut c = Client::connect(addr, &format!("node-{j}"))?;
             c.subscribe(&format!("{FRAMES_TOPIC_PREFIX}/node-{j}"))?;
             subscribers.push(c);
@@ -266,6 +312,7 @@ impl MqttFabric {
             _broker: broker,
             publisher,
             subscribers,
+            primaries,
             delivered: 0,
         })
     }
@@ -276,7 +323,7 @@ impl MqttFabric {
         let topic = format!("{FRAMES_TOPIC_PREFIX}/node-{aux_node}");
         self.publisher
             .publish(&topic, payload, QoS::AtLeastOnce, false)?;
-        match self.subscribers[aux_node - 1].recv_timeout(Duration::from_secs(10)) {
+        match self.subscribers[aux_node - self.primaries].recv_timeout(Duration::from_secs(10)) {
             Some(msg) if msg.payload.len() == payload.len() => {
                 self.delivered += 1;
                 Ok(())
@@ -329,6 +376,15 @@ pub struct Dispatcher {
     pub cfg: FleetConfig,
     pub registry: StreamRegistry,
     nodes: Vec<NodeSlot>,
+    /// Pairwise link + Algorithm-1 state, `pairs[primary][aux]`.
+    pairs: Vec<Vec<PairState>>,
+    /// Stream→primary ownership (HRW base + handoff overrides).
+    shard: ShardMap,
+    /// Admission-path secs/image estimate per node (EWMA over observed
+    /// round throughput; falls back to the Table I anchors while cold).
+    ewma: Vec<ThroughputEwma>,
+    /// Per-node (frames_done, exec_secs) at the last EWMA observation.
+    ewma_snap: Vec<(u64, f64)>,
     gens: Vec<SceneGenerator>,
     batchers: Vec<Batcher>,
     fabric: Option<MqttFabric>,
@@ -351,26 +407,32 @@ impl Dispatcher {
 
     /// Build a fleet over an explicit stream registry.
     pub fn with_streams(cfg: FleetConfig, registry: StreamRegistry) -> Result<Dispatcher> {
-        ensure!(cfg.n_nodes >= 1, "fleet needs at least the primary node");
+        ensure!(cfg.primaries >= 1, "fleet needs at least one primary");
+        ensure!(
+            cfg.n_nodes >= cfg.primaries,
+            "fleet of {} nodes cannot host {} primaries",
+            cfg.n_nodes,
+            cfg.primaries
+        );
         ensure!(!registry.is_empty(), "fleet needs at least one stream");
         ensure!(cfg.rounds >= 1, "fleet needs at least one round");
         ensure!(cfg.round_secs > 0.0, "round period must be positive");
+        ensure!(
+            cfg.ewma_alpha > 0.0 && cfg.ewma_alpha <= 1.0,
+            "ewma_alpha {} outside (0, 1]",
+            cfg.ewma_alpha
+        );
 
         let mut nodes = Vec::with_capacity(cfg.n_nodes);
         for j in 0..cfg.n_nodes {
-            // node 0 = Nano-class ingest primary, the rest Xavier-class
-            // auxiliaries — the paper's asymmetry, fleet-sized
-            let kind = if j == 0 {
+            // nodes 0..P = Nano-class ingest primaries, the rest
+            // Xavier-class auxiliaries — the paper's asymmetry,
+            // fleet-sized
+            let kind = if j < cfg.primaries {
                 DeviceKind::Nano
             } else {
                 DeviceKind::Xavier
             };
-            let mut ch_cfg = ChannelConfig::wifi(cfg.band);
-            if !cfg.jitter {
-                ch_cfg.jitter_rel = 0.0;
-            }
-            // auxiliaries sit at staggered distances from the primary
-            let distance_m = 3.0 + j as f64;
             nodes.push(NodeSlot {
                 name: format!("node-{j}"),
                 handle: Box::new(NodeRuntime::new(
@@ -379,13 +441,58 @@ impl Dispatcher {
                     cfg.seed ^ (j as u64 + 1),
                 )),
                 inbox: BoundedInbox::new(cfg.inbox_capacity.max(1)),
-                link: Channel::new(ch_cfg, distance_m, cfg.seed ^ (0x100 + j as u64)),
-                scheduler: Scheduler::new(SchedulerConfig::paper_default()),
                 last_r: 0.7,
                 stolen_out: 0,
                 queue_delay: Histogram::new(),
+                ingest_frames: 0,
+                handoffs_in: 0,
+                handoffs_out: 0,
             });
         }
+
+        // one (link, scheduler) pair per (primary, auxiliary): β
+        // hysteresis and channel state are scoped to the pair, exactly
+        // as in the two-node testbed
+        let mut pairs = Vec::with_capacity(cfg.primaries);
+        for p in 0..cfg.primaries {
+            let mut row = Vec::with_capacity(cfg.n_nodes - cfg.primaries);
+            for a in cfg.primaries..cfg.n_nodes {
+                let mut ch_cfg = ChannelConfig::wifi(cfg.band);
+                if !cfg.jitter {
+                    ch_cfg.jitter_rel = 0.0;
+                }
+                // auxiliaries sit at staggered distances from each
+                // primary (primary 0 reproduces the PR 1 layout)
+                let distance_m = 3.0 + a as f64 + 1.5 * p as f64;
+                row.push(PairState {
+                    link: Channel::new(
+                        ch_cfg,
+                        distance_m,
+                        cfg.seed ^ (0x100 + a as u64 + ((p as u64) << 32)),
+                    ),
+                    scheduler: Scheduler::new(SchedulerConfig::paper_default()),
+                });
+            }
+            pairs.push(row);
+        }
+
+        // shard streams over the primaries, weighted by profiled
+        // service rate (1 / secs-per-image: faster collectors own more).
+        // NB: freshly built primaries are cold and same-kind, so through
+        // this constructor the weights are equal in practice — the
+        // weighting bites when primaries' device classes diverge or a
+        // caller builds a ShardMap from live profiles (the prop tests
+        // exercise the weighted path directly)
+        let weights: Vec<f64> = (0..cfg.primaries)
+            .map(|p| 1.0 / nodes[p].handle.secs_per_image_est().max(1e-6))
+            .collect();
+        let names: Vec<&str> = registry.streams.iter().map(|s| s.name.as_str()).collect();
+        let shard = ShardMap::new(cfg.seed, &names, &weights)?;
+
+        let ewma = (0..cfg.n_nodes)
+            .map(|_| ThroughputEwma::new(cfg.ewma_alpha))
+            .collect();
+        let ewma_snap = vec![(0u64, 0.0f64); cfg.n_nodes];
 
         let gens = (0..registry.len())
             .map(|i| SceneGenerator::paper_default(cfg.seed ^ (0x1000 + i as u64)))
@@ -407,12 +514,16 @@ impl Dispatcher {
             .collect();
         let fabric = match cfg.transport {
             Transport::Sim => None,
-            Transport::Mqtt => Some(MqttFabric::start(cfg.n_nodes)?),
+            Transport::Mqtt => Some(MqttFabric::start(cfg.n_nodes, cfg.primaries)?),
         };
         Ok(Dispatcher {
             cfg,
             registry,
             nodes,
+            pairs,
+            shard,
+            ewma,
+            ewma_snap,
             gens,
             batchers,
             fabric,
@@ -422,7 +533,10 @@ impl Dispatcher {
     /// Override one auxiliary's inbox depth before the run — lets tests
     /// and asymmetric deployments congest a single node.
     pub fn set_inbox_capacity(&mut self, node: usize, capacity: usize) -> Result<()> {
-        ensure!(node >= 1, "node 0 (primary) has no inbox");
+        ensure!(
+            node >= self.cfg.primaries,
+            "node {node} is an ingest primary (no inbox)"
+        );
         ensure!(node < self.nodes.len(), "node {node} out of range");
         ensure!(capacity >= 1, "inbox capacity must be positive");
         ensure!(
@@ -433,28 +547,158 @@ impl Dispatcher {
         Ok(())
     }
 
-    /// Fleet frame capacity for the round ending at `round_end`:
-    /// every node contributes its remaining wall-clock budget divided by
-    /// its (estimated) per-image cost. Each node's budget is capped at
-    /// one round period — a node whose clock idles (e.g. an aux the λ
-    /// guard kept at r=0 for several rounds) must not accumulate
-    /// phantom multi-round capacity it can never actually absorb.
-    /// Queued inbox work is committed but (under the pipelined drain)
-    /// not yet on the clock, so it is charged against the budget
-    /// explicitly — otherwise a backlogged aux would report a full
-    /// round of free capacity every round and admission would never
-    /// shed under sustained overload.
-    fn capacity_frames(&self, round_end: f64, round_secs: f64) -> f64 {
-        self.nodes
-            .iter()
-            .map(|slot| {
-                let per_img = slot.handle.secs_per_image_est().max(1e-6);
-                let backlog = slot.inbox.len() as f64 * per_img;
-                let avail =
-                    (round_end - slot.handle.now() - backlog).clamp(0.0, round_secs);
-                avail / per_img
-            })
-            .sum()
+    /// Current ingest owner (primary node index) of stream `s`.
+    pub fn stream_owner(&self, s: usize) -> Option<usize> {
+        (s < self.shard.len()).then(|| self.shard.owner(s))
+    }
+
+    /// Operator/test seam: re-home stream `s` onto primary `p` before a
+    /// run. Unlike the automatic admission-time handoff this does NOT
+    /// count toward the handoff ledger.
+    pub fn rehome_stream(&mut self, s: usize, p: usize) -> Result<()> {
+        ensure!(p < self.cfg.primaries, "primary {p} out of range");
+        self.shard.rehome(s, p)
+    }
+
+    /// Admission-path secs/image estimate for node `j`: the round
+    /// throughput EWMA when warm, else the node's static estimate (the
+    /// Table I anchors for a cold node).
+    fn per_img_est(&self, j: usize) -> f64 {
+        self.ewma[j]
+            .estimate_or(self.nodes[j].handle.secs_per_image_est())
+            .max(1e-6)
+    }
+
+    /// Fold each node's (frames, secs) delta since the previous round
+    /// into its EWMA — one observation per node per round.
+    fn observe_round_throughput(&mut self) {
+        for j in 0..self.nodes.len() {
+            let frames = self.nodes[j].handle.frames_done();
+            let secs = self.nodes[j].handle.exec_secs();
+            let (f0, s0) = self.ewma_snap[j];
+            if frames > f0 && secs > s0 {
+                self.ewma[j].observe((secs - s0) / (frames - f0) as f64);
+            }
+            self.ewma_snap[j] = (frames, secs);
+        }
+    }
+
+    /// Node `j`'s frame capacity for the round ending at `round_end`:
+    /// its remaining wall-clock budget divided by its per-image cost.
+    /// The budget is capped at one round period — a node whose clock
+    /// idles (e.g. an aux the λ guard kept at r=0 for several rounds)
+    /// must not accumulate phantom multi-round capacity. Queued inbox
+    /// work is committed but (under the pipelined drain) not yet on the
+    /// clock, so it is charged against the budget explicitly —
+    /// otherwise a backlogged aux would report a full round of free
+    /// capacity every round and admission would never shed under
+    /// sustained overload.
+    fn node_capacity_frames(&self, j: usize, round_end: f64, round_secs: f64) -> f64 {
+        let per_img = self.per_img_est(j);
+        let slot = &self.nodes[j];
+        let backlog = slot.inbox.len() as f64 * per_img;
+        let avail = (round_end - slot.handle.now() - backlog).clamp(0.0, round_secs);
+        avail / per_img
+    }
+
+    /// Primary `p`'s admission budget: its own remaining round budget
+    /// plus an equal `1/P` share of the shared auxiliary pool. The aux
+    /// terms are accumulated in node order starting from the primary's
+    /// own term, so with one primary this folds the exact same
+    /// expression over the same per-node estimates as the PR 1
+    /// fleet-wide capacity sum (`×1.0` is exact) — the estimates
+    /// themselves now come from the round-throughput EWMA.
+    fn primary_capacity_frames(&self, p: usize, round_end: f64, round_secs: f64) -> f64 {
+        let aux_frac = 1.0 / self.cfg.primaries as f64;
+        let mut acc = self.node_capacity_frames(p, round_end, round_secs);
+        for a in self.cfg.primaries..self.nodes.len() {
+            acc += self.node_capacity_frames(a, round_end, round_secs) * aux_frac;
+        }
+        acc
+    }
+
+    /// Build the round's admission plan. Each primary plans its shard
+    /// against its own capacity; then every stream an owner could not
+    /// fully admit is offered to the least-loaded sibling primary with
+    /// full-rate headroom (whole-stream handoff, persistent across
+    /// rounds) BEFORE any degradation or rejection is accepted.
+    fn plan_round_admission(
+        &mut self,
+        round_end: f64,
+        round_secs: f64,
+        st: &mut RunState,
+    ) -> Vec<AdmissionDecision> {
+        let p_count = self.cfg.primaries;
+        let n = self.registry.len();
+        let mut plan = vec![AdmissionDecision::Reject; n];
+        let mut remaining = Vec::with_capacity(p_count);
+        for p in 0..p_count {
+            let cap = self.primary_capacity_frames(p, round_end, round_secs);
+            let shard = self.shard.owned_by(p);
+            let (decisions, rem) = self.registry.admission_plan_subset(&shard, cap);
+            for (&i, d) in shard.iter().zip(decisions) {
+                plan[i] = d;
+            }
+            remaining.push(rem);
+        }
+
+        if p_count > 1 {
+            // handoff pass, (priority desc, index) order — highest
+            // priority streams get first claim on freed headroom
+            let mut needy: Vec<usize> = (0..n)
+                .filter(|&i| plan[i] != AdmissionDecision::Admit)
+                .collect();
+            needy.sort_by_key(|&i| {
+                (std::cmp::Reverse(self.registry.streams[i].priority), i)
+            });
+            for i in needy {
+                let owner = self.shard.owner(i);
+                let rate = self.registry.streams[i].rate;
+                let kept_now = plan[i].kept_of(rate);
+                // the plan already charged kept_now for this stream, so
+                // the capacity actually available to IT on its owner is
+                // the unconsumed remainder plus its own charge
+                let owner_avail = remaining[owner] + kept_now as f64;
+                // earlier handoffs may have freed the owner itself —
+                // full admission in place beats a pointless migration
+                if owner_avail >= rate as f64 {
+                    remaining[owner] -= (rate - kept_now) as f64;
+                    plan[i] = AdmissionDecision::Admit;
+                    continue;
+                }
+                let target = (0..p_count)
+                    .filter(|&q| q != owner && remaining[q] >= rate as f64)
+                    .max_by(|&a, &b| {
+                        remaining[a]
+                            .partial_cmp(&remaining[b])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.cmp(&a)) // tie: lowest index
+                    });
+                let Some(q) = target else {
+                    // no sibling has full-rate headroom; still claim any
+                    // capacity earlier handoffs freed on the owner (a
+                    // shallower degrade, or admission out of rejection)
+                    let upgraded = self.registry.best_decision(rate, owner_avail);
+                    if upgraded.kept_of(rate) > kept_now {
+                        remaining[owner] -= (upgraded.kept_of(rate) - kept_now) as f64;
+                        plan[i] = upgraded;
+                    }
+                    continue;
+                };
+                remaining[q] -= rate as f64;
+                // the owner stops serving this stream entirely
+                remaining[owner] += kept_now as f64;
+                plan[i] = AdmissionDecision::Admit;
+                // rehome cannot fail: i < n and q < primaries by
+                // construction of the loops above
+                let _ = self.shard.rehome(i, q);
+                self.nodes[owner].handoffs_out += 1;
+                self.nodes[q].handoffs_in += 1;
+                st.stream_reports[i].handoffs += 1;
+                st.handoffs += 1;
+            }
+        }
+        plan
     }
 
     /// Drive the full run; consumes the configured rounds.
@@ -470,20 +714,29 @@ impl Dispatcher {
             pooled: Histogram::new(),
             queue_delay: Histogram::new(),
             events: EventQueue::new(),
-            busy: vec![false; self.nodes.len().saturating_sub(1)],
+            busy: vec![false; self.nodes.len().saturating_sub(cfg.primaries)],
             offload_bytes: 0,
             backpressure_events: 0,
             stolen_frames: 0,
             primary_fallbacks: 0,
+            handoffs: 0,
         };
+
+        // baseline the EWMA deltas at the run's starting counters
+        for j in 0..self.nodes.len() {
+            self.ewma_snap[j] = (
+                self.nodes[j].handle.frames_done(),
+                self.nodes[j].handle.exec_secs(),
+            );
+        }
 
         for round in 0..cfg.rounds {
             let round_start = round as f64 * cfg.round_secs;
             let round_end = round_start + cfg.round_secs;
 
             let admission = if cfg.admission_control {
-                self.registry
-                    .admission_plan(self.capacity_frames(round_end, cfg.round_secs))
+                self.observe_round_throughput();
+                self.plan_round_admission(round_end, cfg.round_secs, &mut st)
             } else {
                 vec![AdmissionDecision::Admit; self.registry.len()]
             };
@@ -525,7 +778,8 @@ impl Dispatcher {
         let nodes = self
             .nodes
             .iter()
-            .map(|slot| NodeReport {
+            .enumerate()
+            .map(|(j, slot)| NodeReport {
                 name: slot.name.clone(),
                 kind: slot.handle.device_kind().name(),
                 frames: slot.handle.frames_done(),
@@ -540,12 +794,21 @@ impl Dispatcher {
                 stolen_in: slot.inbox.stolen,
                 stolen_out: slot.stolen_out,
                 queue_delay_mean_s: slot.queue_delay.mean(),
+                owned_streams: if j < cfg.primaries {
+                    self.shard.owned_by(j).len()
+                } else {
+                    0
+                },
+                ingest_frames: slot.ingest_frames,
+                handoffs_in: slot.handoffs_in,
+                handoffs_out: slot.handoffs_out,
             })
             .collect();
 
         Ok(FleetReport {
             streams: st.stream_reports,
             nodes,
+            primaries: cfg.primaries,
             makespan_secs: makespan,
             latency: st.pooled,
             queue_delay: st.queue_delay,
@@ -555,6 +818,7 @@ impl Dispatcher {
             backpressure_events: st.backpressure_events,
             stolen_frames: st.stolen_frames,
             primary_fallbacks: st.primary_fallbacks,
+            stream_handoffs: st.handoffs,
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
         })
     }
@@ -578,9 +842,9 @@ impl Dispatcher {
         }
     }
 
-    /// One stream batch lands on the primary: admit, split, encode,
-    /// place every offloaded frame (stealing on overflow), run the
-    /// primary's share.
+    /// One stream batch lands on its owning primary: admit, split,
+    /// encode, place every offloaded frame (stealing on overflow), run
+    /// the primary's share.
     fn handle_arrival(
         &mut self,
         s: usize,
@@ -589,6 +853,7 @@ impl Dispatcher {
         st: &mut RunState,
     ) -> Result<()> {
         let (drain, work_stealing) = (self.cfg.drain, self.cfg.work_stealing);
+        let p_count = self.cfg.primaries;
         let spec = self.registry.streams[s].clone();
         st.stream_reports[s].offered += spec.rate as u64;
 
@@ -604,18 +869,23 @@ impl Dispatcher {
             return Ok(());
         }
 
-        let (head, tail) = self.nodes.split_at_mut(1);
-        let primary = &mut head[0];
+        let owner = self.shard.owner(s);
+        let (head, tail) = self.nodes.split_at_mut(p_count);
+        let primary = &mut head[owner];
+        let pair_row = &mut self.pairs[owner];
+        primary.ingest_frames += kept.len() as u64;
         primary.handle.sync_to(t_arr);
         let pprof = primary.handle.profile();
 
-        // pairwise Algorithm-1 decisions; inbox pressure feeds λ
+        // pairwise Algorithm-1 decisions for THIS primary; inbox
+        // pressure feeds λ
         let mut ratios: Vec<f64> = Vec::with_capacity(tail.len());
-        for aux in tail.iter_mut() {
+        for (k, aux) in tail.iter_mut().enumerate() {
+            let pair = &mut pair_row[k];
             let mut aprof = aux.handle.profile();
             aprof.mem_pct = aux.inbox.pressure_mem_pct(aprof.mem_pct);
-            let probe = aux.link.expected_latency_s(48 * 1024);
-            let d = aux
+            let probe = pair.link.expected_latency_s(48 * 1024);
+            let d = pair
                 .scheduler
                 .decide(&pprof, &aprof, spec.workload, spec.masked, probe, false);
             let r = d.r.clamp(0.0, MAX_PAIR_RATIO);
@@ -628,7 +898,8 @@ impl Dispatcher {
 
         // steal order: siblings ranked cheapest-first by the same
         // odds-form service rate (ties broken by index, deterministic)
-        let mut steal_order: Vec<usize> = (0..tail.len()).filter(|&j| aux_shares[j] > 0.0).collect();
+        let mut steal_order: Vec<usize> =
+            (0..tail.len()).filter(|&j| aux_shares[j] > 0.0).collect();
         steal_order.sort_by(|&a, &b| {
             aux_shares[b]
                 .partial_cmp(&aux_shares[a])
@@ -688,8 +959,9 @@ impl Dispatcher {
                         continue;
                     }
                     // inbox admission BEFORE wire time: the channel is
-                    // only charged for frames a node accepts
-                    let w = aux.link.send(enc.wire_bytes() as u64);
+                    // only charged for frames a node accepts; the
+                    // transfer rides the owning primary's pairwise link
+                    let w = pair_row[d].link.send(enc.wire_bytes() as u64);
                     xfer[d] += w;
                     let mut job = job_opt.take().expect("job in flight");
                     job.ready = base + xfer[d];
@@ -720,11 +992,12 @@ impl Dispatcher {
                             tail[k].stolen_out += 1;
                         }
                         if let Some(fab) = self.fabric.as_mut() {
-                            fab.ship(d + 1, &enc.bytes)?;
+                            fab.ship(p_count + d, &enc.bytes)?;
                         }
                     }
                     None => {
-                        // every aux refused — the primary absorbs it
+                        // every aux refused — the owning primary
+                        // absorbs it
                         let job = job_opt.take().expect("unplaced job");
                         st.primary_fallbacks += 1;
                         local.push(job.frame);
@@ -757,7 +1030,7 @@ impl Dispatcher {
             }
         }
 
-        // primary executes its share (plus fallback frames)
+        // the owning primary executes its share (plus fallback frames)
         if !local.is_empty() {
             let n_local = local.len() as u64;
             primary
@@ -773,10 +1046,11 @@ impl Dispatcher {
         Ok(())
     }
 
-    /// One service event: auxiliary `k` (tail index) pops and executes
+    /// One service event: auxiliary `k` (pool index) pops and executes
     /// its oldest queued frame, then re-arms if more work is queued.
     fn serve_one(&mut self, k: usize, at: f64, st: &mut RunState) -> Result<()> {
-        let slot = &mut self.nodes[k + 1];
+        let node = self.cfg.primaries + k;
+        let slot = &mut self.nodes[node];
         let Some(job) = slot.inbox.pop() else {
             st.busy[k] = false;
             return Ok(());
@@ -806,7 +1080,8 @@ impl Dispatcher {
     /// Legacy round-close drain: every auxiliary executes its queued
     /// work batched per stream (deterministic stream order).
     fn drain_batched(&mut self, st: &mut RunState) -> Result<()> {
-        let (_, tail) = self.nodes.split_at_mut(1);
+        let p_count = self.cfg.primaries;
+        let (_, tail) = self.nodes.split_at_mut(p_count);
         for aux in tail.iter_mut() {
             let jobs = aux.inbox.drain();
             if jobs.is_empty() {
@@ -986,5 +1261,72 @@ mod tests {
             assert_eq!(s.offered, s.admitted + s.degraded + s.rejected, "{}", s.name);
             assert_eq!(s.completed, s.admitted - s.deduped, "{}", s.name);
         }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_primary_counts() {
+        let mut cfg = FleetConfig::new(2, 2);
+        cfg.primaries = 0;
+        assert!(Dispatcher::new(cfg).is_err(), "zero primaries");
+        let mut cfg = FleetConfig::new(2, 2);
+        cfg.primaries = 3;
+        assert!(Dispatcher::new(cfg).is_err(), "more primaries than nodes");
+        let mut cfg = FleetConfig::new(3, 2);
+        cfg.ewma_alpha = 0.0;
+        assert!(Dispatcher::new(cfg).is_err(), "degenerate EWMA alpha");
+    }
+
+    #[test]
+    fn multi_primary_fleet_conserves_and_attributes_ingest() {
+        let mut cfg = FleetConfig::new(5, 6);
+        cfg.primaries = 2;
+        cfg.rounds = 3;
+        cfg.frames_per_round = 4;
+        cfg.admission_control = false;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        // every stream has exactly one owner among the primaries
+        for s in 0..6 {
+            let owner = d.stream_owner(s).expect("stream exists");
+            assert!(owner < 2, "stream {s} owned by non-primary {owner}");
+        }
+        assert_eq!(d.stream_owner(6), None);
+        let rep = d.run().unwrap();
+        assert_eq!(rep.total_completed(), rep.total_offered());
+        assert_eq!(rep.primaries, 2);
+        assert_eq!(rep.nodes[0].kind, rep.nodes[1].kind, "both primaries Nano");
+        // ingest is attributed to the owning primaries and nothing else
+        let ingest: u64 = rep.nodes[..2].iter().map(|n| n.ingest_frames).sum();
+        assert_eq!(ingest, rep.total_admitted());
+        assert!(rep.nodes[2..].iter().all(|n| n.ingest_frames == 0));
+        let owned: usize = rep.nodes[..2].iter().map(|n| n.owned_streams).sum();
+        assert_eq!(owned, 6, "shard must partition the streams");
+        assert!(rep.nodes[2..].iter().all(|n| n.owned_streams == 0));
+        // no admission pressure, no handoff
+        assert_eq!(rep.stream_handoffs, 0);
+    }
+
+    #[test]
+    fn rehome_stream_validates_and_moves_ownership() {
+        let mut cfg = FleetConfig::new(4, 4);
+        cfg.primaries = 2;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        d.rehome_stream(0, 1).unwrap();
+        assert_eq!(d.stream_owner(0), Some(1));
+        assert!(d.rehome_stream(0, 2).is_err(), "node 2 is not a primary");
+        assert!(d.rehome_stream(9, 0).is_err(), "no such stream");
+    }
+
+    #[test]
+    fn all_primaries_no_aux_fleet_runs_local_only() {
+        let mut cfg = FleetConfig::new(2, 3);
+        cfg.primaries = 2;
+        cfg.rounds = 2;
+        cfg.frames_per_round = 3;
+        cfg.admission_control = false;
+        let rep = Dispatcher::new(cfg).unwrap().run().unwrap();
+        assert_eq!(rep.total_completed(), rep.total_offered());
+        assert_eq!(rep.offload_bytes, 0, "no aux pool, no offload");
+        let ingest: u64 = rep.nodes.iter().map(|n| n.ingest_frames).sum();
+        assert_eq!(ingest, rep.total_completed());
     }
 }

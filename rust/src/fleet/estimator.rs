@@ -1,0 +1,138 @@
+//! Admission-path throughput estimator: an EWMA over observed per-round
+//! secs/image.
+//!
+//! The fleet's admission control needs each node's service rate to
+//! budget the round. A lifetime mean (total exec seconds / total frames)
+//! is stable but sluggish: when a node slows mid-run — thermal
+//! throttling, a heavier split-ratio surface, contention — the mean
+//! still remembers every fast early round and overestimates capacity for
+//! the rest of the mission, so admission keeps accepting frames the
+//! fleet cannot serve. The dispatcher instead feeds this EWMA one
+//! observation per round (that round's observed secs/image) and uses its
+//! estimate in [`capacity planning`](crate::fleet::Dispatcher); the
+//! estimator converges onto a rate change within a couple of rounds
+//! while still smoothing single-round noise.
+//!
+//! Seeding: the first observation is taken verbatim (no blend against a
+//! synthetic prior), so after one round the estimate equals the lifetime
+//! mean exactly and a cold node keeps using the Table I anchors via
+//! [`estimate_or`](ThroughputEwma::estimate_or).
+
+/// Exponentially weighted moving average of a node's secs/image.
+#[derive(Debug, Clone)]
+pub struct ThroughputEwma {
+    alpha: f64,
+    estimate: Option<f64>,
+}
+
+impl ThroughputEwma {
+    /// `alpha` in (0, 1]: the weight of the newest round. Higher tracks
+    /// load changes faster; 1.0 degenerates to "last round only".
+    pub fn new(alpha: f64) -> Self {
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha must be in (0, 1], got {alpha}"
+        );
+        ThroughputEwma {
+            alpha,
+            estimate: None,
+        }
+    }
+
+    /// Fold in one observed secs/image sample. The first finite positive
+    /// sample seeds the estimate verbatim; degenerate samples (NaN, inf,
+    /// non-positive) are dropped rather than poisoning the average.
+    pub fn observe(&mut self, secs_per_image: f64) {
+        if !secs_per_image.is_finite() || secs_per_image <= 0.0 {
+            return;
+        }
+        self.estimate = Some(match self.estimate {
+            None => secs_per_image,
+            Some(prev) => self.alpha * secs_per_image + (1.0 - self.alpha) * prev,
+        });
+    }
+
+    /// The current estimate, or `None` while cold.
+    pub fn estimate(&self) -> Option<f64> {
+        self.estimate
+    }
+
+    /// The current estimate, or `fallback` while cold (the fleet passes
+    /// the node's static Table I anchor).
+    pub fn estimate_or(&self, fallback: f64) -> f64 {
+        self.estimate.unwrap_or(fallback)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_estimator_uses_the_fallback() {
+        let e = ThroughputEwma::new(0.5);
+        assert_eq!(e.estimate(), None);
+        assert_eq!(e.estimate_or(0.6834), 0.6834);
+    }
+
+    #[test]
+    fn first_observation_seeds_verbatim() {
+        let mut e = ThroughputEwma::new(0.25);
+        e.observe(0.19);
+        assert_eq!(e.estimate(), Some(0.19));
+    }
+
+    /// The satellite's contract: a mid-run slowdown (0.2 s/img jumping
+    /// to 0.4 s/img) must pull the EWMA estimate toward the new rate
+    /// faster than the lifetime mean gets there.
+    #[test]
+    fn tracks_a_mid_run_slowdown_faster_than_the_lifetime_mean() {
+        let mut e = ThroughputEwma::new(0.5);
+        let mut sum = 0.0;
+        let mut n = 0.0;
+        for _ in 0..5 {
+            e.observe(0.2);
+            sum += 0.2;
+            n += 1.0;
+        }
+        // the node slows down: rounds now cost 2x per image
+        for _ in 0..3 {
+            e.observe(0.4);
+            sum += 0.4;
+            n += 1.0;
+        }
+        let lifetime_mean = sum / n; // 0.275 — still remembers the fast rounds
+        let est = e.estimate().unwrap(); // 0.2 -> 0.3 -> 0.35 -> 0.375
+        assert!((est - 0.375).abs() < 1e-12, "unexpected EWMA value {est}");
+        assert!(
+            (0.4 - est) < (0.4 - lifetime_mean),
+            "EWMA ({est}) must sit closer to the new rate than the mean ({lifetime_mean})"
+        );
+    }
+
+    #[test]
+    fn alpha_one_is_last_round_only() {
+        let mut e = ThroughputEwma::new(1.0);
+        e.observe(0.2);
+        e.observe(0.9);
+        assert_eq!(e.estimate(), Some(0.9));
+    }
+
+    #[test]
+    fn degenerate_samples_are_dropped() {
+        let mut e = ThroughputEwma::new(0.5);
+        e.observe(f64::NAN);
+        e.observe(-1.0);
+        e.observe(0.0);
+        assert_eq!(e.estimate(), None);
+        e.observe(0.3);
+        e.observe(f64::INFINITY);
+        assert_eq!(e.estimate(), Some(0.3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_alpha_is_a_bug() {
+        let _ = ThroughputEwma::new(0.0);
+    }
+}

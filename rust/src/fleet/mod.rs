@@ -7,6 +7,13 @@
 //!
 //! * [`registry`]: stream admission — per-stream rate/priority, with
 //!   drop-to-keyframe degradation and outright rejection under overload;
+//! * [`shard`]: the stream→primary shard map — with several ingest
+//!   primaries, every stream is owned by exactly one of them via
+//!   weighted rendezvous (HRW) hashing over the stream names, weighted
+//!   by each primary's profiled secs/image;
+//! * [`estimator`]: the admission path's per-node secs/image estimate —
+//!   an EWMA over observed round throughput, so a node that slows
+//!   mid-run stops being over-budgeted within a couple of rounds;
 //! * [`inbox`]: per-node bounded inboxes whose occupancy feeds back into
 //!   the scheduler's availability guard λ (backpressure before loss);
 //! * [`dispatcher`]: the event-driven dispatcher — per-pair split ratios
@@ -18,18 +25,53 @@
 //!   are work-stolen by sibling auxes before falling back to the
 //!   primary;
 //! * [`report`]: per-stream latency percentiles, queueing delay,
-//!   steal/re-dispatch counts and per-node utilization, exportable into
-//!   [`crate::metrics`].
+//!   steal/re-dispatch and per-primary ingest/handoff counts, per-node
+//!   utilization — exportable into [`crate::metrics`].
+//!
+//! ## The shard / handoff protocol
+//!
+//! `heteroedge fleet --primaries P` promotes nodes `0..P` to ingest
+//! primaries (collectors); the remaining nodes form one auxiliary pool
+//! shared by all primaries. Ownership and overload handling work in
+//! three layers:
+//!
+//! 1. **Base shard map** (build time): each stream's owner is the
+//!    rendezvous-hash winner among the primaries (`-w/ln(u)` scoring,
+//!    `w = 1/secs-per-image`). Per-stream scores are independent, so
+//!    the map is deterministic for a (seed, streams, weights) tuple and
+//!    re-homing one stream never reshuffles another.
+//! 2. **Per-primary admission** (every round): a primary budgets its
+//!    shard against its own remaining round time plus an equal `1/P`
+//!    slice of the auxiliary pool — aux inbox backlog included — using
+//!    the EWMA throughput estimates.
+//! 3. **Primary-to-primary handoff** (every round, before degradation):
+//!    any stream its owner could not fully admit is re-homed wholesale
+//!    to the least-loaded sibling primary that still has full-rate
+//!    headroom. Handoffs are persistent — the stream keeps its new
+//!    owner in later rounds — and only when no sibling has headroom
+//!    does the stream fall back to drop-to-keyframe or rejection.
+//!
+//! Each primary then runs its own Algorithm-1 odds-form split across
+//! the shared auxiliary pool on the single fleet [`crate::sim::EventQueue`]
+//! timeline, so cross-round pipelining and work stealing compose
+//! unchanged. With `--primaries 1` (the default) the shard/handoff
+//! layers are behavior-neutral and reduce to the PR 1–2 single-primary
+//! dispatcher; the EWMA admission estimator is the one deliberate
+//! change that also re-tunes warm single-primary runs.
 //!
 //! Node execution rides the [`crate::coordinator::NodeHandle`] seam, so
 //! the fleet and the two-node testbed share one node runtime.
 
 pub mod dispatcher;
+pub mod estimator;
 pub mod inbox;
 pub mod registry;
 pub mod report;
+pub mod shard;
 
 pub use dispatcher::{combine_odds, Dispatcher, DrainMode, FleetConfig, Transport};
+pub use estimator::ThroughputEwma;
 pub use inbox::BoundedInbox;
 pub use registry::{AdmissionDecision, StreamRegistry, StreamSpec};
 pub use report::{FleetReport, NodeReport, StreamReport};
+pub use shard::{rendezvous_owner, ShardMap};

@@ -141,29 +141,54 @@ impl StreamRegistry {
     /// then strides 2..=`max_stride`, then rejection. Returns one
     /// decision per stream, in registration order.
     pub fn admission_plan(&self, capacity_frames: f64) -> Vec<AdmissionDecision> {
-        let mut order: Vec<usize> = (0..self.streams.len()).collect();
-        order.sort_by_key(|&i| (std::cmp::Reverse(self.streams[i].priority), i));
+        let all: Vec<usize> = (0..self.streams.len()).collect();
+        self.admission_plan_subset(&all, capacity_frames).0
+    }
+
+    /// Build an admission plan for the stream subset `indices` — one
+    /// ingest primary's shard — against that primary's
+    /// `capacity_frames`. The subset is considered in (priority desc,
+    /// registration order); returns one decision per entry of
+    /// `indices`, aligned with it, plus the unconsumed capacity (the
+    /// headroom the handoff pass offers to overloaded siblings). With
+    /// the full index set this is exactly [`Self::admission_plan`].
+    pub fn admission_plan_subset(
+        &self,
+        indices: &[usize],
+        capacity_frames: f64,
+    ) -> (Vec<AdmissionDecision>, f64) {
+        let mut order: Vec<usize> = (0..indices.len()).collect();
+        order.sort_by_key(|&k| {
+            (
+                std::cmp::Reverse(self.streams[indices[k]].priority),
+                indices[k],
+            )
+        });
 
         let mut remaining = capacity_frames.max(0.0);
-        let mut plan = vec![AdmissionDecision::Reject; self.streams.len()];
-        for i in order {
-            let rate = self.streams[i].rate;
-            let mut chosen = AdmissionDecision::Reject;
-            if rate as f64 <= remaining {
-                chosen = AdmissionDecision::Admit;
-            } else {
-                for stride in 2..=self.max_stride.max(1) {
-                    let kept = AdmissionDecision::Degrade { stride }.kept_of(rate);
-                    if kept as f64 <= remaining {
-                        chosen = AdmissionDecision::Degrade { stride };
-                        break;
-                    }
-                }
-            }
-            remaining -= chosen.kept_of(rate) as f64;
-            plan[i] = chosen;
+        let mut plan = vec![AdmissionDecision::Reject; indices.len()];
+        for k in order {
+            let chosen = self.best_decision(self.streams[indices[k]].rate, remaining);
+            remaining -= chosen.kept_of(self.streams[indices[k]].rate) as f64;
+            plan[k] = chosen;
         }
-        plan
+        (plan, remaining)
+    }
+
+    /// The best service level `remaining` frames of capacity can buy one
+    /// stream of `rate`: full admission, else the shallowest
+    /// drop-to-keyframe stride that fits, else rejection.
+    pub fn best_decision(&self, rate: usize, remaining: f64) -> AdmissionDecision {
+        if rate as f64 <= remaining {
+            return AdmissionDecision::Admit;
+        }
+        for stride in 2..=self.max_stride.max(1) {
+            let kept = AdmissionDecision::Degrade { stride }.kept_of(rate);
+            if kept as f64 <= remaining {
+                return AdmissionDecision::Degrade { stride };
+            }
+        }
+        AdmissionDecision::Reject
     }
 }
 
@@ -217,6 +242,40 @@ mod tests {
             .map(|(d, s)| d.kept_of(s.rate))
             .sum();
         assert!(kept as f64 <= 16.0, "plan overcommits: {kept}");
+    }
+
+    #[test]
+    fn best_decision_picks_the_shallowest_fit() {
+        let r = reg(&[10]);
+        assert_eq!(r.best_decision(10, 10.0), AdmissionDecision::Admit);
+        assert_eq!(
+            r.best_decision(10, 9.0),
+            AdmissionDecision::Degrade { stride: 2 }
+        );
+        assert_eq!(
+            r.best_decision(10, 3.0),
+            AdmissionDecision::Degrade { stride: 4 }
+        );
+        assert_eq!(r.best_decision(10, 2.0), AdmissionDecision::Reject);
+    }
+
+    #[test]
+    fn subset_plan_matches_full_plan_and_reports_headroom() {
+        let r = reg(&[10, 10, 10]);
+        // the full index set must reproduce admission_plan exactly
+        let all: Vec<usize> = (0..3).collect();
+        let (plan, rem) = r.admission_plan_subset(&all, 16.0);
+        assert_eq!(plan, r.admission_plan(16.0));
+        assert!(rem >= 0.0);
+        // a shard only budgets its own streams: 10 fits easily when the
+        // other two streams belong to a different primary
+        let (plan, rem) = r.admission_plan_subset(&[2], 16.0);
+        assert_eq!(plan, vec![AdmissionDecision::Admit]);
+        assert!((rem - 6.0).abs() < 1e-9, "headroom {rem}");
+        // empty shard consumes nothing
+        let (plan, rem) = r.admission_plan_subset(&[], 16.0);
+        assert!(plan.is_empty());
+        assert_eq!(rem, 16.0);
     }
 
     #[test]

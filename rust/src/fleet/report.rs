@@ -27,6 +27,9 @@ pub struct StreamReport {
     pub deduped: u64,
     /// Frames that finished execution somewhere in the fleet.
     pub completed: u64,
+    /// Times this stream was re-homed to a sibling primary by the
+    /// admission-time handoff pass.
+    pub handoffs: u64,
     /// Arrival→completion latency per completed frame (s).
     pub latency: Histogram,
 }
@@ -42,6 +45,7 @@ impl StreamReport {
             rejected: 0,
             deduped: 0,
             completed: 0,
+            handoffs: 0,
             latency: Histogram::new(),
         }
     }
@@ -67,6 +71,15 @@ pub struct NodeReport {
     /// Mean inbox wait per served frame (transfer-complete → service
     /// start, s).
     pub queue_delay_mean_s: f64,
+    /// Streams this node currently owns as an ingest primary (0 for
+    /// auxiliaries).
+    pub owned_streams: usize,
+    /// Admitted frames that entered the fleet through this primary.
+    pub ingest_frames: u64,
+    /// Streams re-homed onto this primary by admission-time handoff.
+    pub handoffs_in: u64,
+    /// Streams this primary shed to a sibling by handoff.
+    pub handoffs_out: u64,
 }
 
 /// Everything a fleet run measures.
@@ -74,6 +87,8 @@ pub struct NodeReport {
 pub struct FleetReport {
     pub streams: Vec<StreamReport>,
     pub nodes: Vec<NodeReport>,
+    /// Ingest primaries (nodes `0..primaries` of `nodes`).
+    pub primaries: usize,
     /// Mission makespan: the latest node clock at the end of the run (s).
     pub makespan_secs: f64,
     /// All completed frames' latencies pooled across streams.
@@ -92,6 +107,9 @@ pub struct FleetReport {
     /// Backpressured frames that landed on the primary after every aux
     /// refused them.
     pub primary_fallbacks: u64,
+    /// Whole streams re-homed primary-to-primary by the admission-time
+    /// handoff pass (0 with a single primary).
+    pub stream_handoffs: u64,
     /// Frames physically round-tripped through the MQTT broker (0 when
     /// the run used the simulated transport).
     pub mqtt_delivered: u64,
@@ -109,6 +127,12 @@ impl FleetReport {
 
     pub fn total_completed(&self) -> u64 {
         self.streams.iter().map(|s| s.completed).sum()
+    }
+
+    /// Frames past admission (full or degraded service) — the number
+    /// multi-primary ingest exists to raise under overload.
+    pub fn total_admitted(&self) -> u64 {
+        self.streams.iter().map(|s| s.admitted).sum()
     }
 
     pub fn total_rejected(&self) -> u64 {
@@ -139,6 +163,7 @@ impl FleetReport {
         reg.inc("fleet.backpressure.events", self.backpressure_events);
         reg.inc("fleet.steal.frames", self.stolen_frames);
         reg.inc("fleet.steal.primary_fallbacks", self.primary_fallbacks);
+        reg.inc("fleet.handoff.streams", self.stream_handoffs);
         reg.inc("fleet.offload.bytes", self.offload_bytes);
         reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
         reg.set("fleet.makespan_secs", self.makespan_secs);
@@ -158,6 +183,22 @@ impl FleetReport {
             reg.inc(&format!("fleet.node.{}.stolen_in", n.name), n.stolen_in);
             reg.inc(&format!("fleet.node.{}.stolen_out", n.name), n.stolen_out);
         }
+        for n in self.primary_nodes() {
+            reg.inc(
+                &format!("fleet.node.{}.ingest_frames", n.name),
+                n.ingest_frames,
+            );
+            reg.inc(&format!("fleet.node.{}.handoffs_in", n.name), n.handoffs_in);
+            reg.inc(
+                &format!("fleet.node.{}.handoffs_out", n.name),
+                n.handoffs_out,
+            );
+        }
+    }
+
+    /// The ingest-primary slice of `nodes`.
+    pub fn primary_nodes(&self) -> &[NodeReport] {
+        &self.nodes[..self.primaries.min(self.nodes.len())]
     }
 
     /// Paper-style ASCII rendering.
@@ -189,6 +230,27 @@ impl FleetReport {
                 "mqtt: {} frames routed through the broker\n",
                 self.mqtt_delivered
             ));
+        }
+        // multi-primary ingest ledger; omitted for single-primary runs
+        // so their rendering stays byte-identical to the PR 1 report
+        if self.primaries > 1 {
+            out.push_str(&format!(
+                "sharded ingest: {} primaries | {} stream handoffs\n",
+                self.primaries, self.stream_handoffs
+            ));
+            let mut pt = Table::new(&[
+                "primary", "streams", "ingest", "handoffs in", "handoffs out",
+            ]);
+            for n in self.primary_nodes() {
+                pt.row(vec![
+                    n.name.clone(),
+                    n.owned_streams.to_string(),
+                    n.ingest_frames.to_string(),
+                    n.handoffs_in.to_string(),
+                    n.handoffs_out.to_string(),
+                ]);
+            }
+            out.push_str(&pt.render());
         }
 
         let mut st = Table::new(&[
@@ -268,7 +330,12 @@ mod tests {
                 stolen_in: 2,
                 stolen_out: 1,
                 queue_delay_mean_s: 0.5,
+                owned_streams: 1,
+                ingest_frames: 80,
+                handoffs_in: 0,
+                handoffs_out: 0,
             }],
+            primaries: 1,
             makespan_secs: 40.0,
             latency,
             queue_delay,
@@ -278,6 +345,7 @@ mod tests {
             backpressure_events: 3,
             stolen_frames: 2,
             primary_fallbacks: 1,
+            stream_handoffs: 0,
             mqtt_delivered: 0,
         }
     }
@@ -296,6 +364,28 @@ mod tests {
         assert!(text.contains("makespan 40.00 s"), "{text}");
         assert!(text.contains("pipelined drain"), "{text}");
         assert!(text.contains("stolen 2 fallbacks 1"), "{text}");
+        // the multi-primary ledger is absent from single-primary output
+        assert!(!text.contains("sharded ingest"), "{text}");
+    }
+
+    #[test]
+    fn multi_primary_report_renders_the_ingest_ledger() {
+        let mut r = sample();
+        let mut second = r.nodes[0].clone();
+        second.name = "node-1".into();
+        second.handoffs_in = 2;
+        r.nodes.push(second);
+        r.nodes[0].handoffs_out = 2;
+        r.primaries = 2;
+        r.stream_handoffs = 2;
+        assert_eq!(r.primary_nodes().len(), 2);
+        let text = r.render();
+        assert!(
+            text.contains("sharded ingest: 2 primaries | 2 stream handoffs"),
+            "{text}"
+        );
+        assert!(text.contains("handoffs in"), "{text}");
+        assert_eq!(r.total_admitted(), 80);
     }
 
     #[test]
@@ -316,6 +406,8 @@ mod tests {
         assert_eq!(reg.counter("fleet.frames.rejected"), 10);
         assert_eq!(reg.counter("fleet.steal.frames"), 2);
         assert_eq!(reg.counter("fleet.steal.primary_fallbacks"), 1);
+        assert_eq!(reg.counter("fleet.handoff.streams"), 0);
+        assert_eq!(reg.counter("fleet.node.node-0.ingest_frames"), 80);
         assert_eq!(reg.counter("fleet.node.node-0.stolen_in"), 2);
         assert_eq!(reg.gauge("fleet.makespan_secs"), Some(40.0));
         assert_eq!(reg.gauge("fleet.queue_delay.mean_s"), Some(0.5));

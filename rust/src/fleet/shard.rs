@@ -1,0 +1,222 @@
+//! Deterministic stream→primary shard map — weighted rendezvous (HRW)
+//! hashing with explicit re-home overrides.
+//!
+//! With several ingest primaries, every camera stream must be owned by
+//! exactly one of them, the assignment must be reproducible from the
+//! fleet seed alone (two same-seed runs shard identically), and moving
+//! one stream (a primary-to-primary handoff) must not reshuffle any
+//! other stream. Weighted rendezvous hashing gives all three for free:
+//! each (stream, primary) pair hashes independently to a score
+//! `-w_p / ln(u)` (`u` uniform in the open unit interval, `w_p` the
+//! primary's weight — the fleet uses `1 / secs-per-image`, so faster
+//! collectors attract proportionally more streams; note the shipped
+//! dispatcher constructor builds its primaries cold and same-kind, so
+//! there the weights are equal in practice and the weighted path is
+//! for heterogeneous or live-profiled callers), and the stream is
+//! owned by the primary with the highest score. Because every stream's
+//! scores are independent of every other stream's, the base map is
+//! per-stream stable by construction; handoffs are layered on top as an
+//! explicit override table ([`ShardMap::rehome`]) that touches exactly
+//! one entry.
+//!
+//! Properties checked by `tests/prop_fleet.rs`: total ownership (every
+//! stream has exactly one owner in range), determinism for a given
+//! (seed, names, weights) tuple, handoff isolation, and weighted balance
+//! within a generous envelope of each primary's fair share.
+
+use anyhow::{ensure, Result};
+
+/// FNV-1a over `bytes`, seeded, with a splitmix64 avalanche tail so the
+/// short, similar keys the fleet hashes ("cam-0|p") decorrelate fully.
+fn hrw_hash(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ seed.wrapping_mul(0x9e3779b97f4a7c15);
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^ (h >> 31)
+}
+
+/// Map a 64-bit hash into the open unit interval (0, 1) — never exactly
+/// 0 or 1, so `ln(u)` below is always finite and strictly negative.
+/// Only the top 53 bits are kept so every operation is exact in f64
+/// (a full-width `h as f64` can round up to 2^64 and push `u` to 1.0).
+fn unit_open(h: u64) -> f64 {
+    const TWO_53: f64 = 9007199254740992.0; // 2^53
+    (((h >> 11) as f64) + 0.5) / TWO_53
+}
+
+/// The weighted-rendezvous owner of one stream: the primary maximizing
+/// `-w / ln(u)` over per-(stream, primary) uniform draws. Degenerate
+/// weights (non-finite or non-positive) are floored to a tiny positive
+/// value instead of propagating. Ties (astronomically unlikely) break
+/// toward the lowest primary index.
+pub fn rendezvous_owner(seed: u64, stream: &str, weights: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut best_score = f64::NEG_INFINITY;
+    for (p, &w) in weights.iter().enumerate() {
+        let w = if w.is_finite() && w > 0.0 { w } else { 1e-9 };
+        let mut key = Vec::with_capacity(stream.len() + 9);
+        key.extend_from_slice(stream.as_bytes());
+        key.push(0xfe);
+        key.extend_from_slice(&(p as u64).to_le_bytes());
+        let u = unit_open(hrw_hash(seed, &key));
+        let score = -w / u.ln();
+        if score > best_score {
+            best_score = score;
+            best = p;
+        }
+    }
+    best
+}
+
+/// Stream→primary ownership for one fleet run: the HRW base assignment
+/// plus the handoff override table.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    /// Base HRW owner per stream (registration order).
+    base: Vec<usize>,
+    /// Handoff re-homes; `Some(p)` overrides the base owner.
+    overrides: Vec<Option<usize>>,
+    n_primaries: usize,
+}
+
+impl ShardMap {
+    /// Shard `streams` (by name, registration order) over
+    /// `weights.len()` primaries.
+    pub fn new(seed: u64, streams: &[&str], weights: &[f64]) -> Result<ShardMap> {
+        ensure!(!weights.is_empty(), "shard map needs at least one primary");
+        let base = streams
+            .iter()
+            .map(|s| rendezvous_owner(seed, s, weights))
+            .collect::<Vec<_>>();
+        Ok(ShardMap {
+            overrides: vec![None; base.len()],
+            base,
+            n_primaries: weights.len(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.base.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.base.is_empty()
+    }
+
+    pub fn n_primaries(&self) -> usize {
+        self.n_primaries
+    }
+
+    /// Current owner of stream `s`: the handoff override if one exists,
+    /// else the base HRW assignment.
+    pub fn owner(&self, s: usize) -> usize {
+        self.overrides[s].unwrap_or(self.base[s])
+    }
+
+    /// Streams currently owned by primary `p`, ascending.
+    pub fn owned_by(&self, p: usize) -> Vec<usize> {
+        (0..self.base.len()).filter(|&s| self.owner(s) == p).collect()
+    }
+
+    /// Re-home stream `s` to primary `p` — the handoff primitive. Only
+    /// this stream's entry changes; every other assignment is untouched.
+    pub fn rehome(&mut self, s: usize, p: usize) -> Result<()> {
+        ensure!(s < self.base.len(), "stream {s} out of range");
+        ensure!(p < self.n_primaries, "primary {p} out of range");
+        self.overrides[s] = Some(p);
+        Ok(())
+    }
+
+    /// Streams whose current owner differs from their base assignment.
+    pub fn rehomed(&self) -> usize {
+        (0..self.base.len())
+            .filter(|&s| self.owner(s) != self.base[s])
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("cam-{i}")).collect()
+    }
+
+    #[test]
+    fn single_primary_owns_everything() {
+        let ns = names(10);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        let map = ShardMap::new(42, &refs, &[1.0]).unwrap();
+        assert_eq!(map.n_primaries(), 1);
+        assert!((0..10).all(|s| map.owner(s) == 0));
+        assert_eq!(map.owned_by(0), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_seed_sensitive() {
+        let ns = names(32);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        let w = [1.0, 1.0, 1.0];
+        let a = ShardMap::new(7, &refs, &w).unwrap();
+        let b = ShardMap::new(7, &refs, &w).unwrap();
+        for s in 0..32 {
+            assert_eq!(a.owner(s), b.owner(s), "same seed must shard identically");
+        }
+        // a different seed reshuffles at least one of 32 streams
+        let c = ShardMap::new(8, &refs, &w).unwrap();
+        assert!(
+            (0..32).any(|s| a.owner(s) != c.owner(s)),
+            "seed change never altered the map"
+        );
+    }
+
+    #[test]
+    fn rehome_moves_exactly_one_stream() {
+        let ns = names(16);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        let mut map = ShardMap::new(11, &refs, &[1.0, 1.0]).unwrap();
+        let before: Vec<usize> = (0..16).map(|s| map.owner(s)).collect();
+        let target = 1 - before[5];
+        map.rehome(5, target).unwrap();
+        for s in 0..16 {
+            let expect = if s == 5 { target } else { before[s] };
+            assert_eq!(map.owner(s), expect, "stream {s}");
+        }
+        assert_eq!(map.rehomed(), 1);
+        assert!(map.rehome(99, 0).is_err());
+        assert!(map.rehome(0, 9).is_err());
+    }
+
+    #[test]
+    fn heavy_weight_attracts_the_streams() {
+        let ns = names(64);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        // primary 1 is overwhelmingly faster; it must win nearly all
+        let map = ShardMap::new(3, &refs, &[1e-9, 1e9]).unwrap();
+        let heavy = map.owned_by(1).len();
+        assert!(heavy >= 60, "fast primary only got {heavy}/64 streams");
+        // equal weights split roughly evenly (generous envelope: the
+        // Binomial(64, 1/2) tail beyond it is < 1e-12)
+        let even = ShardMap::new(3, &refs, &[1.0, 1.0]).unwrap();
+        let half = even.owned_by(0).len();
+        assert!((8..=56).contains(&half), "even split badly skewed: {half}/64");
+    }
+
+    #[test]
+    fn degenerate_weights_are_floored_not_propagated() {
+        let ns = names(8);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        let map = ShardMap::new(5, &refs, &[f64::NAN, 1.0]).unwrap();
+        for s in 0..8 {
+            assert!(map.owner(s) < 2);
+        }
+        assert!(ShardMap::new(5, &refs, &[]).is_err(), "no primaries");
+    }
+}

@@ -4,9 +4,9 @@
 //! heteroedge solve   [--workload <name>] [--masked] [--beta <s>]
 //! heteroedge static  [--ratio <r>] [--frames <n>] [--masked] [--band <b>]
 //! heteroedge dynamic [--ratio <r>] [--frames <n>] [--beta <s>]
-//! heteroedge fleet   --nodes <N> --streams <M> [--rounds <k>] [--rate <f>]
-//!                    [--inbox <cap>] [--drain batched|pipelined] [--no-steal]
-//!                    [--masked] [--dedup] [--no-mqtt]
+//! heteroedge fleet   --nodes <N> --streams <M> [--primaries <P>] [--rounds <k>]
+//!                    [--rate <f>] [--inbox <cap>] [--drain batched|pipelined]
+//!                    [--no-steal] [--masked] [--dedup] [--no-mqtt]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
 //! heteroedge table   --id <table1|fig3|fig4|fig5|table3|fig6|table4|fig7|battery> [--full]
 //! ```
@@ -101,6 +101,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let n_nodes = args.opt_or("nodes", 4usize)?;
     let n_streams = args.opt_or("streams", 8usize)?;
     let mut cfg = FleetConfig::new(n_nodes, n_streams);
+    cfg.primaries = args.opt_or("primaries", 1usize)?;
     cfg.band = band_of(args)?;
     cfg.rounds = args.opt_or("rounds", 6usize)?;
     cfg.frames_per_round = args.opt_or("rate", 10usize)?;
@@ -119,10 +120,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     cfg.work_stealing = !args.flag("no-steal");
 
+    // "1 primary" keeps the default invocation's header line textually
+    // identical to the single-primary releases
+    let primary_label = if cfg.primaries == 1 {
+        "1 primary".to_string()
+    } else {
+        format!("{} primaries", cfg.primaries)
+    };
     println!(
-        "fleet: {} nodes (1 primary + {} auxiliaries), {} streams, transport {:?}, {} drain{}",
+        "fleet: {} nodes ({} + {} auxiliaries), {} streams, transport {:?}, {} drain{}",
         cfg.n_nodes,
-        cfg.n_nodes.saturating_sub(1),
+        primary_label,
+        cfg.n_nodes.saturating_sub(cfg.primaries),
         cfg.n_streams,
         cfg.transport,
         cfg.drain.name(),

@@ -74,10 +74,27 @@ impl Gen {
     }
 }
 
-/// Run `prop` for `cases` seeds; panic with the failing seed + draw trace
-/// on the first failure. Seeds derive from the property name, so failures
+/// Case-count floor from the `HETEROEDGE_PROP_CASES` environment
+/// variable — the in-tree equivalent of proptest's `PROPTEST_CASES`.
+/// When set to N, every property runs at least N cases (CI's property
+/// job elevates it; unset or unparsable means "use the requested
+/// count"). Seeds derive from the property name and case index, so
+/// raising the floor only extends each property's deterministic case
+/// sequence — it never changes the cases that already ran.
+fn case_floor() -> u32 {
+    parse_case_floor(std::env::var("HETEROEDGE_PROP_CASES").ok().as_deref())
+}
+
+fn parse_case_floor(raw: Option<&str>) -> u32 {
+    raw.and_then(|v| v.trim().parse::<u32>().ok()).unwrap_or(0)
+}
+
+/// Run `prop` for `cases` seeds (or the `HETEROEDGE_PROP_CASES` floor,
+/// whichever is larger); panic with the failing seed + draw trace on
+/// the first failure. Seeds derive from the property name, so failures
 /// reproduce across runs but differ across properties.
 pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Gen) -> PropResult) {
+    let cases = cases.max(case_floor());
     let base = name
         .bytes()
         .fold(0xcbf29ce484222325u64, |h, b| {
@@ -102,6 +119,7 @@ pub fn check_quiet(
     cases: u32,
     prop: impl Fn(&mut Gen) -> PropResult,
 ) -> Result<(), String> {
+    let cases = cases.max(case_floor());
     let base = name
         .bytes()
         .fold(0xcbf29ce484222325u64, |h, b| {
@@ -174,5 +192,18 @@ mod tests {
         check("pick", 50, |g| {
             prop_assert(xs.contains(g.pick(&xs)), "not a member")
         });
+    }
+
+    #[test]
+    fn case_floor_parses_and_never_lowers_the_request() {
+        assert_eq!(parse_case_floor(None), 0);
+        assert_eq!(parse_case_floor(Some("2000")), 2000);
+        assert_eq!(parse_case_floor(Some("  64 ")), 64);
+        assert_eq!(parse_case_floor(Some("lots")), 0);
+        assert_eq!(parse_case_floor(Some("")), 0);
+        assert_eq!(parse_case_floor(Some("-5")), 0);
+        // the floor only ever raises the requested count
+        assert_eq!(100u32.max(parse_case_floor(Some("7"))), 100);
+        assert_eq!(100u32.max(parse_case_floor(Some("500"))), 500);
     }
 }

@@ -177,29 +177,41 @@ fn stolen_frames_land_on_siblings_before_the_primary() {
 
 /// The deterministic harness core: two `Transport::Sim` runs with the
 /// same seed and config produce byte-identical reports — percentiles,
-/// per-node counters, everything — for both drain disciplines.
+/// per-node counters, shard/handoff ledgers, everything — for both
+/// drain disciplines and for one as well as two ingest primaries.
 #[test]
 fn same_seed_sim_runs_are_byte_identical() {
-    for drain in [DrainMode::Batched, DrainMode::Pipelined] {
-        let mut cfg = FleetConfig::new(3, 4);
-        cfg.rounds = 3;
-        cfg.frames_per_round = 12;
-        cfg.inbox_capacity = 8;
-        cfg.drain = drain;
-        let a = Dispatcher::new(cfg.clone()).unwrap().run().unwrap();
-        let b = Dispatcher::new(cfg).unwrap().run().unwrap();
-        assert_eq!(a, b, "{} drain diverged across same-seed runs", drain.name());
-        assert_eq!(a.render(), b.render());
+    for primaries in [1usize, 2] {
+        for drain in [DrainMode::Batched, DrainMode::Pipelined] {
+            let mut cfg = FleetConfig::new(2 + primaries, 4);
+            cfg.primaries = primaries;
+            cfg.rounds = 3;
+            cfg.frames_per_round = 12;
+            cfg.inbox_capacity = 8;
+            cfg.drain = drain;
+            let a = Dispatcher::new(cfg.clone()).unwrap().run().unwrap();
+            let b = Dispatcher::new(cfg).unwrap().run().unwrap();
+            assert_eq!(
+                a,
+                b,
+                "{} drain with {primaries} primaries diverged across same-seed runs",
+                drain.name()
+            );
+            assert_eq!(a.render(), b.render());
+            assert_eq!(a.primaries, primaries);
+        }
     }
 }
 
 /// Transport parity: shipping every frame through the real MQTT broker
 /// must not change any timing-independent count — admission, offload,
-/// stealing and fallback decisions are all virtual-time-driven.
+/// stealing, handoff and fallback decisions are all virtual-time-driven
+/// — with one ingest primary and with two.
 #[test]
 fn mqtt_and_sim_transports_agree_on_counts() {
-    let run = |transport: Transport| -> FleetReport {
-        let mut cfg = FleetConfig::new(3, 4);
+    let run = |transport: Transport, primaries: usize| -> FleetReport {
+        let mut cfg = FleetConfig::new(1 + primaries + 1, 4);
+        cfg.primaries = primaries;
         cfg.rounds = 2;
         cfg.frames_per_round = 10;
         cfg.inbox_capacity = 6; // tight enough to exercise stealing
@@ -207,30 +219,85 @@ fn mqtt_and_sim_transports_agree_on_counts() {
         cfg.transport = transport;
         Dispatcher::new(cfg).unwrap().run().unwrap()
     };
-    let sim = run(Transport::Sim);
-    let mqtt = run(Transport::Mqtt);
+    for primaries in [1usize, 2] {
+        let sim = run(Transport::Sim, primaries);
+        let mqtt = run(Transport::Mqtt, primaries);
 
-    for (s, m) in sim.streams.iter().zip(&mqtt.streams) {
-        assert_eq!(s.name, m.name);
-        assert_eq!(s.offered, m.offered, "{}", s.name);
-        assert_eq!(s.admitted, m.admitted, "{}", s.name);
-        assert_eq!(s.degraded, m.degraded, "{}", s.name);
-        assert_eq!(s.rejected, m.rejected, "{}", s.name);
-        assert_eq!(s.deduped, m.deduped, "{}", s.name);
-        assert_eq!(s.completed, m.completed, "{}", s.name);
+        for (s, m) in sim.streams.iter().zip(&mqtt.streams) {
+            assert_eq!(s.name, m.name);
+            assert_eq!(s.offered, m.offered, "{}", s.name);
+            assert_eq!(s.admitted, m.admitted, "{}", s.name);
+            assert_eq!(s.degraded, m.degraded, "{}", s.name);
+            assert_eq!(s.rejected, m.rejected, "{}", s.name);
+            assert_eq!(s.deduped, m.deduped, "{}", s.name);
+            assert_eq!(s.completed, m.completed, "{}", s.name);
+            assert_eq!(s.handoffs, m.handoffs, "{}", s.name);
+        }
+        for (s, m) in sim.nodes.iter().zip(&mqtt.nodes) {
+            assert_eq!(s.frames, m.frames, "{}", s.name);
+            assert_eq!(s.inbox_rejections, m.inbox_rejections, "{}", s.name);
+            assert_eq!(s.stolen_in, m.stolen_in, "{}", s.name);
+            assert_eq!(s.stolen_out, m.stolen_out, "{}", s.name);
+            assert_eq!(s.ingest_frames, m.ingest_frames, "{}", s.name);
+            assert_eq!(s.owned_streams, m.owned_streams, "{}", s.name);
+            assert_eq!(s.handoffs_in, m.handoffs_in, "{}", s.name);
+            assert_eq!(s.handoffs_out, m.handoffs_out, "{}", s.name);
+        }
+        assert_eq!(sim.backpressure_events, mqtt.backpressure_events);
+        assert_eq!(sim.stolen_frames, mqtt.stolen_frames);
+        assert_eq!(sim.primary_fallbacks, mqtt.primary_fallbacks);
+        assert_eq!(sim.stream_handoffs, mqtt.stream_handoffs);
+        assert_eq!(sim.offload_bytes, mqtt.offload_bytes);
+        assert_eq!(sim.mqtt_delivered, 0);
+        assert!(
+            mqtt.mqtt_delivered > 0,
+            "no frames crossed the broker ({primaries} primaries)"
+        );
     }
-    for (s, m) in sim.nodes.iter().zip(&mqtt.nodes) {
-        assert_eq!(s.frames, m.frames, "{}", s.name);
-        assert_eq!(s.inbox_rejections, m.inbox_rejections, "{}", s.name);
-        assert_eq!(s.stolen_in, m.stolen_in, "{}", s.name);
-        assert_eq!(s.stolen_out, m.stolen_out, "{}", s.name);
+}
+
+/// One saturated primary hands whole streams to its idle sibling before
+/// any stream is rejected. All six streams start re-homed onto primary
+/// 0 (an operator-skewed shard); its admission budget cannot carry them,
+/// so the handoff pass must migrate streams to primary 1 — and between
+/// handoff and drop-to-keyframe degradation, nothing may be rejected.
+#[test]
+fn saturated_primary_hands_off_streams_before_rejecting() {
+    let mut reg = StreamRegistry::new();
+    for i in 0..6 {
+        reg.register(StreamSpec::camera(i, 18)).unwrap();
     }
-    assert_eq!(sim.backpressure_events, mqtt.backpressure_events);
-    assert_eq!(sim.stolen_frames, mqtt.stolen_frames);
-    assert_eq!(sim.primary_fallbacks, mqtt.primary_fallbacks);
-    assert_eq!(sim.offload_bytes, mqtt.offload_bytes);
-    assert_eq!(sim.mqtt_delivered, 0);
-    assert!(mqtt.mqtt_delivered > 0, "no frames crossed the broker");
+    let mut cfg = FleetConfig::new(8, 6); // 2 primaries + 6 auxiliaries
+    cfg.primaries = 2;
+    cfg.rounds = 4;
+    let mut d = Dispatcher::with_streams(cfg, reg).unwrap();
+    for s in 0..6 {
+        d.rehome_stream(s, 0).unwrap();
+        assert_eq!(d.stream_owner(s), Some(0));
+    }
+    let rep = d.run().unwrap();
+
+    assert!(rep.stream_handoffs > 0, "saturated primary never handed off");
+    assert_eq!(rep.total_rejected(), 0, "handoff must pre-empt rejection");
+    assert!(rep.nodes[0].handoffs_out > 0, "primary 0 shed nothing");
+    assert!(rep.nodes[1].handoffs_in > 0, "primary 1 absorbed nothing");
+    assert!(
+        rep.nodes[1].ingest_frames > 0,
+        "re-homed streams must ingest through the sibling"
+    );
+    assert!(rep.nodes[1].owned_streams > 0, "ownership never moved");
+    // per-stream and fleet-wide ledgers agree
+    let stream_handoffs: u64 = rep.streams.iter().map(|s| s.handoffs).sum();
+    assert_eq!(stream_handoffs, rep.stream_handoffs);
+    assert_eq!(
+        rep.nodes[0].handoffs_out + rep.nodes[1].handoffs_out,
+        rep.nodes[0].handoffs_in + rep.nodes[1].handoffs_in,
+    );
+    // conservation still holds under handoff
+    for s in &rep.streams {
+        assert_eq!(s.offered, s.admitted + s.degraded + s.rejected, "{}", s.name);
+        assert_eq!(s.completed, s.admitted - s.deduped, "{}", s.name);
+    }
 }
 
 /// Custom stream registries work end-to-end: mixed priorities and rates,

@@ -1,7 +1,12 @@
-//! Property tests: fleet invariants — odds-form split combination and
-//! bounded-inbox conservation under random interleavings.
+//! Property tests: fleet invariants — odds-form split combination,
+//! bounded-inbox conservation under random interleavings, and the
+//! stream→primary shard map (total ownership, determinism, handoff
+//! isolation, weighted balance).
+//!
+//! `HETEROEDGE_PROP_CASES` (CI's property job sets it) raises every
+//! property's case count without changing the cases that already ran.
 
-use heteroedge::fleet::{combine_odds, BoundedInbox};
+use heteroedge::fleet::{combine_odds, BoundedInbox, ShardMap};
 use heteroedge::testkit::{check, prop_assert};
 
 #[test]
@@ -108,6 +113,123 @@ fn prop_inbox_bounded_and_conserving() {
                 ),
             )?;
             prop_assert(ib.served == popped, "served must track pops")?;
+        }
+        Ok(())
+    });
+}
+
+fn stream_names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("cam-{i}")).collect()
+}
+
+#[test]
+fn prop_shard_assigns_every_stream_to_exactly_one_primary() {
+    check("shard total ownership", 120, |g| {
+        let p = g.usize_in(1, 7);
+        let n = g.usize_in(1, 64);
+        let seed = g.rng().next_u64();
+        let names = stream_names(n);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let weights = g.vec_f64(p, 0.1, 10.0);
+        let map = ShardMap::new(seed, &refs, &weights).map_err(|e| e.to_string())?;
+        for s in 0..n {
+            let o = map.owner(s);
+            prop_assert(o < p, format!("stream {s} owned by out-of-range {o}"))?;
+        }
+        // owned_by partitions the stream set: every stream in exactly
+        // one shard, shards mutually consistent with owner()
+        let mut seen = vec![false; n];
+        for q in 0..p {
+            for s in map.owned_by(q) {
+                prop_assert(!seen[s], format!("stream {s} in two shards"))?;
+                seen[s] = true;
+                prop_assert(map.owner(s) == q, "owned_by disagrees with owner")?;
+            }
+        }
+        prop_assert(seen.iter().all(|&x| x), "a stream landed in no shard")
+    });
+}
+
+#[test]
+fn prop_shard_is_deterministic_for_a_given_seed_and_config() {
+    check("shard determinism", 120, |g| {
+        let p = g.usize_in(1, 6);
+        let n = g.usize_in(1, 48);
+        let seed = g.rng().next_u64();
+        let names = stream_names(n);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let weights = g.vec_f64(p, 0.2, 5.0);
+        let a = ShardMap::new(seed, &refs, &weights).map_err(|e| e.to_string())?;
+        let b = ShardMap::new(seed, &refs, &weights).map_err(|e| e.to_string())?;
+        for s in 0..n {
+            prop_assert(
+                a.owner(s) == b.owner(s),
+                format!("stream {s} owner diverged across identical builds"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_handoff_never_reshuffles_unrelated_streams() {
+    check("shard handoff isolation", 120, |g| {
+        let p = g.usize_in(2, 6);
+        let n = g.usize_in(2, 48);
+        let seed = g.rng().next_u64();
+        let names = stream_names(n);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let weights = g.vec_f64(p, 0.2, 5.0);
+        let mut map = ShardMap::new(seed, &refs, &weights).map_err(|e| e.to_string())?;
+        let before: Vec<usize> = (0..n).map(|s| map.owner(s)).collect();
+        // re-home a random stream to a random primary (possibly its own)
+        let moved = g.usize_in(0, n);
+        let target = g.usize_in(0, p);
+        map.rehome(moved, target).map_err(|e| e.to_string())?;
+        for s in 0..n {
+            let expect = if s == moved { target } else { before[s] };
+            prop_assert(
+                map.owner(s) == expect,
+                format!(
+                    "stream {s}: owner {} after re-homing stream {moved} (expected {expect})",
+                    map.owner(s)
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Weighted balance: each primary's shard stays within a generous
+/// envelope of its weighted fair share. For independent per-stream
+/// rendezvous draws the shard size is Binomial(n, w_p/Σw) with mean
+/// ("fair") at least 12 in these configs; the envelope `[fair/8 - 2,
+/// 6·fair + 1]` is only binding once fair ≥ 16, where a Chernoff bound
+/// puts the violation probability below 1e-10 per (case, primary) draw
+/// — safe even under an elevated `HETEROEDGE_PROP_CASES` floor, and the
+/// testkit's seeds are deterministic per property name, so this can
+/// never flake once green.
+#[test]
+fn prop_shard_weighted_balance_within_envelope() {
+    check("shard weighted balance", 40, |g| {
+        let p = g.usize_in(2, 6);
+        let n = 48 * p; // large shards so the envelope is meaningful
+        let seed = g.rng().next_u64();
+        let names = stream_names(n);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let weights = g.vec_f64(p, 0.5, 2.0);
+        let total_w: f64 = weights.iter().sum();
+        let map = ShardMap::new(seed, &refs, &weights).map_err(|e| e.to_string())?;
+        for q in 0..p {
+            let fair = n as f64 * weights[q] / total_w; // >= 12
+            let got = map.owned_by(q).len() as f64;
+            prop_assert(
+                got >= fair / 8.0 - 2.0 && got <= fair * 6.0 + 1.0,
+                format!(
+                    "primary {q}: {got} streams vs weighted fair share {fair:.1} \
+                     (weights {weights:?})"
+                ),
+            )?;
         }
         Ok(())
     });
