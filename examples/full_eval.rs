@@ -29,7 +29,7 @@ use heteroedge::coordinator::profile_exchange::{
     DeviceProfileMsg, FRAMES_TOPIC_PREFIX, RESULTS_TOPIC_PREFIX,
 };
 use heteroedge::frames::codec::{decode_frame, encode_masked};
-use heteroedge::frames::{stack_frames, Frame, SceneGenerator, FRAME_PIXELS};
+use heteroedge::frames::{stack_frames, Frame, SceneGenerator};
 use heteroedge::net::mqtt::{Broker, Client, QoS};
 use heteroedge::runtime::{Engine, ModelPool, Tensor};
 use heteroedge::solver::HeteroEdgeSolver;
@@ -105,12 +105,7 @@ fn auxiliary(addr: std::net::SocketAddr, run: usize) -> Result<()> {
             break;
         }
         let (id, pixels) = decode_frame(&msg.payload)?;
-        pending.push(Frame {
-            id,
-            pixels,
-            truth_mask: vec![0.0; FRAME_PIXELS],
-            classes: vec![],
-        });
+        pending.push(Frame::from_decoded(id, pixels));
         // execute in compiled-batch-size chunks as they fill
         if pending.len() == 8 {
             let batch = stack_frames(&pending);

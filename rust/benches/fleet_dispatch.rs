@@ -10,7 +10,7 @@
 //! collector over the same auxiliary pool) must raise admitted-frame
 //! throughput or cut rejections at overload arrival rates.
 
-use heteroedge::bench::Bench;
+use heteroedge::bench::{scale_iters, Bench};
 use heteroedge::fleet::{
     Dispatcher, DrainMode, FleetConfig, FleetReport, StreamRegistry, StreamSpec, Transport,
 };
@@ -38,17 +38,17 @@ fn main() {
     for i in 0..64 {
         reg.register(StreamSpec::camera(i, 10 + i % 7)).unwrap();
     }
-    b.iter("admission_plan (64 streams)", 500, || {
+    b.iter("admission_plan (64 streams)", scale_iters(500), || {
         let plan = reg.admission_plan(200.0);
         assert_eq!(plan.len(), 64);
     });
 
     // --- the drain disciplines head-to-head at high arrival rates ---
-    b.iter("dispatch run (4x8 hot, batched)", 10, || {
+    b.iter("dispatch run (4x8 hot, batched)", scale_iters(10), || {
         let rep = run(hot_config(DrainMode::Batched));
         assert!(rep.total_completed() > 0);
     });
-    b.iter("dispatch run (4x8 hot, pipelined)", 10, || {
+    b.iter("dispatch run (4x8 hot, pipelined)", scale_iters(10), || {
         let rep = run(hot_config(DrainMode::Pipelined));
         assert!(rep.total_completed() > 0);
     });
@@ -56,6 +56,18 @@ fn main() {
     // the figure of merit: mean per-frame queueing delay (inbox wait)
     let batched = run(hot_config(DrainMode::Batched));
     let pipelined = run(hot_config(DrainMode::Pipelined));
+    // zero-copy pipeline: the hot run must mostly recycle, not allocate
+    assert!(
+        pipelined.pool.reuses() > pipelined.pool.fresh_allocs,
+        "pooled buffers must dominate fresh allocations: {:?}",
+        pipelined.pool
+    );
+    println!(
+        "frame pool (hot 4x8 pipelined): {} checkouts, {} fresh, {:.1}% reused",
+        pipelined.pool.checkouts,
+        pipelined.pool.fresh_allocs,
+        100.0 * pipelined.pool.reuse_frac(),
+    );
     assert!(
         pipelined.mean_queue_delay_s() < batched.mean_queue_delay_s(),
         "pipelined drain must cut queueing delay: {:.4}s vs batched {:.4}s",
@@ -86,10 +98,10 @@ fn main() {
         cfg.frames_per_round = 4; // 144 frames/round offered — far past budget
         Dispatcher::new(cfg).unwrap().run().unwrap()
     };
-    b.iter("dispatch run (overloaded, 1 primary)", 5, || {
+    b.iter("dispatch run (overloaded, 1 primary)", scale_iters(5), || {
         assert!(overloaded(1).total_completed() > 0);
     });
-    b.iter("dispatch run (overloaded, 2 primaries)", 5, || {
+    b.iter("dispatch run (overloaded, 2 primaries)", scale_iters(5), || {
         assert!(overloaded(2).total_completed() > 0);
     });
 
@@ -120,7 +132,7 @@ fn main() {
     );
 
     // --- the same round with frames physically over the MQTT broker ---
-    b.iter("dispatch run (3x4, 1 round, mqtt)", 5, || {
+    b.iter("dispatch run (3x4, 1 round, mqtt)", scale_iters(5), || {
         let mut cfg = FleetConfig::new(3, 4);
         cfg.rounds = 1;
         cfg.frames_per_round = 4;
@@ -130,4 +142,8 @@ fn main() {
     });
 
     println!("{}", b.report());
+    let json_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_fleet_dispatch.json");
+    b.write_json(&json_path).unwrap();
+    println!("wrote {}", json_path.display());
 }

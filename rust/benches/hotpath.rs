@@ -8,85 +8,249 @@
 //!   mask+codec throughput  > 200 MB/s
 //!   MQTT loopback RTT      < 200 µs
 //!   L3 overhead            ≪ PJRT execute time
+//!
+//! The zero-copy codec gate: the seed's per-element codec (4 bytes at a
+//! time through `extend_from_slice`, with the double-scanning RLE `off`
+//! predicate) is kept below as `legacy_*` and measured head-to-head
+//! against the bulk encode-into/decode-into path on the same machine in
+//! the same run. The bulk path must deliver ≥ 2× combined encode+decode
+//! dense throughput (and must not regress RLE) or this bench exits
+//! non-zero. Results persist to `BENCH_hotpath.json` at the repo root.
+//! `HETEROEDGE_BENCH_QUICK=1` shrinks iteration counts for CI smoke.
 
-use heteroedge::bench::Bench;
+use heteroedge::bench::{scale_iters, Bench};
 use heteroedge::coordinator::Batcher;
-use heteroedge::frames::codec::{decode_frame, encode_masked};
-use heteroedge::frames::mask::{mask_stats, mask_with_truth};
-use heteroedge::frames::{SceneGenerator, SimilarityFilter, FRAME_BYTES};
+use heteroedge::frames::codec::{
+    decode_frame, decode_frame_into, encode_dense_into, encode_masked_view_into,
+};
+use heteroedge::frames::mask::{dilate, mask_stats, mask_with_truth};
+use heteroedge::frames::{SceneGenerator, SimilarityFilter, FRAME_BYTES, FRAME_ELEMS};
 use heteroedge::net::mqtt::{Broker, Client, QoS};
 use heteroedge::solvefit::polyfit;
 use heteroedge::solver::HeteroEdgeSolver;
+
+/// The seed codec, verbatim — the comparator the 2× gate measures
+/// against (per-element little-endian writes; RLE tests every
+/// run-boundary pixel twice through `off`).
+mod legacy {
+    use heteroedge::frames::{FRAME_C, FRAME_H, FRAME_PIXELS, FRAME_W};
+
+    const MAGIC_DENSE: u16 = 0xE301;
+    const MAGIC_RLE: u16 = 0xE302;
+    pub const HEADER: usize = 2 + 8 + 6;
+
+    fn push_header(out: &mut Vec<u8>, magic: u16, id: u64) {
+        out.extend_from_slice(&magic.to_le_bytes());
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&(FRAME_H as u16).to_le_bytes());
+        out.extend_from_slice(&(FRAME_W as u16).to_le_bytes());
+        out.extend_from_slice(&(FRAME_C as u16).to_le_bytes());
+    }
+
+    pub fn encode_dense(id: u64, pixels: &[f32]) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(HEADER + pixels.len() * 4);
+        push_header(&mut bytes, MAGIC_DENSE, id);
+        for &v in pixels {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes
+    }
+
+    pub fn encode_masked(id: u64, pixels: &[f32]) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(HEADER + pixels.len());
+        push_header(&mut bytes, MAGIC_RLE, id);
+        let n_runs_at = bytes.len();
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+
+        let off = |p: usize| (0..FRAME_C).all(|c| pixels[p * FRAME_C + c] == 0.0);
+        let mut n_runs: u32 = 0;
+        let mut p = 0usize;
+        while p < FRAME_PIXELS {
+            if off(p) {
+                p += 1;
+                continue;
+            }
+            let start = p;
+            while p < FRAME_PIXELS && !off(p) {
+                p += 1;
+            }
+            let len = p - start;
+            bytes.extend_from_slice(&(start as u32).to_le_bytes());
+            bytes.extend_from_slice(&(len as u32).to_le_bytes());
+            for q in start..p {
+                for c in 0..FRAME_C {
+                    bytes.extend_from_slice(&pixels[q * FRAME_C + c].to_le_bytes());
+                }
+            }
+            n_runs += 1;
+        }
+        bytes[n_runs_at..n_runs_at + 4].copy_from_slice(&n_runs.to_le_bytes());
+        bytes
+    }
+
+    pub fn decode(bytes: &[u8]) -> (u64, Vec<f32>) {
+        let magic = u16::from_le_bytes([bytes[0], bytes[1]]);
+        let id = u64::from_le_bytes(bytes[2..10].try_into().unwrap());
+        let h = u16::from_le_bytes([bytes[10], bytes[11]]) as usize;
+        let w = u16::from_le_bytes([bytes[12], bytes[13]]) as usize;
+        let c = u16::from_le_bytes([bytes[14], bytes[15]]) as usize;
+        assert_eq!((h, w, c), (FRAME_H, FRAME_W, FRAME_C));
+        let body = &bytes[HEADER..];
+        let mut pixels = vec![0.0f32; h * w * c];
+        match magic {
+            MAGIC_DENSE => {
+                for (i, chunk) in body.chunks_exact(4).enumerate() {
+                    pixels[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+            }
+            MAGIC_RLE => {
+                let n_runs = u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
+                let mut at = 4usize;
+                for _ in 0..n_runs {
+                    let start = u32::from_le_bytes(body[at..at + 4].try_into().unwrap()) as usize;
+                    let len = u32::from_le_bytes(body[at + 4..at + 8].try_into().unwrap()) as usize;
+                    at += 8;
+                    for q in start..start + len {
+                        for ch in 0..c {
+                            pixels[q * c + ch] =
+                                f32::from_le_bytes(body[at..at + 4].try_into().unwrap());
+                            at += 4;
+                        }
+                    }
+                }
+            }
+            other => panic!("bad magic {other:#x}"),
+        }
+        (id, pixels)
+    }
+}
 
 fn main() {
     let mut b = Bench::new("hotpath");
 
     // --- solver ---
     let solver = HeteroEdgeSolver::paper_default();
-    b.iter("solver.solve (barrier+polish)", 200, || {
+    b.iter("solver.solve (barrier+polish)", scale_iters(200), || {
         let _ = solver.solve().unwrap();
     });
 
     // --- curve fitting ---
     let xs: Vec<f64> = (0..50).map(|i| i as f64 / 50.0).collect();
     let ys: Vec<f64> = xs.iter().map(|x| 68.0 - 60.0 * x + 2.0 * x * x).collect();
-    b.iter("polyfit deg-2, 50 pts", 2000, || {
+    b.iter("polyfit deg-2, 50 pts", scale_iters(2000), || {
         let _ = polyfit(&xs, &ys, 2).unwrap();
     });
 
-    // --- masking + codec ---
+    // --- masking ---
     let mut gen = SceneGenerator::paper_default(1);
     let frame = gen.next_frame();
     b.iter_throughput(
         "mask_with_truth (64x64x3)",
-        2000,
+        scale_iters(2000),
         1.0,
         FRAME_BYTES as f64,
         || {
             let _ = mask_with_truth(&frame, 1);
         },
     );
-    let (masked, stats) = mask_with_truth(&frame, 1);
-    b.iter_throughput("mask_stats", 5000, 1.0, FRAME_BYTES as f64, || {
+    b.iter_throughput("mask_stats", scale_iters(5000), 1.0, FRAME_BYTES as f64, || {
         let _ = mask_stats(&frame.truth_mask);
     });
-    let _ = stats;
+
+    // --- codec: legacy per-element vs bulk zero-copy, same machine ---
+    let mask = dilate(&frame.truth_mask, 1);
+    let (masked, _) = mask_with_truth(&frame, 1);
+    // the gate cases keep a 200-iteration floor even in quick mode —
+    // per-case cost is microseconds and the ratio assert below needs a
+    // noise-resistant sample
+    let iters = scale_iters(2000).max(200);
+
+    b.iter_throughput("codec legacy encode (dense)", iters, 1.0, FRAME_BYTES as f64, || {
+        let _ = legacy::encode_dense(frame.id, &frame.pixels);
+    });
+    let legacy_dense = legacy::encode_dense(frame.id, &frame.pixels);
+    b.iter_throughput("codec legacy decode (dense)", iters, 1.0, FRAME_BYTES as f64, || {
+        let _ = legacy::decode(&legacy_dense);
+    });
+    b.iter_throughput("codec legacy encode (RLE)", iters, 1.0, FRAME_BYTES as f64, || {
+        let _ = legacy::encode_masked(frame.id, &masked);
+    });
+    let legacy_rle = legacy::encode_masked(frame.id, &masked);
+    b.iter_throughput("codec legacy decode (RLE)", iters, 1.0, FRAME_BYTES as f64, || {
+        let _ = legacy::decode(&legacy_rle);
+    });
+
+    // bulk path: encode into reusable scratch, decode into a reusable
+    // pixel buffer — the dispatcher's steady-state shape
+    let mut enc_scratch: Vec<u8> = Vec::new();
+    let mut dec_scratch = vec![0.0f32; FRAME_ELEMS];
+    b.iter_throughput("codec bulk encode (dense)", iters, 1.0, FRAME_BYTES as f64, || {
+        encode_dense_into(frame.id, &frame.pixels, &mut enc_scratch);
+    });
+    encode_dense_into(frame.id, &frame.pixels, &mut enc_scratch);
+    assert_eq!(enc_scratch, legacy_dense, "bulk dense encoding diverged from the seed format");
+    b.iter_throughput("codec bulk decode (dense)", iters, 1.0, FRAME_BYTES as f64, || {
+        decode_frame_into(&enc_scratch, &mut dec_scratch).unwrap();
+    });
+    let mut rle_scratch: Vec<u8> = Vec::new();
     b.iter_throughput(
-        "codec encode_masked (RLE)",
-        2000,
+        "codec bulk encode (RLE mask view)",
+        iters,
         1.0,
         FRAME_BYTES as f64,
         || {
-            let _ = encode_masked(frame.id, &masked);
+            encode_masked_view_into(frame.id, &frame.pixels, &mask, &mut rle_scratch);
         },
     );
-    let enc = encode_masked(frame.id, &masked);
-    b.iter_throughput(
-        "codec decode (RLE)",
-        2000,
-        1.0,
-        FRAME_BYTES as f64,
-        || {
-            let _ = decode_frame(&enc.bytes).unwrap();
-        },
+    encode_masked_view_into(frame.id, &frame.pixels, &mask, &mut rle_scratch);
+    assert_eq!(rle_scratch, legacy_rle, "mask-view RLE diverged from the seed format");
+    b.iter_throughput("codec bulk decode (RLE)", iters, 1.0, FRAME_BYTES as f64, || {
+        decode_frame_into(&rle_scratch, &mut dec_scratch).unwrap();
+    });
+
+    // --- the ≥2× combined encode+decode gate ---
+    // p50 rather than mean: one scheduler hiccup on a shared CI runner
+    // must not swing the ratio
+    let p50 = |name: &str| b.case(name).unwrap().p(50.0);
+    let combined = |enc: &str, dec: &str| FRAME_BYTES as f64 / (p50(enc) + p50(dec)) / 1e6;
+    let legacy_dense_mbps = combined("codec legacy encode (dense)", "codec legacy decode (dense)");
+    let bulk_dense_mbps = combined("codec bulk encode (dense)", "codec bulk decode (dense)");
+    let legacy_rle_mbps = combined("codec legacy encode (RLE)", "codec legacy decode (RLE)");
+    let bulk_rle_mbps = combined("codec bulk encode (RLE mask view)", "codec bulk decode (RLE)");
+    println!(
+        "codec combined encode+decode: dense legacy {legacy_dense_mbps:.0} MB/s -> bulk \
+         {bulk_dense_mbps:.0} MB/s ({:.2}x) | rle legacy {legacy_rle_mbps:.0} MB/s -> bulk \
+         {bulk_rle_mbps:.0} MB/s ({:.2}x)",
+        bulk_dense_mbps / legacy_dense_mbps,
+        bulk_rle_mbps / legacy_rle_mbps,
+    );
+    assert!(
+        bulk_dense_mbps >= 2.0 * legacy_dense_mbps,
+        "zero-copy codec must double combined dense encode+decode throughput: \
+         {bulk_dense_mbps:.0} MB/s vs legacy {legacy_dense_mbps:.0} MB/s"
+    );
+    assert!(
+        bulk_rle_mbps >= legacy_rle_mbps,
+        "bulk RLE path must not regress: {bulk_rle_mbps:.0} vs {legacy_rle_mbps:.0} MB/s"
     );
 
     // --- similarity filter ---
     let frames = SceneGenerator::paper_default(2).batch(64);
-    b.iter("similarity.admit x64", 500, || {
+    b.iter("similarity.admit x64", scale_iters(500), || {
         let mut filt = SimilarityFilter::paper_default();
         for f in &frames {
             let _ = filt.admit(f);
         }
     });
 
-    // --- batcher end-to-end plan (dedup + mask + encode + split) ---
+    // --- batcher end-to-end plan (dedup + mask-view + encode + split) ---
     // frames pre-generated outside the timed loop (perf pass iteration 2:
-    // the original bench included 1.7 ms of scene generation per iter)
+    // the original bench included 1.7 ms of scene generation per iter);
+    // cloning shared-handle frames is O(1) per frame now
     let plan_frames = SceneGenerator::paper_default(3).batch(100);
     b.iter_throughput(
         "batcher.plan 100 frames r=0.7",
-        50,
+        scale_iters(50),
         100.0,
         (100 * FRAME_BYTES) as f64,
         || {
@@ -96,7 +260,7 @@ fn main() {
     );
 
     // --- scene generation (the synthetic Gazebo substitute) ---
-    b.iter_throughput("scene gen frame", 1000, 1.0, FRAME_BYTES as f64, || {
+    b.iter_throughput("scene gen frame", scale_iters(1000), 1.0, FRAME_BYTES as f64, || {
         let _ = gen.next_frame();
     });
 
@@ -107,7 +271,7 @@ fn main() {
         sub.subscribe("bench/echo").unwrap();
         let mut publ = Client::connect(broker.addr(), "bench-pub").unwrap();
         let payload = vec![7u8; 1024];
-        b.iter("mqtt qos0 publish->deliver 1KiB", 500, || {
+        b.iter("mqtt qos0 publish->deliver 1KiB", scale_iters(500), || {
             publ.publish("bench/echo", &payload, QoS::AtMostOnce, false)
                 .unwrap();
             while sub.try_recv().is_none() {
@@ -117,7 +281,7 @@ fn main() {
         let frame_payload = vec![7u8; FRAME_BYTES];
         b.iter_throughput(
             "mqtt qos1 publish 48KiB frame",
-            200,
+            scale_iters(200),
             1.0,
             FRAME_BYTES as f64,
             || {
@@ -137,12 +301,21 @@ fn main() {
             &SceneGenerator::paper_default(4).batch(8),
         );
         pool.run_frames("posenet", &batch).unwrap(); // compile outside
-        b.iter_throughput("pjrt posenet b=8", 10, 8.0, 0.0, || {
+        b.iter_throughput("pjrt posenet b=8", scale_iters(10), 8.0, 0.0, || {
             let _ = pool.run_frames("posenet", &batch).unwrap();
         });
     } else {
         eprintln!("(artifacts missing: skipping PJRT case — run `make artifacts`)");
     }
 
+    // sanity: the bulk decode matches the reference decode bit-for-bit
+    let (id, px) = decode_frame(&enc_scratch).unwrap();
+    assert_eq!(id, frame.id);
+    assert_eq!(px[..], frame.pixels[..]);
+
     println!("{}", b.report());
+    let json_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    b.write_json(&json_path).unwrap();
+    println!("wrote {}", json_path.display());
 }

@@ -8,11 +8,37 @@
 //! ```
 //!
 //! Measures wall-clock per iteration with warmup, reports mean/p50/p99,
-//! and supports throughput annotation (items/s, bytes/s).
+//! and supports throughput annotation (items/s, bytes/s). A report can
+//! be persisted as JSON ([`Bench::write_json`], hand-rolled — serde is
+//! unavailable offline) so the repo records its perf trajectory:
+//! `cargo bench --bench hotpath` refreshes `BENCH_hotpath.json` at the
+//! repo root, `--bench fleet_dispatch` refreshes
+//! `BENCH_fleet_dispatch.json`. Setting `HETEROEDGE_BENCH_QUICK`
+//! shrinks iteration counts ([`scale_iters`]) for CI smoke runs.
 
 use std::time::Instant;
 
 use crate::util::stats::percentile;
+
+/// True when `HETEROEDGE_BENCH_QUICK` is set — benches should run a few
+/// iterations only (the CI smoke gate).
+pub fn quick() -> bool {
+    std::env::var_os("HETEROEDGE_BENCH_QUICK").is_some()
+}
+
+/// `n` iterations normally; a small fraction (≥ 2) under
+/// `HETEROEDGE_BENCH_QUICK`.
+pub fn scale_iters(n: u32) -> u32 {
+    scale_iters_with(quick(), n)
+}
+
+fn scale_iters_with(quick: bool, n: u32) -> u32 {
+    if quick {
+        (n / 20).max(2)
+    } else {
+        n
+    }
+}
 
 /// One timed case.
 #[derive(Debug, Clone)]
@@ -105,6 +131,55 @@ impl Bench {
         &self.cases
     }
 
+    /// The most recent case by `name` (benches read means back to gate
+    /// throughput ratios).
+    pub fn case(&self, name: &str) -> Option<&Case> {
+        self.cases.iter().rev().find(|c| c.name == name)
+    }
+
+    /// Serialize the report as JSON (stable field order, no trailing
+    /// iteration samples — the summary a perf trajectory needs).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:e}")
+            } else {
+                "null".to_string()
+            }
+        }
+        fn opt(v: Option<f64>) -> String {
+            v.map(num).unwrap_or_else(|| "null".to_string())
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{{\n  \"bench\": \"{}\",\n  \"cases\": [", esc(&self.name)));
+        for (i, c) in self.cases.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \
+                 \"p50_s\": {}, \"p99_s\": {}, \"items_per_s\": {}, \"bytes_per_s\": {}}}",
+                esc(&c.name),
+                c.iters,
+                num(c.mean()),
+                num(c.p(50.0)),
+                num(c.p(99.0)),
+                opt(c.throughput_items()),
+                opt(c.throughput_bytes()),
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Persist [`Bench::to_json`] to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
     /// Render a criterion-style report block.
     pub fn report(&self) -> String {
         use std::fmt::Write;
@@ -169,5 +244,45 @@ mod tests {
         let r = b.report();
         assert!(r.contains("## bench demo"));
         assert!(r.contains("fast"));
+    }
+
+    #[test]
+    fn json_round_trips_the_summary() {
+        let mut b = Bench::new("json \"demo\"");
+        b.warmup = 0;
+        b.iter_throughput("enc", 3, 1.0, 4096.0, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        b.iter("no-throughput", 2, || {});
+        let j = b.to_json();
+        assert!(j.contains("\"bench\": \"json \\\"demo\\\"\""), "{j}");
+        assert!(j.contains("\"name\": \"enc\""), "{j}");
+        assert!(j.contains("\"iters\": 3"), "{j}");
+        assert!(j.contains("\"items_per_s\": null") || j.contains("\"bytes_per_s\": null"), "{j}");
+        // every number renders as valid JSON (no NaN/inf literals)
+        assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+        // case lookup finds the latest by name
+        assert_eq!(b.case("enc").unwrap().iters, 3);
+        assert!(b.case("missing").is_none());
+    }
+
+    #[test]
+    fn write_json_persists() {
+        let mut b = Bench::new("persist");
+        b.warmup = 0;
+        b.iter("x", 2, || {});
+        let path = std::env::temp_dir().join("heteroedge_bench_write_json_test.json");
+        b.write_json(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, b.to_json());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scale_iters_floor() {
+        // pure helper: no dependency on the ambient environment
+        assert_eq!(scale_iters_with(false, 2000), 2000);
+        assert_eq!(scale_iters_with(true, 2000), 100);
+        assert_eq!(scale_iters_with(true, 10), 2, "quick floor is 2");
     }
 }

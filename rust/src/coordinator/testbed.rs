@@ -203,12 +203,7 @@ impl<B1: ExecBackend, B2: ExecBackend> Testbed<B1, B2> {
             .iter()
             .map(|enc| {
                 let (id, pixels) = crate::frames::codec::decode_frame(&enc.bytes)?;
-                Ok(crate::frames::Frame {
-                    id,
-                    pixels,
-                    truth_mask: vec![0.0; crate::frames::FRAME_PIXELS],
-                    classes: vec![],
-                })
+                Ok(crate::frames::Frame::from_decoded(id, pixels))
             })
             .collect::<Result<Vec<_>>>()?;
 
@@ -309,12 +304,7 @@ impl<B1: ExecBackend, B2: ExecBackend> Testbed<B1, B2> {
                 .iter()
                 .map(|enc| {
                     let (id, pixels) = crate::frames::codec::decode_frame(&enc.bytes)?;
-                    Ok(crate::frames::Frame {
-                        id,
-                        pixels,
-                        truth_mask: vec![0.0; crate::frames::FRAME_PIXELS],
-                        classes: vec![],
-                    })
+                    Ok(crate::frames::Frame::from_decoded(id, pixels))
                 })
                 .collect::<Result<Vec<_>>>()?;
 

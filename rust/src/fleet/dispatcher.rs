@@ -52,6 +52,22 @@
 //! deliberate change for every primary count is the admission
 //! estimator, which now tracks round throughput (EWMA) instead of the
 //! lifetime mean and can therefore re-tune warm-run admission.
+//!
+//! ## Zero-copy hot path
+//!
+//! The per-frame data path allocates nothing once the shared
+//! [`FramePool`] is warm: scenes render into pooled buffers, offloaded
+//! frames are encoded into pooled scratch as a mask *view* (no masked
+//! copy), and a queued [`Job`] carries the O(1)-clone
+//! [`EncodedFrame`] handle — the seed's decode-at-arrival-then-rewrap
+//! (fresh `Vec` pixels + a zero truth mask per job) is gone. The
+//! auxiliary decodes lazily at service time into pool scratch, which
+//! recycles as soon as the frame executes. `FleetConfig::eager_decode`
+//! keeps the legacy decode-at-arrival data path as an in-tree
+//! comparator: both modes produce byte-identical `FleetReport`s (see
+//! `tests/integration_fleet.rs`), proving the zero-copy refactor is
+//! behavior-neutral; `FleetReport.pool` carries the allocation
+//! counters that prove the reuse.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -61,7 +77,8 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::profile_exchange::FRAMES_TOPIC_PREFIX;
 use crate::coordinator::{Batcher, NodeHandle, NodeRuntime, Scheduler, SchedulerConfig, SimBackend};
 use crate::device::DeviceKind;
-use crate::frames::{codec, Frame, SceneGenerator, FRAME_PIXELS};
+use crate::frames::codec::{self, EncodedFrame};
+use crate::frames::{Frame, FramePool, PoolStats, SceneGenerator};
 use crate::metrics::Histogram;
 use crate::net::mqtt::{Broker, Client, QoS};
 use crate::net::{Band, Channel, ChannelConfig};
@@ -144,6 +161,12 @@ pub struct FleetConfig {
     /// Re-offer backpressured frames to sibling auxes before falling
     /// back to the primary.
     pub work_stealing: bool,
+    /// Legacy comparator: decode every offloaded frame at arrival (the
+    /// seed's copying data path) instead of lazily at service time.
+    /// Identical virtual-time behavior — the same-seed byte-identity
+    /// test runs both modes to prove the zero-copy refactor is
+    /// behavior-neutral. Default off.
+    pub eager_decode: bool,
 }
 
 impl FleetConfig {
@@ -166,6 +189,7 @@ impl FleetConfig {
             transport: Transport::Sim,
             drain: DrainMode::Pipelined,
             work_stealing: true,
+            eager_decode: false,
         }
     }
 
@@ -218,9 +242,14 @@ pub fn combine_odds(ratios: &[f64]) -> (f64, Vec<f64>) {
     (sum / (1.0 + sum), shares)
 }
 
-/// One queued work item on an auxiliary.
+/// One queued work item on an auxiliary: the encoded frame handle
+/// (O(1) clone of pooled wire bytes) — pixels materialize only at
+/// service time, into pool scratch.
 struct Job {
-    frame: Frame,
+    enc: EncodedFrame,
+    /// Legacy comparator payload: the frame decoded at arrival
+    /// (`FleetConfig::eager_decode`); `None` on the zero-copy path.
+    eager: Option<Frame>,
     stream: usize,
     /// Stream arrival time (latency measurement baseline).
     arrived: f64,
@@ -387,6 +416,10 @@ pub struct Dispatcher {
     ewma_snap: Vec<(u64, f64)>,
     gens: Vec<SceneGenerator>,
     batchers: Vec<Batcher>,
+    /// Shared buffer arena: generators, batchers and the lazy service
+    /// decode all recycle through it, so `FleetReport.pool` accounts
+    /// the whole frame path.
+    pool: FramePool,
     fabric: Option<MqttFabric>,
 }
 
@@ -494,17 +527,18 @@ impl Dispatcher {
             .collect();
         let ewma_snap = vec![(0u64, 0.0f64); cfg.n_nodes];
 
+        let pool = FramePool::new();
         let gens = (0..registry.len())
-            .map(|i| SceneGenerator::paper_default(cfg.seed ^ (0x1000 + i as u64)))
+            .map(|i| SceneGenerator::paper_default_in(cfg.seed ^ (0x1000 + i as u64), pool.clone()))
             .collect();
         let batchers = registry
             .streams
             .iter()
             .map(|s| {
                 let mut b = if s.masked {
-                    Batcher::paper_default()
+                    Batcher::paper_default_in(pool.clone())
                 } else {
-                    Batcher::without_masking()
+                    Batcher::without_masking_in(pool.clone())
                 };
                 if !cfg.dedup {
                     b.dedup = None;
@@ -526,6 +560,7 @@ impl Dispatcher {
             ewma_snap,
             gens,
             batchers,
+            pool,
             fabric,
         })
     }
@@ -704,6 +739,7 @@ impl Dispatcher {
     /// Drive the full run; consumes the configured rounds.
     pub fn run(&mut self) -> Result<FleetReport> {
         let cfg = self.cfg.clone();
+        let pool_start = self.pool.stats();
         let mut st = RunState {
             stream_reports: self
                 .registry
@@ -820,7 +856,13 @@ impl Dispatcher {
             primary_fallbacks: st.primary_fallbacks,
             stream_handoffs: st.handoffs,
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
+            pool: self.pool.stats().since(pool_start),
         })
+    }
+
+    /// Pool counters accumulated over this dispatcher's lifetime.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     fn dispatch_event(
@@ -853,11 +895,17 @@ impl Dispatcher {
         st: &mut RunState,
     ) -> Result<()> {
         let (drain, work_stealing) = (self.cfg.drain, self.cfg.work_stealing);
-        let p_count = self.cfg.primaries;
-        let spec = self.registry.streams[s].clone();
-        st.stream_reports[s].offered += spec.rate as u64;
+        let (p_count, eager_decode) = (self.cfg.primaries, self.cfg.eager_decode);
+        let pool = self.pool.clone();
+        // copy the three scalars the arrival needs instead of cloning
+        // the whole spec (the seed cloned the stream name every arrival)
+        let (rate, masked, workload) = {
+            let spec = &self.registry.streams[s];
+            (spec.rate, spec.masked, spec.workload)
+        };
+        st.stream_reports[s].offered += rate as u64;
 
-        let raw = self.gens[s].batch(spec.rate);
+        let raw = self.gens[s].batch(rate);
         if decision == AdmissionDecision::Reject {
             st.stream_reports[s].rejected += raw.len() as u64;
             return Ok(());
@@ -887,7 +935,7 @@ impl Dispatcher {
             let probe = pair.link.expected_latency_s(48 * 1024);
             let d = pair
                 .scheduler
-                .decide(&pprof, &aprof, spec.workload, spec.masked, probe, false);
+                .decide(&pprof, &aprof, workload, masked, probe, false);
             let r = d.r.clamp(0.0, MAX_PAIR_RATIO);
             if r > 0.0 {
                 aux.last_r = r;
@@ -928,14 +976,17 @@ impl Dispatcher {
             let encs = &plan.offload[cursor..cursor + share];
             cursor += share;
             for enc in encs {
-                let (id, pixels) = codec::decode_frame(&enc.bytes)?;
+                // zero-copy: the job rides the encoded handle; pixels
+                // materialize at service time (legacy comparator mode
+                // decodes here, exactly like the seed did)
+                let eager = if eager_decode {
+                    Some(codec::decode_frame_pooled(&pool, &enc.bytes)?)
+                } else {
+                    None
+                };
                 let mut job_opt = Some(Job {
-                    frame: Frame {
-                        id,
-                        pixels,
-                        truth_mask: vec![0.0; FRAME_PIXELS],
-                        classes: vec![],
-                    },
+                    enc: enc.clone(),
+                    eager,
                     stream: s,
                     arrived: t_arr,
                     ready: 0.0,
@@ -997,10 +1048,15 @@ impl Dispatcher {
                     }
                     None => {
                         // every aux refused — the owning primary
-                        // absorbs it
+                        // absorbs it (decoding into pool scratch now,
+                        // since it executes locally)
                         let job = job_opt.take().expect("unplaced job");
                         st.primary_fallbacks += 1;
-                        local.push(job.frame);
+                        let frame = match job.eager {
+                            Some(f) => f,
+                            None => codec::decode_frame_pooled(&pool, &job.enc.bytes)?,
+                        };
+                        local.push(frame);
                     }
                 }
             }
@@ -1035,7 +1091,7 @@ impl Dispatcher {
             let n_local = local.len() as u64;
             primary
                 .handle
-                .run(spec.workload, &local, offload_frac, spec.masked)?;
+                .run(workload, &local, offload_frac, masked)?;
             let done = primary.handle.now();
             st.stream_reports[s].completed += n_local;
             for _ in 0..n_local {
@@ -1063,7 +1119,13 @@ impl Dispatcher {
 
         let spec = &self.registry.streams[job.stream];
         let r = slot.last_r;
-        slot.handle.run_one(spec.workload, &job.frame, r, spec.masked)?;
+        // lazy decode into pool scratch; the buffer recycles as soon as
+        // `frame` drops at the end of this service event
+        let frame = match job.eager {
+            Some(f) => f,
+            None => codec::decode_frame_pooled(&self.pool, &job.enc.bytes)?,
+        };
+        slot.handle.run_one(spec.workload, &frame, r, spec.masked)?;
         let done = slot.handle.now();
         st.stream_reports[job.stream].completed += 1;
         st.stream_reports[job.stream].latency.record(done - job.arrived);
@@ -1100,7 +1162,11 @@ impl Dispatcher {
                     let wait = (group_start - j.ready).max(0.0);
                     aux.queue_delay.record(wait);
                     st.queue_delay.record(wait);
-                    frames.push(j.frame);
+                    let frame = match j.eager {
+                        Some(f) => f,
+                        None => codec::decode_frame_pooled(&self.pool, &j.enc.bytes)?,
+                    };
+                    frames.push(frame);
                     arrived.push(j.arrived);
                 }
                 aux.handle

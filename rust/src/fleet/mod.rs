@@ -61,6 +61,13 @@
 //!
 //! Node execution rides the [`crate::coordinator::NodeHandle`] seam, so
 //! the fleet and the two-node testbed share one node runtime.
+//!
+//! The frame data path under the dispatcher is zero-copy: scenes,
+//! encodings and service-time decodes all recycle through one
+//! [`crate::frames::FramePool`], jobs carry shared encoded-frame
+//! handles instead of decoded pixel copies, and `FleetReport.pool`
+//! carries the allocation counters that prove buffer reuse (see
+//! [`dispatcher`] and `crate::frames` for the ownership model).
 
 pub mod dispatcher;
 pub mod estimator;
@@ -75,3 +82,5 @@ pub use inbox::BoundedInbox;
 pub use registry::{AdmissionDecision, StreamRegistry, StreamSpec};
 pub use report::{FleetReport, NodeReport, StreamReport};
 pub use shard::{rendezvous_owner, ShardMap};
+
+pub use crate::frames::PoolStats;

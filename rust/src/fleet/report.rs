@@ -6,6 +6,7 @@
 //! Every type derives `PartialEq` so determinism tests can assert two
 //! same-seed runs produce byte-identical reports.
 
+use crate::frames::PoolStats;
 use crate::metrics::{f, Histogram, Registry, Table};
 
 use super::dispatcher::DrainMode;
@@ -113,6 +114,11 @@ pub struct FleetReport {
     /// Frames physically round-tripped through the MQTT broker (0 when
     /// the run used the simulated transport).
     pub mqtt_delivered: u64,
+    /// Frame-pool counters for this run: `fresh_allocs` is the number
+    /// the zero-copy pipeline exists to bound — once the pool is warm,
+    /// per-frame buffer allocations stop (the integration tests assert
+    /// it does not scale with rounds).
+    pub pool: PoolStats,
 }
 
 impl FleetReport {
@@ -166,6 +172,9 @@ impl FleetReport {
         reg.inc("fleet.handoff.streams", self.stream_handoffs);
         reg.inc("fleet.offload.bytes", self.offload_bytes);
         reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
+        reg.inc("fleet.pool.checkouts", self.pool.checkouts);
+        reg.inc("fleet.pool.fresh_allocs", self.pool.fresh_allocs);
+        reg.inc("fleet.pool.recycled", self.pool.recycled);
         reg.set("fleet.makespan_secs", self.makespan_secs);
         reg.set("fleet.latency.p99_s", self.p99_latency_s());
         reg.set("fleet.queue_delay.mean_s", self.mean_queue_delay_s());
@@ -229,6 +238,15 @@ impl FleetReport {
             out.push_str(&format!(
                 "mqtt: {} frames routed through the broker\n",
                 self.mqtt_delivered
+            ));
+        }
+        if self.pool.checkouts > 0 {
+            out.push_str(&format!(
+                "frame pool: {} checkouts | {} fresh allocs | {} recycled | {:.1}% reused\n",
+                self.pool.checkouts,
+                self.pool.fresh_allocs,
+                self.pool.recycled,
+                100.0 * self.pool.reuse_frac(),
             ));
         }
         // multi-primary ingest ledger; omitted for single-primary runs
@@ -347,6 +365,11 @@ mod tests {
             primary_fallbacks: 1,
             stream_handoffs: 0,
             mqtt_delivered: 0,
+            pool: PoolStats {
+                checkouts: 100,
+                fresh_allocs: 10,
+                recycled: 90,
+            },
         }
     }
 
@@ -364,6 +387,8 @@ mod tests {
         assert!(text.contains("makespan 40.00 s"), "{text}");
         assert!(text.contains("pipelined drain"), "{text}");
         assert!(text.contains("stolen 2 fallbacks 1"), "{text}");
+        assert!(text.contains("frame pool: 100 checkouts"), "{text}");
+        assert!(text.contains("90 recycled | 90.0% reused"), "{text}");
         // the multi-primary ledger is absent from single-primary output
         assert!(!text.contains("sharded ingest"), "{text}");
     }
@@ -409,6 +434,8 @@ mod tests {
         assert_eq!(reg.counter("fleet.handoff.streams"), 0);
         assert_eq!(reg.counter("fleet.node.node-0.ingest_frames"), 80);
         assert_eq!(reg.counter("fleet.node.node-0.stolen_in"), 2);
+        assert_eq!(reg.counter("fleet.pool.checkouts"), 100);
+        assert_eq!(reg.counter("fleet.pool.fresh_allocs"), 10);
         assert_eq!(reg.gauge("fleet.makespan_secs"), Some(40.0));
         assert_eq!(reg.gauge("fleet.queue_delay.mean_s"), Some(0.5));
         assert!(reg.gauge("fleet.stream.cam-0.p99_s").unwrap() > 0.0);

@@ -14,18 +14,36 @@
 //! dense: h·w·c f32 payload
 //! rle:   n_runs u32, then per run: offset u32, len u32, len·c f32
 //! ```
+//!
+//! Invariants the zero-copy pipeline relies on (do not change one
+//! without the other):
+//!
+//! * f32 payloads are bulk-copied as little-endian byte images — the
+//!   per-element loop is gone, so the wire bytes ARE the in-memory
+//!   layout on LE targets and a chunked `to_le_bytes` copy elsewhere;
+//! * a masked frame's RLE "off" predicate is `mask == 0` **or** an
+//!   exactly-zero pixel, which is byte-identical to first materializing
+//!   the masked copy and then run-length-encoding its zeros
+//!   ([`encode_masked_view_into`] == mask-then-[`encode_masked_into`],
+//!   property-tested in `tests/prop_frames.rs`);
+//! * every `encode_*_into` clears its output first, so a recycled
+//!   [`ByteBuf`] scratch never leaks a previous frame's bytes;
+//! * [`decode_frame_into`] fully overwrites its output (zeros first for
+//!   RLE), so a recycled pixel buffer never leaks a previous frame.
 
 use anyhow::{bail, Result};
 
-use super::{Frame, FRAME_C, FRAME_H, FRAME_PIXELS, FRAME_W};
+use super::pool::{ByteBuf, FramePool, SharedBytes};
+use super::{ClassSet, Frame, FRAME_C, FRAME_H, FRAME_PIXELS, FRAME_W};
+use std::sync::Arc;
 
 const MAGIC_DENSE: u16 = 0xE301;
 const MAGIC_RLE: u16 = 0xE302;
 
-/// An encoded frame plus accounting.
+/// An encoded frame plus accounting. Clones share the payload (O(1)).
 #[derive(Debug, Clone)]
 pub struct EncodedFrame {
-    pub bytes: Vec<u8>,
+    pub bytes: SharedBytes,
     /// Raw (dense) payload size this encoding replaced.
     pub raw_bytes: usize,
 }
@@ -51,60 +69,138 @@ fn push_header(out: &mut Vec<u8>, magic: u16, id: u64) {
     out.extend_from_slice(&(FRAME_C as u16).to_le_bytes());
 }
 
-/// Dense encoding (original, unmasked frames).
-pub fn encode_dense(id: u64, pixels: &[f32]) -> EncodedFrame {
-    assert_eq!(pixels.len(), FRAME_PIXELS * FRAME_C);
-    let mut bytes = Vec::with_capacity(HEADER + pixels.len() * 4);
-    push_header(&mut bytes, MAGIC_DENSE, id);
-    for &v in pixels {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    EncodedFrame {
-        bytes,
-        raw_bytes: pixels.len() * 4,
+/// Append `vals` as little-endian f32 bytes in one bulk extend (no
+/// per-element capacity or bounds checks).
+fn write_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    let start = out.len();
+    out.resize(start + vals.len() * 4, 0);
+    for (chunk, v) in out[start..].chunks_exact_mut(4).zip(vals) {
+        chunk.copy_from_slice(&v.to_le_bytes());
     }
 }
 
-/// Zero-run-length encoding for masked frames. A pixel is "off" when all
-/// its channels are exactly 0 (the mask wrote them).
-pub fn encode_masked(id: u64, pixels: &[f32]) -> EncodedFrame {
-    assert_eq!(pixels.len(), FRAME_PIXELS * FRAME_C);
-    let mut bytes = Vec::with_capacity(HEADER + pixels.len());
-    push_header(&mut bytes, MAGIC_RLE, id);
-    let n_runs_at = bytes.len();
-    bytes.extend_from_slice(&0u32.to_le_bytes());
+/// Bulk little-endian f32 read; `src.len()` must be `4 * dst.len()`.
+fn read_f32s(dst: &mut [f32], src: &[u8]) {
+    debug_assert_eq!(src.len(), dst.len() * 4);
+    for (v, chunk) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *v = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+}
 
-    let off = |p: usize| (0..FRAME_C).all(|c| pixels[p * FRAME_C + c] == 0.0);
+/// Dense encoding (original, unmasked frames) into a reusable scratch.
+/// Clears `out` first.
+pub fn encode_dense_into(id: u64, pixels: &[f32], out: &mut Vec<u8>) {
+    assert_eq!(pixels.len(), FRAME_PIXELS * FRAME_C);
+    out.clear();
+    out.reserve(HEADER + pixels.len() * 4);
+    push_header(out, MAGIC_DENSE, id);
+    write_f32s(out, pixels);
+}
+
+/// Single-pass zero-run detection shared by the two RLE encoders:
+/// `on(p)` is evaluated exactly once per pixel (the seed encoder's
+/// `off(p)` closure tested every run-boundary pixel twice).
+fn encode_runs_into(id: u64, pixels: &[f32], on: impl Fn(usize) -> bool, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(HEADER + 4 + pixels.len());
+    push_header(out, MAGIC_RLE, id);
+    let n_runs_at = out.len();
+    out.extend_from_slice(&0u32.to_le_bytes());
+
     let mut n_runs: u32 = 0;
-    let mut p = 0usize;
-    while p < FRAME_PIXELS {
-        if off(p) {
-            p += 1;
-            continue;
-        }
-        let start = p;
-        while p < FRAME_PIXELS && !off(p) {
-            p += 1;
-        }
-        let len = p - start;
-        bytes.extend_from_slice(&(start as u32).to_le_bytes());
-        bytes.extend_from_slice(&(len as u32).to_le_bytes());
-        for q in start..p {
-            for c in 0..FRAME_C {
-                bytes.extend_from_slice(&pixels[q * FRAME_C + c].to_le_bytes());
+    let mut run_start: Option<usize> = None;
+    for p in 0..FRAME_PIXELS {
+        match (run_start, on(p)) {
+            (None, true) => run_start = Some(p),
+            (Some(start), false) => {
+                flush_run(out, pixels, start, p);
+                n_runs += 1;
+                run_start = None;
             }
+            _ => {}
         }
+    }
+    if let Some(start) = run_start {
+        flush_run(out, pixels, start, FRAME_PIXELS);
         n_runs += 1;
     }
-    bytes[n_runs_at..n_runs_at + 4].copy_from_slice(&n_runs.to_le_bytes());
+    out[n_runs_at..n_runs_at + 4].copy_from_slice(&n_runs.to_le_bytes());
+}
+
+fn flush_run(out: &mut Vec<u8>, pixels: &[f32], start: usize, end: usize) {
+    out.extend_from_slice(&(start as u32).to_le_bytes());
+    out.extend_from_slice(&((end - start) as u32).to_le_bytes());
+    write_f32s(out, &pixels[start * FRAME_C..end * FRAME_C]);
+}
+
+/// Zero-run-length encoding for already-masked pixels (a pixel is "off"
+/// when all its channels are exactly 0) into a reusable scratch.
+pub fn encode_masked_into(id: u64, pixels: &[f32], out: &mut Vec<u8>) {
+    assert_eq!(pixels.len(), FRAME_PIXELS * FRAME_C);
+    let zero = |p: usize| (0..FRAME_C).all(|c| pixels[p * FRAME_C + c] == 0.0);
+    encode_runs_into(id, pixels, |p| !zero(p), out);
+}
+
+/// Masked RLE straight off the *original* pixels and a 0/1 mask — the
+/// masked copy is never materialized. Byte-identical to
+/// `apply_mask`-then-[`encode_masked_into`]: a pixel is "off" when the
+/// mask zeroes it or when it was already exactly zero.
+pub fn encode_masked_view_into(id: u64, pixels: &[f32], mask: &[f32], out: &mut Vec<u8>) {
+    assert_eq!(pixels.len(), FRAME_PIXELS * FRAME_C);
+    assert_eq!(mask.len(), FRAME_PIXELS);
+    let zero = |p: usize| (0..FRAME_C).all(|c| pixels[p * FRAME_C + c] == 0.0);
+    encode_runs_into(id, pixels, |p| mask[p] != 0.0 && !zero(p), out);
+}
+
+/// Dense encoding into a fresh unpooled buffer (tests/experiments; the
+/// fleet path uses [`encode_dense_pooled`]).
+pub fn encode_dense(id: u64, pixels: &[f32]) -> EncodedFrame {
+    let mut bytes = Vec::new();
+    encode_dense_into(id, pixels, &mut bytes);
     EncodedFrame {
-        bytes,
+        bytes: Arc::new(ByteBuf::unpooled(bytes)),
         raw_bytes: pixels.len() * 4,
     }
 }
 
-/// Decode either format back to `(id, pixels)`.
-pub fn decode_frame(bytes: &[u8]) -> Result<(u64, Vec<f32>)> {
+/// Masked RLE into a fresh unpooled buffer (tests/experiments).
+pub fn encode_masked(id: u64, pixels: &[f32]) -> EncodedFrame {
+    let mut bytes = Vec::new();
+    encode_masked_into(id, pixels, &mut bytes);
+    EncodedFrame {
+        bytes: Arc::new(ByteBuf::unpooled(bytes)),
+        raw_bytes: pixels.len() * 4,
+    }
+}
+
+/// Dense encoding into pooled scratch — the hot-path entry.
+pub fn encode_dense_pooled(pool: &FramePool, id: u64, pixels: &[f32]) -> EncodedFrame {
+    let mut buf = pool.checkout_bytes();
+    encode_dense_into(id, pixels, buf.vec_mut());
+    EncodedFrame {
+        bytes: Arc::new(buf),
+        raw_bytes: pixels.len() * 4,
+    }
+}
+
+/// Masked-view RLE into pooled scratch — the hot-path entry.
+pub fn encode_masked_view_pooled(
+    pool: &FramePool,
+    id: u64,
+    pixels: &[f32],
+    mask: &[f32],
+) -> EncodedFrame {
+    let mut buf = pool.checkout_bytes();
+    encode_masked_view_into(id, pixels, mask, buf.vec_mut());
+    EncodedFrame {
+        bytes: Arc::new(buf),
+        raw_bytes: pixels.len() * 4,
+    }
+}
+
+/// Decode either format into a caller-provided pixel buffer
+/// (`FRAME_ELEMS` long, fully overwritten). Returns the frame id.
+pub fn decode_frame_into(bytes: &[u8], pixels: &mut [f32]) -> Result<u64> {
     if bytes.len() < HEADER {
         bail!("short frame: {} bytes", bytes.len());
     }
@@ -116,61 +212,72 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(u64, Vec<f32>)> {
     if (h, w, c) != (FRAME_H, FRAME_W, FRAME_C) {
         bail!("unexpected frame geometry {h}x{w}x{c}");
     }
+    if pixels.len() != h * w * c {
+        bail!("decode target holds {} elems, frame wants {}", pixels.len(), h * w * c);
+    }
     let body = &bytes[HEADER..];
-    let mut pixels = vec![0.0f32; h * w * c];
     match magic {
         MAGIC_DENSE => {
             if body.len() != pixels.len() * 4 {
                 bail!("dense body length {} != {}", body.len(), pixels.len() * 4);
             }
-            for (i, chunk) in body.chunks_exact(4).enumerate() {
-                pixels[i] = f32::from_le_bytes(chunk.try_into().unwrap());
-            }
+            read_f32s(pixels, body);
         }
         MAGIC_RLE => {
             if body.len() < 4 {
                 bail!("rle body too short");
             }
+            pixels.fill(0.0);
             let n_runs = u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
             let mut at = 4usize;
             for _ in 0..n_runs {
                 if at + 8 > body.len() {
                     bail!("truncated run header");
                 }
-                let start =
-                    u32::from_le_bytes(body[at..at + 4].try_into().unwrap()) as usize;
-                let len =
-                    u32::from_le_bytes(body[at + 4..at + 8].try_into().unwrap()) as usize;
+                let start = u32::from_le_bytes(body[at..at + 4].try_into().unwrap()) as usize;
+                let len = u32::from_le_bytes(body[at + 4..at + 8].try_into().unwrap()) as usize;
                 at += 8;
                 if start + len > h * w || at + len * c * 4 > body.len() {
                     bail!("run out of bounds");
                 }
-                for q in start..start + len {
-                    for ch in 0..c {
-                        pixels[q * c + ch] =
-                            f32::from_le_bytes(body[at..at + 4].try_into().unwrap());
-                        at += 4;
-                    }
-                }
+                read_f32s(
+                    &mut pixels[start * c..(start + len) * c],
+                    &body[at..at + len * c * 4],
+                );
+                at += len * c * 4;
             }
         }
         other => bail!("bad magic {other:#x}"),
     }
+    Ok(id)
+}
+
+/// Decode either format into a fresh `Vec` — `(id, pixels)`.
+pub fn decode_frame(bytes: &[u8]) -> Result<(u64, Vec<f32>)> {
+    let mut pixels = vec![0.0f32; FRAME_PIXELS * FRAME_C];
+    let id = decode_frame_into(bytes, &mut pixels)?;
     Ok((id, pixels))
 }
 
-/// Encode a frame choosing the format by whether it was masked.
-pub fn encode_frame(frame: &Frame, masked_pixels: Option<&[f32]>) -> EncodedFrame {
-    match masked_pixels {
-        Some(px) => encode_masked(frame.id, px),
-        None => encode_dense(frame.id, &frame.pixels),
-    }
+/// Decode into a pooled buffer and wrap as a [`Frame`] — the auxiliary
+/// service path's lazy-decode entry. The truth mask is the pool's
+/// shared zero plane (decoded frames carry no ground truth) so the call
+/// performs no per-frame buffer allocation once the pool is warm.
+pub fn decode_frame_pooled(pool: &FramePool, bytes: &[u8]) -> Result<Frame> {
+    let mut buf = pool.checkout_pixels();
+    let id = decode_frame_into(bytes, buf.as_mut_slice())?;
+    Ok(Frame {
+        id,
+        pixels: Arc::new(buf),
+        truth_mask: pool.zero_mask(),
+        classes: ClassSet::empty(),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frames::mask::mask_with_truth;
+    use crate::frames::mask::{apply_mask, mask_with_truth};
     use crate::frames::SceneGenerator;
 
     #[test]
@@ -180,7 +287,7 @@ mod tests {
         let enc = encode_dense(f.id, &f.pixels);
         let (id, px) = decode_frame(&enc.bytes).unwrap();
         assert_eq!(id, f.id);
-        assert_eq!(px, f.pixels);
+        assert_eq!(px[..], f.pixels[..]);
         assert!(enc.savings() <= 0.0);
     }
 
@@ -193,6 +300,41 @@ mod tests {
         let (id, px) = decode_frame(&enc.bytes).unwrap();
         assert_eq!(id, f.id);
         assert_eq!(px, masked);
+    }
+
+    #[test]
+    fn masked_view_matches_mask_then_encode() {
+        let mut g = SceneGenerator::paper_default(6);
+        let pool = FramePool::new();
+        for _ in 0..5 {
+            let f = g.next_frame();
+            let mask = crate::frames::mask::dilate(&f.truth_mask, 1);
+            let mut masked = f.pixels.to_vec();
+            apply_mask(&mut masked, &mask);
+            let copy_path = encode_masked(f.id, &masked);
+            let view_path = encode_masked_view_pooled(&pool, f.id, &f.pixels, &mask);
+            assert_eq!(
+                copy_path.bytes[..],
+                view_path.bytes[..],
+                "view encoder must be byte-identical to the copy path"
+            );
+            assert_eq!(copy_path.raw_bytes, view_path.raw_bytes);
+        }
+    }
+
+    #[test]
+    fn pooled_decode_matches_vec_decode() {
+        let mut g = SceneGenerator::paper_default(8);
+        let pool = FramePool::new();
+        let f = g.next_frame();
+        let enc = encode_dense_pooled(&pool, f.id, &f.pixels);
+        let (id, px) = decode_frame(&enc.bytes).unwrap();
+        let back = decode_frame_pooled(&pool, &enc.bytes).unwrap();
+        assert_eq!(back.id, id);
+        assert_eq!(back.pixels[..], px[..]);
+        assert_eq!(back.coverage(), 0.0, "decoded frames have no ground truth");
+        // scratch + decode target + second decode target
+        assert!(pool.stats().checkouts >= 2);
     }
 
     #[test]
@@ -227,11 +369,30 @@ mod tests {
         assert!(decode_frame(&[1, 2, 3]).is_err());
         let mut g = SceneGenerator::paper_default(4);
         let f = g.next_frame();
-        let mut enc = encode_dense(f.id, &f.pixels).bytes;
+        let mut enc = encode_dense(f.id, &f.pixels).bytes.to_vec();
         enc[0] = 0xFF; // clobber magic
         assert!(decode_frame(&enc).is_err());
-        let mut enc2 = encode_masked(f.id, &f.pixels).bytes;
+        let mut enc2 = encode_masked(f.id, &f.pixels).bytes.to_vec();
         enc2.truncate(enc2.len() / 2);
         assert!(decode_frame(&enc2).is_err());
+        // decode-into rejects a wrong-sized target
+        let ok = encode_dense(f.id, &f.pixels);
+        let mut small = vec![0.0f32; 7];
+        assert!(decode_frame_into(&ok.bytes, &mut small).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_scratch_without_leaking() {
+        let mut g = SceneGenerator::paper_default(5);
+        let a = g.next_frame();
+        let b = g.next_frame();
+        let mut scratch = Vec::new();
+        encode_dense_into(a.id, &a.pixels, &mut scratch);
+        let first = scratch.clone();
+        encode_dense_into(b.id, &b.pixels, &mut scratch);
+        assert_ne!(first, scratch);
+        let (id, px) = decode_frame(&scratch).unwrap();
+        assert_eq!(id, b.id);
+        assert_eq!(px[..], b.pixels[..]);
     }
 }

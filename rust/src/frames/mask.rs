@@ -5,6 +5,13 @@
 //! elementwise application for frames already holding a mask, (b) mask
 //! statistics the codec and the bandwidth accounting consume, and (c) a
 //! ground-truth masking mode (perfect detector) used by ablations.
+//!
+//! The fleet hot path never materializes a masked pixel copy: the
+//! [`Batcher`](crate::coordinator::Batcher) dilates into a reusable
+//! scratch plane ([`dilate_into`]) and hands original pixels + mask to
+//! [`encode_masked_view_into`](super::codec::encode_masked_view_into).
+//! [`mask_with_truth`] (which allocates the masked copy) remains as the
+//! reference implementation for ablations and property tests.
 
 use super::{Frame, FRAME_C, FRAME_PIXELS, FRAME_W};
 
@@ -43,38 +50,40 @@ pub fn mask_stats(mask: &[f32]) -> MaskStats {
 /// Apply `mask` (H·W 0/1) to `pixels` (H·W·C), in place.
 pub fn apply_mask(pixels: &mut [f32], mask: &[f32]) {
     assert_eq!(pixels.len(), mask.len() * FRAME_C);
-    for (p, &m) in mask.iter().enumerate() {
+    for (px, &m) in pixels.chunks_exact_mut(FRAME_C).zip(mask) {
         if m == 0.0 {
-            for c in 0..FRAME_C {
-                pixels[p * FRAME_C + c] = 0.0;
-            }
+            px.fill(0.0);
         }
     }
 }
 
 /// Perfect-detector masking: use the frame's ground-truth mask, dilated by
 /// `margin` pixels (the paper's real detector keeps a halo around
-/// objects). Returns the masked copy and the stats.
+/// objects). Returns the masked copy and the stats. Reference path only —
+/// the hot path encodes the mask view without this copy.
 pub fn mask_with_truth(frame: &Frame, margin: usize) -> (Vec<f32>, MaskStats) {
     let mask = dilate(&frame.truth_mask, margin);
-    let mut pixels = frame.pixels.clone();
+    let mut pixels = frame.pixels.to_vec();
     apply_mask(&mut pixels, &mask);
     (pixels, mask_stats(&mask))
 }
 
-/// Binary dilation with a square structuring element of radius `r`.
+/// Binary dilation with a square structuring element of radius `r`,
+/// written into a caller-provided (reusable) plane of the same length.
 ///
 /// Perf note (EXPERIMENTS.md §Perf iteration 1): a separable two-pass
 /// running-window variant (O(n·r) asymptotics) was tried and REVERTED —
 /// at the production radius r=1 the naive stamp is ~35% faster (25 µs vs
 /// 39 µs per frame) because the 3×3 window is too small to amortize the
 /// extra full-frame passes and allocations.
-pub fn dilate(mask: &[f32], r: usize) -> Vec<f32> {
+pub fn dilate_into(mask: &[f32], r: usize, out: &mut [f32]) {
+    assert_eq!(mask.len(), out.len());
     if r == 0 {
-        return mask.to_vec();
+        out.copy_from_slice(mask);
+        return;
     }
     let h = FRAME_PIXELS / FRAME_W;
-    let mut out = vec![0.0f32; mask.len()];
+    out.fill(0.0);
     for y in 0..h {
         for x in 0..FRAME_W {
             if mask[y * FRAME_W + x] == 0.0 {
@@ -84,13 +93,17 @@ pub fn dilate(mask: &[f32], r: usize) -> Vec<f32> {
             let y1 = (y + r).min(h - 1);
             let x0 = x.saturating_sub(r);
             let x1 = (x + r).min(FRAME_W - 1);
-            for yy in y0..=y1 {
-                for xx in x0..=x1 {
-                    out[yy * FRAME_W + xx] = 1.0;
-                }
+            for row in out[y0 * FRAME_W..].chunks_mut(FRAME_W).take(y1 - y0 + 1) {
+                row[x0..=x1].fill(1.0);
             }
         }
     }
+}
+
+/// Binary dilation into a fresh plane (allocating convenience wrapper).
+pub fn dilate(mask: &[f32], r: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; mask.len()];
+    dilate_into(mask, r, &mut out);
     out
 }
 
@@ -150,5 +163,20 @@ mod tests {
         let on: usize = d.iter().map(|&v| v as usize).sum();
         assert_eq!(on, 25, "5x5 square");
         assert_eq!(dilate(&mask, 0), mask);
+    }
+
+    #[test]
+    fn dilate_into_reuses_scratch_without_leaking() {
+        let mut scratch = vec![0.0f32; FRAME_PIXELS];
+        let mut a = vec![0.0f32; FRAME_PIXELS];
+        a[0] = 1.0;
+        dilate_into(&a, 1, &mut scratch);
+        assert_eq!(scratch, dilate(&a, 1));
+        // a disjoint second mask must fully overwrite the first result
+        let mut b = vec![0.0f32; FRAME_PIXELS];
+        b[63 * FRAME_W + 63] = 1.0;
+        dilate_into(&b, 1, &mut scratch);
+        assert_eq!(scratch, dilate(&b, 1));
+        assert_eq!(scratch[0], 0.0, "stale dilation leaked through scratch");
     }
 }

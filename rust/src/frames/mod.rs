@@ -7,14 +7,49 @@
 //! [`SceneGenerator`] synthesizes deterministic scenes with the same
 //! statistics: dark background + class-coded foreground objects covering
 //! a calibrated area fraction, with smooth motion across a sequence.
+//!
+//! ## Zero-copy pipeline: pool & ownership model
+//!
+//! The frame data path is built around the [`pool::FramePool`] arena so
+//! a frame's pixels are **allocated once and never copied** on the
+//! simulated wire:
+//!
+//! * [`SceneGenerator::next_frame`] renders into pooled pixel/mask
+//!   buffers and freezes them into [`pool::SharedPixels`] handles —
+//!   `Frame` is a bundle of O(1)-clone shared handles plus a `Copy`
+//!   [`ClassSet`]; moving or cloning a `Frame` never touches pixels.
+//! * The [`Batcher`](crate::coordinator::Batcher) encodes offloaded
+//!   frames straight off the shared pixels: masking is a *view*
+//!   ([`codec::encode_masked_view_into`] with a reusable dilation
+//!   scratch), never a masked pixel copy.
+//! * [`codec::EncodedFrame`] wraps pooled wire bytes; the fleet
+//!   dispatcher's `Job` carries that handle and the auxiliary decodes
+//!   lazily at service time into pool scratch
+//!   ([`codec::decode_frame_pooled`]).
+//! * Dropping the last handle recycles the backing buffer; after
+//!   warm-up the per-frame path allocates no new buffers
+//!   ([`pool::PoolStats`] proves it in
+//!   `FleetReport.pool`).
+//!
+//! Wire-format invariants the codec relies on are documented in
+//! [`codec`]; the masked-view encoding is property-tested byte-identical
+//! to the mask-then-encode reference path.
 
 pub mod codec;
 pub mod mask;
+pub mod pool;
 pub mod similarity;
 
-pub use codec::{decode_frame, encode_dense, encode_masked, EncodedFrame};
-pub use mask::{apply_mask, mask_stats, MaskStats};
+pub use codec::{
+    decode_frame, decode_frame_into, decode_frame_pooled, encode_dense, encode_dense_into,
+    encode_dense_pooled, encode_masked, encode_masked_into, encode_masked_view_into,
+    encode_masked_view_pooled, EncodedFrame,
+};
+pub use mask::{apply_mask, dilate_into, mask_stats, MaskStats};
+pub use pool::{shared_from_vec, FramePool, PoolBuf, PoolStats, SharedPixels};
 pub use similarity::SimilarityFilter;
+
+use std::sync::Arc;
 
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
@@ -33,6 +68,43 @@ pub const CLASSES: [&str; 9] = [
     "person", "car", "truck", "bicycle", "dog", "chair", "table", "cone", "box",
 ];
 
+/// The set of object classes present in a frame — a `u16` bitmask over
+/// the 9 dataset classes, so carrying it costs no allocation (the seed
+/// kept a sorted/deduped `Vec<usize>` per frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassSet {
+    bits: u16,
+}
+
+impl ClassSet {
+    pub const fn empty() -> ClassSet {
+        ClassSet { bits: 0 }
+    }
+
+    pub fn insert(&mut self, class_id: usize) {
+        debug_assert!(class_id < 16, "class id {class_id} out of range");
+        self.bits |= 1u16 << class_id;
+    }
+
+    pub fn contains(&self, class_id: usize) -> bool {
+        class_id < 16 && self.bits & (1u16 << class_id) != 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.count_ones() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// Class ids present, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = usize> {
+        let bits = self.bits;
+        (0..16usize).filter(move |c| bits & (1u16 << c) != 0)
+    }
+}
+
 /// One synthetic scene object.
 #[derive(Debug, Clone)]
 pub struct SceneObject {
@@ -48,20 +120,24 @@ pub struct SceneObject {
     pub vy: f64,
 }
 
-/// A camera frame: `64×64×3` f32 image plus ground truth.
+/// A camera frame: `64×64×3` f32 image plus ground truth. Pixels and
+/// mask are shared pooled payloads — cloning a `Frame` is O(1) and the
+/// buffers recycle to their [`FramePool`] when the last handle drops.
 #[derive(Debug, Clone)]
 pub struct Frame {
     pub id: u64,
-    pub pixels: Vec<f32>,
+    pub pixels: SharedPixels,
     /// Ground-truth object mask (1 bit per pixel, as f32 0/1).
-    pub truth_mask: Vec<f32>,
+    pub truth_mask: SharedPixels,
     /// Classes present.
-    pub classes: Vec<usize>,
+    pub classes: ClassSet,
 }
 
 impl Frame {
+    /// View the frame as a `[1, H, W, C]` tensor — shares the pixel
+    /// payload with the runtime instead of copying it.
     pub fn as_tensor(&self) -> Tensor {
-        Tensor::new(vec![1, FRAME_H, FRAME_W, FRAME_C], self.pixels.clone()).unwrap()
+        Tensor::from_shared(vec![1, FRAME_H, FRAME_W, FRAME_C], self.pixels.clone()).unwrap()
     }
 
     /// Fraction of pixels covered by ground-truth objects.
@@ -71,6 +147,19 @@ impl Frame {
 
     pub fn size_bytes(&self) -> usize {
         FRAME_BYTES
+    }
+
+    /// Rebuild a frame from decoded pixels (the receiving side of the
+    /// wire) without a pool — interop/test seam; the fleet path uses
+    /// [`codec::decode_frame_pooled`] instead.
+    pub fn from_decoded(id: u64, pixels: Vec<f32>) -> Frame {
+        debug_assert_eq!(pixels.len(), FRAME_ELEMS);
+        Frame {
+            id,
+            pixels: shared_from_vec(pixels),
+            truth_mask: shared_from_vec(vec![0.0; FRAME_PIXELS]),
+            classes: ClassSet::empty(),
+        }
     }
 }
 
@@ -83,7 +172,7 @@ pub fn stack_frames(frames: &[Frame]) -> Tensor {
     Tensor::new(vec![frames.len(), FRAME_H, FRAME_W, FRAME_C], data).unwrap()
 }
 
-/// Deterministic synthetic scene stream.
+/// Deterministic synthetic scene stream rendering into pooled buffers.
 #[derive(Debug)]
 pub struct SceneGenerator {
     rng: Rng,
@@ -91,12 +180,20 @@ pub struct SceneGenerator {
     next_id: u64,
     /// Per-pixel background noise amplitude.
     pub noise: f32,
+    pool: FramePool,
 }
 
 impl SceneGenerator {
     /// `n_objects` foreground objects; coverage calibrates to ≈ 0.35–0.6
-    /// for 3–5 objects (the §VI bandwidth-savings regime).
+    /// for 3–5 objects (the §VI bandwidth-savings regime). Renders into
+    /// a private [`FramePool`]; use [`SceneGenerator::new_in`] to share
+    /// one pool across generators.
     pub fn new(seed: u64, n_objects: usize) -> Self {
+        SceneGenerator::new_in(seed, n_objects, FramePool::new())
+    }
+
+    /// Like [`SceneGenerator::new`] but recycling through `pool`.
+    pub fn new_in(seed: u64, n_objects: usize, pool: FramePool) -> Self {
         let mut rng = Rng::new(seed);
         let objects = (0..n_objects)
             .map(|_| {
@@ -118,6 +215,7 @@ impl SceneGenerator {
             objects,
             next_id: 0,
             noise: 0.03,
+            pool,
         }
     }
 
@@ -126,45 +224,54 @@ impl SceneGenerator {
         SceneGenerator::new(seed, 4)
     }
 
+    /// Paper-like default recycling through `pool`.
+    pub fn paper_default_in(seed: u64, pool: FramePool) -> Self {
+        SceneGenerator::new_in(seed, 4, pool)
+    }
+
     /// Render the current scene and advance object motion.
     pub fn next_frame(&mut self) -> Frame {
-        let mut pixels = vec![0.0f32; FRAME_ELEMS];
-        let mut truth = vec![0.0f32; FRAME_PIXELS];
+        let mut pixels_buf = self.pool.checkout_pixels();
+        let mut truth_buf = self.pool.checkout_mask();
+        let mut classes = ClassSet::empty();
+        {
+            let pixels = pixels_buf.as_mut_slice();
+            let truth = truth_buf.as_mut_slice();
 
-        // dim background with low-amplitude noise
-        for p in 0..FRAME_PIXELS {
-            let n = self.noise * self.rng.f32();
-            pixels[p * 3] = 0.05 + n;
-            pixels[p * 3 + 1] = 0.05 + n;
-            pixels[p * 3 + 2] = 0.06 + n;
-        }
+            // dim background with low-amplitude noise
+            for p in 0..FRAME_PIXELS {
+                let n = self.noise * self.rng.f32();
+                pixels[p * 3] = 0.05 + n;
+                pixels[p * 3 + 1] = 0.05 + n;
+                pixels[p * 3 + 2] = 0.06 + n;
+            }
 
-        let mut classes = Vec::new();
-        for obj in &self.objects {
-            classes.push(obj.class_id);
-            // class-coded color so downstream DNNs see distinct objects
-            let base = 0.45 + 0.05 * obj.class_id as f32;
-            let (r, g, b) = (
-                base,
-                0.9 - 0.07 * obj.class_id as f32,
-                0.3 + 0.06 * obj.class_id as f32,
-            );
-            let x0 = (obj.cx - obj.hw).max(0.0) as usize;
-            let x1 = (obj.cx + obj.hw).min(FRAME_W as f64 - 1.0) as usize;
-            let y0 = (obj.cy - obj.hh).max(0.0) as usize;
-            let y1 = (obj.cy + obj.hh).min(FRAME_H as f64 - 1.0) as usize;
-            for y in y0..=y1 {
-                for x in x0..=x1 {
-                    // elliptical footprint
-                    let dx = (x as f64 - obj.cx) / obj.hw;
-                    let dy = (y as f64 - obj.cy) / obj.hh;
-                    if dx * dx + dy * dy <= 1.0 {
-                        let p = y * FRAME_W + x;
-                        let shade = 1.0 - 0.3 * (dx * dx + dy * dy) as f32;
-                        pixels[p * 3] = r * shade;
-                        pixels[p * 3 + 1] = g * shade;
-                        pixels[p * 3 + 2] = b * shade;
-                        truth[p] = 1.0;
+            for obj in &self.objects {
+                classes.insert(obj.class_id);
+                // class-coded color so downstream DNNs see distinct objects
+                let base = 0.45 + 0.05 * obj.class_id as f32;
+                let (r, g, b) = (
+                    base,
+                    0.9 - 0.07 * obj.class_id as f32,
+                    0.3 + 0.06 * obj.class_id as f32,
+                );
+                let x0 = (obj.cx - obj.hw).max(0.0) as usize;
+                let x1 = (obj.cx + obj.hw).min(FRAME_W as f64 - 1.0) as usize;
+                let y0 = (obj.cy - obj.hh).max(0.0) as usize;
+                let y1 = (obj.cy + obj.hh).min(FRAME_H as f64 - 1.0) as usize;
+                for y in y0..=y1 {
+                    for x in x0..=x1 {
+                        // elliptical footprint
+                        let dx = (x as f64 - obj.cx) / obj.hw;
+                        let dy = (y as f64 - obj.cy) / obj.hh;
+                        if dx * dx + dy * dy <= 1.0 {
+                            let p = y * FRAME_W + x;
+                            let shade = 1.0 - 0.3 * (dx * dx + dy * dy) as f32;
+                            pixels[p * 3] = r * shade;
+                            pixels[p * 3 + 1] = g * shade;
+                            pixels[p * 3 + 2] = b * shade;
+                            truth[p] = 1.0;
+                        }
                     }
                 }
             }
@@ -184,14 +291,11 @@ impl SceneGenerator {
             }
         }
 
-        let mut cls = classes;
-        cls.sort_unstable();
-        cls.dedup();
         let f = Frame {
             id: self.next_id,
-            pixels,
-            truth_mask: truth,
-            classes: cls,
+            pixels: Arc::new(pixels_buf),
+            truth_mask: Arc::new(truth_buf),
+            classes,
         };
         self.next_id += 1;
         f
@@ -200,6 +304,11 @@ impl SceneGenerator {
     /// Generate a batch of `n` frames.
     pub fn batch(&mut self, n: usize) -> Vec<Frame> {
         (0..n).map(|_| self.next_frame()).collect()
+    }
+
+    /// The pool this generator recycles through.
+    pub fn pool(&self) -> &FramePool {
+        &self.pool
     }
 }
 
@@ -245,7 +354,7 @@ mod tests {
         let diff: f32 = a
             .pixels
             .iter()
-            .zip(&b.pixels)
+            .zip(b.pixels.iter())
             .map(|(x, y)| (x - y).abs())
             .sum::<f32>()
             / FRAME_ELEMS as f32;
@@ -258,7 +367,23 @@ mod tests {
         let mut g = SceneGenerator::new(23, 6);
         let f = g.next_frame();
         assert!(!f.classes.is_empty());
-        assert!(f.classes.iter().all(|&c| c < CLASSES.len()));
+        assert!(f.classes.iter().all(|c| c < CLASSES.len()));
+        assert!(f.classes.len() <= 6);
+        for c in f.classes.iter() {
+            assert!(f.classes.contains(c));
+        }
+    }
+
+    #[test]
+    fn class_set_insert_iter_roundtrip() {
+        let mut s = ClassSet::empty();
+        assert!(s.is_empty());
+        s.insert(3);
+        s.insert(0);
+        s.insert(3); // dedup for free
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 3]);
+        assert!(s.contains(0) && s.contains(3) && !s.contains(1));
     }
 
     #[test]
@@ -266,5 +391,50 @@ mod tests {
         let mut g = SceneGenerator::paper_default(29);
         let t = stack_frames(&g.batch(5));
         assert_eq!(t.shape(), &[5, 64, 64, 3]);
+    }
+
+    #[test]
+    fn frames_recycle_into_the_generator_pool() {
+        let mut g = SceneGenerator::paper_default(31);
+        {
+            let _frames = g.batch(4);
+            // 4 pixel + 4 mask buffers live
+            assert_eq!(g.pool().stats().fresh_allocs, 8);
+        }
+        // dropped: all recycled; the next batch allocates nothing new
+        assert_eq!(g.pool().stats().recycled, 8);
+        let _frames = g.batch(4);
+        let s = g.pool().stats();
+        assert_eq!(s.fresh_allocs, 8, "warm pool must not allocate");
+        assert_eq!(s.checkouts, 16);
+    }
+
+    #[test]
+    fn shared_clone_is_same_payload() {
+        let mut g = SceneGenerator::paper_default(37);
+        let f = g.next_frame();
+        let f2 = f.clone();
+        assert!(Arc::ptr_eq(&f.pixels, &f2.pixels), "clone must share, not copy");
+        assert_eq!(f.pixels, f2.pixels);
+    }
+
+    #[test]
+    fn as_tensor_shares_the_payload() {
+        let mut g = SceneGenerator::paper_default(41);
+        let f = g.next_frame();
+        let t = f.as_tensor();
+        assert_eq!(t.shape(), &[1, 64, 64, 3]);
+        assert_eq!(t.data(), &f.pixels[..]);
+        // sharing, not copying: no new pool allocation happened
+        assert_eq!(g.pool().stats().fresh_allocs, 2);
+    }
+
+    #[test]
+    fn from_decoded_builds_a_bare_frame() {
+        let f = Frame::from_decoded(7, vec![0.25; FRAME_ELEMS]);
+        assert_eq!(f.id, 7);
+        assert_eq!(f.pixels.len(), FRAME_ELEMS);
+        assert_eq!(f.coverage(), 0.0);
+        assert!(f.classes.is_empty());
     }
 }

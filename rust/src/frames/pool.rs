@@ -1,0 +1,476 @@
+//! Frame buffer pool — the allocation arena behind the zero-copy frame
+//! pipeline.
+//!
+//! Every hot-path buffer (pixel payloads, truth/detector masks, encoded
+//! wire bytes) is checked out of a [`FramePool`] and recycled back onto a
+//! freelist when its last shared handle drops. After a short warm-up the
+//! steady-state frame path therefore performs **zero per-frame buffer
+//! allocations**: a frame's pixels are allocated once, shared by handle
+//! (`Arc`) everywhere downstream, and the backing storage returns to the
+//! pool the moment the last consumer lets go. The one remaining
+//! per-checkout allocation is the constant-size `Arc` control block of
+//! the handle itself; the 48 KiB/16 KiB payloads never reallocate.
+//!
+//! Ownership model:
+//!
+//! * [`FramePool::checkout_pixels`] / [`checkout_mask`] hand out a
+//!   uniquely-owned [`PoolBuf`] (zeroed — a recycled buffer can never
+//!   leak a stale pixel, see `tests/prop_frames.rs`); the producer fills
+//!   it mutably, then freezes it into a [`SharedPixels`] handle
+//!   (`Arc<PoolBuf>`) that clones in O(1).
+//! * [`FramePool::checkout_bytes`] hands out a cleared [`ByteBuf`] the
+//!   codec encodes into; frozen as [`SharedBytes`] it rides inside
+//!   [`super::codec::EncodedFrame`] across the simulated wire.
+//! * Dropping the last handle pushes the backing `Vec` onto the pool's
+//!   freelist (bounded by [`MAX_FREE_PER_SHELF`]); buffers created
+//!   without a pool (test/interop helpers) simply deallocate.
+//!
+//! [`PoolStats`] counts checkouts, fresh allocations and recycles so
+//! reports can *prove* reuse instead of asserting it —
+//! `FleetReport.pool` surfaces the delta for every fleet run.
+//!
+//! [`checkout_mask`]: FramePool::checkout_mask
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+use super::{FRAME_ELEMS, FRAME_PIXELS};
+
+/// Freelist depth cap per buffer kind — beyond this, dropped buffers
+/// deallocate instead of pooling (bounds worst-case memory under a
+/// transient burst).
+pub const MAX_FREE_PER_SHELF: usize = 1024;
+
+/// Which freelist a pooled f32 buffer recycles into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shelf {
+    /// `FRAME_ELEMS`-sized pixel payloads.
+    Pixels,
+    /// `FRAME_PIXELS`-sized mask planes.
+    Mask,
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    pixels: Vec<Vec<f32>>,
+    masks: Vec<Vec<f32>>,
+    bytes: Vec<Vec<u8>>,
+    checkouts: u64,
+    fresh_allocs: u64,
+    recycled: u64,
+}
+
+/// Cumulative pool counters (monotone; subtract snapshots for deltas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Buffers handed out (pixels + masks + byte scratch).
+    pub checkouts: u64,
+    /// Checkouts that had to allocate because the freelist was empty —
+    /// the number that must stop growing once the pool is warm.
+    pub fresh_allocs: u64,
+    /// Buffers returned to a freelist by handle drops.
+    pub recycled: u64,
+}
+
+impl PoolStats {
+    /// Checkouts served off the freelist without touching the allocator.
+    pub fn reuses(&self) -> u64 {
+        self.checkouts - self.fresh_allocs
+    }
+
+    /// Fraction of checkouts served without allocating, in `[0, 1]`.
+    pub fn reuse_frac(&self) -> f64 {
+        if self.checkouts == 0 {
+            0.0
+        } else {
+            self.reuses() as f64 / self.checkouts as f64
+        }
+    }
+
+    /// Counter delta since an `earlier` snapshot of the same pool.
+    pub fn since(&self, earlier: PoolStats) -> PoolStats {
+        PoolStats {
+            checkouts: self.checkouts - earlier.checkouts,
+            fresh_allocs: self.fresh_allocs - earlier.fresh_allocs,
+            recycled: self.recycled - earlier.recycled,
+        }
+    }
+}
+
+/// A pooled f32 buffer. Uniquely owned while being filled; frozen into
+/// a [`SharedPixels`] (`Arc<PoolBuf>`) for O(1) sharing. Recycles its
+/// storage to the owning pool's freelist on last drop.
+pub struct PoolBuf {
+    data: Vec<f32>,
+    shelf: Shelf,
+    pool: Option<Arc<Mutex<PoolInner>>>,
+}
+
+impl PoolBuf {
+    /// Wrap an owned `Vec` without a pool (drops deallocate normally).
+    /// Interop seam for tests and decoded one-off frames.
+    pub fn unpooled(data: Vec<f32>) -> PoolBuf {
+        PoolBuf {
+            data,
+            shelf: Shelf::Pixels,
+            pool: None,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl PartialEq for PoolBuf {
+    fn eq(&self, other: &PoolBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl fmt::Debug for PoolBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PoolBuf({} f32, {:?})", self.data.len(), self.shelf)
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            let data = std::mem::take(&mut self.data);
+            // never panic in drop: a poisoned pool just stops recycling
+            if let Ok(mut inner) = pool.lock() {
+                let shelf = match self.shelf {
+                    Shelf::Pixels => &mut inner.pixels,
+                    Shelf::Mask => &mut inner.masks,
+                };
+                if shelf.len() < MAX_FREE_PER_SHELF {
+                    shelf.push(data);
+                    inner.recycled += 1;
+                }
+            }
+        }
+    }
+}
+
+/// A pooled byte buffer the codec encodes into; frozen as
+/// [`SharedBytes`] it is the wire payload of an encoded frame.
+pub struct ByteBuf {
+    data: Vec<u8>,
+    pool: Option<Arc<Mutex<PoolInner>>>,
+}
+
+impl ByteBuf {
+    /// Wrap an owned `Vec` without a pool (drops deallocate normally).
+    pub fn unpooled(data: Vec<u8>) -> ByteBuf {
+        ByteBuf { data, pool: None }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// The growable backing vector (the codec's encode-into target).
+    pub fn vec_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl Deref for ByteBuf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+impl PartialEq for ByteBuf {
+    fn eq(&self, other: &ByteBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl fmt::Debug for ByteBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ByteBuf({} bytes)", self.data.len())
+    }
+}
+
+impl Drop for ByteBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            let data = std::mem::take(&mut self.data);
+            if let Ok(mut inner) = pool.lock() {
+                if inner.bytes.len() < MAX_FREE_PER_SHELF {
+                    inner.bytes.push(data);
+                    inner.recycled += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Cheaply-cloneable shared pixel/mask payload.
+pub type SharedPixels = Arc<PoolBuf>;
+
+/// Cheaply-cloneable shared encoded-frame payload.
+pub type SharedBytes = Arc<ByteBuf>;
+
+/// Freeze an owned `Vec<f32>` into a shared handle (unpooled).
+pub fn shared_from_vec(data: Vec<f32>) -> SharedPixels {
+    Arc::new(PoolBuf::unpooled(data))
+}
+
+/// The frame-buffer arena. Clones share the same freelists and
+/// counters, so a generator, batcher and dispatcher can recycle through
+/// one pool; [`FramePool::stats`] snapshots are deterministic for a
+/// deterministic workload.
+#[derive(Clone)]
+pub struct FramePool {
+    inner: Arc<Mutex<PoolInner>>,
+    /// One all-zero mask plane shared by every decoded frame (decoded
+    /// frames carry no ground truth; sharing one plane keeps the aux
+    /// service path allocation-free).
+    zero_mask: SharedPixels,
+}
+
+impl FramePool {
+    pub fn new() -> FramePool {
+        FramePool {
+            inner: Arc::new(Mutex::new(PoolInner::default())),
+            zero_mask: Arc::new(PoolBuf {
+                data: vec![0.0; FRAME_PIXELS],
+                shelf: Shelf::Mask,
+                pool: None,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolInner> {
+        self.inner.lock().expect("frame pool poisoned")
+    }
+
+    fn checkout_f32(&self, shelf: Shelf, len: usize) -> PoolBuf {
+        let mut inner = self.lock();
+        inner.checkouts += 1;
+        let free = match shelf {
+            Shelf::Pixels => &mut inner.pixels,
+            Shelf::Mask => &mut inner.masks,
+        };
+        let data = match free.pop() {
+            Some(mut v) => {
+                debug_assert_eq!(v.len(), len, "freelist buffer has wrong geometry");
+                // fresh-checkout zeroing: recycled buffers must never
+                // leak a previous frame's pixels
+                v.fill(0.0);
+                v
+            }
+            None => {
+                inner.fresh_allocs += 1;
+                vec![0.0; len]
+            }
+        };
+        PoolBuf {
+            data,
+            shelf,
+            pool: Some(Arc::clone(&self.inner)),
+        }
+    }
+
+    /// Check out a zeroed `FRAME_ELEMS` pixel payload.
+    pub fn checkout_pixels(&self) -> PoolBuf {
+        self.checkout_f32(Shelf::Pixels, FRAME_ELEMS)
+    }
+
+    /// Check out a zeroed `FRAME_PIXELS` mask plane.
+    pub fn checkout_mask(&self) -> PoolBuf {
+        self.checkout_f32(Shelf::Mask, FRAME_PIXELS)
+    }
+
+    /// Check out an empty (cleared, capacity-preserving) byte scratch.
+    pub fn checkout_bytes(&self) -> ByteBuf {
+        let mut inner = self.lock();
+        inner.checkouts += 1;
+        let data = match inner.bytes.pop() {
+            Some(mut v) => {
+                v.clear();
+                v
+            }
+            None => {
+                inner.fresh_allocs += 1;
+                Vec::new()
+            }
+        };
+        ByteBuf {
+            data,
+            pool: Some(Arc::clone(&self.inner)),
+        }
+    }
+
+    /// The shared all-zero mask plane (for decoded frames).
+    pub fn zero_mask(&self) -> SharedPixels {
+        Arc::clone(&self.zero_mask)
+    }
+
+    /// Cumulative counters for this pool.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.lock();
+        PoolStats {
+            checkouts: inner.checkouts,
+            fresh_allocs: inner.fresh_allocs,
+            recycled: inner.recycled,
+        }
+    }
+
+    /// Buffers currently parked on the freelists.
+    pub fn free_buffers(&self) -> usize {
+        let inner = self.lock();
+        inner.pixels.len() + inner.masks.len() + inner.bytes.len()
+    }
+}
+
+impl Default for FramePool {
+    fn default() -> Self {
+        FramePool::new()
+    }
+}
+
+impl fmt::Debug for FramePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "FramePool(checkouts {}, fresh {}, recycled {})",
+            s.checkouts, s.fresh_allocs, s.recycled
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_is_zeroed_and_sized() {
+        let pool = FramePool::new();
+        let px = pool.checkout_pixels();
+        assert_eq!(px.len(), FRAME_ELEMS);
+        assert!(px.iter().all(|&v| v == 0.0));
+        let mask = pool.checkout_mask();
+        assert_eq!(mask.len(), FRAME_PIXELS);
+        let bytes = pool.checkout_bytes();
+        assert!(bytes.is_empty());
+    }
+
+    #[test]
+    fn drop_recycles_and_recheckout_reuses() {
+        let pool = FramePool::new();
+        {
+            let mut px = pool.checkout_pixels();
+            px.as_mut_slice().fill(7.5);
+        }
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 1);
+        assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.recycled, 1);
+        assert_eq!(pool.free_buffers(), 1);
+
+        // second checkout reuses the freelist entry — and sees zeros
+        let px = pool.checkout_pixels();
+        assert!(px.iter().all(|&v| v == 0.0), "stale pixels leaked");
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.fresh_allocs, 1, "reuse must not allocate");
+        assert_eq!(s.reuses(), 1);
+        assert!(s.reuse_frac() > 0.49);
+    }
+
+    #[test]
+    fn shared_handles_recycle_on_last_drop() {
+        let pool = FramePool::new();
+        let a: SharedPixels = Arc::new(pool.checkout_pixels());
+        let b = Arc::clone(&a);
+        drop(a);
+        assert_eq!(pool.stats().recycled, 0, "clone still alive");
+        drop(b);
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn byte_scratch_keeps_capacity_across_reuse() {
+        let pool = FramePool::new();
+        {
+            let mut b = pool.checkout_bytes();
+            b.vec_mut().extend_from_slice(&[1, 2, 3, 4]);
+            assert_eq!(b.len(), 4);
+        }
+        let b = pool.checkout_bytes();
+        assert!(b.is_empty(), "recycled scratch must come back cleared");
+        assert_eq!(pool.stats().fresh_allocs, 1);
+    }
+
+    #[test]
+    fn unpooled_buffers_do_not_recycle() {
+        let pool = FramePool::new();
+        drop(PoolBuf::unpooled(vec![1.0; 4]));
+        drop(ByteBuf::unpooled(vec![1]));
+        assert_eq!(pool.stats().recycled, 0);
+        assert_eq!(pool.free_buffers(), 0);
+    }
+
+    #[test]
+    fn stats_since_subtracts() {
+        let pool = FramePool::new();
+        let t0 = pool.stats();
+        drop(pool.checkout_mask());
+        let d = pool.stats().since(t0);
+        assert_eq!(d.checkouts, 1);
+        assert_eq!(d.fresh_allocs, 1);
+        assert_eq!(d.recycled, 1);
+    }
+
+    #[test]
+    fn zero_mask_is_shared_and_zero() {
+        let pool = FramePool::new();
+        let a = pool.zero_mask();
+        let b = pool.zero_mask();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), FRAME_PIXELS);
+        assert!(a.iter().all(|&v| v == 0.0));
+    }
+}

@@ -6,33 +6,42 @@
 //! under the threshold are dropped from the offload queue. On a slow
 //! moving UGV feed this removes near-duplicate frames and directly
 //! reduces both compute and bandwidth.
+//!
+//! The accumulation walks contiguous row slices per grid cell
+//! (`chunks_exact` over RGB triples), so the compiler drops the
+//! per-pixel bounds checks; the summation order is exactly the seed's
+//! (y-major within each cell), keeping signatures bit-identical and
+//! therefore dedup decisions — and every same-seed `FleetReport` —
+//! unchanged.
 
-use super::{Frame, FRAME_C, FRAME_W};
+use super::{Frame, FRAME_C, FRAME_H, FRAME_W};
 
 const GRID: usize = 8;
 
-/// 8×8 mean-luma signature.
-pub fn signature(frame: &Frame) -> [f32; GRID * GRID] {
-    let h = frame.truth_mask.len() / FRAME_W;
-    let cell_h = h / GRID;
+/// 8×8 mean-luma signature over a raw `H·W·C` pixel slice.
+pub fn signature_of(pixels: &[f32]) -> [f32; GRID * GRID] {
+    let cell_h = FRAME_H / GRID;
     let cell_w = FRAME_W / GRID;
     let mut sig = [0.0f32; GRID * GRID];
     for gy in 0..GRID {
         for gx in 0..GRID {
             let mut acc = 0.0f32;
             for y in gy * cell_h..(gy + 1) * cell_h {
-                for x in gx * cell_w..(gx + 1) * cell_w {
-                    let p = (y * FRAME_W + x) * FRAME_C;
+                let row = &pixels[(y * FRAME_W + gx * cell_w) * FRAME_C..][..cell_w * FRAME_C];
+                for px in row.chunks_exact(FRAME_C) {
                     // Rec.601 luma
-                    acc += 0.299 * frame.pixels[p]
-                        + 0.587 * frame.pixels[p + 1]
-                        + 0.114 * frame.pixels[p + 2];
+                    acc += 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2];
                 }
             }
             sig[gy * GRID + gx] = acc / (cell_h * cell_w) as f32;
         }
     }
     sig
+}
+
+/// 8×8 mean-luma signature of a frame.
+pub fn signature(frame: &Frame) -> [f32; GRID * GRID] {
+    signature_of(&frame.pixels)
 }
 
 /// Mean absolute signature distance.
@@ -100,7 +109,7 @@ impl SimilarityFilter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frames::SceneGenerator;
+    use crate::frames::{pool::shared_from_vec, SceneGenerator};
 
     #[test]
     fn identical_frames_dropped() {
@@ -138,14 +147,20 @@ mod tests {
         let mut g = SceneGenerator::paper_default(13);
         let a = g.next_frame();
         let sig_a = signature(&a);
-        let mut b = a.clone();
-        // brighten one corner cell only
+        // brighten one corner cell only (shared payloads are immutable:
+        // edit an owned copy, then refreeze it as a new frame)
+        let mut px = a.pixels.to_vec();
         for y in 0..8 {
             for x in 0..8 {
-                let p = (y * FRAME_W + x) * 3;
-                b.pixels[p] = 1.0;
+                px[(y * FRAME_W + x) * 3] = 1.0;
             }
         }
+        let b = Frame {
+            id: a.id,
+            pixels: shared_from_vec(px),
+            truth_mask: a.truth_mask.clone(),
+            classes: a.classes,
+        };
         let sig_b = signature(&b);
         let changed: usize = sig_a
             .iter()
@@ -153,5 +168,12 @@ mod tests {
             .filter(|(x, y)| (*x - *y).abs() > 1e-6)
             .count();
         assert_eq!(changed, 1, "only one grid cell should move");
+    }
+
+    #[test]
+    fn signature_of_matches_frame_signature() {
+        let mut g = SceneGenerator::paper_default(17);
+        let f = g.next_frame();
+        assert_eq!(signature(&f), signature_of(&f.pixels));
     }
 }

@@ -1,13 +1,43 @@
 //! A minimal dense f32 tensor — the interchange type between the
 //! coordinator's frame pipeline and the PJRT runtime.
+//!
+//! Storage is either owned (`Vec<f32>`) or a shared pooled frame
+//! payload ([`SharedPixels`]), so [`crate::frames::Frame::as_tensor`]
+//! can hand pixels to the runtime without copying. Mutation through
+//! [`Tensor::data_mut`] copies-on-write, keeping the shared payload
+//! immutable for its other holders.
 
 use anyhow::{bail, Result};
 
+use crate::frames::pool::SharedPixels;
+
+/// Tensor backing storage.
+#[derive(Debug, Clone)]
+enum TensorData {
+    Owned(Vec<f32>),
+    Shared(SharedPixels),
+}
+
+impl TensorData {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            TensorData::Owned(v) => v,
+            TensorData::Shared(s) => s.as_slice(),
+        }
+    }
+}
+
 /// Row-major dense f32 tensor.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: TensorData,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape && self.data.as_slice() == other.data.as_slice()
+    }
 }
 
 impl Tensor {
@@ -21,14 +51,34 @@ impl Tensor {
                 data.len()
             );
         }
-        Ok(Tensor { shape, data })
+        Ok(Tensor {
+            shape,
+            data: TensorData::Owned(data),
+        })
+    }
+
+    /// Wrap a shared pooled payload without copying it.
+    pub fn from_shared(shape: Vec<usize>, data: SharedPixels) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape,
+            data: TensorData::Shared(data),
+        })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor {
             shape,
-            data: vec![0.0; n],
+            data: TensorData::Owned(vec![0.0; n]),
         }
     }
 
@@ -37,28 +87,38 @@ impl Tensor {
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
+    /// Mutable view; a shared payload is copied-on-write first.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        if let TensorData::Shared(s) = &self.data {
+            self.data = TensorData::Owned(s.as_slice().to_vec());
+        }
+        match &mut self.data {
+            TensorData::Owned(v) => v,
+            TensorData::Shared(_) => unreachable!("shared storage was just detached"),
+        }
     }
 
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        match self.data {
+            TensorData::Owned(v) => v,
+            TensorData::Shared(s) => s.as_slice().to_vec(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.data.as_slice().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
     /// Number of bytes of raw payload (f32).
     pub fn size_bytes(&self) -> usize {
-        self.data.len() * 4
+        self.len() * 4
     }
 
     /// Stack a batch of equally-shaped tensors along a new leading axis.
@@ -72,7 +132,7 @@ impl Tensor {
             if t.shape != inner {
                 bail!("ragged stack: {:?} vs {:?}", t.shape, inner);
             }
-            data.extend_from_slice(&t.data);
+            data.extend_from_slice(t.data());
         }
         let mut shape = vec![items.len()];
         shape.extend(inner);
@@ -87,10 +147,11 @@ impl Tensor {
         let n = self.shape[0];
         let inner: Vec<usize> = self.shape[1..].to_vec();
         let chunk = self.len() / n.max(1);
+        let data = self.data();
         Ok((0..n)
             .map(|i| Tensor {
                 shape: inner.clone(),
-                data: self.data[i * chunk..(i + 1) * chunk].to_vec(),
+                data: TensorData::Owned(data[i * chunk..(i + 1) * chunk].to_vec()),
             })
             .collect())
     }
@@ -103,13 +164,14 @@ impl Tensor {
         let chunk = self.len() / self.shape[0];
         let mut shape = self.shape.clone();
         shape[0] = hi - lo;
-        Tensor::new(shape, self.data[lo * chunk..hi * chunk].to_vec())
+        Tensor::new(shape, self.data()[lo * chunk..hi * chunk].to_vec())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frames::pool::shared_from_vec;
 
     #[test]
     fn new_checks_element_count() {
@@ -141,5 +203,25 @@ mod tests {
         assert_eq!(s.shape(), &[2, 2]);
         assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
         assert!(t.slice_leading(2, 5).is_err());
+    }
+
+    #[test]
+    fn shared_storage_equals_owned_and_checks_shape() {
+        let px = shared_from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        let shared = Tensor::from_shared(vec![2, 2], px.clone()).unwrap();
+        let owned = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(shared, owned);
+        assert!(Tensor::from_shared(vec![3, 2], px).is_err());
+    }
+
+    #[test]
+    fn data_mut_copies_on_write() {
+        let px = shared_from_vec(vec![1.0, 2.0]);
+        let mut a = Tensor::from_shared(vec![2], px.clone()).unwrap();
+        let b = Tensor::from_shared(vec![2], px).unwrap();
+        a.data_mut()[0] = 9.0;
+        assert_eq!(a.data(), &[9.0, 2.0]);
+        assert_eq!(b.data(), &[1.0, 2.0], "shared holder must be unaffected");
+        assert_eq!(a.into_data(), vec![9.0, 2.0]);
     }
 }

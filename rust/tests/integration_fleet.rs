@@ -300,6 +300,78 @@ fn saturated_primary_hands_off_streams_before_rejecting() {
     }
 }
 
+/// The zero-copy refactor is behavior-neutral: the legacy copying data
+/// path (decode every offloaded frame at arrival — the seed pipeline,
+/// kept under `FleetConfig::eager_decode`) and the zero-copy lazy path
+/// must produce byte-identical `FleetReport`s for the ISSUE-4 reference
+/// configs (`--nodes 4 --streams 6 --primaries {1,2}`), percentiles and
+/// ledgers included. Only the pool counters may differ (the eager path
+/// holds decoded buffers longer, so its warm-up watermark is its own).
+#[test]
+fn zero_copy_refactor_is_byte_identical_to_the_copy_path() {
+    for primaries in [1usize, 2] {
+        let run = |eager: bool| {
+            let mut cfg = FleetConfig::new(4, 6);
+            cfg.primaries = primaries;
+            cfg.eager_decode = eager;
+            Dispatcher::new(cfg).unwrap().run().unwrap()
+        };
+        let mut zero_copy = run(false);
+        let legacy = run(true);
+        assert!(
+            zero_copy.total_completed() > 0 && zero_copy.offload_bytes > 0,
+            "reference config must exercise the offload path"
+        );
+        // normalize the allocation accounting, then demand identity
+        zero_copy.pool = legacy.pool;
+        assert_eq!(
+            zero_copy, legacy,
+            "zero-copy dispatch diverged from the legacy copy path ({primaries} primaries)"
+        );
+        assert_eq!(zero_copy.render(), legacy.render());
+    }
+}
+
+/// The zero-copy pipeline's headline claim: per-frame buffer
+/// allocations stop once the pool is warm. Quadrupling the rounds on an
+/// identical steady-state config must not grow `fresh_allocs` — every
+/// additional frame reuses recycled buffers — while checkouts scale
+/// with the frame count.
+#[test]
+fn offload_hot_path_allocates_nothing_after_warmup() {
+    let run = |rounds: usize| {
+        let mut cfg = FleetConfig::new(4, 6);
+        cfg.rounds = rounds;
+        cfg.frames_per_round = 6;
+        cfg.admission_control = false;
+        Dispatcher::new(cfg).unwrap().run().unwrap()
+    };
+    let short = run(2);
+    let long = run(8);
+    assert_eq!(long.total_completed(), 4 * short.total_completed());
+    assert!(
+        long.pool.checkouts > 3 * short.pool.checkouts,
+        "checkouts must scale with frames: {:?} vs {:?}",
+        long.pool,
+        short.pool
+    );
+    // warm-up bound: the extra 6 rounds ride entirely on recycled
+    // buffers (small slack for in-flight watermark drift as the
+    // schedulers' split ratios settle)
+    assert!(
+        long.pool.fresh_allocs <= short.pool.fresh_allocs + short.pool.fresh_allocs / 4 + 4,
+        "fresh allocations must not scale with rounds: {:?} vs {:?}",
+        long.pool,
+        short.pool
+    );
+    assert!(
+        long.pool.reuses() > 3 * long.pool.fresh_allocs,
+        "a warm run must be dominated by reuse: {:?}",
+        long.pool
+    );
+    assert!(long.pool.recycled > 0);
+}
+
 /// Custom stream registries work end-to-end: mixed priorities and rates,
 /// highest priority served first under pressure.
 #[test]

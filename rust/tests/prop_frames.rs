@@ -1,9 +1,13 @@
-//! Property tests: frame substrate — codec round trips, mask algebra,
-//! similarity filter invariants, scene statistics.
+//! Property tests: frame substrate — codec round trips (including the
+//! bulk decode-into and the masked-view encoder), mask algebra,
+//! similarity filter invariants, pooled-buffer hygiene, scene
+//! statistics.
 
-use heteroedge::frames::codec::{decode_frame, encode_dense, encode_masked};
+use heteroedge::frames::codec::{
+    decode_frame, decode_frame_pooled, encode_dense, encode_masked, encode_masked_view_pooled,
+};
 use heteroedge::frames::mask::{apply_mask, dilate, mask_stats, mask_with_truth};
-use heteroedge::frames::{SceneGenerator, SimilarityFilter, FRAME_PIXELS};
+use heteroedge::frames::{FramePool, SceneGenerator, SimilarityFilter, FRAME_ELEMS, FRAME_PIXELS};
 use heteroedge::testkit::{check, prop_assert};
 
 #[test]
@@ -13,7 +17,7 @@ fn prop_dense_codec_roundtrip() {
         let f = SceneGenerator::paper_default(seed).next_frame();
         let enc = encode_dense(f.id, &f.pixels);
         let (id, px) = decode_frame(&enc.bytes).map_err(|e| e.to_string())?;
-        prop_assert(id == f.id && px == f.pixels, "dense roundtrip broken")
+        prop_assert(id == f.id && px[..] == f.pixels[..], "dense roundtrip broken")
     });
 }
 
@@ -27,11 +31,94 @@ fn prop_rle_codec_roundtrip_random_masks() {
         let mask: Vec<f32> = (0..FRAME_PIXELS)
             .map(|p| if f.pixels[p * 3] > thr { 1.0 } else { 0.0 })
             .collect();
-        let mut px = f.pixels.clone();
+        let mut px = f.pixels.to_vec();
         apply_mask(&mut px, &mask);
         let enc = encode_masked(f.id, &px);
         let (id, back) = decode_frame(&enc.bytes).map_err(|e| e.to_string())?;
         prop_assert(id == f.id && back == px, "rle roundtrip broken")
+    });
+}
+
+#[test]
+fn prop_masked_view_encoding_is_byte_identical_to_copy_path() {
+    check("masked view == mask-then-encode", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let thr = g.f64_in(0.0, 1.0) as f32;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let mask: Vec<f32> = (0..FRAME_PIXELS)
+            .map(|p| if f.pixels[p * 3] > thr { 1.0 } else { 0.0 })
+            .collect();
+        // reference: materialize the masked copy, then encode its zeros
+        let mut masked = f.pixels.to_vec();
+        apply_mask(&mut masked, &mask);
+        let reference = encode_masked(f.id, &masked);
+        // zero-copy: encode the mask view over the original pixels
+        let pool = FramePool::new();
+        let view = encode_masked_view_pooled(&pool, f.id, &f.pixels, &mask);
+        prop_assert(
+            reference.bytes[..] == view.bytes[..],
+            "mask-view encoding diverged from the copy path",
+        )
+    });
+}
+
+#[test]
+fn prop_decode_into_pooled_buffer_is_bit_exact() {
+    check("pooled decode bit-exact", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let masked_path = g.bool();
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let enc = if masked_path {
+            let (masked, _) = mask_with_truth(&f, 1);
+            encode_masked(f.id, &masked)
+        } else {
+            encode_dense(f.id, &f.pixels)
+        };
+        // reference vec decode vs decode into a recycled pooled buffer
+        let (id, want) = decode_frame(&enc.bytes).map_err(|e| e.to_string())?;
+        let pool = FramePool::new();
+        // dirty the pool first so the decode target is a recycled buffer
+        {
+            let mut dirty = pool.checkout_pixels();
+            dirty.as_mut_slice().fill(123.456);
+        }
+        let frame = decode_frame_pooled(&pool, &enc.bytes).map_err(|e| e.to_string())?;
+        prop_assert(frame.id == id, "pooled decode id mismatch")?;
+        for (a, b) in frame.pixels.iter().zip(&want) {
+            prop_assert(a.to_bits() == b.to_bits(), "pooled decode not bit-exact")?;
+        }
+        prop_assert(
+            pool.stats().fresh_allocs == 1,
+            "pooled decode must reuse the recycled buffer",
+        )
+    });
+}
+
+#[test]
+fn prop_pool_checkouts_never_leak_stale_pixels() {
+    check("pool checkout zeroing", 30, |g| {
+        let pool = FramePool::new();
+        let sentinel = g.f64_in(0.5, 9.5) as f32;
+        let cycles = g.usize_in(1, 5);
+        for _ in 0..cycles {
+            let mut px = pool.checkout_pixels();
+            px.as_mut_slice().fill(sentinel);
+            let mut mask = pool.checkout_mask();
+            mask.as_mut_slice().fill(sentinel);
+            // handles drop: buffers recycle dirty
+        }
+        let px = pool.checkout_pixels();
+        let mask = pool.checkout_mask();
+        prop_assert(
+            px.iter().all(|&v| v == 0.0) && mask.iter().all(|&v| v == 0.0),
+            "recycled checkout leaked a stale pixel",
+        )?;
+        let s = pool.stats();
+        prop_assert(px.len() == FRAME_ELEMS && mask.len() == FRAME_PIXELS, "geometry")?;
+        prop_assert(
+            s.fresh_allocs == 2 && s.checkouts == 2 * (cycles as u64 + 1),
+            format!("pool must reuse across cycles: {s:?}"),
+        )
     });
 }
 
@@ -44,7 +131,7 @@ fn prop_rle_size_decreases_with_sparser_masks() {
             let mask: Vec<f32> = (0..FRAME_PIXELS)
                 .map(|p| if (p as f32 / FRAME_PIXELS as f32) < frac { 1.0 } else { 0.0 })
                 .collect();
-            let mut px = f.pixels.clone();
+            let mut px = f.pixels.to_vec();
             apply_mask(&mut px, &mask);
             encode_masked(f.id, &px).wire_bytes()
         };
