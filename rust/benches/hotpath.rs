@@ -15,16 +15,30 @@
 //! against the bulk encode-into/decode-into path on the same machine in
 //! the same run. The bulk path must deliver ≥ 2× combined encode+decode
 //! dense throughput (and must not regress RLE) or this bench exits
-//! non-zero. Results persist to `BENCH_hotpath.json` at the repo root.
-//! `HETEROEDGE_BENCH_QUICK=1` shrinks iteration counts for CI smoke.
+//! non-zero.
+//!
+//! The SIMD kernel gate (PR 5): the retained scalar seed kernels
+//! (`signature_of_scalar`, `apply_mask_scalar`, `dilate_into_scalar`,
+//! `mask_stats_scalar`) are measured head-to-head against their
+//! lane-tiled rewrites in the same run; the tiled kernels must deliver
+//! ≥ 2× combined `signature_of`+`apply_mask` throughput (and stay
+//! bit-identical — asserted inline). Results persist to
+//! `BENCH_hotpath.json` at the repo root. `HETEROEDGE_BENCH_QUICK=1`
+//! shrinks iteration counts for CI smoke.
+
+use std::hint::black_box;
 
 use heteroedge::bench::{scale_iters, Bench};
 use heteroedge::coordinator::Batcher;
 use heteroedge::frames::codec::{
     decode_frame, decode_frame_into, encode_dense_into, encode_masked_view_into,
 };
-use heteroedge::frames::mask::{dilate, mask_stats, mask_with_truth};
-use heteroedge::frames::{SceneGenerator, SimilarityFilter, FRAME_BYTES, FRAME_ELEMS};
+use heteroedge::frames::mask::{
+    apply_mask, apply_mask_scalar, dilate, dilate_into, dilate_into_scalar, mask_stats,
+    mask_stats_scalar, mask_with_truth,
+};
+use heteroedge::frames::similarity::{signature_of, signature_of_scalar};
+use heteroedge::frames::{SceneGenerator, SimilarityFilter, FRAME_BYTES, FRAME_ELEMS, FRAME_PIXELS};
 use heteroedge::net::mqtt::{Broker, Client, QoS};
 use heteroedge::solvefit::polyfit;
 use heteroedge::solver::HeteroEdgeSolver;
@@ -154,11 +168,108 @@ fn main() {
         },
     );
     b.iter_throughput("mask_stats", scale_iters(5000), 1.0, FRAME_BYTES as f64, || {
-        let _ = mask_stats(&frame.truth_mask);
+        black_box(mask_stats(&frame.truth_mask));
     });
 
-    // --- codec: legacy per-element vs bulk zero-copy, same machine ---
+    // --- SIMD kernels: seed scalar vs lane-tiled, same machine ---
     let mask = dilate(&frame.truth_mask, 1);
+    // the gate cases keep a 200-iteration floor even in quick mode (see
+    // the codec gate below for the rationale)
+    let kiters = scale_iters(2000).max(200);
+
+    b.iter_throughput(
+        "kernel scalar signature_of",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            black_box(signature_of_scalar(black_box(&frame.pixels)));
+        },
+    );
+    b.iter_throughput(
+        "kernel tiled signature_of",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            black_box(signature_of(black_box(&frame.pixels)));
+        },
+    );
+    // bit-identity sanity (the full property suite lives in prop_frames)
+    {
+        let tiled = signature_of(&frame.pixels);
+        let scalar = signature_of_scalar(&frame.pixels);
+        for (a, c) in tiled.iter().zip(&scalar) {
+            assert_eq!(a.to_bits(), c.to_bits(), "tiled signature diverged from the seed");
+        }
+    }
+
+    // separate steady-state buffers so both variants do identical work
+    let mut px_scalar = frame.pixels.to_vec();
+    let mut px_tiled = frame.pixels.to_vec();
+    b.iter_throughput(
+        "kernel scalar apply_mask",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            apply_mask_scalar(black_box(&mut px_scalar), black_box(&mask));
+        },
+    );
+    b.iter_throughput(
+        "kernel tiled apply_mask",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            apply_mask(black_box(&mut px_tiled), black_box(&mask));
+        },
+    );
+    assert_eq!(px_scalar, px_tiled, "tiled apply_mask diverged from the seed");
+
+    let mut dil_scalar = vec![0.0f32; FRAME_PIXELS];
+    let mut dil_tiled = vec![0.0f32; FRAME_PIXELS];
+    b.iter_throughput(
+        "kernel scalar dilate r=1",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            dilate_into_scalar(black_box(&frame.truth_mask), 1, black_box(&mut dil_scalar));
+        },
+    );
+    b.iter_throughput(
+        "kernel tiled dilate r=1",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            dilate_into(black_box(&frame.truth_mask), 1, black_box(&mut dil_tiled));
+        },
+    );
+    assert_eq!(dil_scalar, dil_tiled, "bit-plane dilation diverged from the seed");
+
+    b.iter_throughput(
+        "kernel scalar mask_stats",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            black_box(mask_stats_scalar(black_box(&mask)));
+        },
+    );
+    b.iter_throughput(
+        "kernel tiled mask_stats",
+        kiters,
+        1.0,
+        FRAME_BYTES as f64,
+        || {
+            black_box(mask_stats(black_box(&mask)));
+        },
+    );
+    assert_eq!(mask_stats(&mask), mask_stats_scalar(&mask));
+
+    // --- codec: legacy per-element vs bulk zero-copy, same machine ---
     let (masked, _) = mask_with_truth(&frame, 1);
     // the gate cases keep a 200-iteration floor even in quick mode —
     // per-case cost is microseconds and the ratio assert below needs a
@@ -232,6 +343,23 @@ fn main() {
     assert!(
         bulk_rle_mbps >= legacy_rle_mbps,
         "bulk RLE path must not regress: {bulk_rle_mbps:.0} vs {legacy_rle_mbps:.0} MB/s"
+    );
+
+    // --- the ≥2× combined signature_of+apply_mask kernel gate ---
+    let scalar_kernel_mbps = combined("kernel scalar signature_of", "kernel scalar apply_mask");
+    let tiled_kernel_mbps = combined("kernel tiled signature_of", "kernel tiled apply_mask");
+    let dilate_ratio = p50("kernel scalar dilate r=1") / p50("kernel tiled dilate r=1");
+    let stats_ratio = p50("kernel scalar mask_stats") / p50("kernel tiled mask_stats");
+    println!(
+        "kernels combined signature+apply_mask: scalar {scalar_kernel_mbps:.0} MB/s -> tiled \
+         {tiled_kernel_mbps:.0} MB/s ({:.2}x) | dilate r=1 {dilate_ratio:.2}x | \
+         mask_stats {stats_ratio:.2}x",
+        tiled_kernel_mbps / scalar_kernel_mbps,
+    );
+    assert!(
+        tiled_kernel_mbps >= 2.0 * scalar_kernel_mbps,
+        "tiled kernels must double combined signature_of+apply_mask throughput: \
+         {tiled_kernel_mbps:.0} MB/s vs scalar {scalar_kernel_mbps:.0} MB/s"
     );
 
     // --- similarity filter ---
@@ -314,6 +442,12 @@ fn main() {
     assert_eq!(px[..], frame.pixels[..]);
 
     println!("{}", b.report());
+    b.note = Some(
+        "refreshed in place by `cargo bench --bench hotpath`; CI's release-mode smoke \
+         regenerates this file (uploaded as a bench-results artifact) and enforces the >=2x \
+         bulk-vs-legacy codec gate and the >=2x tiled-vs-scalar kernel gate"
+            .into(),
+    );
     let json_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
     b.write_json(&json_path).unwrap();

@@ -73,6 +73,9 @@ impl Case {
 pub struct Bench {
     pub name: String,
     pub warmup: u32,
+    /// Optional provenance note emitted into the JSON report (how and
+    /// where the numbers get refreshed).
+    pub note: Option<String>,
     cases: Vec<Case>,
 }
 
@@ -81,6 +84,7 @@ impl Bench {
         Bench {
             name: name.to_string(),
             warmup: 3,
+            note: None,
             cases: Vec::new(),
         }
     }
@@ -154,7 +158,11 @@ impl Bench {
             v.map(num).unwrap_or_else(|| "null".to_string())
         }
         let mut out = String::new();
-        out.push_str(&format!("{{\n  \"bench\": \"{}\",\n  \"cases\": [", esc(&self.name)));
+        out.push_str(&format!("{{\n  \"bench\": \"{}\",\n", esc(&self.name)));
+        if let Some(note) = &self.note {
+            out.push_str(&format!("  \"note\": \"{}\",\n", esc(note)));
+        }
+        out.push_str("  \"cases\": [");
         for (i, c) in self.cases.iter().enumerate() {
             if i > 0 {
                 out.push(',');
@@ -250,12 +258,14 @@ mod tests {
     fn json_round_trips_the_summary() {
         let mut b = Bench::new("json \"demo\"");
         b.warmup = 0;
+        b.note = Some("refreshed by \"ci\"".into());
         b.iter_throughput("enc", 3, 1.0, 4096.0, || {
             std::hint::black_box((0..100).sum::<u64>());
         });
         b.iter("no-throughput", 2, || {});
         let j = b.to_json();
         assert!(j.contains("\"bench\": \"json \\\"demo\\\"\""), "{j}");
+        assert!(j.contains("\"note\": \"refreshed by \\\"ci\\\"\""), "{j}");
         assert!(j.contains("\"name\": \"enc\""), "{j}");
         assert!(j.contains("\"iters\": 3"), "{j}");
         assert!(j.contains("\"items_per_s\": null") || j.contains("\"bytes_per_s\": null"), "{j}");

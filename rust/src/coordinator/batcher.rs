@@ -8,6 +8,10 @@
 //! original shared pixels plus a dilated mask held in a reusable scratch
 //! plane — no masked pixel copy is ever materialized — and the encoded
 //! bytes land in pooled scratch recycled via the shared [`FramePool`].
+//! Since PR 5 the per-frame plan is also allocation-free: dilation runs
+//! the bit-plane kernel into the reusable scratch, [`mask_stats`]
+//! returns a fixed-array tile table, and the pooled encode freezes into
+//! a slot-arena handle without an `Arc` control-block allocation.
 
 use crate::frames::codec::{encode_dense_pooled, encode_masked_view_pooled, EncodedFrame};
 use crate::frames::mask::{dilate_into, mask_stats};

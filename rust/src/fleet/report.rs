@@ -174,6 +174,7 @@ impl FleetReport {
         reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
         reg.inc("fleet.pool.checkouts", self.pool.checkouts);
         reg.inc("fleet.pool.fresh_allocs", self.pool.fresh_allocs);
+        reg.inc("fleet.pool.handle_allocs", self.pool.handle_allocs);
         reg.inc("fleet.pool.recycled", self.pool.recycled);
         reg.set("fleet.makespan_secs", self.makespan_secs);
         reg.set("fleet.latency.p99_s", self.p99_latency_s());
@@ -242,9 +243,11 @@ impl FleetReport {
         }
         if self.pool.checkouts > 0 {
             out.push_str(&format!(
-                "frame pool: {} checkouts | {} fresh allocs | {} recycled | {:.1}% reused\n",
+                "frame pool: {} checkouts | {} fresh allocs | {} handle allocs | \
+                 {} recycled | {:.1}% reused\n",
                 self.pool.checkouts,
                 self.pool.fresh_allocs,
+                self.pool.handle_allocs,
                 self.pool.recycled,
                 100.0 * self.pool.reuse_frac(),
             ));
@@ -368,6 +371,7 @@ mod tests {
             pool: PoolStats {
                 checkouts: 100,
                 fresh_allocs: 10,
+                handle_allocs: 10,
                 recycled: 90,
             },
         }
@@ -388,6 +392,7 @@ mod tests {
         assert!(text.contains("pipelined drain"), "{text}");
         assert!(text.contains("stolen 2 fallbacks 1"), "{text}");
         assert!(text.contains("frame pool: 100 checkouts"), "{text}");
+        assert!(text.contains("10 handle allocs"), "{text}");
         assert!(text.contains("90 recycled | 90.0% reused"), "{text}");
         // the multi-primary ledger is absent from single-primary output
         assert!(!text.contains("sharded ingest"), "{text}");
@@ -436,6 +441,7 @@ mod tests {
         assert_eq!(reg.counter("fleet.node.node-0.stolen_in"), 2);
         assert_eq!(reg.counter("fleet.pool.checkouts"), 100);
         assert_eq!(reg.counter("fleet.pool.fresh_allocs"), 10);
+        assert_eq!(reg.counter("fleet.pool.handle_allocs"), 10);
         assert_eq!(reg.gauge("fleet.makespan_secs"), Some(40.0));
         assert_eq!(reg.gauge("fleet.queue_delay.mean_s"), Some(0.5));
         assert!(reg.gauge("fleet.stream.cam-0.p99_s").unwrap() > 0.0);

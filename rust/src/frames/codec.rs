@@ -33,9 +33,8 @@
 
 use anyhow::{bail, Result};
 
-use super::pool::{ByteBuf, FramePool, SharedBytes};
+use super::pool::{ByteBuf, CheckoutMode, FramePool, SharedBytes};
 use super::{ClassSet, Frame, FRAME_C, FRAME_H, FRAME_PIXELS, FRAME_W};
-use std::sync::Arc;
 
 const MAGIC_DENSE: u16 = 0xE301;
 const MAGIC_RLE: u16 = 0xE302;
@@ -158,7 +157,7 @@ pub fn encode_dense(id: u64, pixels: &[f32]) -> EncodedFrame {
     let mut bytes = Vec::new();
     encode_dense_into(id, pixels, &mut bytes);
     EncodedFrame {
-        bytes: Arc::new(ByteBuf::unpooled(bytes)),
+        bytes: ByteBuf::unpooled(bytes).freeze(),
         raw_bytes: pixels.len() * 4,
     }
 }
@@ -168,17 +167,18 @@ pub fn encode_masked(id: u64, pixels: &[f32]) -> EncodedFrame {
     let mut bytes = Vec::new();
     encode_masked_into(id, pixels, &mut bytes);
     EncodedFrame {
-        bytes: Arc::new(ByteBuf::unpooled(bytes)),
+        bytes: ByteBuf::unpooled(bytes).freeze(),
         raw_bytes: pixels.len() * 4,
     }
 }
 
-/// Dense encoding into pooled scratch — the hot-path entry.
+/// Dense encoding into pooled scratch — the hot-path entry. Checkout,
+/// encode and freeze are all allocation-free once the pool is warm.
 pub fn encode_dense_pooled(pool: &FramePool, id: u64, pixels: &[f32]) -> EncodedFrame {
     let mut buf = pool.checkout_bytes();
     encode_dense_into(id, pixels, buf.vec_mut());
     EncodedFrame {
-        bytes: Arc::new(buf),
+        bytes: buf.freeze(),
         raw_bytes: pixels.len() * 4,
     }
 }
@@ -193,7 +193,7 @@ pub fn encode_masked_view_pooled(
     let mut buf = pool.checkout_bytes();
     encode_masked_view_into(id, pixels, mask, buf.vec_mut());
     EncodedFrame {
-        bytes: Arc::new(buf),
+        bytes: buf.freeze(),
         raw_bytes: pixels.len() * 4,
     }
 }
@@ -262,13 +262,16 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(u64, Vec<f32>)> {
 /// Decode into a pooled buffer and wrap as a [`Frame`] — the auxiliary
 /// service path's lazy-decode entry. The truth mask is the pool's
 /// shared zero plane (decoded frames carry no ground truth) so the call
-/// performs no per-frame buffer allocation once the pool is warm.
+/// performs no per-frame allocation once the pool is warm. The pixel
+/// checkout is [`CheckoutMode::WillOverwrite`]: [`decode_frame_into`]
+/// fully overwrites its target (dense) or zero-fills it itself (RLE),
+/// so the arena's zeroing memset would be pure redundant traffic.
 pub fn decode_frame_pooled(pool: &FramePool, bytes: &[u8]) -> Result<Frame> {
-    let mut buf = pool.checkout_pixels();
+    let mut buf = pool.checkout_pixels_mode(CheckoutMode::WillOverwrite);
     let id = decode_frame_into(bytes, buf.as_mut_slice())?;
     Ok(Frame {
         id,
-        pixels: Arc::new(buf),
+        pixels: buf.freeze(),
         truth_mask: pool.zero_mask(),
         classes: ClassSet::empty(),
     })

@@ -6,6 +6,21 @@
 //! statistics the codec and the bandwidth accounting consume, and (c) a
 //! ground-truth masking mode (perfect detector) used by ablations.
 //!
+//! The hot kernels are lane-tiled, each bit-identical to its scalar seed
+//! twin (retained below as `*_scalar` for property tests and the
+//! head-to-head bench in `benches/hotpath.rs`):
+//!
+//! * [`apply_mask`] — 8-pixel tiles, branch-free bitwise select (keep
+//!   the exact pixel bits when the lane is on, else +0.0) instead of the
+//!   seed's per-pixel branch;
+//! * [`dilate_into`] — the 64-wide frame row packs into one `u64` bit
+//!   row, so dilation becomes shift-OR (horizontal) plus row-OR
+//!   (vertical) over 64 words instead of per-on-pixel rectangle stamps;
+//! * [`mask_stats`] — single pass over 8-row tiles with a branchless
+//!   per-tile popcount; the per-pixel `p / (tile_rows * FRAME_W)`
+//!   division of the seed is gone, and the tile table is a fixed array
+//!   (no per-call allocation on the batcher's hot path).
+//!
 //! The fleet hot path never materializes a masked pixel copy: the
 //! [`Batcher`](crate::coordinator::Batcher) dilates into a reusable
 //! scratch plane ([`dilate_into`]) and hands original pixels + mask to
@@ -15,6 +30,15 @@
 
 use super::{Frame, FRAME_C, FRAME_PIXELS, FRAME_W};
 
+/// Row depth of one occupancy tile — the Pallas kernel's (8, 64) block.
+const TILE_ROWS: usize = 8;
+
+/// Occupancy tiles per frame mask plane.
+pub const MASK_TILES: usize = FRAME_PIXELS / (TILE_ROWS * FRAME_W);
+
+/// Pixel lanes per kernel tile (f32x8-style).
+const LANES: usize = 8;
+
 /// Statistics of one mask.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MaskStats {
@@ -23,21 +47,45 @@ pub struct MaskStats {
     /// Fraction of pixels kept.
     pub keep_frac: f64,
     /// Per-row-tile occupancy (8-row tiles, matching the Pallas kernel's
-    /// (8, 64) block grid): number of on pixels per tile.
-    pub tile_occupancy: Vec<u32>,
+    /// (8, 64) block grid): number of on pixels per tile. A fixed array,
+    /// so computing stats allocates nothing.
+    pub tile_occupancy: [u32; MASK_TILES],
 }
 
-/// Compute stats for a 0/1 mask over the frame grid.
+/// Compute stats for a 0/1 mask over the frame grid: one pass, one
+/// branchless popcount per 8-row tile.
 pub fn mask_stats(mask: &[f32]) -> MaskStats {
     assert_eq!(mask.len(), FRAME_PIXELS);
-    let tile_rows = 8;
-    let tiles = FRAME_PIXELS / (tile_rows * FRAME_W);
-    let mut tile_occupancy = vec![0u32; tiles];
+    let mut tile_occupancy = [0u32; MASK_TILES];
+    let mut on = 0usize;
+    for (occ, tile) in tile_occupancy
+        .iter_mut()
+        .zip(mask.chunks_exact(TILE_ROWS * FRAME_W))
+    {
+        let mut cnt = 0u32;
+        for &m in tile {
+            cnt += (m != 0.0) as u32;
+        }
+        *occ = cnt;
+        on += cnt as usize;
+    }
+    MaskStats {
+        on_pixels: on,
+        keep_frac: on as f64 / FRAME_PIXELS as f64,
+        tile_occupancy,
+    }
+}
+
+/// The seed's per-pixel stats kernel (tile index division per on pixel),
+/// retained as the reference for property tests and the bench.
+pub fn mask_stats_scalar(mask: &[f32]) -> MaskStats {
+    assert_eq!(mask.len(), FRAME_PIXELS);
+    let mut tile_occupancy = [0u32; MASK_TILES];
     let mut on = 0usize;
     for (p, &m) in mask.iter().enumerate() {
         if m != 0.0 {
             on += 1;
-            tile_occupancy[p / (tile_rows * FRAME_W)] += 1;
+            tile_occupancy[p / (TILE_ROWS * FRAME_W)] += 1;
         }
     }
     MaskStats {
@@ -47,8 +95,43 @@ pub fn mask_stats(mask: &[f32]) -> MaskStats {
     }
 }
 
-/// Apply `mask` (H·W 0/1) to `pixels` (H·W·C), in place.
+/// Apply `mask` (H·W 0/1) to `pixels` (H·W·C), in place. Lane-tiled and
+/// branch-free: each 8-pixel tile expands its mask into per-channel
+/// keep words and selects with a bitwise AND (an off lane writes +0.0,
+/// an on lane keeps the exact pixel bits — identical to the seed's
+/// branchy [`apply_mask_scalar`], bit for bit).
 pub fn apply_mask(pixels: &mut [f32], mask: &[f32]) {
+    assert_eq!(pixels.len(), mask.len() * FRAME_C);
+    let mut px_tiles = pixels.chunks_exact_mut(LANES * FRAME_C);
+    let mut mask_tiles = mask.chunks_exact(LANES);
+    for (pt, mt) in (&mut px_tiles).zip(&mut mask_tiles) {
+        // broadcast the 8 lane flags to the 24 interleaved channel
+        // values, then one elementwise AND pass the vectorizer tiles
+        let mut keep = [0u32; LANES * FRAME_C];
+        for (ks, &m) in keep.chunks_exact_mut(FRAME_C).zip(mt) {
+            let k = if m != 0.0 { !0u32 } else { 0 };
+            ks.fill(k);
+        }
+        for (v, &k) in pt.iter_mut().zip(&keep) {
+            *v = f32::from_bits(v.to_bits() & k);
+        }
+    }
+    // geometry-independent tail (empty for the 64×64 frame plane)
+    for (px, &m) in px_tiles
+        .into_remainder()
+        .chunks_exact_mut(FRAME_C)
+        .zip(mask_tiles.remainder())
+    {
+        let k = if m != 0.0 { !0u32 } else { 0 };
+        for v in px {
+            *v = f32::from_bits(v.to_bits() & k);
+        }
+    }
+}
+
+/// The seed's scalar mask application (per-pixel branch), retained as
+/// the reference implementation.
+pub fn apply_mask_scalar(pixels: &mut [f32], mask: &[f32]) {
     assert_eq!(pixels.len(), mask.len() * FRAME_C);
     for (px, &m) in pixels.chunks_exact_mut(FRAME_C).zip(mask) {
         if m == 0.0 {
@@ -71,18 +154,79 @@ pub fn mask_with_truth(frame: &Frame, margin: usize) -> (Vec<f32>, MaskStats) {
 /// Binary dilation with a square structuring element of radius `r`,
 /// written into a caller-provided (reusable) plane of the same length.
 ///
-/// Perf note (EXPERIMENTS.md §Perf iteration 1): a separable two-pass
-/// running-window variant (O(n·r) asymptotics) was tried and REVERTED —
-/// at the production radius r=1 the naive stamp is ~35% faster (25 µs vs
-/// 39 µs per frame) because the 3×3 window is too small to amortize the
-/// extra full-frame passes and allocations.
+/// Bit-plane kernel: the 64-pixel frame row packs into one `u64`, so
+/// horizontal dilation is an OR over word shifts (border clamping falls
+/// out of the shift dropping bits) and vertical dilation an OR over the
+/// `2r+1` neighboring row words — no per-on-pixel rectangle stamping, so
+/// cost no longer scales with mask density. Exactly equivalent to the
+/// seed stamp kernel ([`dilate_into_scalar`], property-tested);
+/// whole-row planes of other heights fall back to it (ragged planes
+/// are rejected by its assert).
+///
+/// Perf note (EXPERIMENTS.md §Perf): a separable two-pass running-window
+/// variant (O(n·r) asymptotics) was tried and REVERTED in iteration 1 —
+/// at the production radius r=1 the naive stamp was faster because the
+/// 3×3 window is too small to amortize the extra full-frame passes. The
+/// bit-plane kernel beats both: it does constant work per row word
+/// regardless of density or radius ≤ 63.
 pub fn dilate_into(mask: &[f32], r: usize, out: &mut [f32]) {
     assert_eq!(mask.len(), out.len());
     if r == 0 {
         out.copy_from_slice(mask);
         return;
     }
-    let h = FRAME_PIXELS / FRAME_W;
+    if mask.len() != FRAME_PIXELS {
+        dilate_into_scalar(mask, r, out);
+        return;
+    }
+    const H: usize = FRAME_PIXELS / FRAME_W;
+    // pack: one u64 bit row per image row (FRAME_W == 64 lanes), with
+    // bit x set when the pixel is on
+    let mut packed = [0u64; H];
+    for (bits, row) in packed.iter_mut().zip(mask.chunks_exact(FRAME_W)) {
+        let mut w = 0u64;
+        for (x, &m) in row.iter().enumerate() {
+            w |= ((m != 0.0) as u64) << x;
+        }
+        *bits = w;
+    }
+    // horizontal: OR of shifts 1..=r (shifted-out bits ARE the border
+    // clamp; r ≥ 63 saturates the row, which is exact at width 64)
+    let hs = r.min(FRAME_W - 1);
+    let mut hor = [0u64; H];
+    for (d, &w) in hor.iter_mut().zip(&packed) {
+        let mut acc = w;
+        for s in 1..=hs {
+            acc |= (w << s) | (w >> s);
+        }
+        *d = acc;
+    }
+    // vertical OR over the neighbor window + unpack to 0.0/1.0
+    for (y, out_row) in out.chunks_exact_mut(FRAME_W).enumerate() {
+        let y0 = y.saturating_sub(r);
+        let y1 = (y + r).min(H - 1);
+        let mut d = 0u64;
+        for &row in &hor[y0..=y1] {
+            d |= row;
+        }
+        for (x, v) in out_row.iter_mut().enumerate() {
+            *v = ((d >> x) & 1) as f32;
+        }
+    }
+}
+
+/// The seed's per-on-pixel stamp dilation, retained as the reference
+/// implementation (and the fallback for taller-than-frame planes).
+/// The plane must be a whole number of `FRAME_W`-wide rows — asserted,
+/// so a ragged tail fails loudly instead of being silently ignored.
+pub fn dilate_into_scalar(mask: &[f32], r: usize, out: &mut [f32]) {
+    assert_eq!(mask.len(), out.len());
+    assert_eq!(mask.len() % FRAME_W, 0, "mask plane must be whole {FRAME_W}-wide rows");
+    if r == 0 {
+        out.copy_from_slice(mask);
+        return;
+    }
+    let h = mask.len() / FRAME_W;
     out.fill(0.0);
     for y in 0..h {
         for x in 0..FRAME_W {
@@ -124,6 +268,7 @@ mod tests {
         assert_eq!(s.tile_occupancy[0], 2);
         assert_eq!(s.tile_occupancy[7], 1);
         assert!((s.keep_frac - 3.0 / 4096.0).abs() < 1e-12);
+        assert_eq!(s, mask_stats_scalar(&mask));
     }
 
     #[test]
@@ -136,6 +281,25 @@ mod tests {
         assert_eq!(px[11 * 3], 0.0);
         let nonzero = px.iter().filter(|&&v| v != 0.0).count();
         assert_eq!(nonzero, 3);
+    }
+
+    #[test]
+    fn tiled_apply_mask_matches_scalar_bitwise() {
+        let mut g = SceneGenerator::paper_default(23);
+        let f = g.next_frame();
+        // non-multiple-of-8 geometry exercises the remainder tail too
+        for keep_len in [FRAME_PIXELS, 37] {
+            let mask: Vec<f32> = (0..keep_len)
+                .map(|p| if f.pixels[p * 3] > 0.3 { 1.0 } else { 0.0 })
+                .collect();
+            let mut tiled = f.pixels[..keep_len * FRAME_C].to_vec();
+            let mut scalar = tiled.clone();
+            apply_mask(&mut tiled, &mask);
+            apply_mask_scalar(&mut scalar, &mask);
+            for (a, b) in tiled.iter().zip(&scalar) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]
@@ -163,6 +327,23 @@ mod tests {
         let on: usize = d.iter().map(|&v| v as usize).sum();
         assert_eq!(on, 25, "5x5 square");
         assert_eq!(dilate(&mask, 0), mask);
+    }
+
+    #[test]
+    fn bit_plane_dilation_matches_the_stamp_kernel() {
+        let mut g = SceneGenerator::paper_default(29);
+        let f = g.next_frame();
+        let mut bitwise = vec![0.0f32; FRAME_PIXELS];
+        let mut stamped = vec![0.0f32; FRAME_PIXELS];
+        for r in 0..=4usize {
+            dilate_into(&f.truth_mask, r, &mut bitwise);
+            dilate_into_scalar(&f.truth_mask, r, &mut stamped);
+            assert_eq!(bitwise, stamped, "r={r}");
+        }
+        // a huge radius saturates every row that can see an on pixel
+        dilate_into(&f.truth_mask, 200, &mut bitwise);
+        dilate_into_scalar(&f.truth_mask, 200, &mut stamped);
+        assert_eq!(bitwise, stamped);
     }
 
     #[test]

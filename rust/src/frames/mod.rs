@@ -18,6 +18,11 @@
 //!   buffers and freezes them into [`pool::SharedPixels`] handles —
 //!   `Frame` is a bundle of O(1)-clone shared handles plus a `Copy`
 //!   [`ClassSet`]; moving or cloning a `Frame` never touches pixels.
+//!   The pixel checkout is [`pool::CheckoutMode::WillOverwrite`] (the
+//!   render writes every channel of every pixel, so the arena skips the
+//!   zero-fill memset); the truth mask is a partial writer and stays on
+//!   the zeroed checkout. Freezing is allocation-free: the handle is the
+//!   arena slot the checkout already holds (see [`pool`]).
 //! * The [`Batcher`](crate::coordinator::Batcher) encodes offloaded
 //!   frames straight off the shared pixels: masking is a *view*
 //!   ([`codec::encode_masked_view_into`] with a reusable dilation
@@ -45,11 +50,11 @@ pub use codec::{
     encode_dense_pooled, encode_masked, encode_masked_into, encode_masked_view_into,
     encode_masked_view_pooled, EncodedFrame,
 };
-pub use mask::{apply_mask, dilate_into, mask_stats, MaskStats};
-pub use pool::{shared_from_vec, FramePool, PoolBuf, PoolStats, SharedPixels};
+pub use mask::{apply_mask, dilate_into, mask_stats, MaskStats, MASK_TILES};
+pub use pool::{
+    shared_from_vec, CheckoutMode, FramePool, PoolBuf, PoolStats, SharedBytes, SharedPixels,
+};
 pub use similarity::SimilarityFilter;
-
-use std::sync::Arc;
 
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
@@ -231,7 +236,11 @@ impl SceneGenerator {
 
     /// Render the current scene and advance object motion.
     pub fn next_frame(&mut self) -> Frame {
-        let mut pixels_buf = self.pool.checkout_pixels();
+        // the render writes every channel of every pixel (background
+        // first, objects over it), so the pixel checkout skips its
+        // zero-fill; the truth mask only sets object pixels and needs
+        // the zeroed mode
+        let mut pixels_buf = self.pool.checkout_pixels_mode(CheckoutMode::WillOverwrite);
         let mut truth_buf = self.pool.checkout_mask();
         let mut classes = ClassSet::empty();
         {
@@ -293,8 +302,8 @@ impl SceneGenerator {
 
         let f = Frame {
             id: self.next_id,
-            pixels: Arc::new(pixels_buf),
-            truth_mask: Arc::new(truth_buf),
+            pixels: pixels_buf.freeze(),
+            truth_mask: truth_buf.freeze(),
             classes,
         };
         self.next_id += 1;
@@ -401,11 +410,13 @@ mod tests {
             // 4 pixel + 4 mask buffers live
             assert_eq!(g.pool().stats().fresh_allocs, 8);
         }
-        // dropped: all recycled; the next batch allocates nothing new
+        // dropped: all recycled; the next batch allocates nothing new —
+        // neither buffers nor handle control blocks
         assert_eq!(g.pool().stats().recycled, 8);
         let _frames = g.batch(4);
         let s = g.pool().stats();
-        assert_eq!(s.fresh_allocs, 8, "warm pool must not allocate");
+        assert_eq!(s.fresh_allocs, 8, "warm pool must not allocate buffers");
+        assert_eq!(s.handle_allocs, 8, "warm pool must not allocate handles");
         assert_eq!(s.checkouts, 16);
     }
 
@@ -414,7 +425,7 @@ mod tests {
         let mut g = SceneGenerator::paper_default(37);
         let f = g.next_frame();
         let f2 = f.clone();
-        assert!(Arc::ptr_eq(&f.pixels, &f2.pixels), "clone must share, not copy");
+        assert!(f.pixels.ptr_eq(&f2.pixels), "clone must share, not copy");
         assert_eq!(f.pixels, f2.pixels);
     }
 

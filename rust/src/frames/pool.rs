@@ -1,33 +1,43 @@
-//! Frame buffer pool — the allocation arena behind the zero-copy frame
+//! Frame buffer pool — the slot-arena behind the zero-copy frame
 //! pipeline.
 //!
 //! Every hot-path buffer (pixel payloads, truth/detector masks, encoded
 //! wire bytes) is checked out of a [`FramePool`] and recycled back onto a
-//! freelist when its last shared handle drops. After a short warm-up the
-//! steady-state frame path therefore performs **zero per-frame buffer
-//! allocations**: a frame's pixels are allocated once, shared by handle
-//! (`Arc`) everywhere downstream, and the backing storage returns to the
-//! pool the moment the last consumer lets go. The one remaining
-//! per-checkout allocation is the constant-size `Arc` control block of
-//! the handle itself; the 48 KiB/16 KiB payloads never reallocate.
+//! freelist when its last shared handle drops. The pool is a **slot
+//! arena**: each slot is a single long-lived allocation holding the
+//! payload `Vec`, a checkout epoch, and the handle's atomic refcount (the
+//! `Arc` control block is co-allocated with the slot and reused across
+//! checkouts). After a short warm-up the steady-state frame path
+//! therefore performs **zero per-frame heap allocations of any kind** —
+//! the seed pipeline's one remaining per-checkout allocation, a fresh
+//! `Arc` control block per frozen handle, is gone: a warm checkout pops a
+//! parked slot, bumps its epoch and hands the same handle allocation back
+//! out. [`PoolStats::handle_allocs`] counts slot/handle allocations so
+//! tests can prove the counter stops growing once the pool is warm.
 //!
 //! Ownership model:
 //!
 //! * [`FramePool::checkout_pixels`] / [`checkout_mask`] hand out a
-//!   uniquely-owned [`PoolBuf`] (zeroed — a recycled buffer can never
-//!   leak a stale pixel, see `tests/prop_frames.rs`); the producer fills
-//!   it mutably, then freezes it into a [`SharedPixels`] handle
-//!   (`Arc<PoolBuf>`) that clones in O(1).
+//!   uniquely-owned [`PoolBuf`]; the producer fills it mutably, then
+//!   [`PoolBuf::freeze`]s it into a [`SharedPixels`] handle that clones
+//!   in O(1) without allocating.
+//! * Checkouts are zeroed by default (a recycled buffer can never leak a
+//!   stale pixel, see `tests/prop_frames.rs`). A consumer that overwrites
+//!   every element anyway — scene render, dense/RLE decode — can pass
+//!   [`CheckoutMode::WillOverwrite`] to elide the memset entirely; debug
+//!   builds fill the buffer with a sentinel NaN pattern instead and
+//!   assert at freeze time that the producer really did overwrite it.
 //! * [`FramePool::checkout_bytes`] hands out a cleared [`ByteBuf`] the
 //!   codec encodes into; frozen as [`SharedBytes`] it rides inside
 //!   [`super::codec::EncodedFrame`] across the simulated wire.
-//! * Dropping the last handle pushes the backing `Vec` onto the pool's
-//!   freelist (bounded by [`MAX_FREE_PER_SHELF`]); buffers created
-//!   without a pool (test/interop helpers) simply deallocate.
+//! * Dropping the last handle parks the slot on the pool's freelist
+//!   (bounded by [`MAX_FREE_PER_SHELF`]); buffers created without a pool
+//!   (test/interop helpers) simply deallocate.
 //!
-//! [`PoolStats`] counts checkouts, fresh allocations and recycles so
-//! reports can *prove* reuse instead of asserting it —
-//! `FleetReport.pool` surfaces the delta for every fleet run.
+//! [`PoolStats`] counts checkouts, fresh buffer allocations, handle
+//! allocations and recycles so reports can *prove* reuse instead of
+//! asserting it — `FleetReport.pool` surfaces the delta for every fleet
+//! run.
 //!
 //! [`checkout_mask`]: FramePool::checkout_mask
 
@@ -42,7 +52,28 @@ use super::{FRAME_ELEMS, FRAME_PIXELS};
 /// transient burst).
 pub const MAX_FREE_PER_SHELF: usize = 1024;
 
-/// Which freelist a pooled f32 buffer recycles into.
+/// Debug-build sentinel written into [`CheckoutMode::WillOverwrite`]
+/// checkouts in place of the elided zero-fill: a quiet-NaN bit pattern no
+/// producer legitimately writes, so [`PoolBuf::freeze`] can assert the
+/// buffer really was fully overwritten.
+#[cfg(debug_assertions)]
+const OVERWRITE_SENTINEL_BITS: u32 = 0x7FC0_5EED;
+
+/// What the checkout promises about the buffer's next use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckoutMode {
+    /// The buffer is zero-filled before hand-out (the safe default for
+    /// partial writers: a recycled buffer never leaks a stale pixel).
+    Zeroed,
+    /// The consumer promises to overwrite **every** element before
+    /// freezing, so the zero-fill memset is skipped — this halves buffer
+    /// memory traffic on full-overwrite paths (scene render, dense
+    /// decode). Debug builds verify the promise with a sentinel fill and
+    /// a freeze-time assertion.
+    WillOverwrite,
+}
+
+/// Which freelist a pooled f32 slot recycles into.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Shelf {
     /// `FRAME_ELEMS`-sized pixel payloads.
@@ -51,13 +82,30 @@ enum Shelf {
     Mask,
 }
 
-#[derive(Debug, Default)]
+/// One arena slot: the payload plus its checkout epoch. The handle's
+/// atomic refcount is the co-allocated `Arc` control block — allocated
+/// once per slot, reused across checkouts (the slot arena's whole point).
+struct Slot {
+    /// Monotone per-slot checkout generation (diagnostics; a recycled
+    /// slot handed out again is a new epoch of the same allocation).
+    epoch: u64,
+    data: Vec<f32>,
+    shelf: Shelf,
+}
+
+/// One byte-scratch arena slot (the codec's encode targets).
+struct ByteSlot {
+    data: Vec<u8>,
+}
+
+#[derive(Default)]
 struct PoolInner {
-    pixels: Vec<Vec<f32>>,
-    masks: Vec<Vec<f32>>,
-    bytes: Vec<Vec<u8>>,
+    pixels: Vec<Arc<Slot>>,
+    masks: Vec<Arc<Slot>>,
+    bytes: Vec<Arc<ByteSlot>>,
     checkouts: u64,
     fresh_allocs: u64,
+    handle_allocs: u64,
     recycled: u64,
 }
 
@@ -66,9 +114,14 @@ struct PoolInner {
 pub struct PoolStats {
     /// Buffers handed out (pixels + masks + byte scratch).
     pub checkouts: u64,
-    /// Checkouts that had to allocate because the freelist was empty —
-    /// the number that must stop growing once the pool is warm.
+    /// Checkouts that had to allocate a payload because the freelist was
+    /// empty — the number that must stop growing once the pool is warm.
     pub fresh_allocs: u64,
+    /// Handle control blocks allocated (one per fresh slot). A warm
+    /// checkout reuses the parked slot's handle allocation outright —
+    /// the seed-era per-checkout `Arc::new` is gone, and this counter
+    /// proves it by flatlining after warm-up.
+    pub handle_allocs: u64,
     /// Buffers returned to a freelist by handle drops.
     pub recycled: u64,
 }
@@ -93,18 +146,32 @@ impl PoolStats {
         PoolStats {
             checkouts: self.checkouts - earlier.checkouts,
             fresh_allocs: self.fresh_allocs - earlier.fresh_allocs,
+            handle_allocs: self.handle_allocs - earlier.handle_allocs,
             recycled: self.recycled - earlier.recycled,
         }
     }
 }
 
+/// Park an f32 slot back on its shelf freelist. Caller must hold the
+/// only reference to `slot`.
+fn recycle_f32(inner: &mut PoolInner, slot: Arc<Slot>) {
+    let shelf = match slot.shelf {
+        Shelf::Pixels => &mut inner.pixels,
+        Shelf::Mask => &mut inner.masks,
+    };
+    if shelf.len() < MAX_FREE_PER_SHELF {
+        shelf.push(slot);
+        inner.recycled += 1;
+    }
+}
+
 /// A pooled f32 buffer. Uniquely owned while being filled; frozen into
-/// a [`SharedPixels`] (`Arc<PoolBuf>`) for O(1) sharing. Recycles its
-/// storage to the owning pool's freelist on last drop.
+/// a [`SharedPixels`] for O(1), allocation-free sharing. Recycles its
+/// slot to the owning pool's freelist on last drop.
 pub struct PoolBuf {
-    data: Vec<f32>,
-    shelf: Shelf,
+    slot: Option<Arc<Slot>>,
     pool: Option<Arc<Mutex<PoolInner>>>,
+    mode: CheckoutMode,
 }
 
 impl PoolBuf {
@@ -112,26 +179,71 @@ impl PoolBuf {
     /// Interop seam for tests and decoded one-off frames.
     pub fn unpooled(data: Vec<f32>) -> PoolBuf {
         PoolBuf {
-            data,
-            shelf: Shelf::Pixels,
+            slot: Some(Arc::new(Slot {
+                epoch: 0,
+                data,
+                shelf: Shelf::Pixels,
+            })),
             pool: None,
+            mode: CheckoutMode::Zeroed,
         }
     }
 
+    fn slot(&self) -> &Slot {
+        self.slot.as_ref().expect("pool buffer already consumed")
+    }
+
+    fn slot_mut(&mut self) -> &mut Slot {
+        Arc::get_mut(self.slot.as_mut().expect("pool buffer already consumed"))
+            .expect("unfrozen pool buffer must be uniquely owned")
+    }
+
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        &self.slot().data
     }
 
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+        &mut self.slot_mut().data
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.slot().data.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.slot().data.is_empty()
+    }
+
+    /// This checkout's slot generation (0 for the slot's first use).
+    pub fn epoch(&self) -> u64 {
+        self.slot().epoch
+    }
+
+    /// The mode this buffer was checked out with.
+    pub fn mode(&self) -> CheckoutMode {
+        self.mode
+    }
+
+    /// Freeze into a shared handle. Allocation-free: the handle IS the
+    /// slot reference the checkout already holds. For a
+    /// [`CheckoutMode::WillOverwrite`] checkout, debug builds assert the
+    /// producer overwrote every element.
+    pub fn freeze(mut self) -> SharedPixels {
+        #[cfg(debug_assertions)]
+        if self.mode == CheckoutMode::WillOverwrite {
+            debug_assert!(
+                !self
+                    .slot()
+                    .data
+                    .iter()
+                    .any(|v| v.to_bits() == OVERWRITE_SENTINEL_BITS),
+                "WillOverwrite checkout frozen without fully overwriting the buffer"
+            );
+        }
+        SharedPixels {
+            slot: self.slot.take(),
+            pool: self.pool.take(),
+        }
     }
 }
 
@@ -139,42 +251,113 @@ impl Deref for PoolBuf {
     type Target = [f32];
 
     fn deref(&self) -> &[f32] {
-        &self.data
+        &self.slot().data
     }
 }
 
 impl DerefMut for PoolBuf {
     fn deref_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        &mut self.slot_mut().data
     }
 }
 
 impl PartialEq for PoolBuf {
     fn eq(&self, other: &PoolBuf) -> bool {
-        self.data == other.data
+        self.slot().data == other.slot().data
     }
 }
 
 impl fmt::Debug for PoolBuf {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "PoolBuf({} f32, {:?})", self.data.len(), self.shelf)
+        let s = self.slot();
+        write!(f, "PoolBuf({} f32, {:?}, epoch {})", s.data.len(), s.shelf, s.epoch)
     }
 }
 
 impl Drop for PoolBuf {
     fn drop(&mut self) {
-        if let Some(pool) = self.pool.take() {
-            let data = std::mem::take(&mut self.data);
-            // never panic in drop: a poisoned pool just stops recycling
+        let Some(slot) = self.slot.take() else { return };
+        let Some(pool) = self.pool.take() else { return };
+        // never panic in drop: a poisoned pool just stops recycling
+        if let Ok(mut inner) = pool.lock() {
+            recycle_f32(&mut inner, slot);
+        }
+    }
+}
+
+/// Cheaply-cloneable shared pixel/mask payload: a reference into the
+/// slot arena. Cloning bumps the slot's refcount; dropping the last
+/// clone parks the slot (with its handle allocation) on the freelist.
+#[derive(Clone)]
+pub struct SharedPixels {
+    slot: Option<Arc<Slot>>,
+    pool: Option<Arc<Mutex<PoolInner>>>,
+}
+
+impl SharedPixels {
+    fn slot(&self) -> &Slot {
+        self.slot.as_ref().expect("shared payload already consumed")
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.slot().data
+    }
+
+    pub fn len(&self) -> usize {
+        self.slot().data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot().data.is_empty()
+    }
+
+    /// True when both handles reference the same arena slot (the
+    /// share-not-copy proof tests rely on).
+    pub fn ptr_eq(&self, other: &SharedPixels) -> bool {
+        match (&self.slot, &other.slot) {
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+impl Deref for SharedPixels {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.slot().data
+    }
+}
+
+impl PartialEq for SharedPixels {
+    fn eq(&self, other: &SharedPixels) -> bool {
+        self.slot().data == other.slot().data
+    }
+}
+
+impl fmt::Debug for SharedPixels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.slot();
+        write!(f, "SharedPixels({} f32, epoch {})", s.data.len(), s.epoch)
+    }
+}
+
+impl Drop for SharedPixels {
+    fn drop(&mut self) {
+        let Some(slot) = self.slot.take() else { return };
+        let Some(pool) = self.pool.take() else { return };
+        // last handle standing: park the slot — its payload AND its
+        // handle control block — for the next checkout. A slot is only
+        // ever parked by a holder that observes itself unique, so a
+        // parked slot never has live handles; if two clones raced their
+        // drops on different threads, both could read a count of 2 and
+        // neither would park — the slot then simply deallocates (safe,
+        // a missed reuse, never a double-park). The fleet dispatch path
+        // is single-threaded, so recycling and `PoolStats` stay exact
+        // and deterministic there.
+        if Arc::strong_count(&slot) == 1 {
             if let Ok(mut inner) = pool.lock() {
-                let shelf = match self.shelf {
-                    Shelf::Pixels => &mut inner.pixels,
-                    Shelf::Mask => &mut inner.masks,
-                };
-                if shelf.len() < MAX_FREE_PER_SHELF {
-                    shelf.push(data);
-                    inner.recycled += 1;
-                }
+                recycle_f32(&mut inner, slot);
             }
         }
     }
@@ -183,31 +366,48 @@ impl Drop for PoolBuf {
 /// A pooled byte buffer the codec encodes into; frozen as
 /// [`SharedBytes`] it is the wire payload of an encoded frame.
 pub struct ByteBuf {
-    data: Vec<u8>,
+    slot: Option<Arc<ByteSlot>>,
     pool: Option<Arc<Mutex<PoolInner>>>,
 }
 
 impl ByteBuf {
     /// Wrap an owned `Vec` without a pool (drops deallocate normally).
     pub fn unpooled(data: Vec<u8>) -> ByteBuf {
-        ByteBuf { data, pool: None }
+        ByteBuf {
+            slot: Some(Arc::new(ByteSlot { data })),
+            pool: None,
+        }
+    }
+
+    fn slot(&self) -> &ByteSlot {
+        self.slot.as_ref().expect("byte buffer already consumed")
     }
 
     pub fn as_slice(&self) -> &[u8] {
-        &self.data
+        &self.slot().data
     }
 
     /// The growable backing vector (the codec's encode-into target).
     pub fn vec_mut(&mut self) -> &mut Vec<u8> {
-        &mut self.data
+        &mut Arc::get_mut(self.slot.as_mut().expect("byte buffer already consumed"))
+            .expect("unfrozen byte buffer must be uniquely owned")
+            .data
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.slot().data.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.slot().data.is_empty()
+    }
+
+    /// Freeze into a shared handle without allocating.
+    pub fn freeze(mut self) -> SharedBytes {
+        SharedBytes {
+            slot: self.slot.take(),
+            pool: self.pool.take(),
+        }
     }
 }
 
@@ -215,48 +415,103 @@ impl Deref for ByteBuf {
     type Target = [u8];
 
     fn deref(&self) -> &[u8] {
-        &self.data
+        &self.slot().data
     }
 }
 
 impl PartialEq for ByteBuf {
     fn eq(&self, other: &ByteBuf) -> bool {
-        self.data == other.data
+        self.slot().data == other.slot().data
     }
 }
 
 impl fmt::Debug for ByteBuf {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "ByteBuf({} bytes)", self.data.len())
+        write!(f, "ByteBuf({} bytes)", self.slot().data.len())
+    }
+}
+
+fn recycle_bytes(inner: &mut PoolInner, slot: Arc<ByteSlot>) {
+    if inner.bytes.len() < MAX_FREE_PER_SHELF {
+        inner.bytes.push(slot);
+        inner.recycled += 1;
     }
 }
 
 impl Drop for ByteBuf {
     fn drop(&mut self) {
-        if let Some(pool) = self.pool.take() {
-            let data = std::mem::take(&mut self.data);
+        let Some(slot) = self.slot.take() else { return };
+        let Some(pool) = self.pool.take() else { return };
+        if let Ok(mut inner) = pool.lock() {
+            recycle_bytes(&mut inner, slot);
+        }
+    }
+}
+
+/// Cheaply-cloneable shared encoded-frame payload (slot-arena handle,
+/// like [`SharedPixels`] but for wire bytes).
+#[derive(Clone)]
+pub struct SharedBytes {
+    slot: Option<Arc<ByteSlot>>,
+    pool: Option<Arc<Mutex<PoolInner>>>,
+}
+
+impl SharedBytes {
+    fn slot(&self) -> &ByteSlot {
+        self.slot.as_ref().expect("shared bytes already consumed")
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.slot().data
+    }
+
+    pub fn len(&self) -> usize {
+        self.slot().data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot().data.is_empty()
+    }
+}
+
+impl Deref for SharedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.slot().data
+    }
+}
+
+impl PartialEq for SharedBytes {
+    fn eq(&self, other: &SharedBytes) -> bool {
+        self.slot().data == other.slot().data
+    }
+}
+
+impl fmt::Debug for SharedBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SharedBytes({} bytes)", self.slot().data.len())
+    }
+}
+
+impl Drop for SharedBytes {
+    fn drop(&mut self) {
+        let Some(slot) = self.slot.take() else { return };
+        let Some(pool) = self.pool.take() else { return };
+        if Arc::strong_count(&slot) == 1 {
             if let Ok(mut inner) = pool.lock() {
-                if inner.bytes.len() < MAX_FREE_PER_SHELF {
-                    inner.bytes.push(data);
-                    inner.recycled += 1;
-                }
+                recycle_bytes(&mut inner, slot);
             }
         }
     }
 }
 
-/// Cheaply-cloneable shared pixel/mask payload.
-pub type SharedPixels = Arc<PoolBuf>;
-
-/// Cheaply-cloneable shared encoded-frame payload.
-pub type SharedBytes = Arc<ByteBuf>;
-
 /// Freeze an owned `Vec<f32>` into a shared handle (unpooled).
 pub fn shared_from_vec(data: Vec<f32>) -> SharedPixels {
-    Arc::new(PoolBuf::unpooled(data))
+    PoolBuf::unpooled(data).freeze()
 }
 
-/// The frame-buffer arena. Clones share the same freelists and
+/// The frame-buffer slot arena. Clones share the same freelists and
 /// counters, so a generator, batcher and dispatcher can recycle through
 /// one pool; [`FramePool::stats`] snapshots are deterministic for a
 /// deterministic workload.
@@ -273,11 +528,14 @@ impl FramePool {
     pub fn new() -> FramePool {
         FramePool {
             inner: Arc::new(Mutex::new(PoolInner::default())),
-            zero_mask: Arc::new(PoolBuf {
-                data: vec![0.0; FRAME_PIXELS],
-                shelf: Shelf::Mask,
+            zero_mask: SharedPixels {
+                slot: Some(Arc::new(Slot {
+                    epoch: 0,
+                    data: vec![0.0; FRAME_PIXELS],
+                    shelf: Shelf::Mask,
+                })),
                 pool: None,
-            }),
+            },
         }
     }
 
@@ -285,66 +543,103 @@ impl FramePool {
         self.inner.lock().expect("frame pool poisoned")
     }
 
-    fn checkout_f32(&self, shelf: Shelf, len: usize) -> PoolBuf {
+    fn checkout_f32(&self, shelf: Shelf, len: usize, mode: CheckoutMode) -> PoolBuf {
         let mut inner = self.lock();
         inner.checkouts += 1;
         let free = match shelf {
             Shelf::Pixels => &mut inner.pixels,
             Shelf::Mask => &mut inner.masks,
         };
-        let data = match free.pop() {
-            Some(mut v) => {
-                debug_assert_eq!(v.len(), len, "freelist buffer has wrong geometry");
-                // fresh-checkout zeroing: recycled buffers must never
-                // leak a previous frame's pixels
-                v.fill(0.0);
-                v
+        let slot = match free.pop() {
+            Some(mut arc) => {
+                let s = Arc::get_mut(&mut arc).expect("parked slot has live handles");
+                debug_assert_eq!(s.data.len(), len, "freelist slot has wrong geometry");
+                s.epoch += 1;
+                match mode {
+                    // fresh-checkout zeroing: recycled buffers must never
+                    // leak a previous frame's pixels to a partial writer
+                    CheckoutMode::Zeroed => s.data.fill(0.0),
+                    // zero-fill elision: the consumer promised a full
+                    // overwrite; debug builds plant a sentinel instead
+                    CheckoutMode::WillOverwrite => {
+                        #[cfg(debug_assertions)]
+                        s.data.fill(f32::from_bits(OVERWRITE_SENTINEL_BITS));
+                    }
+                }
+                arc
             }
             None => {
                 inner.fresh_allocs += 1;
-                vec![0.0; len]
+                inner.handle_allocs += 1;
+                let mut data = vec![0.0; len];
+                #[cfg(debug_assertions)]
+                if mode == CheckoutMode::WillOverwrite {
+                    data.fill(f32::from_bits(OVERWRITE_SENTINEL_BITS));
+                }
+                Arc::new(Slot {
+                    epoch: 0,
+                    data,
+                    shelf,
+                })
             }
         };
         PoolBuf {
-            data,
-            shelf,
+            slot: Some(slot),
             pool: Some(Arc::clone(&self.inner)),
+            mode,
         }
     }
 
     /// Check out a zeroed `FRAME_ELEMS` pixel payload.
     pub fn checkout_pixels(&self) -> PoolBuf {
-        self.checkout_f32(Shelf::Pixels, FRAME_ELEMS)
+        self.checkout_f32(Shelf::Pixels, FRAME_ELEMS, CheckoutMode::Zeroed)
+    }
+
+    /// Check out a `FRAME_ELEMS` pixel payload with an explicit
+    /// [`CheckoutMode`] — `WillOverwrite` elides the zero-fill for
+    /// full-overwrite producers.
+    pub fn checkout_pixels_mode(&self, mode: CheckoutMode) -> PoolBuf {
+        self.checkout_f32(Shelf::Pixels, FRAME_ELEMS, mode)
     }
 
     /// Check out a zeroed `FRAME_PIXELS` mask plane.
     pub fn checkout_mask(&self) -> PoolBuf {
-        self.checkout_f32(Shelf::Mask, FRAME_PIXELS)
+        self.checkout_f32(Shelf::Mask, FRAME_PIXELS, CheckoutMode::Zeroed)
+    }
+
+    /// Check out a `FRAME_PIXELS` mask plane with an explicit
+    /// [`CheckoutMode`].
+    pub fn checkout_mask_mode(&self, mode: CheckoutMode) -> PoolBuf {
+        self.checkout_f32(Shelf::Mask, FRAME_PIXELS, mode)
     }
 
     /// Check out an empty (cleared, capacity-preserving) byte scratch.
     pub fn checkout_bytes(&self) -> ByteBuf {
         let mut inner = self.lock();
         inner.checkouts += 1;
-        let data = match inner.bytes.pop() {
-            Some(mut v) => {
-                v.clear();
-                v
+        let slot = match inner.bytes.pop() {
+            Some(mut arc) => {
+                Arc::get_mut(&mut arc)
+                    .expect("parked byte slot has live handles")
+                    .data
+                    .clear();
+                arc
             }
             None => {
                 inner.fresh_allocs += 1;
-                Vec::new()
+                inner.handle_allocs += 1;
+                Arc::new(ByteSlot { data: Vec::new() })
             }
         };
         ByteBuf {
-            data,
+            slot: Some(slot),
             pool: Some(Arc::clone(&self.inner)),
         }
     }
 
     /// The shared all-zero mask plane (for decoded frames).
     pub fn zero_mask(&self) -> SharedPixels {
-        Arc::clone(&self.zero_mask)
+        self.zero_mask.clone()
     }
 
     /// Cumulative counters for this pool.
@@ -353,6 +648,7 @@ impl FramePool {
         PoolStats {
             checkouts: inner.checkouts,
             fresh_allocs: inner.fresh_allocs,
+            handle_allocs: inner.handle_allocs,
             recycled: inner.recycled,
         }
     }
@@ -375,8 +671,8 @@ impl fmt::Debug for FramePool {
         let s = self.stats();
         write!(
             f,
-            "FramePool(checkouts {}, fresh {}, recycled {})",
-            s.checkouts, s.fresh_allocs, s.recycled
+            "FramePool(checkouts {}, fresh {}, handles {}, recycled {})",
+            s.checkouts, s.fresh_allocs, s.handle_allocs, s.recycled
         )
     }
 }
@@ -407,15 +703,19 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.checkouts, 1);
         assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.handle_allocs, 1);
         assert_eq!(s.recycled, 1);
         assert_eq!(pool.free_buffers(), 1);
 
-        // second checkout reuses the freelist entry — and sees zeros
+        // second checkout reuses the slot — same handle allocation, and
+        // it sees zeros
         let px = pool.checkout_pixels();
         assert!(px.iter().all(|&v| v == 0.0), "stale pixels leaked");
+        assert_eq!(px.epoch(), 1, "recycled slot must advance its epoch");
         let s = pool.stats();
         assert_eq!(s.checkouts, 2);
-        assert_eq!(s.fresh_allocs, 1, "reuse must not allocate");
+        assert_eq!(s.fresh_allocs, 1, "reuse must not allocate a buffer");
+        assert_eq!(s.handle_allocs, 1, "reuse must not allocate a handle");
         assert_eq!(s.reuses(), 1);
         assert!(s.reuse_frac() > 0.49);
     }
@@ -423,12 +723,59 @@ mod tests {
     #[test]
     fn shared_handles_recycle_on_last_drop() {
         let pool = FramePool::new();
-        let a: SharedPixels = Arc::new(pool.checkout_pixels());
-        let b = Arc::clone(&a);
+        let a: SharedPixels = pool.checkout_pixels().freeze();
+        let b = a.clone();
+        assert!(a.ptr_eq(&b), "clones reference the same slot");
         drop(a);
         assert_eq!(pool.stats().recycled, 0, "clone still alive");
         drop(b);
         assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn warm_freeze_cycle_never_allocates_handles() {
+        let pool = FramePool::new();
+        // warm up: one pixel slot + one byte slot
+        drop(pool.checkout_pixels().freeze());
+        drop(pool.checkout_bytes().freeze());
+        let warm = pool.stats();
+        assert_eq!(warm.handle_allocs, 2);
+        // every warm checkout→freeze→drop cycle reuses slot AND handle
+        for _ in 0..10 {
+            let h = pool.checkout_pixels().freeze();
+            let h2 = h.clone();
+            drop(h);
+            drop(h2);
+            drop(pool.checkout_bytes().freeze());
+        }
+        let s = pool.stats();
+        assert_eq!(s.handle_allocs, warm.handle_allocs, "warm cycle allocated a handle");
+        assert_eq!(s.fresh_allocs, warm.fresh_allocs, "warm cycle allocated a buffer");
+        assert_eq!(s.checkouts, warm.checkouts + 20);
+    }
+
+    #[test]
+    fn will_overwrite_checkout_skips_the_zero_fill() {
+        let pool = FramePool::new();
+        {
+            let mut px = pool.checkout_pixels();
+            px.as_mut_slice().fill(3.25);
+        }
+        let mut px = pool.checkout_pixels_mode(CheckoutMode::WillOverwrite);
+        // a full overwrite makes the elided memset unobservable
+        px.as_mut_slice().fill(1.5);
+        let frozen = px.freeze();
+        assert!(frozen.iter().all(|&v| v == 1.5));
+        assert_eq!(pool.stats().fresh_allocs, 1, "overwrite checkout must reuse");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "without fully overwriting")]
+    fn unwritten_overwrite_checkout_panics_in_debug() {
+        let pool = FramePool::new();
+        let buf = pool.checkout_pixels_mode(CheckoutMode::WillOverwrite);
+        let _ = buf.freeze(); // promise broken: nothing was written
     }
 
     #[test]
@@ -442,6 +789,7 @@ mod tests {
         let b = pool.checkout_bytes();
         assert!(b.is_empty(), "recycled scratch must come back cleared");
         assert_eq!(pool.stats().fresh_allocs, 1);
+        assert_eq!(pool.stats().handle_allocs, 1);
     }
 
     #[test]
@@ -449,6 +797,7 @@ mod tests {
         let pool = FramePool::new();
         drop(PoolBuf::unpooled(vec![1.0; 4]));
         drop(ByteBuf::unpooled(vec![1]));
+        drop(PoolBuf::unpooled(vec![2.0; 4]).freeze());
         assert_eq!(pool.stats().recycled, 0);
         assert_eq!(pool.free_buffers(), 0);
     }
@@ -461,6 +810,7 @@ mod tests {
         let d = pool.stats().since(t0);
         assert_eq!(d.checkouts, 1);
         assert_eq!(d.fresh_allocs, 1);
+        assert_eq!(d.handle_allocs, 1);
         assert_eq!(d.recycled, 1);
     }
 
@@ -469,7 +819,7 @@ mod tests {
         let pool = FramePool::new();
         let a = pool.zero_mask();
         let b = pool.zero_mask();
-        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.ptr_eq(&b));
         assert_eq!(a.len(), FRAME_PIXELS);
         assert!(a.iter().all(|&v| v == 0.0));
     }

@@ -7,19 +7,71 @@
 //! moving UGV feed this removes near-duplicate frames and directly
 //! reduces both compute and bandwidth.
 //!
-//! The accumulation walks contiguous row slices per grid cell
-//! (`chunks_exact` over RGB triples), so the compiler drops the
-//! per-pixel bounds checks; the summation order is exactly the seed's
-//! (y-major within each cell), keeping signatures bit-identical and
-//! therefore dedup decisions — and every same-seed `FleetReport` —
-//! unchanged.
+//! The kernel is lane-tiled: each image row's Rec.601 lumas are computed
+//! into a 64-lane row tile in one elementwise pass (independent lanes,
+//! no reassociation — the autovectorizer runs it 8 floats wide), then
+//! folded into the row's eight grid cells in the seed's exact summation
+//! order (y-major within each cell, x ascending). The per-cell partial
+//! sums are bit-identical to the seed's scalar accumulation — retained
+//! below as [`signature_of_scalar`] and property-tested in
+//! `tests/prop_frames.rs` — so dedup decisions, and every same-seed
+//! `FleetReport`, are unchanged. The speedup comes from vectorized luma
+//! math plus eight independent per-cell accumulation chains per row
+//! (the seed serialized one 4-cycle-latency add chain across each whole
+//! cell).
 
 use super::{Frame, FRAME_C, FRAME_H, FRAME_W};
 
 const GRID: usize = 8;
 
-/// 8×8 mean-luma signature over a raw `H·W·C` pixel slice.
+/// 8×8 mean-luma signature over a raw `H·W·C` pixel slice. Lane-tiled;
+/// bit-identical to [`signature_of_scalar`].
 pub fn signature_of(pixels: &[f32]) -> [f32; GRID * GRID] {
+    // the scalar seed indexes up to FRAME_ELEMS and panics on shorter
+    // input; assert the same precondition so a truncated buffer fails
+    // loudly here too instead of yielding a plausible wrong signature
+    assert!(
+        pixels.len() >= FRAME_H * FRAME_W * FRAME_C,
+        "signature_of needs a full frame, got {} elems",
+        pixels.len()
+    );
+    let cell_h = FRAME_H / GRID;
+    let cell_w = FRAME_W / GRID;
+    let mut sig = [0.0f32; GRID * GRID];
+    let mut luma = [0.0f32; FRAME_W];
+    for (y, row) in pixels
+        .chunks_exact(FRAME_W * FRAME_C)
+        .take(FRAME_H)
+        .enumerate()
+    {
+        // elementwise Rec.601 luma for the whole row: independent
+        // lanes, exact seed expression per pixel
+        for (l, px) in luma.iter_mut().zip(row.chunks_exact(FRAME_C)) {
+            *l = 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2];
+        }
+        // fold the row tile into its grid cells in the seed's exact
+        // order (y-major within each cell, x ascending): bit-identical
+        // partial sums, eight independent accumulation chains
+        let base = (y / cell_h) * GRID;
+        for (gx, seg) in luma.chunks_exact(cell_w).enumerate() {
+            let cell = &mut sig[base + gx];
+            for &l in seg {
+                *cell += l;
+            }
+        }
+    }
+    let norm = (cell_h * cell_w) as f32;
+    for s in sig.iter_mut() {
+        *s /= norm;
+    }
+    sig
+}
+
+/// The seed's scalar signature kernel, retained verbatim as the
+/// reference implementation: the tiled [`signature_of`] must stay
+/// bit-identical to it (property-tested, and benched head-to-head in
+/// `benches/hotpath.rs`).
+pub fn signature_of_scalar(pixels: &[f32]) -> [f32; GRID * GRID] {
     let cell_h = FRAME_H / GRID;
     let cell_w = FRAME_W / GRID;
     let mut sig = [0.0f32; GRID * GRID];
@@ -175,5 +227,18 @@ mod tests {
         let mut g = SceneGenerator::paper_default(17);
         let f = g.next_frame();
         assert_eq!(signature(&f), signature_of(&f.pixels));
+    }
+
+    #[test]
+    fn tiled_signature_is_bit_identical_to_the_scalar_seed() {
+        let mut g = SceneGenerator::paper_default(19);
+        for _ in 0..8 {
+            let f = g.next_frame();
+            let tiled = signature_of(&f.pixels);
+            let scalar = signature_of_scalar(&f.pixels);
+            for (a, b) in tiled.iter().zip(&scalar) {
+                assert_eq!(a.to_bits(), b.to_bits(), "tiled signature reassociated the sum");
+            }
+        }
     }
 }

@@ -10,7 +10,14 @@
 //! broker→subscriber leg and counts the shed in
 //! [`BrokerStats::backpressure_dropped`] (observable from tests/benches,
 //! like the other broker stats).
+//!
+//! Fan-out is zero-copy: a routed PUBLISH is encoded once and the
+//! resulting buffer is shared (`Arc`) across every matching subscriber's
+//! dispatch queue — the seed cloned the encoded frame per subscriber.
+//! The encode itself borrows the published payload (`Cow`), so the only
+//! copy on the broker data path is the single payload→wire-frame encode.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -33,7 +40,7 @@ pub const DISPATCH_QUEUE_DEPTH: usize = 1024;
 struct Subscriber {
     client_id: String,
     filter: String,
-    queue: SyncSender<Vec<u8>>,
+    queue: SyncSender<Arc<Vec<u8>>>,
     /// Cleared by the writer thread when the socket dies; routing prunes
     /// dead entries lazily.
     alive: Arc<AtomicBool>,
@@ -121,8 +128,9 @@ impl Broker {
         // Single-writer discipline: this queue + thread own all writes to
         // the socket. Control packets from this connection's reader loop
         // use a blocking `send`; PUBLISH routing from other connections
-        // uses `try_send` (see `route`).
-        let (tx, rx) = sync_channel::<Vec<u8>>(DISPATCH_QUEUE_DEPTH);
+        // uses `try_send` (see `route`). Queued buffers are shared, not
+        // owned: a fan-out to N subscribers enqueues N refs to one encode.
+        let (tx, rx) = sync_channel::<Arc<Vec<u8>>>(DISPATCH_QUEUE_DEPTH);
         let alive = Arc::new(AtomicBool::new(true));
         let writer_alive = alive.clone();
         let mut writer = stream;
@@ -143,8 +151,8 @@ impl Broker {
                 // keep draining so senders holding clones never block
                 for _ in rx.iter() {}
             })?;
-        let send_ctl = |pkt: Packet| -> Result<()> {
-            tx.send(pkt.encode())
+        let send_ctl = |pkt: Packet<'static>| -> Result<()> {
+            tx.send(Arc::new(pkt.encode()))
                 .map_err(|_| anyhow::anyhow!("connection writer gone"))
         };
 
@@ -189,7 +197,7 @@ impl Broker {
                         for (topic, payload, qos) in retained {
                             let _ = send_ctl(Packet::Publish {
                                 topic,
-                                payload,
+                                payload: payload.into(),
                                 qos,
                                 packet_id: 0,
                                 retain: true,
@@ -209,7 +217,7 @@ impl Broker {
                         if qos == QoS::AtLeastOnce {
                             send_ctl(Packet::PubAck { packet_id })?;
                         }
-                        Self::route(&shared, &stats, topic, payload, qos, retain);
+                        Self::route(&shared, &stats, topic, payload.into_owned(), qos, retain);
                     }
                     Packet::PingReq => send_ctl(Packet::PingResp)?,
                     Packet::Disconnect => return Ok(()),
@@ -246,17 +254,21 @@ impl Broker {
         retain: bool,
     ) {
         let mut sh = shared.lock().unwrap();
+        // encode once, borrowing the payload; every matching subscriber
+        // shares the same buffer (the per-subscriber copy is gone)
+        let bytes = Arc::new(
+            Packet::Publish {
+                topic: topic.clone(),
+                payload: Cow::Borrowed(&payload[..]),
+                qos: QoS::AtMostOnce, // broker->subscriber leg is q0
+                packet_id: 0,
+                retain: false,
+            }
+            .encode(),
+        );
         if retain {
-            sh.retained.insert(topic.clone(), (payload.clone(), qos));
+            sh.retained.insert(topic.clone(), (payload, qos));
         }
-        let pkt = Packet::Publish {
-            topic: topic.clone(),
-            payload,
-            qos: QoS::AtMostOnce, // broker->subscriber leg is q0
-            packet_id: 0,
-            retain: false,
-        };
-        let bytes = pkt.encode();
         sh.subscribers.retain(|sub| {
             if !sub.alive.load(Ordering::Relaxed) {
                 return false; // writer saw the socket die
@@ -264,7 +276,7 @@ impl Broker {
             if !topic_matches(&sub.filter, &topic) {
                 return true;
             }
-            match sub.queue.try_send(bytes.clone()) {
+            match sub.queue.try_send(Arc::clone(&bytes)) {
                 Ok(()) => {
                     stats.delivered.fetch_add(1, Ordering::Relaxed);
                     stats

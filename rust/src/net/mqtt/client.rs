@@ -1,6 +1,13 @@
 //! Client: connect/subscribe/publish with a background reader thread and
 //! a condvar-backed receive queue — `recv_timeout` blocks on a wakeup
 //! from the reader thread instead of spin-polling.
+//!
+//! The publish path is zero-copy: the PUBLISH header is encoded into a
+//! reusable scratch buffer and shipped together with the caller's
+//! (typically pooled) payload in one vectored write — the payload is
+//! never copied into an intermediate packet buffer. `ping` measures the
+//! true request→response round trip: the reader thread signals every
+//! PINGRESP through the inbox condvar.
 
 use std::collections::VecDeque;
 use std::io::BufReader;
@@ -11,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::packet::{Packet, QoS};
+use super::packet::{write_all_vectored, Packet, QoS};
 
 /// A received application message.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,10 +29,12 @@ pub struct Message {
 
 /// The receive queue shared between the reader thread and the consumer.
 /// `closed` flips when the reader exits so blocked receivers wake up
-/// immediately instead of riding out their timeout.
+/// immediately instead of riding out their timeout; `pongs` counts
+/// PINGRESPs so `ping` can wait for the true round trip.
 #[derive(Default)]
 struct InboxState {
     queue: VecDeque<Message>,
+    pongs: u64,
     closed: bool,
 }
 
@@ -39,7 +48,15 @@ impl Inbox {
     fn push(&self, m: Message) {
         let mut s = self.state.lock().unwrap();
         s.queue.push_back(m);
-        self.ready.notify_one();
+        // notify_all: a ping waiter and a receive waiter can share the
+        // condvar; each re-checks its own predicate on wake
+        self.ready.notify_all();
+    }
+
+    fn pong(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.pongs += 1;
+        self.ready.notify_all();
     }
 
     fn close(&self) {
@@ -69,6 +86,27 @@ impl Inbox {
             s = guard;
         }
     }
+
+    /// Block until the cumulative PINGRESP count reaches `target`; false
+    /// on timeout or a dead connection. Never consumes queued messages.
+    fn wait_pong(&self, target: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.pongs >= target {
+                return true;
+            }
+            if s.closed {
+                return false;
+            }
+            let remain = deadline.saturating_duration_since(Instant::now());
+            if remain.is_zero() {
+                return false;
+            }
+            let (guard, _timed_out) = self.ready.wait_timeout(s, remain).unwrap();
+            s = guard;
+        }
+    }
 }
 
 /// MQTT-like client handle.
@@ -76,8 +114,14 @@ pub struct Client {
     id: String,
     writer: TcpStream,
     inbox: Arc<Inbox>,
-    acks: Receiver<Packet>,
+    acks: Receiver<Packet<'static>>,
     next_packet_id: u16,
+    /// PINGREQs this client has sent; `ping` waits for the PINGRESP
+    /// count to catch up, so a stale pong from an earlier timed-out
+    /// ping can never satisfy a later one.
+    pings_sent: u64,
+    /// Reusable PUBLISH header scratch for the vectored publish path.
+    pub_head: Vec<u8>,
 }
 
 impl Client {
@@ -99,10 +143,12 @@ impl Client {
         }
 
         // Reader thread: pushes PUBLISHes to the inbox (waking any blocked
-        // receiver), control acks to a channel the caller-thread ops wait
-        // on. Closing the inbox on exit unblocks receivers right away.
+        // receiver), signals PINGRESPs through the same condvar, control
+        // acks to a channel the caller-thread ops wait on. Closing the
+        // inbox on exit unblocks receivers right away.
         let inbox: Arc<Inbox> = Arc::new(Inbox::default());
-        let (ack_tx, ack_rx): (Sender<Packet>, Receiver<Packet>) = mpsc::channel();
+        let (ack_tx, ack_rx): (Sender<Packet<'static>>, Receiver<Packet<'static>>) =
+            mpsc::channel();
         let inbox_bg = inbox.clone();
         std::thread::Builder::new()
             .name(format!("mqtt-client-{client_id}"))
@@ -110,9 +156,13 @@ impl Client {
                 loop {
                     match Packet::read_from(&mut reader) {
                         Ok(Packet::Publish { topic, payload, .. }) => {
-                            inbox_bg.push(Message { topic, payload });
+                            inbox_bg.push(Message {
+                                topic,
+                                payload: payload.into_owned(),
+                            });
                         }
-                        Ok(Packet::PingResp) | Ok(Packet::ConnAck) => {}
+                        Ok(Packet::PingResp) => inbox_bg.pong(),
+                        Ok(Packet::ConnAck) => {}
                         Ok(p @ (Packet::PubAck { .. } | Packet::SubAck { .. })) => {
                             if ack_tx.send(p).is_err() {
                                 break;
@@ -131,6 +181,8 @@ impl Client {
             inbox,
             acks: ack_rx,
             next_packet_id: 1,
+            pings_sent: 0,
+            pub_head: Vec::new(),
         })
     }
 
@@ -174,16 +226,22 @@ impl Client {
     }
 
     /// Publish. QoS1 blocks until the broker's PUBACK.
+    ///
+    /// Zero-copy: the header is encoded into a reusable scratch and the
+    /// payload rides a vectored write straight from the caller's buffer
+    /// (the seed path built a `Packet` around `payload.to_vec()` and then
+    /// copied both again into the encoded frame).
     pub fn publish(&mut self, topic: &str, payload: &[u8], qos: QoS, retain: bool) -> Result<()> {
         let packet_id = self.take_packet_id();
-        Packet::Publish {
-            topic: topic.to_string(),
-            payload: payload.to_vec(),
+        Packet::encode_publish_header(
+            topic,
+            payload.len(),
             qos,
             packet_id,
             retain,
-        }
-        .write_to(&mut self.writer)?;
+            &mut self.pub_head,
+        );
+        write_all_vectored(&mut self.writer, &self.pub_head, payload)?;
         if qos == QoS::AtLeastOnce {
             self.wait_ack(false, packet_id, Duration::from_secs(10))?;
         }
@@ -202,12 +260,21 @@ impl Client {
         self.inbox.pop_timeout(timeout)
     }
 
-    /// Round-trip liveness probe; returns the measured RTT.
+    /// Round-trip liveness probe: sends PINGREQ and blocks until the
+    /// reader thread signals the broker's PINGRESP (condvar, no
+    /// busy-wait), so the returned duration is the true request→response
+    /// RTT — the seed returned the write-path time only. Responses are
+    /// matched by count (every outstanding PINGREQ must be answered on
+    /// this TCP stream before Ok), so a late pong from a previously
+    /// timed-out ping cannot satisfy this one on its own.
     pub fn ping(&mut self) -> Result<Duration> {
+        self.pings_sent += 1;
+        let target = self.pings_sent;
         let t0 = Instant::now();
         Packet::PingReq.write_to(&mut self.writer)?;
-        // PingResp is swallowed by the reader thread; RTT here measures the
-        // write path only. Good enough for liveness.
+        if !self.inbox.wait_pong(target, Duration::from_secs(5)) {
+            bail!("ping timed out (no PINGRESP)");
+        }
         Ok(t0.elapsed())
     }
 

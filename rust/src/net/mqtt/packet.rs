@@ -1,7 +1,17 @@
 //! Wire format: a faithful MQTT-3.1.1-style framing (type nibble + flags,
 //! varint remaining length, u16-prefixed strings).
+//!
+//! Zero-copy publish: [`Packet::Publish`] borrows its payload
+//! (`Cow<[u8]>`), so building an outbound PUBLISH from pooled encoded
+//! bytes copies nothing; packets read off the wire own their payload
+//! (`Cow::Owned`). For the hot publish path the header can be encoded
+//! separately ([`Packet::encode_publish_header`]) and shipped together
+//! with the borrowed payload in one vectored write
+//! ([`write_all_vectored`]) — the payload goes pool → socket with no
+//! intermediate buffer at all.
 
-use std::io::{Read, Write};
+use std::borrow::Cow;
+use std::io::{IoSlice, Read, Write};
 
 use anyhow::{bail, Context, Result};
 
@@ -24,14 +34,18 @@ impl QoS {
     }
 }
 
-/// Control packets (the subset HeteroEdge uses).
+/// Control packets (the subset HeteroEdge uses). `'p` is the lifetime
+/// of a borrowed PUBLISH payload; packets read from the wire are
+/// `Packet<'static>` (owned payload).
 #[derive(Debug, Clone, PartialEq)]
-pub enum Packet {
+pub enum Packet<'p> {
     Connect { client_id: String },
     ConnAck,
     Publish {
         topic: String,
-        payload: Vec<u8>,
+        /// Borrowed on the outbound path (pooled encoded bytes ship
+        /// without a copy), owned on the inbound path.
+        payload: Cow<'p, [u8]>,
         qos: QoS,
         packet_id: u16,
         retain: bool,
@@ -133,7 +147,60 @@ pub fn decode_varint(r: &mut impl Read) -> Result<usize> {
     unreachable!("loop always returns or bails by the 4th byte")
 }
 
-impl Packet {
+/// Write `head` then `tail` to `w` as one packet via vectored I/O and
+/// flush — the zero-copy publish path: the (tiny) encoded header and the
+/// (large) pooled payload reach the socket without ever being
+/// concatenated into an intermediate buffer.
+pub fn write_all_vectored(
+    w: &mut impl Write,
+    mut head: &[u8],
+    mut tail: &[u8],
+) -> std::io::Result<()> {
+    while !head.is_empty() || !tail.is_empty() {
+        let n = match w.write_vectored(&[IoSlice::new(head), IoSlice::new(tail)]) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "failed to write whole packet",
+            ));
+        }
+        if n >= head.len() {
+            tail = &tail[n - head.len()..];
+            head = &[];
+        } else {
+            head = &head[n..];
+        }
+    }
+    w.flush()
+}
+
+impl Packet<'_> {
+    /// Encode the fixed header + variable header of a PUBLISH whose
+    /// payload will be written separately (the vectored-write seam).
+    /// Clears and fills `out`; `out` followed by exactly `payload_len`
+    /// payload bytes is byte-identical to
+    /// [`Packet::encode`] of the equivalent `Publish`.
+    pub fn encode_publish_header(
+        topic: &str,
+        payload_len: usize,
+        qos: QoS,
+        packet_id: u16,
+        retain: bool,
+        out: &mut Vec<u8>,
+    ) {
+        out.clear();
+        let body_len = 2 + topic.len() + 2 + payload_len;
+        let flags = ((qos as u8) << 1) | (retain as u8);
+        out.push((T_PUBLISH << 4) | (flags & 0x0F));
+        encode_varint(body_len, out);
+        write_str(out, topic);
+        write_u16(out, packet_id);
+    }
+
     /// Serialize to wire bytes.
     pub fn encode(&self) -> Vec<u8> {
         let (ty, flags, body) = match self {
@@ -184,8 +251,9 @@ impl Packet {
         out
     }
 
-    /// Read one packet from a stream (blocking).
-    pub fn read_from(r: &mut impl Read) -> Result<Packet> {
+    /// Read one packet from a stream (blocking). The returned packet
+    /// owns its payload.
+    pub fn read_from(r: &mut impl Read) -> Result<Packet<'static>> {
         let mut head = [0u8; 1];
         r.read_exact(&mut head).context("reading packet header")?;
         let ty = head[0] >> 4;
@@ -205,7 +273,7 @@ impl Packet {
             T_PUBLISH => {
                 let topic = read_str(&body, &mut at)?;
                 let packet_id = read_u16(&body, &mut at)?;
-                let payload = body[at..].to_vec();
+                let payload = Cow::Owned(body[at..].to_vec());
                 Packet::Publish {
                     topic,
                     payload,
@@ -246,7 +314,7 @@ mod tests {
     use super::*;
     use std::io::Cursor;
 
-    fn roundtrip(p: Packet) -> Packet {
+    fn roundtrip(p: Packet<'_>) -> Packet<'static> {
         let bytes = p.encode();
         Packet::read_from(&mut Cursor::new(bytes)).unwrap()
     }
@@ -260,7 +328,7 @@ mod tests {
             Packet::ConnAck,
             Packet::Publish {
                 topic: "heteroedge/frames".into(),
-                payload: vec![1, 2, 3, 255],
+                payload: vec![1, 2, 3, 255].into(),
                 qos: QoS::AtLeastOnce,
                 packet_id: 42,
                 retain: true,
@@ -357,9 +425,10 @@ mod tests {
     #[test]
     fn large_payload_roundtrip() {
         let payload = vec![0xAB; 1 << 20];
+        // borrowed payload in, owned payload out — no clone on encode
         let p = Packet::Publish {
             topic: "t".into(),
-            payload: payload.clone(),
+            payload: Cow::Borrowed(&payload[..]),
             qos: QoS::AtMostOnce,
             packet_id: 0,
             retain: false,
@@ -368,6 +437,54 @@ mod tests {
             Packet::Publish { payload: got, .. } => assert_eq!(got, payload),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn publish_header_plus_payload_matches_encode() {
+        for (qos, retain, payload_len) in [
+            (QoS::AtMostOnce, false, 0usize),
+            (QoS::AtLeastOnce, true, 777),
+            (QoS::AtLeastOnce, false, 200_000),
+        ] {
+            let payload = vec![0x5A; payload_len];
+            let whole = Packet::Publish {
+                topic: "heteroedge/frames/node-3".into(),
+                payload: Cow::Borrowed(&payload[..]),
+                qos,
+                packet_id: 91,
+                retain,
+            }
+            .encode();
+            let mut head = Vec::new();
+            Packet::encode_publish_header(
+                "heteroedge/frames/node-3",
+                payload.len(),
+                qos,
+                91,
+                retain,
+                &mut head,
+            );
+            head.extend_from_slice(&payload);
+            assert_eq!(head, whole, "qos {qos:?} retain {retain} len {payload_len}");
+        }
+    }
+
+    #[test]
+    fn write_all_vectored_concatenates_head_and_tail() {
+        let head = vec![1u8, 2, 3];
+        let tail = vec![9u8; 5000];
+        let mut sink: Vec<u8> = Vec::new();
+        write_all_vectored(&mut sink, &head, &tail).unwrap();
+        assert_eq!(sink.len(), head.len() + tail.len());
+        assert_eq!(&sink[..3], &head[..]);
+        assert_eq!(&sink[3..], &tail[..]);
+        // degenerate slices still terminate
+        let mut sink2: Vec<u8> = Vec::new();
+        write_all_vectored(&mut sink2, &[], &[]).unwrap();
+        assert!(sink2.is_empty());
+        write_all_vectored(&mut sink2, &[7], &[]).unwrap();
+        write_all_vectored(&mut sink2, &[], &[8]).unwrap();
+        assert_eq!(sink2, vec![7, 8]);
     }
 
     #[test]

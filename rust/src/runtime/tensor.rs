@@ -2,10 +2,12 @@
 //! coordinator's frame pipeline and the PJRT runtime.
 //!
 //! Storage is either owned (`Vec<f32>`) or a shared pooled frame
-//! payload ([`SharedPixels`]), so [`crate::frames::Frame::as_tensor`]
-//! can hand pixels to the runtime without copying. Mutation through
-//! [`Tensor::data_mut`] copies-on-write, keeping the shared payload
-//! immutable for its other holders.
+//! payload ([`SharedPixels`] — a slot-arena handle, so wrapping and
+//! cloning it allocates nothing), which lets
+//! [`crate::frames::Frame::as_tensor`] hand pixels to the runtime
+//! without copying. Mutation through [`Tensor::data_mut`]
+//! copies-on-write, keeping the shared payload immutable for its other
+//! holders.
 
 use anyhow::{bail, Result};
 

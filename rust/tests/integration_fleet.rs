@@ -332,11 +332,13 @@ fn zero_copy_refactor_is_byte_identical_to_the_copy_path() {
     }
 }
 
-/// The zero-copy pipeline's headline claim: per-frame buffer
-/// allocations stop once the pool is warm. Quadrupling the rounds on an
-/// identical steady-state config must not grow `fresh_allocs` — every
-/// additional frame reuses recycled buffers — while checkouts scale
-/// with the frame count.
+/// The zero-copy pipeline's headline claim: per-frame allocations stop
+/// once the pool is warm — buffers AND handle control blocks (the slot
+/// arena hands the same handle allocation back out on every warm
+/// checkout). Quadrupling the rounds on an identical steady-state config
+/// must not grow `fresh_allocs` or `handle_allocs` — every additional
+/// frame reuses recycled slots — while checkouts scale with the frame
+/// count.
 #[test]
 fn offload_hot_path_allocates_nothing_after_warmup() {
     let run = |rounds: usize| {
@@ -363,6 +365,21 @@ fn offload_hot_path_allocates_nothing_after_warmup() {
         "fresh allocations must not scale with rounds: {:?} vs {:?}",
         long.pool,
         short.pool
+    );
+    // the slot-arena guarantee: zero steady-state handle allocations on
+    // the dispatch hot path — the seed pipeline allocated one Arc
+    // control block per checkout, so its handle_allocs would have been
+    // == checkouts and scaled 4x here
+    assert!(
+        long.pool.handle_allocs <= short.pool.handle_allocs + short.pool.handle_allocs / 4 + 4,
+        "handle allocations must not scale with rounds: {:?} vs {:?}",
+        long.pool,
+        short.pool
+    );
+    assert!(
+        long.pool.handle_allocs < long.pool.checkouts / 4,
+        "a warm run must reuse handles, not allocate them: {:?}",
+        long.pool
     );
     assert!(
         long.pool.reuses() > 3 * long.pool.fresh_allocs,

@@ -115,6 +115,34 @@ fn frame_sized_payload_roundtrips() {
 }
 
 #[test]
+fn ping_measures_the_true_round_trip() {
+    let (_b, addr) = setup();
+    let mut c = Client::connect(addr, "pinger").unwrap();
+    // repeated pings each wait for their own PINGRESP
+    for _ in 0..3 {
+        let rtt = c.ping().unwrap();
+        assert!(rtt > Duration::ZERO, "RTT must include the response leg");
+        assert!(rtt < Duration::from_secs(5), "ping must not ride out the timeout");
+    }
+}
+
+#[test]
+fn ping_does_not_consume_queued_messages() {
+    let (_b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("inbox").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("inbox", b"pending", QoS::AtLeastOnce, false)
+        .unwrap();
+    // the PINGRESP waiter shares the inbox condvar with the receive
+    // queue; waiting for the pong must leave the message untouched
+    let rtt = sub.ping().unwrap();
+    assert!(rtt > Duration::ZERO);
+    let msg = sub.recv_timeout(Duration::from_secs(5)).expect("message lost");
+    assert_eq!(msg.payload, b"pending");
+}
+
+#[test]
 fn disconnected_subscriber_is_pruned() {
     let (b, addr) = setup();
     let mut sub = Client::connect(addr, "sub").unwrap();

@@ -1,13 +1,20 @@
 //! Property tests: frame substrate — codec round trips (including the
 //! bulk decode-into and the masked-view encoder), mask algebra,
-//! similarity filter invariants, pooled-buffer hygiene, scene
-//! statistics.
+//! tiled-kernel ⇔ scalar-seed bit-identity, similarity filter
+//! invariants, pooled-buffer hygiene (including zero-fill elision),
+//! scene statistics.
 
 use heteroedge::frames::codec::{
     decode_frame, decode_frame_pooled, encode_dense, encode_masked, encode_masked_view_pooled,
 };
-use heteroedge::frames::mask::{apply_mask, dilate, mask_stats, mask_with_truth};
-use heteroedge::frames::{FramePool, SceneGenerator, SimilarityFilter, FRAME_ELEMS, FRAME_PIXELS};
+use heteroedge::frames::mask::{
+    apply_mask, apply_mask_scalar, dilate, dilate_into, dilate_into_scalar, mask_stats,
+    mask_stats_scalar, mask_with_truth,
+};
+use heteroedge::frames::similarity::{signature_of, signature_of_scalar};
+use heteroedge::frames::{
+    CheckoutMode, FramePool, SceneGenerator, SimilarityFilter, FRAME_ELEMS, FRAME_PIXELS,
+};
 use heteroedge::testkit::{check, prop_assert};
 
 #[test]
@@ -140,6 +147,136 @@ fn prop_rle_size_decreases_with_sparser_masks() {
         prop_assert(
             keep(lo) <= keep(hi),
             format!("sparser mask encoded larger: {} vs {}", keep(lo), keep(hi)),
+        )
+    });
+}
+
+#[test]
+fn prop_tiled_signature_is_bit_identical_to_scalar() {
+    check("tiled signature == scalar seed", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let n_obj = g.usize_in(0, 8);
+        let mut gen = SceneGenerator::new(seed, n_obj);
+        gen.noise = g.f64_in(0.0, 0.2) as f32;
+        let f = gen.next_frame();
+        let tiled = signature_of(&f.pixels);
+        let scalar = signature_of_scalar(&f.pixels);
+        for (a, b) in tiled.iter().zip(&scalar) {
+            prop_assert(
+                a.to_bits() == b.to_bits(),
+                "tiled signature reassociated the seed's summation",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_apply_mask_is_bit_identical_to_scalar() {
+    check("tiled apply_mask == scalar seed", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let thr = g.f64_in(0.0, 1.0) as f32;
+        let halves = g.bool();
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        // mix in non-unit "on" values: the select must keep the exact
+        // pixel bits whenever the mask is nonzero, whatever its value
+        let mask: Vec<f32> = (0..FRAME_PIXELS)
+            .map(|p| {
+                if f.pixels[p * 3] > thr {
+                    if halves && p % 3 == 0 {
+                        0.5
+                    } else {
+                        1.0
+                    }
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut tiled = f.pixels.to_vec();
+        let mut scalar = tiled.clone();
+        apply_mask(&mut tiled, &mask);
+        apply_mask_scalar(&mut scalar, &mask);
+        for (a, b) in tiled.iter().zip(&scalar) {
+            prop_assert(a.to_bits() == b.to_bits(), "tiled apply_mask diverged")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bit_plane_dilation_is_identical_to_stamp_kernel() {
+    check("bit-plane dilate == scalar stamp", 30, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let thr = g.f64_in(0.3, 0.99) as f32;
+        let r = g.usize_in(0, 5);
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let mask: Vec<f32> = (0..FRAME_PIXELS)
+            .map(|p| if f.pixels[p * 3] > thr { 1.0 } else { 0.0 })
+            .collect();
+        let mut bitwise = vec![0.0f32; FRAME_PIXELS];
+        let mut stamped = vec![0.0f32; FRAME_PIXELS];
+        dilate_into(&mask, r, &mut bitwise);
+        dilate_into_scalar(&mask, r, &mut stamped);
+        prop_assert(bitwise == stamped, format!("dilation diverged at r={r}"))
+    });
+}
+
+#[test]
+fn prop_tiled_mask_stats_matches_scalar() {
+    check("tiled mask_stats == scalar seed", 40, |g| {
+        let seed = g.usize_in(0, 10_000) as u64;
+        let thr = g.f64_in(0.0, 1.0) as f32;
+        let f = SceneGenerator::paper_default(seed).next_frame();
+        let mask: Vec<f32> = (0..FRAME_PIXELS)
+            .map(|p| if f.pixels[p * 3] > thr { 1.0 } else { 0.0 })
+            .collect();
+        prop_assert(
+            mask_stats(&mask) == mask_stats_scalar(&mask),
+            "single-pass stats diverged from the per-pixel seed",
+        )
+    });
+}
+
+#[test]
+fn prop_overwrite_checkout_is_byte_equal_to_zeroed_path() {
+    check("WillOverwrite == Zeroed after full write", 30, |g| {
+        let sentinel = g.f64_in(0.5, 9.5) as f32;
+        let scale = g.f64_in(0.001, 2.0) as f32;
+        // both pools go through a dirty recycle first, so the overwrite
+        // checkout really does see stale bytes it must cover
+        let dirty_cycle = |pool: &FramePool| {
+            let mut d = pool.checkout_pixels();
+            d.as_mut_slice().fill(sentinel);
+        };
+        let pool_a = FramePool::new();
+        dirty_cycle(&pool_a);
+        let mut a = pool_a.checkout_pixels_mode(CheckoutMode::WillOverwrite);
+        for (i, v) in a.as_mut_slice().iter_mut().enumerate() {
+            *v = i as f32 * scale;
+        }
+        let a = a.freeze();
+
+        let pool_b = FramePool::new();
+        dirty_cycle(&pool_b);
+        let mut b = pool_b.checkout_pixels();
+        for (i, v) in b.as_mut_slice().iter_mut().enumerate() {
+            *v = i as f32 * scale;
+        }
+        let b = b.freeze();
+
+        for (x, y) in a.iter().zip(b.iter()) {
+            prop_assert(
+                x.to_bits() == y.to_bits(),
+                "overwrite checkout diverged from the zeroed path",
+            )?;
+        }
+        // and the elided-memset checkout reused the slot without a fresh
+        // buffer or handle allocation
+        let s = pool_a.stats();
+        prop_assert(
+            s.fresh_allocs == 1 && s.handle_allocs == 1 && s.checkouts == 2,
+            format!("overwrite checkout must reuse the recycled slot: {s:?}"),
         )
     });
 }

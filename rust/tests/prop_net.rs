@@ -144,7 +144,7 @@ fn prop_publish_packet_roundtrip_fuzz() {
         let payload: Vec<u8> = (0..len).map(|_| (g.rng().next_u64() & 0xFF) as u8).collect();
         let p = Packet::Publish {
             topic: topic.clone(),
-            payload: payload.clone(),
+            payload: payload.clone().into(),
             qos: if g.bool() { QoS::AtMostOnce } else { QoS::AtLeastOnce },
             packet_id: g.usize_in(0, 65535) as u16,
             retain: g.bool(),
@@ -156,11 +156,38 @@ fn prop_publish_packet_roundtrip_fuzz() {
 }
 
 #[test]
+fn prop_publish_header_plus_payload_equals_whole_encode() {
+    check("vectored publish framing", 100, |g| {
+        let topic: String = format!("frames/node-{}", g.usize_in(0, 99));
+        let len = g.usize_in(0, 5000);
+        let payload: Vec<u8> = (0..len).map(|_| (g.rng().next_u64() & 0xFF) as u8).collect();
+        let qos = if g.bool() { QoS::AtMostOnce } else { QoS::AtLeastOnce };
+        let packet_id = g.usize_in(0, 65535) as u16;
+        let retain = g.bool();
+        let whole = Packet::Publish {
+            topic: topic.clone(),
+            payload: std::borrow::Cow::Borrowed(&payload[..]),
+            qos,
+            packet_id,
+            retain,
+        }
+        .encode();
+        let mut head = Vec::new();
+        Packet::encode_publish_header(&topic, payload.len(), qos, packet_id, retain, &mut head);
+        head.extend_from_slice(&payload);
+        prop_assert(
+            head == whole,
+            "split header + payload diverged from the one-buffer encode",
+        )
+    });
+}
+
+#[test]
 fn prop_truncated_packets_never_panic() {
     check("truncation safety", 100, |g| {
         let p = Packet::Publish {
             topic: "a/b".into(),
-            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8].into(),
             qos: QoS::AtLeastOnce,
             packet_id: 9,
             retain: false,
