@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Validate a HeteroEdge Chrome trace-event export.
+
+Usage: check_trace.py <trace.json>
+
+Checks, in order:
+
+1. **Schema** — the file is a JSON object with a ``traceEvents`` list;
+   every event is an object whose ``ph`` is one of ``M`` (metadata),
+   ``X`` (complete span) or ``C`` (counter), with the fields the Chrome
+   trace-event format requires for that phase (``name``/``pid``/``tid``
+   always; integer non-negative ``ts``/``dur`` for spans; ``args`` for
+   counters and metadata).
+2. **Lineage** — grouping ``cat == "frame"`` spans by their
+   ``(pid, tid)`` track (one track per frame; ``tid 0`` is the
+   stream-level admission track), every track that contains a ``serve``
+   span must also contain its ``ingest`` event, and at least one served
+   frame must exist (an empty trace is not a certified run).
+
+Exits 0 and prints a one-line summary on success; prints the first
+failure and exits 1 otherwise. CI's ``observability`` job runs this
+against ``heteroedge fleet --trace``.
+"""
+
+import json
+import sys
+
+PHASES = {"M", "X", "C"}
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_event(i: int, ev: object) -> dict:
+    if not isinstance(ev, dict):
+        fail(f"traceEvents[{i}] is not an object: {ev!r}")
+    ph = ev.get("ph")
+    if ph not in PHASES:
+        fail(f"traceEvents[{i}] has ph {ph!r}, expected one of {sorted(PHASES)}")
+    if not isinstance(ev.get("name"), str) or not ev["name"]:
+        fail(f"traceEvents[{i}] has no name: {ev!r}")
+    for field in ("pid", "tid"):
+        if not isinstance(ev.get(field), int):
+            fail(f"traceEvents[{i}] ({ev['name']}) has non-integer {field}")
+    if ph == "X":
+        for field in ("ts", "dur"):
+            v = ev.get(field)
+            if not isinstance(v, int) or v < 0:
+                fail(
+                    f"traceEvents[{i}] ({ev['name']}) span needs integer "
+                    f"non-negative {field}, got {v!r}"
+                )
+        if not isinstance(ev.get("cat"), str):
+            fail(f"traceEvents[{i}] ({ev['name']}) span has no cat")
+    if ph == "C":
+        if not isinstance(ev.get("ts"), int):
+            fail(f"traceEvents[{i}] ({ev['name']}) counter has no integer ts")
+        if not isinstance(ev.get("args"), dict) or not ev["args"]:
+            fail(f"traceEvents[{i}] ({ev['name']}) counter has no args")
+    if ph == "M" and not isinstance(ev.get("args"), dict):
+        fail(f"traceEvents[{i}] metadata has no args")
+    return ev
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail("usage: check_trace.py <trace.json>")
+    try:
+        with open(sys.argv[1], "r", encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot parse {sys.argv[1]}: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail("document is not an object with a traceEvents list")
+
+    events = [check_event(i, ev) for i, ev in enumerate(doc["traceEvents"])]
+
+    # lineage: one (pid, tid) track per frame; every served track must
+    # carry its ingest event
+    tracks: dict = {}
+    for ev in events:
+        if ev["ph"] != "X" or ev.get("cat") != "frame" or ev["tid"] == 0:
+            continue
+        tracks.setdefault((ev["pid"], ev["tid"]), set()).add(ev["name"])
+    served = 0
+    for (pid, tid), names in sorted(tracks.items()):
+        if "serve" in names:
+            served += 1
+            if "ingest" not in names:
+                fail(
+                    f"frame track pid={pid} tid={tid} was served with no "
+                    f"ingest event (names: {sorted(names)})"
+                )
+    if served == 0:
+        fail("no served frame found — an empty trace certifies nothing")
+
+    counters = sum(1 for ev in events if ev["ph"] == "C")
+    print(
+        f"check_trace: OK: {len(events)} events, {len(tracks)} frame tracks, "
+        f"{served} with complete serve lineage, {counters} counter samples"
+    )
+
+
+if __name__ == "__main__":
+    main()

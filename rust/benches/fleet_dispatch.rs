@@ -142,6 +142,12 @@ fn main() {
     });
 
     println!("{}", b.report());
+    b.note = Some(
+        "refreshed in place by `cargo bench --bench fleet_dispatch`; CI's quick smoke \
+         (HETEROEDGE_BENCH_QUICK=1) regenerates this file and uploads it as a \
+         bench-results artifact"
+            .into(),
+    );
     let json_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_fleet_dispatch.json");
     b.write_json(&json_path).unwrap();

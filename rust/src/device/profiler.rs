@@ -93,6 +93,42 @@ impl DeviceProfiler {
         self.sample(at, state);
     }
 
+    /// Record raw readings at simulated time `at` if an interval
+    /// elapsed, without needing a [`DeviceState`] in hand. This is the
+    /// seam for callers holding only message-level snapshots (the fleet
+    /// dispatcher sees `DeviceProfileMsg`, not the device itself).
+    /// Returns whether the sample was accepted; energy integrates with
+    /// the same trapezoid rule as [`DeviceProfiler::sample`].
+    pub fn record_raw(&mut self, at: f64, mem_pct: f64, power_w: f64, busy: f64) -> bool {
+        if let Some(last) = self.last_at {
+            if at - last < self.interval {
+                return false;
+            }
+            if let Some(prev) = self.samples.last() {
+                let dt = at - prev.at;
+                self.energy_wh += (prev.power_w + power_w) / 2.0 * dt / 3600.0;
+            }
+        }
+        self.last_at = Some(at);
+        self.samples.push(ProfileSample {
+            at,
+            mem_pct,
+            power_w,
+            busy,
+        });
+        true
+    }
+
+    /// The raw sample timeline collected so far, chronological.
+    pub fn samples(&self) -> &[ProfileSample] {
+        &self.samples
+    }
+
+    /// The device label this profiler was built with.
+    pub fn device(&self) -> &'static str {
+        self.device
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -176,6 +212,18 @@ mod tests {
         assert_eq!(r.samples, 10);
         assert!((r.mean_mem_pct() - 44.5).abs() < 1e-9);
         assert!((r.window_secs - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_raw_gates_on_interval_and_integrates_energy() {
+        let mut p = DeviceProfiler::new("nano", 1.0);
+        assert!(p.record_raw(0.0, 40.0, 10.0, 0.5));
+        assert!(!p.record_raw(0.4, 41.0, 10.0, 0.6), "sub-interval dropped");
+        assert!(p.record_raw(3600.0, 42.0, 10.0, 0.7));
+        assert_eq!(p.samples().len(), 2);
+        let r = p.report();
+        assert!((r.energy_wh - 10.0).abs() < 1e-9, "10 W for 1 h = 10 Wh");
+        assert!((r.busy.mean() - 0.6).abs() < 1e-9);
     }
 
     #[test]

@@ -86,13 +86,14 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::profile_exchange::FRAMES_TOPIC_PREFIX;
 use crate::coordinator::{Batcher, NodeHandle, NodeRuntime, Scheduler, SchedulerConfig, SimBackend};
-use crate::device::DeviceKind;
+use crate::device::{DeviceKind, DeviceProfiler};
 use crate::frames::codec::{self, EncodedFrame};
 use crate::frames::{Frame, FramePool, PoolStats, SceneGenerator};
 use crate::metrics::Histogram;
 use crate::net::mqtt::{Broker, Client, QoS};
 use crate::net::{Band, Channel, ChannelConfig};
 use crate::sim::EventQueue;
+use crate::trace::{EventKind, NodeTimeline, TraceSink, TraceSummary, Tracer, NO_ID};
 
 use super::estimator::ThroughputEwma;
 use super::inbox::BoundedInbox;
@@ -328,7 +329,7 @@ struct RunState {
 /// Physical MQTT work-queue fabric: one broker, a dispatcher publisher,
 /// one subscribed client per auxiliary.
 struct MqttFabric {
-    _broker: Broker,
+    broker: Broker,
     publisher: Client,
     /// Index k serves auxiliary node `k + primaries`.
     subscribers: Vec<Client>,
@@ -354,7 +355,7 @@ impl MqttFabric {
         }
         let publisher = Client::connect(addr, "fleet-dispatcher")?;
         Ok(MqttFabric {
-            _broker: broker,
+            broker,
             publisher,
             subscribers,
             topics,
@@ -439,6 +440,12 @@ pub struct Dispatcher {
     /// the whole frame path.
     pool: FramePool,
     fabric: Option<MqttFabric>,
+    /// Lineage tracer — [`Tracer::off`] (a branch per call site) unless
+    /// [`Dispatcher::enable_tracing`] armed it.
+    tracer: Tracer,
+    /// Per-node periodic profilers feeding the gauge events and the
+    /// report's utilization timelines (tracing runs only).
+    profilers: Option<Vec<DeviceProfiler>>,
 }
 
 impl Dispatcher {
@@ -580,7 +587,114 @@ impl Dispatcher {
             batchers,
             pool,
             fabric,
+            tracer: Tracer::off(),
+            profilers: None,
         })
+    }
+
+    /// Arm lineage tracing for subsequent runs: one preallocated ring of
+    /// `capacity` events plus a per-node [`DeviceProfiler`] sampling
+    /// busy/memory/power once per round. Tracing reads sim state only —
+    /// it never advances a clock or touches the pool — so traced and
+    /// untraced same-seed runs produce identical [`FleetReport`]s
+    /// (modulo the report's own `trace` section).
+    pub fn enable_tracing(&mut self, capacity: usize) {
+        self.tracer = Tracer::on(capacity);
+        let interval = (self.cfg.round_secs * 0.5).max(1e-9);
+        self.profilers = Some(
+            self.nodes
+                .iter()
+                .map(|n| DeviceProfiler::new(n.handle.device_kind().name(), interval))
+                .collect(),
+        );
+    }
+
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracer.enabled()
+    }
+
+    /// Freeze the ring into an exportable snapshot with the stream/node
+    /// name tables ([`None`] when tracing is off).
+    pub fn trace_sink(&self) -> Option<TraceSink> {
+        let (events, dropped) = self.tracer.snapshot()?;
+        Some(TraceSink {
+            events,
+            dropped,
+            streams: self
+                .registry
+                .streams
+                .iter()
+                .map(|s| s.name.clone())
+                .collect(),
+            nodes: self.nodes.iter().map(|n| n.name.clone()).collect(),
+        })
+    }
+
+    /// Live MQTT fabric queue gauges: the broker's per-connection
+    /// dispatch depths, its queue high-watermark, and each subscriber
+    /// client's undrained inbox. Real-thread state — nondeterministic —
+    /// so these feed the Prometheus registry only, never the trace ring
+    /// (see [`crate::trace`]). Empty under [`Transport::Sim`].
+    pub fn mqtt_queue_gauges(&self) -> Vec<(String, u64)> {
+        let Some(fab) = self.fabric.as_ref() else {
+            return Vec::new();
+        };
+        let mut out: Vec<(String, u64)> = fab
+            .broker
+            .queue_depths()
+            .into_iter()
+            .map(|(id, d)| (format!("mqtt_broker_queue_{id}"), d))
+            .collect();
+        out.push((
+            "mqtt_broker_queue_peak".to_string(),
+            fab.broker
+                .stats
+                .queue_peak
+                .load(std::sync::atomic::Ordering::Relaxed),
+        ));
+        for (k, c) in fab.subscribers.iter().enumerate() {
+            out.push((
+                format!("mqtt_client_inbox_node_{}", fab.primaries + k),
+                c.pending() as u64,
+            ));
+        }
+        out
+    }
+
+    /// Once-per-round telemetry pulse: sample every node's device
+    /// profile into its profiler and record the gauge events (busy
+    /// factor, aux inbox depths, pool occupancy). Reads simulation
+    /// state only — the live MQTT threads are deliberately not
+    /// consulted, keeping traced runs byte-identical across seeds.
+    fn sample_profiles(&mut self, at: f64) {
+        let Some(profilers) = self.profilers.as_mut() else {
+            return;
+        };
+        let p_count = self.cfg.primaries;
+        for (j, slot) in self.nodes.iter().enumerate() {
+            let prof = slot.handle.profile();
+            profilers[j].record_raw(at, prof.mem_pct, prof.power_w, prof.busy);
+            self.tracer
+                .instant(EventKind::Busy, at, NO_ID, NO_ID, j as u32, prof.busy);
+            if j >= p_count {
+                self.tracer.instant(
+                    EventKind::QueueDepth,
+                    at,
+                    NO_ID,
+                    NO_ID,
+                    j as u32,
+                    slot.inbox.depth_gauge(),
+                );
+            }
+        }
+        self.tracer.instant(
+            EventKind::PoolFree,
+            at,
+            NO_ID,
+            NO_ID,
+            NO_ID,
+            self.pool.free_buffers() as f64,
+        );
     }
 
     /// Override one auxiliary's inbox depth before the run — lets tests
@@ -749,6 +863,14 @@ impl Dispatcher {
                 self.nodes[q].handoffs_in += 1;
                 st.stream_reports[i].handoffs += 1;
                 st.handoffs += 1;
+                self.tracer.instant(
+                    EventKind::Handoff,
+                    round_end - round_secs,
+                    i as u32,
+                    NO_ID,
+                    q as u32,
+                    owner as f64,
+                );
             }
         }
         plan
@@ -787,6 +909,10 @@ impl Dispatcher {
         for round in 0..cfg.rounds {
             let round_start = round as f64 * cfg.round_secs;
             let round_end = round_start + cfg.round_secs;
+
+            if self.tracer.enabled() {
+                self.sample_profiles(round_start);
+            }
 
             let admission = if cfg.admission_control {
                 self.observe_round_throughput();
@@ -859,6 +985,32 @@ impl Dispatcher {
             })
             .collect();
 
+        // trace-derived summary: ring accounting, lifecycle breakdown,
+        // per-node utilization timelines from the profiler samples
+        let trace = self
+            .tracer
+            .accounting()
+            .map(|(recorded, dropped, bd)| TraceSummary {
+                recorded,
+                dropped,
+                queue_s: bd.queue_s,
+                service_s: bd.service_s,
+                transport_s: bd.transport_s,
+                timelines: self
+                    .profilers
+                    .as_ref()
+                    .map(|ps| {
+                        ps.iter()
+                            .enumerate()
+                            .map(|(j, p)| NodeTimeline {
+                                node: self.nodes[j].name.clone(),
+                                busy: p.samples().iter().map(|sm| sm.busy).collect(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            });
+
         Ok(FleetReport {
             streams: st.stream_reports,
             nodes,
@@ -875,6 +1027,7 @@ impl Dispatcher {
             stream_handoffs: st.handoffs,
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
             pool: self.pool.stats().since(pool_start),
+            trace,
         })
     }
 
@@ -926,11 +1079,29 @@ impl Dispatcher {
         let raw = self.gens[s].batch(rate);
         if decision == AdmissionDecision::Reject {
             st.stream_reports[s].rejected += raw.len() as u64;
+            self.tracer.instant(
+                EventKind::Reject,
+                t_arr,
+                s as u32,
+                NO_ID,
+                self.shard.owner(s) as u32,
+                rate as f64,
+            );
             return Ok(());
         }
         let (kept, dropped) = decision.apply(raw);
         st.stream_reports[s].degraded += dropped as u64;
         st.stream_reports[s].admitted += kept.len() as u64;
+        if self.tracer.enabled() {
+            let kind = if dropped > 0 {
+                EventKind::Degrade
+            } else {
+                EventKind::Admit
+            };
+            let val = if dropped > 0 { dropped } else { kept.len() } as f64;
+            self.tracer
+                .instant(kind, t_arr, s as u32, NO_ID, self.shard.owner(s) as u32, val);
+        }
         if kept.is_empty() {
             return Ok(());
         }
@@ -941,6 +1112,12 @@ impl Dispatcher {
         let pair_row = &mut self.pairs[owner];
         primary.ingest_frames += kept.len() as u64;
         primary.handle.sync_to(t_arr);
+        if self.tracer.enabled() {
+            for f in &kept {
+                self.tracer
+                    .instant(EventKind::Ingest, t_arr, s as u32, f.id as u32, owner as u32, 0.0);
+            }
+        }
         let pprof = primary.handle.profile();
 
         // pairwise Algorithm-1 decisions for THIS primary; inbox
@@ -994,6 +1171,14 @@ impl Dispatcher {
             let encs = &plan.offload[cursor..cursor + share];
             cursor += share;
             for enc in encs {
+                self.tracer.instant(
+                    EventKind::Encode,
+                    base,
+                    s as u32,
+                    enc.id as u32,
+                    owner as u32,
+                    enc.wire_bytes() as f64,
+                );
                 // zero-copy: the job rides the encoded handle; pixels
                 // materialize at service time (legacy comparator mode
                 // decodes here, exactly like the seed did)
@@ -1041,6 +1226,25 @@ impl Dispatcher {
                     };
                     match res {
                         Ok(()) => {
+                            // the transfer span this frame rode, then its
+                            // landing in the aux's bounded inbox
+                            self.tracer.span(
+                                EventKind::Transport,
+                                base + xfer[d] - w,
+                                w,
+                                s as u32,
+                                enc.id as u32,
+                                (p_count + d) as u32,
+                                enc.wire_bytes() as f64,
+                            );
+                            self.tracer.instant(
+                                EventKind::Enqueue,
+                                base + xfer[d],
+                                s as u32,
+                                enc.id as u32,
+                                (p_count + d) as u32,
+                                aux.inbox.len() as f64,
+                            );
                             dest = Some(d);
                             break;
                         }
@@ -1059,9 +1263,25 @@ impl Dispatcher {
                         if d != k {
                             st.stolen_frames += 1;
                             tail[k].stolen_out += 1;
+                            self.tracer.instant(
+                                EventKind::Steal,
+                                base + xfer[d],
+                                s as u32,
+                                enc.id as u32,
+                                (p_count + d) as u32,
+                                (p_count + k) as f64,
+                            );
                         }
                         if let Some(fab) = self.fabric.as_mut() {
                             fab.ship(p_count + d, &enc.bytes)?;
+                            self.tracer.instant(
+                                EventKind::Publish,
+                                base + xfer[d],
+                                s as u32,
+                                enc.id as u32,
+                                (p_count + d) as u32,
+                                enc.wire_bytes() as f64,
+                            );
                         }
                     }
                     None => {
@@ -1070,10 +1290,26 @@ impl Dispatcher {
                         // since it executes locally)
                         let job = job_opt.take().expect("unplaced job");
                         st.primary_fallbacks += 1;
+                        self.tracer.instant(
+                            EventKind::Fallback,
+                            base,
+                            s as u32,
+                            job.enc.id as u32,
+                            owner as u32,
+                            0.0,
+                        );
                         let frame = match job.eager {
                             Some(f) => f,
                             None => codec::decode_frame_pooled(&pool, &job.enc.bytes)?,
                         };
+                        self.tracer.instant(
+                            EventKind::Decode,
+                            base,
+                            s as u32,
+                            job.enc.id as u32,
+                            owner as u32,
+                            job.enc.wire_bytes() as f64,
+                        );
                         local.push(frame);
                     }
                 }
@@ -1107,6 +1343,7 @@ impl Dispatcher {
         // the owning primary executes its share (plus fallback frames)
         if !local.is_empty() {
             let n_local = local.len() as u64;
+            let run_start = primary.handle.now();
             primary
                 .handle
                 .run(workload, &local, offload_frac, masked)?;
@@ -1115,6 +1352,22 @@ impl Dispatcher {
             for _ in 0..n_local {
                 st.stream_reports[s].latency.record(done - t_arr);
                 st.pooled.record(done - t_arr);
+            }
+            if self.tracer.enabled() {
+                // the batch executes as one span; apportion it evenly so
+                // each frame's lineage track closes with its own serve
+                let dur = (done - run_start) / local.len() as f64;
+                for (i, f) in local.iter().enumerate() {
+                    self.tracer.span(
+                        EventKind::Serve,
+                        run_start + i as f64 * dur,
+                        dur,
+                        s as u32,
+                        f.id as u32,
+                        owner as u32,
+                        0.0,
+                    );
+                }
             }
         }
         Ok(())
@@ -1143,8 +1396,25 @@ impl Dispatcher {
             Some(f) => f,
             None => codec::decode_frame_pooled(&self.pool, &job.enc.bytes)?,
         };
+        self.tracer.instant(
+            EventKind::Decode,
+            start,
+            job.stream as u32,
+            job.enc.id as u32,
+            node as u32,
+            job.enc.wire_bytes() as f64,
+        );
         slot.handle.run_one(spec.workload, &frame, r, spec.masked)?;
         let done = slot.handle.now();
+        self.tracer.span(
+            EventKind::Serve,
+            start,
+            done - start,
+            job.stream as u32,
+            job.enc.id as u32,
+            node as u32,
+            wait,
+        );
         st.stream_reports[job.stream].completed += 1;
         st.stream_reports[job.stream].latency.record(done - job.arrived);
         st.pooled.record(done - job.arrived);
@@ -1162,7 +1432,8 @@ impl Dispatcher {
     fn drain_batched(&mut self, st: &mut RunState) -> Result<()> {
         let p_count = self.cfg.primaries;
         let (_, tail) = self.nodes.split_at_mut(p_count);
-        for aux in tail.iter_mut() {
+        for (kk, aux) in tail.iter_mut().enumerate() {
+            let node = (p_count + kk) as u32;
             let jobs = aux.inbox.drain();
             if jobs.is_empty() {
                 continue;
@@ -1176,6 +1447,9 @@ impl Dispatcher {
                 let group_start = aux.handle.now();
                 let mut frames = Vec::with_capacity(jobs.len());
                 let mut arrived = Vec::with_capacity(jobs.len());
+                // (frame id, inbox wait) per job, for the serve spans
+                // (the batched comparator allocates per group anyway)
+                let mut served = Vec::with_capacity(jobs.len());
                 for j in jobs {
                     let wait = (group_start - j.ready).max(0.0);
                     aux.queue_delay.record(wait);
@@ -1184,12 +1458,35 @@ impl Dispatcher {
                         Some(f) => f,
                         None => codec::decode_frame_pooled(&self.pool, &j.enc.bytes)?,
                     };
+                    self.tracer.instant(
+                        EventKind::Decode,
+                        group_start,
+                        s as u32,
+                        j.enc.id as u32,
+                        node,
+                        j.enc.wire_bytes() as f64,
+                    );
+                    served.push((j.enc.id, wait));
                     frames.push(frame);
                     arrived.push(j.arrived);
                 }
                 aux.handle
                     .run(spec.workload, &frames, aux.last_r, spec.masked)?;
                 let done = aux.handle.now();
+                if self.tracer.enabled() {
+                    let dur = (done - group_start) / served.len() as f64;
+                    for (i, (id, wait)) in served.iter().enumerate() {
+                        self.tracer.span(
+                            EventKind::Serve,
+                            group_start + i as f64 * dur,
+                            dur,
+                            s as u32,
+                            *id as u32,
+                            node,
+                            *wait,
+                        );
+                    }
+                }
                 st.stream_reports[s].completed += frames.len() as u64;
                 for t in arrived {
                     st.stream_reports[s].latency.record(done - t);
@@ -1387,6 +1684,37 @@ mod tests {
         assert!(rep.nodes[2..].iter().all(|n| n.owned_streams == 0));
         // no admission pressure, no handoff
         assert_eq!(rep.stream_handoffs, 0);
+    }
+
+    #[test]
+    fn traced_run_certifies_lineage_and_leaves_the_sim_untouched() {
+        let mk = || {
+            let mut cfg = FleetConfig::new(3, 3);
+            cfg.rounds = 2;
+            cfg.frames_per_round = 5;
+            cfg.admission_control = false;
+            Dispatcher::new(cfg).unwrap()
+        };
+        let plain = mk().run().unwrap();
+        let mut d = mk();
+        d.enable_tracing(1 << 16);
+        assert!(d.tracing_enabled());
+        let traced = d.run().unwrap();
+        // tracing must not perturb the simulation: identical report
+        // modulo the trace section itself
+        let mut view = traced.clone();
+        view.trace = None;
+        assert_eq!(plain, view);
+        let t = traced.trace.as_ref().expect("trace summary present");
+        assert!(t.recorded > 0, "events recorded");
+        assert_eq!(t.dropped, 0, "ring sized for the run");
+        assert_eq!(t.timelines.len(), 3, "one timeline per node");
+        assert!(t.service_s > 0.0);
+        // the sink certifies one complete lineage chain per served frame
+        let sink = d.trace_sink().expect("sink");
+        assert_eq!(sink.verify_lineage().unwrap(), traced.total_completed());
+        // sim transport exposes no mqtt gauges
+        assert!(d.mqtt_queue_gauges().is_empty());
     }
 
     #[test]

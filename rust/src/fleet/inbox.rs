@@ -72,6 +72,14 @@ impl<T> BoundedInbox<T> {
         self.queue.len() as f64 / self.capacity as f64
     }
 
+    /// Current depth as a gauge value — what the tracer's periodic
+    /// `queue_depth` samples and the Prometheus export read. Reads sim
+    /// state (this queue), not thread state, so it is safe for the
+    /// deterministic trace ring.
+    pub fn depth_gauge(&self) -> f64 {
+        self.queue.len() as f64
+    }
+
     fn admit(&mut self, item: T) -> Result<(), T> {
         self.offered += 1;
         if self.queue.len() >= self.capacity {
@@ -201,6 +209,17 @@ mod tests {
         // freed capacity accepts again
         ib.push(40).unwrap();
         assert_eq!(ib.len(), 1);
+    }
+
+    #[test]
+    fn depth_gauge_tracks_len() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(4);
+        assert_eq!(ib.depth_gauge(), 0.0);
+        ib.push(1).unwrap();
+        ib.push(2).unwrap();
+        assert_eq!(ib.depth_gauge(), 2.0);
+        ib.pop();
+        assert_eq!(ib.depth_gauge(), 1.0);
     }
 
     #[test]

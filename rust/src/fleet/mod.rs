@@ -68,6 +68,23 @@
 //! handles instead of decoded pixel copies, and `FleetReport.pool`
 //! carries the allocation counters that prove buffer reuse (see
 //! [`dispatcher`] and `crate::frames` for the ownership model).
+//!
+//! ## Observability
+//!
+//! `Dispatcher::enable_tracing` weaves the deterministic
+//! [`crate::trace`] span tracer through the whole frame lifecycle
+//! (ingest → admission → encode → publish → transport → enqueue →
+//! steal → decode → serve): fixed-size `Copy` events stamped from the
+//! sim clock land in a preallocated ring, so same-seed runs export
+//! **byte-identical** Chrome-trace JSON and tracing adds zero heap
+//! allocations per frame in steady state. Per-round
+//! [`crate::device::DeviceProfiler`] pulses add busy/queue-depth/pool
+//! gauges, surfaced as utilization timelines and a
+//! queue/service/transport time breakdown in [`FleetReport`]; the
+//! `metrics::Registry` export renders as Prometheus text. Live MQTT
+//! thread state (broker dispatch queues, client inboxes) is exported
+//! via the registry only — never the trace ring — to keep traces
+//! deterministic. See `docs/OBSERVABILITY.md`.
 
 pub mod dispatcher;
 pub mod estimator;

@@ -58,6 +58,17 @@ pub enum AdmissionDecision {
 }
 
 impl AdmissionDecision {
+    /// Interned label for observability (the trace taxonomy's
+    /// `admit`/`degrade`/`reject` event names) — no per-decision
+    /// formatting on the hot path.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionDecision::Admit => "admit",
+            AdmissionDecision::Degrade { .. } => "degrade",
+            AdmissionDecision::Reject => "reject",
+        }
+    }
+
     /// Frames kept out of `rate` under this decision.
     pub fn kept_of(&self, rate: usize) -> usize {
         match self {
@@ -276,6 +287,17 @@ mod tests {
         let (plan, rem) = r.admission_plan_subset(&[], 16.0);
         assert!(plan.is_empty());
         assert_eq!(rem, 16.0);
+    }
+
+    #[test]
+    fn labels_match_the_trace_taxonomy() {
+        use crate::trace::EventKind;
+        assert_eq!(AdmissionDecision::Admit.label(), EventKind::Admit.name());
+        assert_eq!(
+            AdmissionDecision::Degrade { stride: 2 }.label(),
+            EventKind::Degrade.name()
+        );
+        assert_eq!(AdmissionDecision::Reject.label(), EventKind::Reject.name());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::frames::PoolStats;
 use crate::metrics::{f, Histogram, Registry, Table};
+use crate::trace::TraceSummary;
 
 use super::dispatcher::DrainMode;
 
@@ -119,6 +120,10 @@ pub struct FleetReport {
     /// per-frame buffer allocations stop (the integration tests assert
     /// it does not scale with rounds).
     pub pool: PoolStats,
+    /// Lineage-trace accounting and per-node utilization timelines.
+    /// `None` for untraced runs, so their reports stay byte-identical
+    /// to earlier PRs.
+    pub trace: Option<TraceSummary>,
 }
 
 impl FleetReport {
@@ -204,6 +209,13 @@ impl FleetReport {
                 n.handoffs_out,
             );
         }
+        if let Some(t) = &self.trace {
+            reg.inc_static("fleet.trace.events.recorded", t.recorded);
+            reg.inc_static("fleet.trace.events.dropped", t.dropped);
+            reg.set_static("fleet.trace.time_in_queue_s", t.queue_s);
+            reg.set_static("fleet.trace.time_in_service_s", t.service_s);
+            reg.set_static("fleet.trace.time_in_transport_s", t.transport_s);
+        }
     }
 
     /// The ingest-primary slice of `nodes`.
@@ -251,6 +263,28 @@ impl FleetReport {
                 self.pool.recycled,
                 100.0 * self.pool.reuse_frac(),
             ));
+        }
+        // trace section; omitted for untraced runs so their rendering
+        // stays byte-identical to earlier PRs
+        if let Some(t) = &self.trace {
+            out.push_str(&format!(
+                "trace: {} events ({} dropped) | time in queue {:.3} s | \
+                 in service {:.3} s | in transport {:.3} s\n",
+                t.recorded, t.dropped, t.queue_s, t.service_s, t.transport_s
+            ));
+            // per-node utilization timeline: one digit (0-9 ≙ busy
+            // factor) per profiler sample, one sample per round
+            for tl in &t.timelines {
+                let digits: String = tl
+                    .busy
+                    .iter()
+                    .map(|b| {
+                        char::from_digit((b * 9.0).round().clamp(0.0, 9.0) as u32, 10)
+                            .unwrap_or('9')
+                    })
+                    .collect();
+                out.push_str(&format!("  util {:<10} [{digits}]\n", tl.node));
+            }
         }
         // multi-primary ingest ledger; omitted for single-primary runs
         // so their rendering stays byte-identical to the PR 1 report
@@ -374,6 +408,7 @@ mod tests {
                 handle_allocs: 10,
                 recycled: 90,
             },
+            trace: None,
         }
     }
 
@@ -416,6 +451,38 @@ mod tests {
         );
         assert!(text.contains("handoffs in"), "{text}");
         assert_eq!(r.total_admitted(), 80);
+    }
+
+    #[test]
+    fn traced_report_renders_breakdown_and_timelines() {
+        use crate::trace::NodeTimeline;
+        let mut r = sample();
+        r.trace = Some(TraceSummary {
+            recorded: 420,
+            dropped: 0,
+            queue_s: 1.25,
+            service_s: 30.0,
+            transport_s: 2.5,
+            timelines: vec![NodeTimeline {
+                node: "node-0".into(),
+                busy: vec![0.0, 0.5, 1.0],
+            }],
+        });
+        let text = r.render();
+        assert!(
+            text.contains("trace: 420 events (0 dropped)"),
+            "{text}"
+        );
+        assert!(text.contains("time in queue 1.250 s"), "{text}");
+        assert!(text.contains("in transport 2.500 s"), "{text}");
+        assert!(text.contains("[059]"), "busy digits: {text}");
+        // untraced rendering carries no trace section at all
+        assert!(!sample().render().contains("trace:"));
+
+        let mut reg = Registry::new();
+        r.to_registry(&mut reg);
+        assert_eq!(reg.counter("fleet.trace.events.recorded"), 420);
+        assert_eq!(reg.gauge("fleet.trace.time_in_service_s"), Some(30.0));
     }
 
     #[test]

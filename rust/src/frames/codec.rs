@@ -42,6 +42,10 @@ const MAGIC_RLE: u16 = 0xE302;
 /// An encoded frame plus accounting. Clones share the payload (O(1)).
 #[derive(Debug, Clone)]
 pub struct EncodedFrame {
+    /// The frame id (also embedded in the wire header) — carried on the
+    /// handle so the lineage tracer can label a queued frame without
+    /// re-parsing wire bytes.
+    pub id: u64,
     pub bytes: SharedBytes,
     /// Raw (dense) payload size this encoding replaced.
     pub raw_bytes: usize,
@@ -157,6 +161,7 @@ pub fn encode_dense(id: u64, pixels: &[f32]) -> EncodedFrame {
     let mut bytes = Vec::new();
     encode_dense_into(id, pixels, &mut bytes);
     EncodedFrame {
+        id,
         bytes: ByteBuf::unpooled(bytes).freeze(),
         raw_bytes: pixels.len() * 4,
     }
@@ -167,6 +172,7 @@ pub fn encode_masked(id: u64, pixels: &[f32]) -> EncodedFrame {
     let mut bytes = Vec::new();
     encode_masked_into(id, pixels, &mut bytes);
     EncodedFrame {
+        id,
         bytes: ByteBuf::unpooled(bytes).freeze(),
         raw_bytes: pixels.len() * 4,
     }
@@ -178,6 +184,7 @@ pub fn encode_dense_pooled(pool: &FramePool, id: u64, pixels: &[f32]) -> Encoded
     let mut buf = pool.checkout_bytes();
     encode_dense_into(id, pixels, buf.vec_mut());
     EncodedFrame {
+        id,
         bytes: buf.freeze(),
         raw_bytes: pixels.len() * 4,
     }
@@ -193,6 +200,7 @@ pub fn encode_masked_view_pooled(
     let mut buf = pool.checkout_bytes();
     encode_masked_view_into(id, pixels, mask, buf.vec_mut());
     EncodedFrame {
+        id,
         bytes: buf.freeze(),
         raw_bytes: pixels.len() * 4,
     }

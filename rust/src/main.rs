@@ -8,6 +8,8 @@
 //!                    [--rate <f>] [--inbox <cap>] [--drain batched|pipelined]
 //!                    [--no-steal] [--masked] [--dedup] [--no-mqtt]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
+//!                    [--trace <out.json>] [--trace-capacity <events>]
+//!                    [--metrics-out <out.prom>]
 //! heteroedge table   --id <table1|fig3|fig4|fig5|table3|fig6|table4|fig7|battery> [--full]
 //! ```
 
@@ -17,6 +19,7 @@ use heteroedge::cli::Args;
 use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
 use heteroedge::experiments::{self, Scale};
 use heteroedge::fleet::{Dispatcher, DrainMode, FleetConfig, Transport};
+use heteroedge::metrics::Registry;
 use heteroedge::net::Band;
 use heteroedge::solver::HeteroEdgeSolver;
 use heteroedge::workload::Workload;
@@ -137,8 +140,49 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.drain.name(),
         if cfg.work_stealing { "" } else { ", stealing off" }
     );
-    let report = Dispatcher::new(cfg.clone())?.run()?;
+    // observability taps: --trace arms the deterministic lineage tracer
+    // (Chrome trace-event JSON), --metrics-out dumps the registry as
+    // Prometheus text exposition (see docs/OBSERVABILITY.md)
+    let trace_path = args.opt("trace").map(std::path::PathBuf::from);
+    let metrics_path = args.opt("metrics-out").map(std::path::PathBuf::from);
+    let trace_capacity = args.opt_or("trace-capacity", 262_144usize)?;
+
+    let mut dispatcher = Dispatcher::new(cfg.clone())?;
+    if trace_path.is_some() {
+        dispatcher.enable_tracing(trace_capacity);
+    }
+    let report = dispatcher.run()?;
     println!("{}", report.render());
+
+    if let Some(path) = &trace_path {
+        let sink = dispatcher.trace_sink().expect("tracing was enabled");
+        sink.write_chrome_json(path)?;
+        match sink.verify_lineage() {
+            Ok(served) => println!(
+                "trace: {} events ({} dropped) -> {} | {} served frames, lineage complete",
+                sink.events.len(),
+                sink.dropped,
+                path.display(),
+                served
+            ),
+            Err(e) => eprintln!(
+                "trace: wrote {} but lineage is incomplete: {e} \
+                 (raise --trace-capacity)",
+                path.display()
+            ),
+        }
+    }
+    if let Some(path) = &metrics_path {
+        let mut reg = Registry::new();
+        report.to_registry(&mut reg);
+        // live MQTT fabric gauges are nondeterministic thread state —
+        // they belong here, never in the trace ring
+        for (name, v) in dispatcher.mqtt_queue_gauges() {
+            reg.set(&format!("fleet.{name}"), v as f64);
+        }
+        std::fs::write(path, reg.render_prometheus())?;
+        println!("metrics: prometheus dump -> {}", path.display());
+    }
 
     if !args.flag("no-baseline") {
         // apples-to-apples split-ratio advantage: identical stream set,

@@ -1,6 +1,14 @@
 //! Metrics — S13: counters, histograms and table rendering for the
-//! experiment reports.
+//! experiment reports, plus a Prometheus text-exposition export for
+//! `heteroedge fleet --metrics-out`.
+//!
+//! Registry keys are `Cow<'static, str>`: the `*_static` entry points
+//! intern their `&'static str` keys outright, and the dynamic entry
+//! points only allocate on a key's *first* appearance (the seed
+//! allocated a fresh `String` on every `inc`/`observe`, even for keys
+//! already present — a per-call allocation in hot loops).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -9,10 +17,23 @@ use crate::util::stats::{percentile, Summary};
 /// A latency histogram with raw-sample retention (experiments need exact
 /// percentiles; cardinality is bounded by run length). `PartialEq` makes
 /// whole reports byte-comparable in determinism tests.
-#[derive(Debug, Clone, Default, PartialEq)]
+///
+/// Empty-histogram contract: `p`/`min`/`max`/`mean` all return 0.0
+/// (matching [`Summary`] semantics), never NaN or a sentinel infinity.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     samples: Vec<f64>,
     summary: Summary,
+}
+
+/// `derive(Default)` would build the inner [`Summary`] with `min`/`max`
+/// seeded at 0.0 instead of ±∞, silently corrupting the extrema of any
+/// default-constructed histogram that then records only positive (or
+/// only negative) samples — so `Default` must route through `new`.
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
 }
 
 impl Histogram {
@@ -37,14 +58,25 @@ impl Histogram {
     }
 
     pub fn min(&self) -> f64 {
-        self.summary.min()
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.summary.min()
+        }
     }
 
     pub fn max(&self) -> f64 {
-        self.summary.max()
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.summary.max()
+        }
     }
 
     pub fn p(&self, pct: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         percentile(&self.samples, pct)
     }
 
@@ -53,12 +85,16 @@ impl Histogram {
     }
 }
 
+/// Registry key: interned `&'static str` for the typed entry points,
+/// owned only when a dynamic name first appears.
+type Key = Cow<'static, str>;
+
 /// A named metrics registry for one experiment run.
 #[derive(Debug, Default)]
 pub struct Registry {
-    counters: BTreeMap<String, u64>,
-    gauges: BTreeMap<String, f64>,
-    histograms: BTreeMap<String, Histogram>,
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    histograms: BTreeMap<Key, Histogram>,
 }
 
 impl Registry {
@@ -66,19 +102,64 @@ impl Registry {
         Registry::default()
     }
 
+    /// Bump a counter. Allocates the key only on its first appearance;
+    /// every subsequent call is a pure map lookup (hot loops stay
+    /// allocation-free once the key set is warm). Prefer
+    /// [`Registry::inc_static`] for literal names.
     pub fn inc(&mut self, name: &str, by: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += by;
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += by;
+            return;
+        }
+        self.counters.insert(Cow::Owned(name.to_string()), by);
+    }
+
+    /// Typed-key counter bump: the `&'static str` key is interned
+    /// as-is, so this never allocates — not even on first use.
+    pub fn inc_static(&mut self, name: &'static str, by: u64) {
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += by;
+            return;
+        }
+        self.counters.insert(Cow::Borrowed(name), by);
     }
 
     pub fn set(&mut self, name: &str, v: f64) {
-        self.gauges.insert(name.to_string(), v);
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g = v;
+            return;
+        }
+        self.gauges.insert(Cow::Owned(name.to_string()), v);
+    }
+
+    /// Typed-key gauge set (allocation-free, see [`Registry::inc_static`]).
+    pub fn set_static(&mut self, name: &'static str, v: f64) {
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g = v;
+            return;
+        }
+        self.gauges.insert(Cow::Borrowed(name), v);
     }
 
     pub fn observe(&mut self, name: &str, v: f64) {
-        self.histograms
-            .entry(name.to_string())
-            .or_insert_with(Histogram::new)
-            .record(v);
+        if let Some(h) = self.histograms.get_mut(name) {
+            h.record(v);
+            return;
+        }
+        let mut h = Histogram::new();
+        h.record(v);
+        self.histograms.insert(Cow::Owned(name.to_string()), h);
+    }
+
+    /// Typed-key histogram observation (key interned, never allocated).
+    pub fn observe_static(&mut self, name: &'static str, v: f64) {
+        if let Some(h) = self.histograms.get_mut(name) {
+            h.record(v);
+            return;
+        }
+        let mut h = Histogram::new();
+        h.record(v);
+        self.histograms.insert(Cow::Borrowed(name), h);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -115,6 +196,51 @@ impl Registry {
         }
         out
     }
+
+    /// Prometheus text-exposition dump (the `--metrics-out` payload).
+    /// Names are prefixed `heteroedge_` and sanitized to the metric
+    /// charset (`.`/`-`/spaces → `_`); histograms export as summaries
+    /// (p50/p90/p99 quantiles + `_sum`/`_count`). Ordering follows the
+    /// BTreeMaps, so the dump is deterministic for a given registry.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let n = prom_name(k);
+            let _ = writeln!(out, "# TYPE {n} counter");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (k, v) in &self.gauges {
+            let n = prom_name(k);
+            let _ = writeln!(out, "# TYPE {n} gauge");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (k, h) in &self.histograms {
+            let n = prom_name(k);
+            let _ = writeln!(out, "# TYPE {n} summary");
+            for (label, pct) in [("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0)] {
+                let _ = writeln!(out, "{n}{{quantile=\"{label}\"}} {}", h.p(pct));
+            }
+            let _ = writeln!(out, "{n}_sum {}", h.sum());
+            let _ = writeln!(out, "{n}_count {}", h.count());
+        }
+        out
+    }
+}
+
+/// `fleet.stream.cam-0.p99_s` → `heteroedge_fleet_stream_cam_0_p99_s`.
+/// Distinct registry keys that sanitize identically would collide in
+/// the dump; the in-tree key sets never do.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 11);
+    out.push_str("heteroedge_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
 }
 
 /// Fixed-width ASCII table renderer for paper-style tables.
@@ -197,6 +323,64 @@ mod tests {
         assert_eq!(h.max(), 100.0);
         assert_eq!(h.min(), 1.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero_not_nan() {
+        let h = Histogram::new();
+        for v in [h.p(50.0), h.p(99.0), h.min(), h.max(), h.mean(), h.sum()] {
+            assert!(!v.is_nan(), "empty histogram leaked NaN");
+            assert_eq!(v, 0.0);
+        }
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn default_histogram_behaves_like_new() {
+        // the derive(Default) regression: min() must track the real
+        // minimum, not a zero seeded by Summary::default()
+        let mut h = Histogram::default();
+        h.record(3.0);
+        h.record(5.0);
+        assert_eq!(h.min(), 3.0);
+        assert_eq!(h.max(), 5.0);
+        let mut neg = Histogram::default();
+        neg.record(-2.0);
+        assert_eq!(neg.max(), -2.0);
+    }
+
+    #[test]
+    fn static_and_dynamic_keys_share_one_entry() {
+        let mut r = Registry::new();
+        r.inc_static("frames", 3);
+        r.inc("frames", 4);
+        assert_eq!(r.counter("frames"), 7);
+        r.set_static("ratio", 0.5);
+        r.set("ratio", 0.9);
+        assert_eq!(r.gauge("ratio"), Some(0.9));
+        r.observe_static("lat", 1.0);
+        r.observe("lat", 2.0);
+        assert_eq!(r.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn prometheus_dump_is_typed_and_sanitized() {
+        let mut r = Registry::new();
+        r.inc("fleet.stream.cam-0.completed", 12);
+        r.set_static("fleet.offload_frac", 0.75);
+        r.observe("latency_s", 0.5);
+        r.observe("latency_s", 1.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE heteroedge_fleet_stream_cam_0_completed counter"));
+        assert!(text.contains("heteroedge_fleet_stream_cam_0_completed 12"));
+        assert!(text.contains("# TYPE heteroedge_fleet_offload_frac gauge"));
+        assert!(text.contains("heteroedge_fleet_offload_frac 0.75"));
+        assert!(text.contains("# TYPE heteroedge_latency_s summary"));
+        assert!(text.contains("heteroedge_latency_s{quantile=\"0.5\"}"));
+        assert!(text.contains("heteroedge_latency_s_sum 2"));
+        assert!(text.contains("heteroedge_latency_s_count 2"));
+        // deterministic: same registry, same bytes
+        assert_eq!(text, r.render_prometheus());
     }
 
     #[test]

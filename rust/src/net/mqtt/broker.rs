@@ -18,7 +18,7 @@
 //! copy on the broker data path is the single payload→wire-frame encode.
 
 use std::borrow::Cow;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -44,6 +44,11 @@ struct Subscriber {
     /// Cleared by the writer thread when the socket dies; routing prunes
     /// dead entries lazily.
     alive: Arc<AtomicBool>,
+    /// Packets sitting in this connection's dispatch queue right now
+    /// (incremented on enqueue, decremented when the writer picks one
+    /// up). Exported as a per-connection gauge via
+    /// [`Broker::queue_depths`].
+    depth: Arc<AtomicU64>,
 }
 
 #[derive(Default)]
@@ -62,6 +67,9 @@ pub struct BrokerStats {
     pub bytes_routed: AtomicU64,
     /// Messages shed because a subscriber's dispatch queue was full.
     pub backpressure_dropped: AtomicU64,
+    /// Deepest any connection's dispatch queue has been (packets) —
+    /// the headroom-vs-[`DISPATCH_QUEUE_DEPTH`] signal.
+    pub queue_peak: AtomicU64,
 }
 
 /// An MQTT-like broker bound to a local TCP port.
@@ -132,13 +140,16 @@ impl Broker {
         // owned: a fan-out to N subscribers enqueues N refs to one encode.
         let (tx, rx) = sync_channel::<Arc<Vec<u8>>>(DISPATCH_QUEUE_DEPTH);
         let alive = Arc::new(AtomicBool::new(true));
+        let depth = Arc::new(AtomicU64::new(0));
         let writer_alive = alive.clone();
+        let writer_depth = depth.clone();
         let mut writer = stream;
         let writer_thread = std::thread::Builder::new()
             .name("mqtt-broker-writer".into())
             .spawn(move || {
                 use std::io::Write;
                 for bytes in rx.iter() {
+                    writer_depth.fetch_sub(1, Ordering::Relaxed);
                     if writer
                         .write_all(&bytes)
                         .and_then(|_| writer.flush())
@@ -149,11 +160,17 @@ impl Broker {
                     }
                 }
                 // keep draining so senders holding clones never block
-                for _ in rx.iter() {}
+                for _ in rx.iter() {
+                    writer_depth.fetch_sub(1, Ordering::Relaxed);
+                }
             })?;
+        let ctl_depth = depth.clone();
         let send_ctl = |pkt: Packet<'static>| -> Result<()> {
-            tx.send(Arc::new(pkt.encode()))
-                .map_err(|_| anyhow::anyhow!("connection writer gone"))
+            ctl_depth.fetch_add(1, Ordering::Relaxed);
+            tx.send(Arc::new(pkt.encode())).map_err(|_| {
+                ctl_depth.fetch_sub(1, Ordering::Relaxed);
+                anyhow::anyhow!("connection writer gone")
+            })
         };
 
         // The serving loop runs in a closure so that cleanup below
@@ -184,6 +201,7 @@ impl Broker {
                                 filter: filter.clone(),
                                 queue: tx.clone(),
                                 alive: alive.clone(),
+                                depth: depth.clone(),
                             });
                             sh.retained
                                 .iter()
@@ -278,6 +296,8 @@ impl Broker {
             }
             match sub.queue.try_send(Arc::clone(&bytes)) {
                 Ok(()) => {
+                    let d = sub.depth.fetch_add(1, Ordering::Relaxed) + 1;
+                    stats.queue_peak.fetch_max(d, Ordering::Relaxed);
                     stats.delivered.fetch_add(1, Ordering::Relaxed);
                     stats
                         .bytes_routed
@@ -297,6 +317,22 @@ impl Broker {
     /// Current number of live subscriptions.
     pub fn subscription_count(&self) -> usize {
         self.shared.lock().unwrap().subscribers.len()
+    }
+
+    /// Instantaneous dispatch-queue depth per subscribed connection,
+    /// keyed and sorted by client id (a connection with several
+    /// subscriptions shares one queue and reports once). These gauges
+    /// read live thread state — export them via the metrics registry,
+    /// never into the deterministic trace ring.
+    pub fn queue_depths(&self) -> Vec<(String, u64)> {
+        let sh = self.shared.lock().unwrap();
+        let mut by_client: BTreeMap<String, u64> = BTreeMap::new();
+        for sub in &sh.subscribers {
+            by_client
+                .entry(sub.client_id.clone())
+                .or_insert_with(|| sub.depth.load(Ordering::Relaxed));
+        }
+        by_client.into_iter().collect()
     }
 
     /// Stop accepting (existing connections drain on their own).

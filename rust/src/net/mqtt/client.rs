@@ -253,6 +253,14 @@ impl Client {
         self.inbox.try_pop()
     }
 
+    /// Messages the reader thread has delivered but the consumer has not
+    /// yet popped — the client-side inbox-depth gauge. Live thread
+    /// state: export via the metrics registry, never into the
+    /// deterministic trace ring.
+    pub fn pending(&self) -> usize {
+        self.inbox.state.lock().unwrap().queue.len()
+    }
+
     /// Blocking receive with timeout. Parks on a condvar until the reader
     /// thread delivers a message, the connection dies, or the deadline
     /// passes — no busy-wait.

@@ -1,0 +1,399 @@
+//! Deterministic frame-lineage tracing for the fleet.
+//!
+//! The tracer extends the repo's determinism backbone — single-threaded
+//! discrete-event simulation over [`crate::sim::EventQueue`] — to
+//! observability itself: every lifecycle event (ingest → admission →
+//! encode → publish → transport → enqueue → steal → decode → serve) is
+//! stamped with the sim clock and recorded as a fixed-size [`TraceEvent`]
+//! into a preallocated [`TraceRing`], so same-seed runs produce
+//! **byte-identical** Chrome-trace exports. Design constraints:
+//!
+//! * **Allocation-free in steady state.** Events are `Copy` records
+//!   with interned `&'static str` labels ([`EventKind::name`]) and
+//!   numeric stream/node/frame ids — no `String`, no `Box`, no per-event
+//!   heap traffic. The ring allocates once up front and
+//!   overwrites-oldest on overflow (explicit [`TraceRing::dropped`]
+//!   counter), so tracing a hot dispatch loop cannot perturb the
+//!   `PoolStats` allocation gates.
+//! * **No behavior change.** Recording reads clocks and queue depths;
+//!   it never advances a clock, touches the frame pool, or reorders
+//!   events. A disabled [`Tracer`] (the default) is a no-op.
+//! * **Deterministic export.** [`TraceSink::chrome_json`] emits integer
+//!   microsecond timestamps and fixed-precision values in recording
+//!   order, so trace files diff cleanly across code changes — the
+//!   debugging workflow ROADMAP item 1 (real-concurrency runtime) will
+//!   lean on. See `docs/OBSERVABILITY.md` for the taxonomy and viewer
+//!   howto.
+//!
+//! Real-thread state (the MQTT broker's per-connection dispatch-queue
+//! gauges) is deliberately **excluded** from the ring — those depths
+//! depend on OS scheduling, which would break byte-identity. They are
+//! exported through the Prometheus path instead
+//! (`metrics::Registry::render_prometheus`).
+
+mod ring;
+mod sink;
+
+pub use ring::TraceRing;
+pub use sink::TraceSink;
+
+use std::sync::Mutex;
+
+/// Sentinel for "no stream / frame / node applies to this event".
+pub const NO_ID: u32 = u32::MAX;
+
+/// The event taxonomy — one variant per observable lifecycle stage plus
+/// the periodic gauges. Labels are interned; nothing on the recording
+/// path formats strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// An admitted frame materialized on its owning ingest primary.
+    Ingest,
+    /// Stream-level admission decision: full rate admitted.
+    Admit,
+    /// Stream-level admission decision: degraded to a keyframe stride
+    /// (value = frames dropped by the stride).
+    Degrade,
+    /// Stream-level admission decision: whole batch rejected.
+    Reject,
+    /// Stream re-homed primary-to-primary at admission time
+    /// (node = new owner, value = old owner).
+    Handoff,
+    /// Frame encoded for offload (value = wire bytes).
+    Encode,
+    /// Encoded frame shipped through the real MQTT broker
+    /// (value = payload bytes).
+    Publish,
+    /// Wire-transfer span on the owning primary's pairwise link.
+    Transport,
+    /// Frame accepted into an auxiliary's bounded inbox
+    /// (value = inbox occupancy after the push).
+    Enqueue,
+    /// Frame landed on a sibling of its planned auxiliary
+    /// (value = the planned node).
+    Steal,
+    /// Every auxiliary refused; the owning primary absorbed the frame.
+    Fallback,
+    /// Wire bytes decoded back to pixels (value = wire bytes).
+    Decode,
+    /// Decode + execute span (value = inbox wait before service).
+    Serve,
+    /// Periodic profiler gauge: device busy factor.
+    Busy,
+    /// Periodic profiler gauge: bounded-inbox depth.
+    QueueDepth,
+    /// Periodic profiler gauge: frame-pool free buffers.
+    PoolFree,
+}
+
+impl EventKind {
+    /// Interned label (the Chrome event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Ingest => "ingest",
+            EventKind::Admit => "admit",
+            EventKind::Degrade => "degrade",
+            EventKind::Reject => "reject",
+            EventKind::Handoff => "handoff",
+            EventKind::Encode => "encode",
+            EventKind::Publish => "publish",
+            EventKind::Transport => "transport",
+            EventKind::Enqueue => "enqueue",
+            EventKind::Steal => "steal",
+            EventKind::Fallback => "fallback",
+            EventKind::Decode => "decode",
+            EventKind::Serve => "serve",
+            EventKind::Busy => "busy",
+            EventKind::QueueDepth => "queue_depth",
+            EventKind::PoolFree => "pool_free",
+        }
+    }
+
+    /// Chrome event category: per-frame lineage, stream-level admission,
+    /// or a periodic gauge (exported as a counter track).
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::Ingest
+            | EventKind::Encode
+            | EventKind::Publish
+            | EventKind::Transport
+            | EventKind::Enqueue
+            | EventKind::Steal
+            | EventKind::Fallback
+            | EventKind::Decode
+            | EventKind::Serve => "frame",
+            EventKind::Admit | EventKind::Degrade | EventKind::Reject | EventKind::Handoff => {
+                "stream"
+            }
+            EventKind::Busy | EventKind::QueueDepth | EventKind::PoolFree => "gauge",
+        }
+    }
+
+    /// Every kind, in lifecycle order (docs + exhaustiveness tests).
+    pub const ALL: [EventKind; 16] = [
+        EventKind::Ingest,
+        EventKind::Admit,
+        EventKind::Degrade,
+        EventKind::Reject,
+        EventKind::Handoff,
+        EventKind::Encode,
+        EventKind::Publish,
+        EventKind::Transport,
+        EventKind::Enqueue,
+        EventKind::Steal,
+        EventKind::Fallback,
+        EventKind::Decode,
+        EventKind::Serve,
+        EventKind::Busy,
+        EventKind::QueueDepth,
+        EventKind::PoolFree,
+    ];
+}
+
+/// One fixed-size trace record. `Copy` — recording is a struct store,
+/// never an allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Sim-clock span start (seconds).
+    pub at: f64,
+    /// Span duration (0 for instants/gauges).
+    pub dur: f64,
+    pub kind: EventKind,
+    /// Stream index, or [`NO_ID`].
+    pub stream: u32,
+    /// Frame id within the stream, or [`NO_ID`].
+    pub frame: u32,
+    /// Node index, or [`NO_ID`].
+    pub node: u32,
+    /// Kind-specific payload (bytes, wait seconds, gauge value, …).
+    pub value: f64,
+}
+
+impl TraceEvent {
+    pub fn span(
+        kind: EventKind,
+        at: f64,
+        dur: f64,
+        stream: u32,
+        frame: u32,
+        node: u32,
+        value: f64,
+    ) -> TraceEvent {
+        TraceEvent {
+            at,
+            dur,
+            kind,
+            stream,
+            frame,
+            node,
+            value,
+        }
+    }
+
+    pub fn instant(
+        kind: EventKind,
+        at: f64,
+        stream: u32,
+        frame: u32,
+        node: u32,
+        value: f64,
+    ) -> TraceEvent {
+        TraceEvent::span(kind, at, 0.0, stream, frame, node, value)
+    }
+}
+
+/// Trace-derived time breakdown: where served frames actually spent
+/// their lifecycle (queueing vs executing vs on the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TraceBreakdown {
+    /// Σ inbox wait before service (the [`EventKind::Serve`] value).
+    pub queue_s: f64,
+    /// Σ decode+execute span durations.
+    pub service_s: f64,
+    /// Σ wire-transfer span durations.
+    pub transport_s: f64,
+}
+
+impl TraceBreakdown {
+    /// Fold a breakdown over retained events.
+    pub fn from_events<'a>(events: impl IntoIterator<Item = &'a TraceEvent>) -> TraceBreakdown {
+        let mut b = TraceBreakdown::default();
+        for ev in events {
+            match ev.kind {
+                EventKind::Serve => {
+                    b.queue_s += ev.value;
+                    b.service_s += ev.dur;
+                }
+                EventKind::Transport => b.transport_s += ev.dur,
+                _ => {}
+            }
+        }
+        b
+    }
+}
+
+/// One node's periodic busy-factor samples (one per round).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeTimeline {
+    pub node: String,
+    pub busy: Vec<f64>,
+}
+
+/// What a traced run contributes to the [`crate::fleet::FleetReport`]:
+/// ring accounting, the time breakdown, and per-node utilization
+/// timelines from the periodic profiler samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSummary {
+    /// Total events recorded (retained + dropped).
+    pub recorded: u64,
+    /// Oldest events the ring overwrote on overflow.
+    pub dropped: u64,
+    pub queue_s: f64,
+    pub service_s: f64,
+    pub transport_s: f64,
+    pub timelines: Vec<NodeTimeline>,
+}
+
+/// The recording handle the dispatcher owns. Disabled by default (every
+/// `record` is a branch and a return); enabling preallocates the ring.
+/// Interior mutability keeps call sites borrow-friendly: recording
+/// takes `&self`, so it composes with the dispatcher's split-borrow
+/// hot path exactly like the shared [`crate::frames::FramePool`] does.
+#[derive(Debug)]
+pub struct Tracer {
+    ring: Option<Mutex<TraceRing>>,
+}
+
+impl Tracer {
+    /// The no-op tracer (untraced runs pay one branch per call site).
+    pub fn off() -> Tracer {
+        Tracer { ring: None }
+    }
+
+    /// An enabled tracer with a ring of `capacity` events.
+    pub fn on(capacity: usize) -> Tracer {
+        Tracer {
+            ring: Some(Mutex::new(TraceRing::new(capacity))),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    pub fn record(&self, ev: TraceEvent) {
+        if let Some(ring) = &self.ring {
+            ring.lock().unwrap().push(ev);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        kind: EventKind,
+        at: f64,
+        dur: f64,
+        stream: u32,
+        frame: u32,
+        node: u32,
+        value: f64,
+    ) {
+        if self.ring.is_some() {
+            self.record(TraceEvent::span(kind, at, dur, stream, frame, node, value));
+        }
+    }
+
+    pub fn instant(
+        &self,
+        kind: EventKind,
+        at: f64,
+        stream: u32,
+        frame: u32,
+        node: u32,
+        value: f64,
+    ) {
+        self.span(kind, at, 0.0, stream, frame, node, value);
+    }
+
+    /// `(events, dropped)` — a chronological copy of the retained ring.
+    pub fn snapshot(&self) -> Option<(Vec<TraceEvent>, u64)> {
+        self.ring
+            .as_ref()
+            .map(|r| {
+                let ring = r.lock().unwrap();
+                (ring.snapshot(), ring.dropped())
+            })
+    }
+
+    /// `(recorded, dropped, breakdown)` folded over the retained events.
+    pub fn accounting(&self) -> Option<(u64, u64, TraceBreakdown)> {
+        self.ring.as_ref().map(|r| {
+            let ring = r.lock().unwrap();
+            let bd = TraceBreakdown::from_events(ring.iter());
+            (ring.recorded(), ring.dropped(), bd)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_unique_and_interned() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in EventKind::ALL {
+            assert!(seen.insert(k.name()), "duplicate label {}", k.name());
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(seen.len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn disabled_tracer_is_a_no_op() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        t.instant(EventKind::Ingest, 0.0, 0, 0, 0, 0.0);
+        assert!(t.snapshot().is_none());
+        assert!(t.accounting().is_none());
+    }
+
+    #[test]
+    fn enabled_tracer_records_in_order() {
+        let t = Tracer::on(16);
+        assert!(t.enabled());
+        t.instant(EventKind::Ingest, 1.0, 0, 7, 0, 0.0);
+        t.span(EventKind::Serve, 2.0, 0.5, 0, 7, 1, 0.25);
+        let (events, dropped) = t.snapshot().unwrap();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, EventKind::Ingest);
+        assert_eq!(events[1].kind, EventKind::Serve);
+        assert_eq!(events[1].dur, 0.5);
+    }
+
+    #[test]
+    fn breakdown_attributes_time_by_kind() {
+        let events = [
+            TraceEvent::span(EventKind::Transport, 0.0, 0.2, 0, 1, 2, 0.0),
+            TraceEvent::span(EventKind::Serve, 0.5, 1.0, 0, 1, 2, 0.3),
+            TraceEvent::span(EventKind::Serve, 2.0, 0.5, 0, 2, 2, 0.1),
+            TraceEvent::instant(EventKind::Ingest, 0.0, 0, 1, 0, 0.0),
+        ];
+        let b = TraceBreakdown::from_events(events.iter());
+        assert!((b.transport_s - 0.2).abs() < 1e-12);
+        assert!((b.service_s - 1.5).abs() < 1e-12);
+        assert!((b.queue_s - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accounting_matches_ring_state() {
+        let t = Tracer::on(2);
+        for i in 0..5u32 {
+            t.instant(EventKind::Ingest, i as f64, 0, i, 0, 0.0);
+        }
+        let (recorded, dropped, _) = t.accounting().unwrap();
+        assert_eq!(recorded, 5);
+        assert_eq!(dropped, 3);
+    }
+}

@@ -1,0 +1,146 @@
+//! Preallocated per-run ring buffer of fixed-size [`TraceEvent`]s.
+//!
+//! The ring is the tracer's only storage: one allocation up front
+//! (`Vec::with_capacity`), then every `push` either appends into the
+//! reserved capacity or overwrites the oldest slot in place. Steady
+//! state is therefore allocation-free no matter how many events a run
+//! records; overflow silently drops the *oldest* events and bumps an
+//! explicit drop counter instead of growing, panicking or blocking
+//! (property-tested in `tests/prop_fleet.rs`).
+
+use super::TraceEvent;
+
+/// Fixed-capacity event ring: overwrite-oldest on overflow, explicit
+/// drop accounting, chronological iteration.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    /// Index of the oldest retained event once the ring has wrapped.
+    start: usize,
+    cap: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `capacity` events (≥ 1). The single
+    /// allocation happens here.
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(1);
+        TraceRing {
+            buf: Vec::with_capacity(cap),
+            start: 0,
+            cap,
+            dropped: 0,
+        }
+    }
+
+    /// Record one event. Never allocates: appends into the reserved
+    /// capacity while filling, then overwrites the oldest slot (which
+    /// counts as one dropped event).
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.start] = ev;
+            self.start = (self.start + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Configured capacity (the retention bound).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Heap capacity of the backing buffer — constant after `new`, so
+    /// tests can prove pushes never reallocate.
+    pub fn heap_capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Oldest events overwritten by overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.buf.len() as u64 + self.dropped
+    }
+
+    /// Retained events in chronological (recording) order.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.start..].iter().chain(self.buf[..self.start].iter())
+    }
+
+    /// Chronological copy of the retained events.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EventKind, NO_ID};
+    use super::*;
+
+    fn ev(i: usize) -> TraceEvent {
+        TraceEvent::instant(EventKind::Ingest, i as f64, 0, i as u32, NO_ID, 0.0)
+    }
+
+    #[test]
+    fn fills_then_wraps_dropping_oldest() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.recorded(), 5);
+        let kept: Vec<u32> = r.iter().map(|e| e.frame).collect();
+        assert_eq!(kept, vec![2, 3, 4], "oldest events dropped first");
+    }
+
+    #[test]
+    fn under_capacity_keeps_everything_in_order() {
+        let mut r = TraceRing::new(8);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.dropped(), 0);
+        let kept: Vec<u32> = r.snapshot().iter().map(|e| e.frame).collect();
+        assert_eq!(kept, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn push_never_grows_the_backing_buffer() {
+        let mut r = TraceRing::new(4);
+        let heap = r.heap_capacity();
+        for i in 0..100 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.heap_capacity(), heap, "pushes must never reallocate");
+        assert_eq!(r.capacity(), 4);
+        assert_eq!(r.dropped(), 96);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = TraceRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(ev(0));
+        r.push(ev(1));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.snapshot()[0].frame, 1);
+    }
+}

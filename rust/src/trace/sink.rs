@@ -1,0 +1,259 @@
+//! Trace export: Chrome trace-event / Perfetto JSON.
+//!
+//! The sink is a frozen snapshot of a run's ring (events + drop count)
+//! plus the stream/node name tables needed to label tracks. Export is
+//! hand-rolled (serde is unavailable offline) with a deterministic
+//! layout: integer microsecond timestamps, fixed-precision values,
+//! events in recording order — same-seed runs emit byte-identical
+//! files, so traces can be diffed like any other artifact.
+//!
+//! Track layout:
+//! * one Chrome *process* per stream (`pid = 1000 + stream`), named
+//!   after the stream; within it one *thread per frame*
+//!   (`tid = frame + 1`) carries that frame's complete cross-node
+//!   lineage span chain, and `tid = 0` carries the stream-level
+//!   admission events;
+//! * `pid = 1` holds the periodic gauges as counter (`ph:"C"`) tracks,
+//!   one per (node, gauge) series.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::{EventKind, TraceBreakdown, TraceEvent, NO_ID};
+
+/// First stream-process pid (pid 1 is the gauge process).
+pub const PID_STREAM_BASE: u32 = 1000;
+
+/// A frozen, exportable view of one traced run.
+#[derive(Debug, Clone)]
+pub struct TraceSink {
+    /// Retained events, chronological.
+    pub events: Vec<TraceEvent>,
+    /// Oldest events the ring overwrote on overflow.
+    pub dropped: u64,
+    /// Stream names by stream index.
+    pub streams: Vec<String>,
+    /// Node names by node index.
+    pub nodes: Vec<String>,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Integer microseconds — the deterministic-formatting keystone: no
+/// float repr ever reaches the ts/dur fields.
+fn us(t: f64) -> i64 {
+    (t * 1e6).round() as i64
+}
+
+impl TraceSink {
+    /// Render the whole trace as Chrome trace-event JSON (open in
+    /// `chrome://tracing` or <https://ui.perfetto.dev>).
+    pub fn chrome_json(&self) -> String {
+        let mut out = String::with_capacity(128 + self.events.len() * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut emit = |out: &mut String, first: &mut bool, line: &str| {
+            if !*first {
+                out.push(',');
+            }
+            *first = false;
+            out.push('\n');
+            out.push_str(line);
+        };
+
+        // metadata: name the gauge process and one process per stream
+        emit(
+            &mut out,
+            &mut first,
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+             \"args\":{\"name\":\"fleet gauges\"}}",
+        );
+        for (i, name) in self.streams.iter().enumerate() {
+            let line = format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+                 \"args\":{{\"name\":\"stream {}\"}}}}",
+                PID_STREAM_BASE + i as u32,
+                esc(name)
+            );
+            emit(&mut out, &mut first, &line);
+        }
+
+        let mut line = String::with_capacity(160);
+        for ev in &self.events {
+            line.clear();
+            if ev.kind.category() == "gauge" {
+                // counter track per (node, gauge) series
+                let node = self.node_label(ev.node);
+                let _ = write!(
+                    line,
+                    "{{\"name\":\"{} {}\",\"cat\":\"gauge\",\"ph\":\"C\",\
+                     \"pid\":1,\"tid\":0,\"ts\":{},\"args\":{{\"v\":{:.6}}}}}",
+                    esc(node),
+                    ev.kind.name(),
+                    us(ev.at),
+                    ev.value
+                );
+            } else {
+                let pid = PID_STREAM_BASE + if ev.stream == NO_ID { 0 } else { ev.stream };
+                let tid = if ev.frame == NO_ID { 0 } else { ev.frame + 1 };
+                let node = if ev.node == NO_ID {
+                    -1i64
+                } else {
+                    ev.node as i64
+                };
+                let _ = write!(
+                    line,
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\
+                     \"pid\":{pid},\"tid\":{tid},\"ts\":{},\"dur\":{},\
+                     \"args\":{{\"node\":{node},\"v\":{:.6}}}}}",
+                    ev.kind.name(),
+                    ev.kind.category(),
+                    us(ev.at),
+                    us(ev.dur),
+                    ev.value
+                );
+            }
+            emit(&mut out, &mut first, &line);
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write [`TraceSink::chrome_json`] to `path`.
+    pub fn write_chrome_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_json())
+    }
+
+    fn node_label(&self, node: u32) -> &str {
+        self.nodes
+            .get(node as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("pool")
+    }
+
+    /// Time breakdown over the retained events.
+    pub fn breakdown(&self) -> TraceBreakdown {
+        TraceBreakdown::from_events(self.events.iter())
+    }
+
+    /// Verify every served frame carries a complete lineage chain:
+    /// each `(stream, frame)` track with a `serve` span must also hold
+    /// its `ingest` event. Returns the number of served frames on
+    /// success. Refuses to certify an overflowed ring (dropped events
+    /// could hide the missing links).
+    pub fn verify_lineage(&self) -> Result<u64, String> {
+        if self.dropped > 0 {
+            return Err(format!(
+                "ring dropped {} events; lineage cannot be certified",
+                self.dropped
+            ));
+        }
+        let mut tracks: BTreeMap<(u32, u32), (bool, u64)> = BTreeMap::new();
+        for ev in &self.events {
+            if ev.frame == NO_ID || ev.stream == NO_ID {
+                continue;
+            }
+            let entry = tracks.entry((ev.stream, ev.frame)).or_insert((false, 0));
+            match ev.kind {
+                EventKind::Ingest => entry.0 = true,
+                EventKind::Serve => entry.1 += 1,
+                _ => {}
+            }
+        }
+        let mut served = 0u64;
+        for ((s, f), (ingested, serves)) in tracks {
+            if serves > 0 {
+                served += serves;
+                if !ingested {
+                    return Err(format!(
+                        "stream {s} frame {f}: served {serves}x with no ingest event"
+                    ));
+                }
+            }
+        }
+        Ok(served)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink(events: Vec<TraceEvent>, dropped: u64) -> TraceSink {
+        TraceSink {
+            events,
+            dropped,
+            streams: vec!["cam-0".into(), "cam-1".into()],
+            nodes: vec!["node-0".into(), "node-1".into()],
+        }
+    }
+
+    fn lineage(stream: u32, frame: u32) -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::instant(EventKind::Ingest, 0.0, stream, frame, 0, 0.0),
+            TraceEvent::instant(EventKind::Encode, 0.1, stream, frame, 0, 64.0),
+            TraceEvent::span(EventKind::Transport, 0.1, 0.05, stream, frame, 1, 64.0),
+            TraceEvent::instant(EventKind::Enqueue, 0.15, stream, frame, 1, 0.5),
+            TraceEvent::span(EventKind::Serve, 0.2, 0.3, stream, frame, 1, 0.05),
+        ]
+    }
+
+    #[test]
+    fn chrome_json_has_the_expected_shape() {
+        let mut events = lineage(0, 4);
+        events.push(TraceEvent::instant(EventKind::Busy, 0.0, NO_ID, NO_ID, 1, 0.5));
+        let j = sink(events, 0).chrome_json();
+        assert!(j.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(j.trim_end().ends_with("]}"));
+        assert!(j.contains("\"name\":\"process_name\""));
+        assert!(j.contains("\"stream cam-0\""));
+        // frame events: pid = 1000 + stream, tid = frame + 1, integer µs
+        assert!(j.contains("\"pid\":1000,\"tid\":5"), "{j}");
+        assert!(j.contains("\"name\":\"serve\""));
+        assert!(j.contains("\"ts\":200000,\"dur\":300000"), "{j}");
+        // gauge events ride counter tracks in pid 1
+        assert!(j.contains("\"name\":\"node-1 busy\""), "{j}");
+        assert!(j.contains("\"ph\":\"C\""));
+        // no NaN/inf can leak into the JSON
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+    }
+
+    #[test]
+    fn chrome_json_is_deterministic() {
+        let s = sink(lineage(1, 2), 0);
+        assert_eq!(s.chrome_json(), s.chrome_json());
+    }
+
+    #[test]
+    fn verify_lineage_accepts_complete_chains() {
+        let mut events = lineage(0, 1);
+        events.extend(lineage(1, 1));
+        // stream-level admission events must not confuse the tracker
+        events.push(TraceEvent::instant(EventKind::Admit, 0.0, 0, NO_ID, 0, 8.0));
+        let served = sink(events, 0).verify_lineage().unwrap();
+        assert_eq!(served, 2);
+    }
+
+    #[test]
+    fn verify_lineage_rejects_a_serve_without_ingest() {
+        let events = vec![TraceEvent::span(EventKind::Serve, 1.0, 0.1, 0, 9, 1, 0.0)];
+        let err = sink(events, 0).verify_lineage().unwrap_err();
+        assert!(err.contains("frame 9"), "{err}");
+    }
+
+    #[test]
+    fn verify_lineage_refuses_overflowed_rings() {
+        let err = sink(lineage(0, 1), 3).verify_lineage().unwrap_err();
+        assert!(err.contains("dropped 3"), "{err}");
+    }
+
+    #[test]
+    fn breakdown_comes_from_the_events() {
+        let b = sink(lineage(0, 1), 0).breakdown();
+        assert!((b.transport_s - 0.05).abs() < 1e-12);
+        assert!((b.service_s - 0.3).abs() < 1e-12);
+        assert!((b.queue_s - 0.05).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,239 @@
+//! Integration: the frame-lineage tracer — same-seed byte-identical
+//! Chrome-trace export across drain modes and transports, lineage
+//! certification for every served frame (steal and handoff hops
+//! included), report neutrality, and the zero-allocation steady state
+//! with tracing enabled.
+
+use heteroedge::fleet::{Dispatcher, DrainMode, FleetConfig, FleetReport, Transport};
+use heteroedge::trace::TraceSink;
+
+fn traced_run(cfg: &FleetConfig, capacity: usize) -> (FleetReport, TraceSink) {
+    let mut d = Dispatcher::new(cfg.clone()).unwrap();
+    d.enable_tracing(capacity);
+    assert!(d.tracing_enabled());
+    let rep = d.run().unwrap();
+    let sink = d.trace_sink().expect("tracing was enabled");
+    (rep, sink)
+}
+
+/// The determinism headline: two same-seed runs export byte-identical
+/// Chrome-trace JSON — for both drain disciplines and for the Sim as
+/// well as the real-thread MQTT transport (every event is stamped from
+/// the sim clock, never from wall time or broker thread state).
+#[test]
+fn same_seed_traces_are_byte_identical() {
+    for transport in [Transport::Sim, Transport::Mqtt] {
+        for drain in [DrainMode::Batched, DrainMode::Pipelined] {
+            let mut cfg = FleetConfig::new(4, 4);
+            cfg.rounds = 3;
+            cfg.frames_per_round = 8;
+            cfg.inbox_capacity = 6; // tight enough to exercise stealing
+            cfg.transport = transport;
+            cfg.drain = drain;
+            let (rep_a, sink_a) = traced_run(&cfg, 1 << 16);
+            let (rep_b, sink_b) = traced_run(&cfg, 1 << 16);
+            assert_eq!(rep_a, rep_b, "{:?}/{} report diverged", transport, drain.name());
+            assert_eq!(sink_a.dropped, 0, "ring sized for the whole run");
+            assert_eq!(
+                sink_a.chrome_json(),
+                sink_b.chrome_json(),
+                "{:?}/{} trace diverged across same-seed runs",
+                transport,
+                drain.name()
+            );
+            assert!(!sink_a.events.is_empty());
+        }
+    }
+}
+
+/// Every served frame carries a complete lineage chain even when its
+/// route includes steal re-offers and primary-to-primary stream
+/// handoffs: the certified serve count equals the report's completion
+/// ledger exactly.
+#[test]
+fn every_served_frame_has_complete_lineage() {
+    // the proven stealing config from integration_fleet.rs: one aux
+    // congested to depth 2, siblings absorb its overflow
+    let mut cfg = FleetConfig::new(4, 4);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 18;
+    cfg.inbox_capacity = 24;
+    cfg.admission_control = false;
+    let mut d = Dispatcher::new(cfg).unwrap();
+    d.set_inbox_capacity(1, 2).unwrap();
+    d.enable_tracing(1 << 17);
+    let rep = d.run().unwrap();
+    let sink = d.trace_sink().unwrap();
+    assert!(rep.stolen_frames > 0, "config must exercise stealing");
+    let served = sink.verify_lineage().unwrap();
+    assert_eq!(
+        served,
+        rep.total_completed(),
+        "lineage certification must cover every completed frame, stolen hops included"
+    );
+    // the summary surfaced in the report agrees with the sink
+    let t = rep.trace.as_ref().expect("traced run carries a summary");
+    assert_eq!(t.dropped, 0);
+    assert_eq!(t.recorded, sink.events.len() as u64);
+    assert!(t.service_s > 0.0, "served frames must accrue service time");
+    assert_eq!(t.timelines.len(), 4, "one utilization timeline per node");
+    // the stolen hops themselves are on the record
+    let steals = sink
+        .events
+        .iter()
+        .filter(|e| e.kind.name() == "steal")
+        .count();
+    assert_eq!(steals as u64, rep.stolen_frames);
+}
+
+/// Handoff hops appear in the trace as stream-level events: the
+/// operator-skewed two-primary config from integration_fleet.rs must
+/// certify full lineage and record one handoff event per re-homing.
+#[test]
+fn handoff_hops_are_traced_and_lineage_still_certifies() {
+    use heteroedge::fleet::{StreamRegistry, StreamSpec};
+    let mut reg = StreamRegistry::new();
+    for i in 0..6 {
+        reg.register(StreamSpec::camera(i, 18)).unwrap();
+    }
+    let mut cfg = FleetConfig::new(8, 6);
+    cfg.primaries = 2;
+    cfg.rounds = 4;
+    let mut d = Dispatcher::with_streams(cfg, reg).unwrap();
+    for s in 0..6 {
+        d.rehome_stream(s, 0).unwrap();
+    }
+    d.enable_tracing(1 << 18);
+    let rep = d.run().unwrap();
+    let sink = d.trace_sink().unwrap();
+    assert!(rep.stream_handoffs > 0, "saturated primary never handed off");
+    assert_eq!(sink.verify_lineage().unwrap(), rep.total_completed());
+    let handoffs = sink
+        .events
+        .iter()
+        .filter(|e| e.kind.name() == "handoff")
+        .count();
+    assert_eq!(handoffs as u64, rep.stream_handoffs);
+}
+
+/// Tracing is read-only instrumentation: a traced run's report equals
+/// the untraced same-seed report byte-for-byte once the trace summary
+/// itself is set aside — for both transports.
+#[test]
+fn tracing_never_perturbs_the_simulation() {
+    for transport in [Transport::Sim, Transport::Mqtt] {
+        let mut cfg = FleetConfig::new(4, 6);
+        cfg.rounds = 3;
+        cfg.frames_per_round = 8;
+        cfg.transport = transport;
+        let plain = Dispatcher::new(cfg.clone()).unwrap().run().unwrap();
+        assert!(plain.trace.is_none(), "untraced reports carry no summary");
+        let (mut traced, _) = traced_run(&cfg, 1 << 16);
+        traced.trace = None;
+        assert_eq!(plain, traced, "{transport:?}: tracing perturbed the sim");
+        assert_eq!(plain.render(), traced.render());
+    }
+}
+
+/// An undersized ring degrades gracefully: oldest events are dropped,
+/// the counter says how many, accounting stays consistent, and lineage
+/// certification honestly refuses rather than certifying a hole.
+#[test]
+fn undersized_ring_drops_oldest_and_refuses_certification() {
+    let mut cfg = FleetConfig::new(3, 4);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 10;
+    let (rep, sink) = traced_run(&cfg, 32);
+    assert_eq!(sink.events.len(), 32, "ring retains exactly its capacity");
+    assert!(sink.dropped > 0, "run must overflow a 32-event ring");
+    let t = rep.trace.as_ref().unwrap();
+    assert_eq!(t.recorded, 32 + t.dropped);
+    let err = sink.verify_lineage().unwrap_err();
+    assert!(err.contains("dropped"), "{err}");
+    // the export still renders valid, deterministic JSON
+    let j = sink.chrome_json();
+    assert!(j.starts_with("{\"displayTimeUnit\""));
+    assert_eq!(j, sink.chrome_json());
+}
+
+/// The acceptance gate for "allocation-free in steady state": with
+/// tracing ON, quadrupling the rounds on a warm config must not grow
+/// the pool's fresh-buffer or handle allocations — the tracer's ring is
+/// preallocated and every event is a `Copy` store, so the zero-copy
+/// pipeline's warm-path guarantee survives instrumentation.
+#[test]
+fn tracing_adds_zero_steady_state_allocations() {
+    let run = |rounds: usize| {
+        let mut cfg = FleetConfig::new(4, 6);
+        cfg.rounds = rounds;
+        cfg.frames_per_round = 6;
+        cfg.admission_control = false;
+        traced_run(&cfg, 1 << 17)
+    };
+    let (short, short_sink) = run(2);
+    let (long, long_sink) = run(8);
+    assert_eq!(long.total_completed(), 4 * short.total_completed());
+    assert_eq!(short_sink.dropped, 0);
+    assert_eq!(long_sink.dropped, 0);
+    // the trace grew with the workload...
+    assert!(
+        long_sink.events.len() > 3 * short_sink.events.len(),
+        "trace must cover the longer run: {} vs {}",
+        long_sink.events.len(),
+        short_sink.events.len()
+    );
+    // ...while the allocation ledgers stayed flat (same bounds as the
+    // untraced warm-pool test in integration_fleet.rs)
+    assert!(
+        long.pool.fresh_allocs <= short.pool.fresh_allocs + short.pool.fresh_allocs / 4 + 4,
+        "tracing leaked buffer allocations: {:?} vs {:?}",
+        long.pool,
+        short.pool
+    );
+    assert!(
+        long.pool.handle_allocs <= short.pool.handle_allocs + short.pool.handle_allocs / 4 + 4,
+        "tracing leaked handle allocations: {:?} vs {:?}",
+        long.pool,
+        short.pool
+    );
+    assert!(long.pool.handle_allocs < long.pool.checkouts / 4, "{:?}", long.pool);
+}
+
+/// MQTT fabric gauges live outside the deterministic trace: the Sim
+/// transport exports none, the MQTT transport exports broker dispatch
+/// queues and a peak-depth gauge, and after a clean run every live
+/// queue has drained back to zero.
+#[test]
+fn mqtt_gauges_export_via_registry_not_the_trace() {
+    let mut cfg = FleetConfig::new(3, 4);
+    cfg.rounds = 2;
+    cfg.frames_per_round = 4;
+    cfg.admission_control = false;
+    let sim = Dispatcher::new(cfg.clone()).unwrap();
+    assert!(sim.mqtt_queue_gauges().is_empty(), "Sim fabric has no broker");
+
+    cfg.transport = Transport::Mqtt;
+    let mut d = Dispatcher::new(cfg).unwrap();
+    d.enable_tracing(1 << 16);
+    let rep = d.run().unwrap();
+    assert!(rep.mqtt_delivered > 0);
+    let gauges = d.mqtt_queue_gauges();
+    assert!(
+        gauges.iter().any(|(n, _)| n == "mqtt_broker_queue_peak"),
+        "missing peak gauge: {gauges:?}"
+    );
+    let peak = gauges
+        .iter()
+        .find(|(n, _)| n == "mqtt_broker_queue_peak")
+        .unwrap()
+        .1;
+    assert!(peak > 0, "frames crossed the broker, peak must be nonzero");
+    for (name, depth) in &gauges {
+        if name.starts_with("mqtt_broker_queue_") && name != "mqtt_broker_queue_peak" {
+            assert_eq!(*depth, 0, "queue {name} not drained after the run");
+        }
+    }
+    // and none of it contaminated the deterministic ring
+    let sink = d.trace_sink().unwrap();
+    assert!(sink.events.iter().all(|e| e.kind.name() != "mqtt"));
+}

@@ -1,7 +1,8 @@
 //! Property tests: fleet invariants — odds-form split combination,
-//! bounded-inbox conservation under random interleavings, and the
+//! bounded-inbox conservation under random interleavings, the
 //! stream→primary shard map (total ownership, determinism, handoff
-//! isolation, weighted balance).
+//! isolation, weighted balance), and the trace ring's overwrite-oldest
+//! overflow contract.
 //!
 //! `HETEROEDGE_PROP_CASES` (CI's property job sets it) raises every
 //! property's case count without changing the cases that already ran.
@@ -232,6 +233,61 @@ fn prop_shard_weighted_balance_within_envelope() {
             )?;
         }
         Ok(())
+    });
+}
+
+/// The trace ring's overflow contract under arbitrary (capacity, load)
+/// pairs: it retains exactly the newest `min(n, cap)` events in
+/// recording order, counts every overwritten event, never panics, and
+/// — the steady-state zero-allocation guarantee — never regrows its
+/// backing buffer, no matter how far past capacity the run pushes.
+#[test]
+fn prop_trace_ring_overflow_drops_oldest_never_grows() {
+    use heteroedge::trace::{EventKind, TraceEvent, TraceRing, NO_ID};
+    check("trace ring overflow", 150, |g| {
+        let cap = g.usize_in(1, 33);
+        let n = g.usize_in(0, 200);
+        let mut ring = TraceRing::new(cap);
+        let heap = ring.heap_capacity();
+        for i in 0..n {
+            ring.push(TraceEvent::instant(
+                EventKind::Ingest,
+                i as f64,
+                0,
+                i as u32,
+                NO_ID,
+                0.0,
+            ));
+        }
+        let kept = n.min(cap);
+        prop_assert(
+            ring.len() == kept,
+            format!("len {} != min(n={n}, cap={cap})", ring.len()),
+        )?;
+        prop_assert(
+            ring.dropped() == (n - kept) as u64,
+            format!("dropped {} != {}", ring.dropped(), n - kept),
+        )?;
+        prop_assert(
+            ring.recorded() == n as u64,
+            format!("recorded {} != pushes {n}", ring.recorded()),
+        )?;
+        prop_assert(
+            ring.heap_capacity() == heap,
+            format!(
+                "backing buffer regrew: {} -> {}",
+                heap,
+                ring.heap_capacity()
+            ),
+        )?;
+        // exactly the newest `kept` events survive, in recording order
+        let frames: Vec<u32> = ring.iter().map(|e| e.frame).collect();
+        let expect: Vec<u32> = ((n - kept) as u32..n as u32).collect();
+        prop_assert(
+            frames == expect,
+            format!("retained window diverged: {frames:?} vs {expect:?}"),
+        )?;
+        prop_assert(ring.snapshot().len() == kept, "snapshot length")
     });
 }
 
