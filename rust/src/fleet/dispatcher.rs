@@ -96,9 +96,10 @@ use crate::sim::EventQueue;
 use crate::trace::{EventKind, NodeTimeline, TraceSink, TraceSummary, Tracer, NO_ID};
 
 use super::estimator::ThroughputEwma;
+use super::fault::{FaultAction, FaultPlan};
 use super::inbox::BoundedInbox;
 use super::registry::{AdmissionDecision, StreamRegistry, StreamSpec};
-use super::report::{FleetReport, NodeReport, StreamReport};
+use super::report::{ChurnReport, FleetReport, NodeReport, StreamReport};
 use super::shard::ShardMap;
 
 /// How offloaded frames travel to the auxiliaries.
@@ -178,6 +179,14 @@ pub struct FleetConfig {
     /// test runs both modes to prove the zero-copy refactor is
     /// behavior-neutral. Default off.
     pub eager_decode: bool,
+    /// Handoff hysteresis: after a stream moves (voluntary handoff or
+    /// failure rehome), the admission-time handoff pass will not migrate
+    /// it again for this many rounds. Stops boundary streams
+    /// ping-ponging between primaries under churn. In-place admission
+    /// upgrades are never blocked, and failure rehomes always override
+    /// the dwell (a dead owner cannot keep a stream). Default 0 — no
+    /// hysteresis, byte-identical to earlier PRs.
+    pub handoff_dwell_rounds: usize,
 }
 
 impl FleetConfig {
@@ -201,6 +210,7 @@ impl FleetConfig {
             drain: DrainMode::Pipelined,
             work_stealing: true,
             eager_decode: false,
+            handoff_dwell_rounds: 0,
         }
     }
 
@@ -308,6 +318,9 @@ enum FleetEvent {
     /// Auxiliary `aux` (pool index; node `aux + primaries`) is free to
     /// serve its next queued frame.
     Service { aux: usize },
+    /// The `idx`-th event of the run's `FaultPlan` fires. Scheduled
+    /// before any arrival, so same-timestamp ties resolve fault-first.
+    Fault { idx: usize },
 }
 
 /// Mutable accounting for one `run()`.
@@ -324,6 +337,8 @@ struct RunState {
     primary_fallbacks: u64,
     /// Admission-time primary-to-primary stream re-homes.
     handoffs: u64,
+    /// Fault-injection ledger; `Some` iff the run carries a `FaultPlan`.
+    churn: Option<ChurnReport>,
 }
 
 /// Physical MQTT work-queue fabric: one broker, a dispatcher publisher,
@@ -383,6 +398,21 @@ impl MqttFabric {
             ),
             None => bail!("mqtt delivery timed out for node-{aux_node}"),
         }
+    }
+
+    /// Connect and subscribe a client for a freshly joined auxiliary.
+    fn add_aux(&mut self, node: usize) -> Result<()> {
+        let topic = format!("{FRAMES_TOPIC_PREFIX}/node-{node}");
+        let mut c = Client::connect(self.broker.addr(), &format!("node-{node}"))?;
+        c.subscribe(&topic)?;
+        self.subscribers.push(c);
+        self.topics.push(topic);
+        Ok(())
+    }
+
+    /// Sheds per subscriber client id (QoS downgrade observability).
+    fn shed_counts(&self) -> Vec<(String, u64)> {
+        self.broker.shed_counts()
     }
 }
 
@@ -446,6 +476,15 @@ pub struct Dispatcher {
     /// Per-node periodic profilers feeding the gauge events and the
     /// report's utilization timelines (tracing runs only).
     profilers: Option<Vec<DeviceProfiler>>,
+    /// Liveness per node. All-true without a fault plan; kills/revives
+    /// flip entries mid-run, `run()` resets them.
+    alive: Vec<bool>,
+    /// Scripted churn applied to the next `run()` (see
+    /// [`Dispatcher::set_fault_plan`]); `None` = fault-free.
+    fault_plan: Option<FaultPlan>,
+    /// Per-stream round of the last handoff/rehome — the dwell-window
+    /// state behind `FleetConfig::handoff_dwell_rounds`.
+    last_handoff_round: Vec<Option<usize>>,
 }
 
 impl Dispatcher {
@@ -575,6 +614,8 @@ impl Dispatcher {
             Transport::Sim => None,
             Transport::Mqtt => Some(MqttFabric::start(cfg.n_nodes, cfg.primaries)?),
         };
+        let alive = vec![true; cfg.n_nodes];
+        let last_handoff_round = vec![None; registry.len()];
         Ok(Dispatcher {
             cfg,
             registry,
@@ -589,7 +630,21 @@ impl Dispatcher {
             fabric,
             tracer: Tracer::off(),
             profilers: None,
+            alive,
+            fault_plan: None,
+            last_handoff_round,
         })
+    }
+
+    /// Arm a fault/churn schedule for subsequent runs. The plan is
+    /// validated against this fleet's shape up front; a fixed plan plus
+    /// a fixed seed keeps runs byte-identical, recoveries included.
+    /// Note a plan's `JoinAux` events permanently grow the fleet — a
+    /// dispatcher is normally run once.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        plan.validate(&self.cfg)?;
+        self.fault_plan = Some(plan);
+        Ok(())
     }
 
     /// Arm lineage tracing for subsequent runs: one preallocated ring of
@@ -657,6 +712,12 @@ impl Dispatcher {
                 format!("mqtt_client_inbox_node_{}", fab.primaries + k),
                 c.pending() as u64,
             ));
+        }
+        // per-subscriber shed counters: messages the broker dropped on a
+        // full dispatch queue (the silent QoS1→QoS0 downgrade, now
+        // counted — see docs/OBSERVABILITY.md)
+        for (id, n) in fab.shed_counts() {
+            out.push((format!("mqtt_broker_shed_{id}"), n));
         }
         out
     }
@@ -761,6 +822,9 @@ impl Dispatcher {
     /// capacity every round and admission would never shed under
     /// sustained overload.
     fn node_capacity_frames(&self, j: usize, round_end: f64, round_secs: f64) -> f64 {
+        if !self.alive[j] {
+            return 0.0;
+        }
         let per_img = self.per_img_est(j);
         let slot = &self.nodes[j];
         let backlog = slot.inbox.len() as f64 * per_img;
@@ -791,11 +855,13 @@ impl Dispatcher {
     /// rounds) BEFORE any degradation or rejection is accepted.
     fn plan_round_admission(
         &mut self,
+        round: usize,
         round_end: f64,
         round_secs: f64,
         st: &mut RunState,
     ) -> Vec<AdmissionDecision> {
         let p_count = self.cfg.primaries;
+        let dwell = self.cfg.handoff_dwell_rounds;
         let n = self.registry.len();
         let mut plan = vec![AdmissionDecision::Reject; n];
         let mut remaining = Vec::with_capacity(p_count);
@@ -833,8 +899,16 @@ impl Dispatcher {
                     plan[i] = AdmissionDecision::Admit;
                     continue;
                 }
+                // hysteresis: a recently moved stream stays put for the
+                // dwell window (in-place upgrades above are unaffected;
+                // failure rehomes bypass this pass entirely)
+                let dwelling = dwell > 0
+                    && self.last_handoff_round[i]
+                        .is_some_and(|r0| round.saturating_sub(r0) < dwell);
                 let target = (0..p_count)
-                    .filter(|&q| q != owner && remaining[q] >= rate as f64)
+                    .filter(|&q| {
+                        !dwelling && q != owner && self.alive[q] && remaining[q] >= rate as f64
+                    })
                     .max_by(|&a, &b| {
                         remaining[a]
                             .partial_cmp(&remaining[b])
@@ -859,6 +933,7 @@ impl Dispatcher {
                 // rehome cannot fail: i < n and q < primaries by
                 // construction of the loops above
                 let _ = self.shard.rehome(i, q);
+                self.last_handoff_round[i] = Some(round);
                 self.nodes[owner].handoffs_out += 1;
                 self.nodes[q].handoffs_in += 1;
                 st.stream_reports[i].handoffs += 1;
@@ -896,6 +971,7 @@ impl Dispatcher {
             stolen_frames: 0,
             primary_fallbacks: 0,
             handoffs: 0,
+            churn: self.fault_plan.is_some().then(ChurnReport::default),
         };
 
         // baseline the EWMA deltas at the run's starting counters
@@ -906,9 +982,38 @@ impl Dispatcher {
             );
         }
 
+        // everyone starts alive; schedule the fault schedule up front so
+        // same-timestamp ties with arrivals resolve fault-first (the
+        // event queue breaks ties by insertion order)
+        self.alive = vec![true; self.nodes.len()];
+        self.last_handoff_round = vec![None; self.registry.len()];
+        if let Some(plan) = &self.fault_plan {
+            for (idx, ev) in plan.events.iter().enumerate() {
+                st.events.schedule(ev.at, FleetEvent::Fault { idx });
+            }
+        }
+
         for round in 0..cfg.rounds {
             let round_start = round as f64 * cfg.round_secs;
             let round_end = round_start + cfg.round_secs;
+
+            // mobility: advance every pair's link distance along the
+            // plan's trace before this round's decisions sample the
+            // channel (Shannon rates recompute per call)
+            if let Some(disp) = self
+                .fault_plan
+                .as_ref()
+                .and_then(|p| p.mobility.as_ref())
+                .map(|m| m.displacement_at(round_start))
+            {
+                for (p, row) in self.pairs.iter_mut().enumerate() {
+                    for (k, pair) in row.iter_mut().enumerate() {
+                        let a = cfg.primaries + k;
+                        let base_m = 3.0 + a as f64 + 1.5 * p as f64;
+                        pair.link.set_distance(base_m + disp);
+                    }
+                }
+            }
 
             if self.tracer.enabled() {
                 self.sample_profiles(round_start);
@@ -916,7 +1021,7 @@ impl Dispatcher {
 
             let admission = if cfg.admission_control {
                 self.observe_round_throughput();
-                self.plan_round_admission(round_end, cfg.round_secs, &mut st)
+                self.plan_round_admission(round, round_end, cfg.round_secs, &mut st)
             } else {
                 vec![AdmissionDecision::Admit; self.registry.len()]
             };
@@ -1028,6 +1133,7 @@ impl Dispatcher {
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
             pool: self.pool.stats().since(pool_start),
             trace,
+            churn: st.churn,
         })
     }
 
@@ -1052,7 +1158,270 @@ impl Dispatcher {
                 self.handle_arrival(stream, at, decision, st)
             }
             FleetEvent::Service { aux } => self.serve_one(aux, at, st),
+            // faults fire in the round loop AND the tail (no admission
+            // needed): a revive scheduled past the last round still
+            // lands
+            FleetEvent::Fault { idx } => self.apply_fault(idx, at, st),
         }
+    }
+
+    /// Fire one `FaultPlan` event: flip liveness, then run the matching
+    /// recovery path — shard failover for a dead primary, inbox
+    /// eviction + re-placement for a dead auxiliary, incremental
+    /// matrix growth for a join.
+    fn apply_fault(&mut self, idx: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let action = self
+            .fault_plan
+            .as_ref()
+            .context("fault event without a plan")?
+            .events[idx]
+            .action;
+        let churn = st.churn.as_mut().context("fault event without a ledger")?;
+        churn.fault_events += 1;
+        let p_count = self.cfg.primaries;
+        match action {
+            FaultAction::Kill { node } => {
+                self.alive[node] = false;
+                st.churn.as_mut().expect("checked above").node_kills += 1;
+                self.tracer
+                    .instant(EventKind::NodeDown, at, NO_ID, NO_ID, node as u32, 0.0);
+                if node < p_count {
+                    self.rehome_dead_primary(node, at, st)?;
+                } else {
+                    self.recover_dead_aux(node, at, st)?;
+                }
+            }
+            FaultAction::Revive { node } => {
+                self.alive[node] = true;
+                churn.node_revives += 1;
+                // the clock cannot have run while dead; catch it up so
+                // revived service never executes in the past
+                self.nodes[node].handle.sync_to(at);
+                self.tracer
+                    .instant(EventKind::NodeUp, at, NO_ID, NO_ID, node as u32, 0.0);
+            }
+            FaultAction::JoinAux => {
+                churn.aux_joins += 1;
+                let node = self.add_aux(at, st)?;
+                self.tracer
+                    .instant(EventKind::NodeUp, at, NO_ID, NO_ID, node as u32, 1.0);
+            }
+        }
+        Ok(())
+    }
+
+    /// A primary died: every stream it owns fails over to the rendezvous
+    /// winner among the live primaries. Shard-map score independence
+    /// guarantees only the dead node's streams move (prop-tested).
+    fn rehome_dead_primary(&mut self, dead: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let p_count = self.cfg.primaries;
+        let alive_p = self.alive[..p_count].to_vec();
+        // the fault round, for the dwell window (failure rehomes set it
+        // too, so a revived primary cannot immediately yank them back)
+        let round = (at / self.cfg.round_secs).floor().max(0.0) as usize;
+        for s in 0..self.shard.len() {
+            if self.shard.owner(s) != dead {
+                continue;
+            }
+            let new_owner = self.shard.failover(s, &alive_p)?;
+            self.last_handoff_round[s] = Some(round);
+            let churn = st.churn.as_mut().expect("fault implies ledger");
+            churn.rehomed_streams += 1;
+            self.tracer.instant(
+                EventKind::Rehome,
+                at,
+                s as u32,
+                NO_ID,
+                new_owner as u32,
+                dead as f64,
+            );
+        }
+        Ok(())
+    }
+
+    /// An auxiliary died: evict its queued frames. Frames still on the
+    /// wire (`ready > at`) die with the node; landed frames re-enter
+    /// the cheapest-first steal path across live siblings and fall back
+    /// to the owning primary when every sibling refuses.
+    fn recover_dead_aux(&mut self, dead: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let p_count = self.cfg.primaries;
+        let pool = self.pool.clone();
+        let jobs = self.nodes[dead].inbox.evict_all();
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        // live siblings cheapest-first by the admission-path secs/image
+        // estimate (ties: lowest pool index) — the same cost order the
+        // steal path uses, recomputed here because the dead node's
+        // shares are gone
+        let mut order: Vec<usize> = (p_count..self.nodes.len())
+            .filter(|&j| j != dead && self.alive[j])
+            .collect();
+        order.sort_by(|&a, &b| {
+            self.per_img_est(a)
+                .partial_cmp(&self.per_img_est(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut recovery_end = at;
+        for mut job in jobs {
+            let s = job.stream;
+            if job.ready > at {
+                // mid-transfer: the wire died with the node
+                st.stream_reports[s].lost += 1;
+                let churn = st.churn.as_mut().expect("fault implies ledger");
+                churn.frames_lost += 1;
+                self.tracer.instant(
+                    EventKind::FrameLost,
+                    at,
+                    s as u32,
+                    job.enc.id as u32,
+                    dead as u32,
+                    0.0,
+                );
+                continue;
+            }
+            let owner = self.shard.owner(s);
+            let mut placed = None;
+            for &j in &order {
+                if self.nodes[j].inbox.free() == 0 {
+                    self.nodes[j].inbox.refuse();
+                    st.backpressure_events += 1;
+                    continue;
+                }
+                // the re-transfer rides the owning primary's pairwise
+                // link to the new destination
+                let w = self.pairs[owner][j - p_count].link.send(job.enc.wire_bytes() as u64);
+                st.offload_bytes += job.enc.wire_bytes() as u64;
+                job.ready = at + w;
+                placed = Some((j, at + w));
+                break;
+            }
+            match placed {
+                Some((j, ready)) => {
+                    let k = j - p_count;
+                    let enc_id = job.enc.id as u32;
+                    let wire = job.enc.wire_bytes() as f64;
+                    if let Some(fab) = self.fabric.as_mut() {
+                        fab.ship(j, &job.enc.bytes)?;
+                        self.tracer
+                            .instant(EventKind::Publish, ready, s as u32, enc_id, j as u32, wire);
+                    }
+                    ensure!(
+                        self.nodes[j].inbox.push_stolen(job).is_ok(),
+                        "inbox refused a frame after reporting free space"
+                    );
+                    st.stolen_frames += 1;
+                    self.nodes[dead].stolen_out += 1;
+                    self.tracer
+                        .instant(EventKind::Recover, ready, s as u32, enc_id, j as u32, dead as f64);
+                    recovery_end = recovery_end.max(ready);
+                    let churn = st.churn.as_mut().expect("fault implies ledger");
+                    churn.frames_recovered += 1;
+                    match self.cfg.drain {
+                        DrainMode::Pipelined => {
+                            if !st.busy[k] {
+                                st.busy[k] = true;
+                                st.events.schedule(ready, FleetEvent::Service { aux: k });
+                            }
+                        }
+                        // legacy comparator: the receiver waits out the
+                        // re-transfer, then executes at round close
+                        DrainMode::Batched => self.nodes[j].handle.sync_to(ready),
+                    }
+                }
+                None => {
+                    // every live sibling refused — the owning primary
+                    // absorbs it, exactly like the arrival-time fallback
+                    st.primary_fallbacks += 1;
+                    let enc_id = job.enc.id as u32;
+                    self.tracer
+                        .instant(EventKind::Fallback, at, s as u32, enc_id, owner as u32, 0.0);
+                    let frame = match job.eager.take() {
+                        Some(f) => f,
+                        None => codec::decode_frame_pooled(&pool, &job.enc.bytes)?,
+                    };
+                    self.tracer
+                        .instant(EventKind::Decode, at, s as u32, enc_id, owner as u32, 0.0);
+                    let (workload, masked) = {
+                        let spec = &self.registry.streams[s];
+                        (spec.workload, spec.masked)
+                    };
+                    let primary = &mut self.nodes[owner];
+                    let start = primary.handle.now().max(at);
+                    primary.handle.sync_to(start);
+                    primary.handle.run_one(workload, &frame, 0.0, masked)?;
+                    let done = primary.handle.now();
+                    self.tracer
+                        .span(EventKind::Serve, start, done - start, s as u32, enc_id, owner as u32, 0.0);
+                    st.stream_reports[s].completed += 1;
+                    st.stream_reports[s].latency.record(done - job.arrived);
+                    st.pooled.record(done - job.arrived);
+                    recovery_end = recovery_end.max(done);
+                    let churn = st.churn.as_mut().expect("fault implies ledger");
+                    churn.frames_recovered += 1;
+                }
+            }
+        }
+        let churn = st.churn.as_mut().expect("fault implies ledger");
+        churn.recovery_time_s += recovery_end - at;
+        Ok(())
+    }
+
+    /// A fresh auxiliary joins mid-run: append one node slot and one
+    /// pair column per primary, using the constructor's exact seeding
+    /// formulas so surviving nodes' RNG streams are untouched —
+    /// membership growth is incremental, never a rebuild.
+    fn add_aux(&mut self, at: f64, st: &mut RunState) -> Result<usize> {
+        let j = self.nodes.len();
+        let cfg = &self.cfg;
+        let mut slot = NodeSlot {
+            name: format!("node-{j}"),
+            handle: Box::new(NodeRuntime::new(
+                DeviceKind::Xavier,
+                SimBackend::new(),
+                cfg.seed ^ (j as u64 + 1),
+            )),
+            inbox: BoundedInbox::new(cfg.inbox_capacity.max(1)),
+            last_r: 0.7,
+            stolen_out: 0,
+            queue_delay: Histogram::new(),
+            ingest_frames: 0,
+            handoffs_in: 0,
+            handoffs_out: 0,
+        };
+        slot.handle.sync_to(at);
+        for (p, row) in self.pairs.iter_mut().enumerate() {
+            let mut ch_cfg = ChannelConfig::wifi(cfg.band);
+            if !cfg.jitter {
+                ch_cfg.jitter_rel = 0.0;
+            }
+            let mut distance_m = 3.0 + j as f64 + 1.5 * p as f64;
+            if let Some(m) = self.fault_plan.as_ref().and_then(|pl| pl.mobility.as_ref()) {
+                distance_m += m.displacement_at(at);
+            }
+            row.push(PairState {
+                link: Channel::new(
+                    ch_cfg,
+                    distance_m,
+                    cfg.seed ^ (0x100 + j as u64 + ((p as u64) << 32)),
+                ),
+                scheduler: Scheduler::new(SchedulerConfig::paper_default()),
+            });
+        }
+        self.nodes.push(slot);
+        self.ewma.push(ThroughputEwma::new(self.cfg.ewma_alpha));
+        self.ewma_snap.push((0, 0.0));
+        self.alive.push(true);
+        st.busy.push(false);
+        if let Some(profilers) = self.profilers.as_mut() {
+            let interval = (self.cfg.round_secs * 0.5).max(1e-9);
+            profilers.push(DeviceProfiler::new(DeviceKind::Xavier.name(), interval));
+        }
+        if let Some(fab) = self.fabric.as_mut() {
+            fab.add_aux(j)?;
+        }
+        Ok(j)
     }
 
     /// One stream batch lands on its owning primary: admit, split,
@@ -1124,6 +1493,12 @@ impl Dispatcher {
         // pressure feeds λ
         let mut ratios: Vec<f64> = Vec::with_capacity(tail.len());
         for (k, aux) in tail.iter_mut().enumerate() {
+            // a dead aux attracts nothing; skipping `decide` also
+            // freezes the pair's β hysteresis until it revives
+            if !self.alive[p_count + k] {
+                ratios.push(0.0);
+                continue;
+            }
             let pair = &mut pair_row[k];
             let mut aprof = aux.handle.profile();
             aprof.mem_pct = aux.inbox.pressure_mem_pct(aprof.mem_pct);
@@ -1502,6 +1877,8 @@ impl Dispatcher {
 mod tests {
     use super::*;
 
+    use crate::fleet::fault::FaultEvent;
+
     #[test]
     fn partition_by_weight_conserves_and_follows_weights() {
         let shares = partition_by_weight(10, &[2.0, 2.0, 1.0]);
@@ -1740,5 +2117,187 @@ mod tests {
         assert_eq!(rep.offload_bytes, 0, "no aux pool, no offload");
         let ingest: u64 = rep.nodes.iter().map(|n| n.ingest_frames).sum();
         assert_eq!(ingest, rep.total_completed());
+    }
+
+    fn kill(node: usize, at: f64) -> FaultEvent {
+        FaultEvent {
+            at,
+            action: FaultAction::Kill { node },
+        }
+    }
+
+    #[test]
+    fn set_fault_plan_validates_against_the_fleet_shape() {
+        let mut d = Dispatcher::new(FleetConfig::new(3, 2)).unwrap();
+        let bad = FaultPlan {
+            events: vec![kill(9, 1.0)],
+            mobility: None,
+        };
+        assert!(d.set_fault_plan(bad).is_err(), "node out of range");
+        let no_primary = FaultPlan {
+            events: vec![kill(0, 1.0)],
+            mobility: None,
+        };
+        assert!(
+            d.set_fault_plan(no_primary).is_err(),
+            "killing the only primary leaves no ingest path"
+        );
+        let ok = FaultPlan {
+            events: vec![kill(2, 1.0)],
+            mobility: None,
+        };
+        d.set_fault_plan(ok).unwrap();
+    }
+
+    #[test]
+    fn aux_kill_evicts_and_recovers_queued_frames() {
+        // batched drain holds every frame queued until round close, so a
+        // kill late in round 1 is guaranteed to evict a non-empty inbox
+        let mut cfg = FleetConfig::new(4, 2);
+        cfg.rounds = 3;
+        cfg.frames_per_round = 12;
+        cfg.admission_control = false;
+        cfg.drain = DrainMode::Batched;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        d.set_fault_plan(FaultPlan {
+            events: vec![kill(3, 9.9)],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        let c = rep.churn.as_ref().expect("fault run carries a ledger");
+        assert_eq!(c.fault_events, 1);
+        assert_eq!(c.node_kills, 1);
+        assert!(
+            c.frames_recovered > 0,
+            "the dead aux's queue must re-enter the steal path"
+        );
+        assert!(c.recovery_time_s >= 0.0);
+        // nothing vanishes silently: every admitted frame completes or
+        // is explicitly accounted lost
+        for s in &rep.streams {
+            assert_eq!(
+                s.completed + s.lost,
+                s.admitted - s.deduped,
+                "stream {} leaks frames",
+                s.name
+            );
+        }
+        assert_eq!(c.frames_lost, rep.streams.iter().map(|s| s.lost).sum::<u64>());
+    }
+
+    #[test]
+    fn primary_kill_rehomes_only_the_dead_primarys_streams() {
+        let mut cfg = FleetConfig::new(5, 8);
+        cfg.primaries = 2;
+        cfg.rounds = 3;
+        cfg.frames_per_round = 4;
+        // admission off: no voluntary handoffs, so every ownership change
+        // below is attributable to the failover alone
+        cfg.admission_control = false;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        let before: Vec<usize> = (0..8).map(|s| d.stream_owner(s).unwrap()).collect();
+        let dead = 0usize;
+        let orphaned = before.iter().filter(|&&p| p == dead).count() as u64;
+        d.set_fault_plan(FaultPlan {
+            events: vec![kill(dead, 7.5)],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        for (s, &owner_before) in before.iter().enumerate() {
+            let now = d.stream_owner(s).unwrap();
+            if owner_before == dead {
+                assert_eq!(now, 1, "orphaned stream {s} must land on the survivor");
+            } else {
+                assert_eq!(now, owner_before, "live stream {s} reshuffled");
+            }
+        }
+        let c = rep.churn.as_ref().unwrap();
+        assert_eq!(c.rehomed_streams, orphaned);
+        assert_eq!(c.frames_lost, 0, "primary death loses no queued aux frames");
+        for s in &rep.streams {
+            assert_eq!(s.completed, s.admitted - s.deduped, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn joined_aux_expands_the_fleet_and_serves() {
+        let mut cfg = FleetConfig::new(2, 2);
+        cfg.rounds = 4;
+        cfg.frames_per_round = 8;
+        cfg.admission_control = false;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        d.set_fault_plan(FaultPlan {
+            events: vec![FaultEvent {
+                at: 6.0,
+                action: FaultAction::JoinAux,
+            }],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        assert_eq!(rep.nodes.len(), 3, "the join must grow the fleet");
+        assert_eq!(rep.nodes[2].name, "node-2");
+        assert_eq!(rep.churn.as_ref().unwrap().aux_joins, 1);
+        assert!(
+            rep.nodes[2].frames > 0,
+            "the joined aux must attract offload in later rounds"
+        );
+        assert_eq!(rep.total_completed(), rep.total_offered());
+    }
+
+    #[test]
+    fn churned_runs_are_deterministic() {
+        let run = || {
+            let mut cfg = FleetConfig::new(4, 4);
+            cfg.primaries = 2;
+            cfg.rounds = 4;
+            cfg.frames_per_round = 8;
+            let plan = FaultPlan::churn_scenario(&cfg);
+            let mut d = Dispatcher::new(cfg).unwrap();
+            d.set_fault_plan(plan).unwrap();
+            d.run().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed + same plan must reproduce byte-for-byte");
+        assert!(a.churn.is_some());
+        // and a fault-free run of the same config must NOT carry a ledger
+        let mut cfg = FleetConfig::new(4, 4);
+        cfg.primaries = 2;
+        cfg.rounds = 4;
+        cfg.frames_per_round = 8;
+        assert!(Dispatcher::new(cfg).unwrap().run().unwrap().churn.is_none());
+    }
+
+    #[test]
+    fn handoff_dwell_caps_voluntary_migrations() {
+        let run = |dwell: usize| {
+            let mut cfg = FleetConfig::new(4, 6);
+            cfg.primaries = 2;
+            cfg.rounds = 5;
+            cfg.frames_per_round = 14; // enough pressure to trigger handoffs
+            cfg.handoff_dwell_rounds = dwell;
+            Dispatcher::new(cfg).unwrap().run().unwrap()
+        };
+        let free = run(0);
+        let dwelling = run(1000);
+        assert!(
+            dwelling.stream_handoffs <= free.stream_handoffs,
+            "dwell {} > free {}",
+            dwelling.stream_handoffs,
+            free.stream_handoffs
+        );
+        // a dwell longer than the run caps every stream at one move
+        assert!(
+            dwelling.streams.iter().all(|s| s.handoffs <= 1),
+            "a stream migrated twice inside an unexpired dwell window"
+        );
+        for rep in [&free, &dwelling] {
+            for s in &rep.streams {
+                assert_eq!(s.offered, s.admitted + s.degraded + s.rejected, "{}", s.name);
+            }
+        }
     }
 }

@@ -130,6 +130,40 @@ mod tests {
         assert_eq!(e.estimate(), Some(0.3));
     }
 
+    /// Churn steady state: a node that serves nothing for a round (dead,
+    /// idle, or fully backpressured) produces `0 frames / t secs` or
+    /// `t secs / 0 frames` at the call site — 0, inf, or NaN secs/image.
+    /// None of those may move the estimate, so capacity planning keeps
+    /// the last good rate instead of inheriting a poisoned one.
+    #[test]
+    fn idle_and_fully_failed_rounds_cannot_poison_the_estimate() {
+        let mut e = ThroughputEwma::new(0.5);
+        e.observe(0.2);
+        // zero-frame round: exec_secs / 0 frames
+        e.observe(1.7 / 0.0); // inf
+        e.observe(0.0 / 0.0); // NaN
+                              // zero-duration round: 0 secs / frames
+        e.observe(0.0);
+        assert_eq!(e.estimate(), Some(0.2), "degenerate rounds must be no-ops");
+        // and the estimator recovers normally once real rounds resume
+        e.observe(0.4);
+        assert_eq!(e.estimate(), Some(0.3));
+    }
+
+    /// The estimate the dispatcher hands to capacity planning is always
+    /// finite and positive once warm — the division guard above plus
+    /// this invariant is what keeps `admission_plan` NaN-free.
+    #[test]
+    fn warm_estimate_is_always_finite_and_positive() {
+        let mut e = ThroughputEwma::new(0.9);
+        for s in [0.3, f64::NAN, 1e-12, f64::INFINITY, -5.0, 0.7] {
+            e.observe(s);
+            if let Some(est) = e.estimate() {
+                assert!(est.is_finite() && est > 0.0, "estimate {est}");
+            }
+        }
+    }
+
     #[test]
     #[should_panic]
     fn zero_alpha_is_a_bug() {

@@ -1,0 +1,278 @@
+//! Deterministic fault injection and churn for fleet runs.
+//!
+//! Real HeteroEdge deployments lose nodes: an auxiliary drives out of
+//! range, a primary browns out, a fresh UGV joins the convoy. A
+//! [`FaultPlan`] scripts exactly that onto the dispatcher's existing
+//! event timeline — each [`FaultEvent`] is scheduled into the same
+//! deterministic `EventQueue` as frame arrivals, so a fixed plan plus a
+//! fixed seed reproduces the whole run byte-for-byte, recoveries
+//! included (checked by `tests/integration_fleet.rs`).
+//!
+//! The plan is either scripted by hand (tests, targeted what-ifs) or
+//! generated from the fleet seed ([`FaultPlan::churn_scenario`], the
+//! `heteroedge fleet --scenario churn` CLI path). An optional
+//! [`MobilityTrace`] makes the per-pair Shannon rates drift as the
+//! convoy spreads out: every round start, each primary↔auxiliary link's
+//! distance is advanced along the trace, so transfer costs — and with
+//! them the scheduler's split ratios — degrade the way §V's mobile
+//! cases do.
+//!
+//! What the dispatcher does on each action is documented on
+//! [`FaultAction`]; the accounting lands in `ChurnReport`.
+
+use anyhow::{ensure, Result};
+
+use super::dispatcher::FleetConfig;
+use crate::mobility::MobilityModel;
+use crate::util::rng::Rng;
+
+/// One membership change applied at a scheduled instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Node `node` dies. A primary's streams immediately fail over via
+    /// the shard map (only its streams move); an auxiliary's in-flight
+    /// frames are evicted and re-enter the cheapest-first steal path,
+    /// falling back to the owning primary, except frames still on the
+    /// wire, which are lost.
+    Kill { node: usize },
+    /// A previously killed node comes back, clock synced to the revive
+    /// instant. No automatic fail-back: a revived primary wins streams
+    /// again only through the ordinary handoff pass.
+    Revive { node: usize },
+    /// A brand-new auxiliary joins the pool, appended at the current
+    /// node count with the same deterministic seeding formulas the
+    /// constructor uses — surviving nodes' RNG streams are untouched.
+    JoinAux,
+}
+
+/// A [`FaultAction`] with its sim-clock firing time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Sim-clock seconds; ties with frame arrivals resolve fault-first
+    /// (faults are scheduled before any arrival).
+    pub at: f64,
+    pub action: FaultAction,
+}
+
+/// Linear mobility applied to every primary↔auxiliary pair: each link's
+/// distance grows from its own base geometry by the model's closing
+/// speed, sampled at round starts.
+#[derive(Debug, Clone)]
+pub struct MobilityTrace {
+    pub model: MobilityModel,
+}
+
+impl MobilityTrace {
+    /// The paper's Case-2 divergence (Vp = 1 m/s, Va = 3 m/s) — harsh:
+    /// links collapse within a few rounds.
+    pub fn paper_case2() -> Self {
+        MobilityTrace { model: MobilityModel::paper_case2() }
+    }
+
+    /// A gentler default for multi-round fleet scenarios: the convoy
+    /// spreads at 0.8 m/s combined, enough to visibly skew split ratios
+    /// over a run without starving the link entirely.
+    pub fn fleet_default() -> Self {
+        use crate::mobility::Ugv;
+        MobilityTrace {
+            model: MobilityModel::new(Ugv::new("primary", 0.2), Ugv::new("auxiliary", 0.6), 0.0),
+        }
+    }
+
+    /// Distance added to every pair's base distance at sim time `t`.
+    pub fn displacement_at(&self, t: f64) -> f64 {
+        self.model.displacement_at(t)
+    }
+}
+
+/// A deterministic churn schedule for one fleet run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Membership changes, sorted by firing time (non-decreasing).
+    pub events: Vec<FaultEvent>,
+    /// Optional link mobility applied alongside the membership churn.
+    pub mobility: Option<MobilityTrace>,
+}
+
+impl FaultPlan {
+    /// Validate the schedule against a fleet shape: times finite, sorted
+    /// and non-negative; every node index valid at its firing time
+    /// (joins extend the valid range as they occur); no killing the
+    /// dead or reviving the living; and at least one primary alive at
+    /// every instant — a fleet with no ingest path cannot recover.
+    pub fn validate(&self, cfg: &FleetConfig) -> Result<()> {
+        let mut alive: Vec<bool> = vec![true; cfg.n_nodes];
+        let mut live_primaries = cfg.primaries;
+        let mut last_at = 0.0f64;
+        for (i, ev) in self.events.iter().enumerate() {
+            ensure!(
+                ev.at.is_finite() && ev.at >= 0.0,
+                "fault event {i}: bad time {}",
+                ev.at
+            );
+            ensure!(
+                ev.at >= last_at,
+                "fault event {i}: times must be sorted ({} < {last_at})",
+                ev.at
+            );
+            last_at = ev.at;
+            match ev.action {
+                FaultAction::Kill { node } => {
+                    ensure!(node < alive.len(), "fault event {i}: node {node} out of range");
+                    ensure!(alive[node], "fault event {i}: node {node} is already dead");
+                    alive[node] = false;
+                    if node < cfg.primaries {
+                        live_primaries -= 1;
+                        ensure!(
+                            live_primaries > 0,
+                            "fault event {i}: killing node {node} leaves no live primary"
+                        );
+                    }
+                }
+                FaultAction::Revive { node } => {
+                    ensure!(node < alive.len(), "fault event {i}: node {node} out of range");
+                    ensure!(!alive[node], "fault event {i}: node {node} is already alive");
+                    alive[node] = true;
+                    if node < cfg.primaries {
+                        live_primaries += 1;
+                    }
+                }
+                FaultAction::JoinAux => alive.push(true),
+            }
+        }
+        Ok(())
+    }
+
+    /// The stock churn scenario, derived deterministically from the
+    /// fleet seed: kill an auxiliary a third of the way in and revive
+    /// it later, kill a second auxiliary for good if the pool is deep
+    /// enough, admit a fresh auxiliary mid-run, bounce one primary when
+    /// there are several, and spread the convoy along a gentle mobility
+    /// trace throughout.
+    pub fn churn_scenario(cfg: &FleetConfig) -> FaultPlan {
+        let total = cfg.rounds as f64 * cfg.round_secs;
+        let auxes = cfg.n_nodes.saturating_sub(cfg.primaries);
+        let mut rng = Rng::new(cfg.seed ^ 0xC0FF_EE00);
+        let mut events = Vec::new();
+        if auxes >= 1 {
+            let victim = cfg.primaries + (rng.next_u64() as usize) % auxes;
+            events.push(FaultEvent {
+                at: 0.35 * total,
+                action: FaultAction::Kill { node: victim },
+            });
+            events.push(FaultEvent {
+                at: 0.70 * total,
+                action: FaultAction::Revive { node: victim },
+            });
+            if auxes >= 2 {
+                // a different auxiliary dies for good mid-run
+                let mut second = cfg.primaries + (rng.next_u64() as usize) % auxes;
+                if second == victim {
+                    second = cfg.primaries + (second - cfg.primaries + 1) % auxes;
+                }
+                events.push(FaultEvent {
+                    at: 0.55 * total,
+                    action: FaultAction::Kill { node: second },
+                });
+            }
+        }
+        events.push(FaultEvent { at: 0.50 * total, action: FaultAction::JoinAux });
+        if cfg.primaries > 1 {
+            let p = (rng.next_u64() as usize) % cfg.primaries;
+            events.push(FaultEvent { at: 0.45 * total, action: FaultAction::Kill { node: p } });
+            events.push(FaultEvent { at: 0.80 * total, action: FaultAction::Revive { node: p } });
+        }
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("fractions of a finite total"));
+        FaultPlan { events, mobility: Some(MobilityTrace::fleet_default()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::shannon;
+
+    fn cfg(primaries: usize, nodes: usize) -> FleetConfig {
+        let mut c = FleetConfig::new(nodes, 6);
+        c.primaries = primaries;
+        c
+    }
+
+    #[test]
+    fn churn_scenario_is_deterministic_and_valid() {
+        for (p, n) in [(1usize, 2usize), (1, 4), (2, 5), (3, 8)] {
+            let c = cfg(p, n);
+            let a = FaultPlan::churn_scenario(&c);
+            let b = FaultPlan::churn_scenario(&c);
+            assert_eq!(a.events, b.events, "same seed must script identically");
+            a.validate(&c).unwrap();
+            assert!(a.mobility.is_some());
+            assert!(!a.events.is_empty());
+        }
+        // a different seed moves the victims eventually
+        let c1 = cfg(2, 8);
+        let mut c2 = cfg(2, 8);
+        c2.seed ^= 0x5a5a;
+        let plans: Vec<_> = (0..1).map(|_| FaultPlan::churn_scenario(&c1)).collect();
+        assert!(
+            FaultPlan::churn_scenario(&c2).events != plans[0].events
+                || c1.seed == c2.seed,
+            "seed change never altered the scenario"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        let c = cfg(2, 4);
+        let kill = |node, at| FaultEvent { at, action: FaultAction::Kill { node } };
+        // out of range
+        let p = FaultPlan { events: vec![kill(9, 1.0)], mobility: None };
+        assert!(p.validate(&c).is_err());
+        // unsorted
+        let p = FaultPlan { events: vec![kill(2, 5.0), kill(3, 1.0)], mobility: None };
+        assert!(p.validate(&c).is_err());
+        // double kill
+        let p = FaultPlan { events: vec![kill(2, 1.0), kill(2, 2.0)], mobility: None };
+        assert!(p.validate(&c).is_err());
+        // reviving the living
+        let p = FaultPlan {
+            events: vec![FaultEvent { at: 1.0, action: FaultAction::Revive { node: 2 } }],
+            mobility: None,
+        };
+        assert!(p.validate(&c).is_err());
+        // killing every primary
+        let p = FaultPlan { events: vec![kill(0, 1.0), kill(1, 2.0)], mobility: None };
+        assert!(p.validate(&c).is_err());
+        // ... but one primary down is fine, and a joined aux is killable
+        let p = FaultPlan {
+            events: vec![
+                FaultEvent { at: 1.0, action: FaultAction::JoinAux },
+                kill(0, 2.0),
+                kill(4, 3.0),
+            ],
+            mobility: None,
+        };
+        p.validate(&c).unwrap();
+        // non-finite time
+        let p = FaultPlan { events: vec![kill(2, f64::NAN)], mobility: None };
+        assert!(p.validate(&c).is_err());
+    }
+
+    #[test]
+    fn mobility_trace_degrades_shannon_rates() {
+        let trace = MobilityTrace::fleet_default();
+        assert_eq!(trace.displacement_at(0.0), 0.0);
+        assert!(trace.displacement_at(10.0) > 0.0);
+        // cross-check against the mobility-aware Shannon helper: the
+        // same displacement produces the same (decaying) rate
+        let d0 = 3.0;
+        let v = trace.model.closing_speed();
+        let r0 = shannon::data_rate_bps_at(20e6, d0, v, 0.0, 2.7, 0.1, 1e-9);
+        let r30 = shannon::data_rate_bps_at(20e6, d0, v, 30.0, 2.7, 0.1, 1e-9);
+        assert!(r0 > r30, "moving apart must slow the link");
+        assert_eq!(
+            r30,
+            shannon::data_rate_bps(20e6, d0 + trace.displacement_at(30.0), 2.7, 0.1, 1e-9)
+        );
+    }
+}

@@ -13,7 +13,7 @@
 //!
 //! Counter invariants (checked by `tests/prop_fleet.rs`):
 //! `offered == accepted + stolen + rejected` and
-//! `accepted + stolen == served + len`.
+//! `accepted + stolen == served + evicted + len`.
 
 use std::collections::VecDeque;
 
@@ -32,6 +32,10 @@ pub struct BoundedInbox<T> {
     pub stolen: u64,
     /// Items handed to the executor by `pop`/`drain` (cumulative).
     pub served: u64,
+    /// Items removed by `evict_all` when the node died (cumulative) —
+    /// deliberately NOT counted served; the dispatcher re-places or
+    /// loses each one explicitly.
+    pub evicted: u64,
     /// Deepest simultaneous fill observed.
     pub high_watermark: usize,
 }
@@ -47,6 +51,7 @@ impl<T> BoundedInbox<T> {
             accepted: 0,
             stolen: 0,
             served: 0,
+            evicted: 0,
             high_watermark: 0,
         }
     }
@@ -125,6 +130,16 @@ impl<T> BoundedInbox<T> {
     /// Take everything queued, FIFO order (the batched drain hook).
     pub fn drain(&mut self) -> Vec<T> {
         self.served += self.queue.len() as u64;
+        self.queue.drain(..).collect()
+    }
+
+    /// Take everything queued, FIFO order, without counting it served —
+    /// the fault-injection hook for a node that just died. The caller
+    /// (the dispatcher's recovery path) decides each item's fate:
+    /// re-offer to a sibling, fall back to the primary, or declare it
+    /// lost mid-transfer.
+    pub fn evict_all(&mut self) -> Vec<T> {
+        self.evicted += self.queue.len() as u64;
         self.queue.drain(..).collect()
     }
 
@@ -209,6 +224,24 @@ mod tests {
         // freed capacity accepts again
         ib.push(40).unwrap();
         assert_eq!(ib.len(), 1);
+    }
+
+    #[test]
+    fn evict_all_counts_separately_from_served() {
+        let mut ib: BoundedInbox<u32> = BoundedInbox::new(4);
+        for v in [10, 20, 30] {
+            ib.push(v).unwrap();
+        }
+        ib.pop();
+        assert_eq!(ib.evict_all(), vec![20, 30]);
+        assert!(ib.is_empty());
+        assert_eq!(ib.served, 1, "eviction must not inflate served");
+        assert_eq!(ib.evicted, 2);
+        // accepted + stolen == served + evicted + len still holds
+        assert_eq!(ib.accepted + ib.stolen, ib.served + ib.evicted + ib.len() as u64);
+        // a revived node's inbox accepts again
+        ib.push(40).unwrap();
+        assert_eq!(ib.pop(), Some(40));
     }
 
     #[test]

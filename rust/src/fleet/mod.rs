@@ -85,9 +85,25 @@
 //! thread state (broker dispatch queues, client inboxes) is exported
 //! via the registry only — never the trace ring — to keep traces
 //! deterministic. See `docs/OBSERVABILITY.md`.
+//!
+//! ## Fault injection and churn
+//!
+//! [`fault`] scripts deterministic membership churn onto the same event
+//! timeline: a [`FaultPlan`] kills/revives primaries and auxiliaries
+//! and admits fresh auxiliaries mid-run (`--scenario churn`). A dead
+//! primary's streams fail over through the shard map without
+//! reshuffling live streams; a dead auxiliary's in-flight frames
+//! re-enter the cheapest-first steal path (frames still on the wire
+//! are lost); pair/link state grows incrementally on joins; an
+//! optional mobility trace drifts every pair's Shannon rate as the
+//! convoy spreads. Recovery accounting (`recovery_time`,
+//! `frames_lost`, `rehomed_streams`) lands in `FleetReport.churn`, and
+//! `FleetConfig::handoff_dwell_rounds` adds handoff hysteresis so
+//! boundary streams stop ping-ponging under churn.
 
 pub mod dispatcher;
 pub mod estimator;
+pub mod fault;
 pub mod inbox;
 pub mod registry;
 pub mod report;
@@ -95,9 +111,10 @@ pub mod shard;
 
 pub use dispatcher::{combine_odds, Dispatcher, DrainMode, FleetConfig, Transport};
 pub use estimator::ThroughputEwma;
+pub use fault::{FaultAction, FaultEvent, FaultPlan, MobilityTrace};
 pub use inbox::BoundedInbox;
 pub use registry::{AdmissionDecision, StreamRegistry, StreamSpec};
-pub use report::{FleetReport, NodeReport, StreamReport};
+pub use report::{ChurnReport, FleetReport, NodeReport, StreamReport};
 pub use shard::{rendezvous_owner, ShardMap};
 
 pub use crate::frames::PoolStats;

@@ -307,6 +307,26 @@ mod tests {
         assert!(plan.iter().all(|d| *d == AdmissionDecision::Reject));
     }
 
+    /// Capacity after an idle or fully-failed round can reach the plan
+    /// as NaN/-inf if an upstream guard slips. `remaining` is clamped
+    /// through `max(0.0)` (NaN.max(0.0) == 0.0 in IEEE/Rust), so a
+    /// poisoned capacity degrades to reject-all for one round instead of
+    /// panicking or admitting unboundedly.
+    #[test]
+    fn non_finite_capacity_degrades_to_reject_all() {
+        let r = reg(&[5, 5]);
+        for cap in [f64::NAN, f64::NEG_INFINITY, -4.0] {
+            let plan = r.admission_plan(cap);
+            assert!(
+                plan.iter().all(|d| *d == AdmissionDecision::Reject),
+                "capacity {cap}: {plan:?}"
+            );
+        }
+        // +inf means "no budget pressure", not poison: everything rides
+        let plan = r.admission_plan(f64::INFINITY);
+        assert!(plan.iter().all(|d| *d == AdmissionDecision::Admit));
+    }
+
     #[test]
     fn degrade_keeps_keyframes() {
         use crate::frames::SceneGenerator;

@@ -29,6 +29,9 @@ pub struct StreamReport {
     pub deduped: u64,
     /// Frames that finished execution somewhere in the fleet.
     pub completed: u64,
+    /// Frames lost to node failure mid-transfer (0 without a fault
+    /// plan); under churn, `completed == admitted - deduped - lost`.
+    pub lost: u64,
     /// Times this stream was re-homed to a sibling primary by the
     /// admission-time handoff pass.
     pub handoffs: u64,
@@ -47,6 +50,7 @@ impl StreamReport {
             rejected: 0,
             deduped: 0,
             completed: 0,
+            lost: 0,
             handoffs: 0,
             latency: Histogram::new(),
         }
@@ -124,6 +128,30 @@ pub struct FleetReport {
     /// `None` for untraced runs, so their reports stay byte-identical
     /// to earlier PRs.
     pub trace: Option<TraceSummary>,
+    /// Fault-injection accounting. `None` for runs without a
+    /// `FaultPlan`, so their reports stay byte-identical to earlier
+    /// PRs.
+    pub churn: Option<ChurnReport>,
+}
+
+/// What a `FaultPlan` did to the run and what recovery cost.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnReport {
+    /// Fault events fired (kills + revives + joins).
+    pub fault_events: u64,
+    pub node_kills: u64,
+    pub node_revives: u64,
+    pub aux_joins: u64,
+    /// Streams re-homed off dead primaries by shard-map failover.
+    pub rehomed_streams: u64,
+    /// Evicted in-flight frames re-placed on live nodes (steal path or
+    /// primary fallback).
+    pub frames_recovered: u64,
+    /// Evicted frames lost mid-transfer — the wire died with the node.
+    pub frames_lost: u64,
+    /// Σ over kill events of (fault instant → last recovered frame
+    /// re-placed/served), seconds.
+    pub recovery_time_s: f64,
 }
 
 impl FleetReport {
@@ -216,6 +244,16 @@ impl FleetReport {
             reg.set_static("fleet.trace.time_in_service_s", t.service_s);
             reg.set_static("fleet.trace.time_in_transport_s", t.transport_s);
         }
+        if let Some(c) = &self.churn {
+            reg.inc_static("fleet.churn.fault_events", c.fault_events);
+            reg.inc_static("fleet.churn.node_kills", c.node_kills);
+            reg.inc_static("fleet.churn.node_revives", c.node_revives);
+            reg.inc_static("fleet.churn.aux_joins", c.aux_joins);
+            reg.inc_static("fleet.churn.rehomed_streams", c.rehomed_streams);
+            reg.inc_static("fleet.churn.frames_recovered", c.frames_recovered);
+            reg.inc_static("fleet.churn.frames_lost", c.frames_lost);
+            reg.set_static("fleet.churn.recovery_time_s", c.recovery_time_s);
+        }
     }
 
     /// The ingest-primary slice of `nodes`.
@@ -285,6 +323,23 @@ impl FleetReport {
                     .collect();
                 out.push_str(&format!("  util {:<10} [{digits}]\n", tl.node));
             }
+        }
+        // churn section; omitted for fault-free runs so their rendering
+        // stays byte-identical to earlier PRs
+        if let Some(c) = &self.churn {
+            out.push_str(&format!(
+                "churn: {} fault events ({} kills, {} revives, {} joins) | \
+                 rehomed {} streams | recovered {} frames | lost {} frames | \
+                 recovery {:.3} s\n",
+                c.fault_events,
+                c.node_kills,
+                c.node_revives,
+                c.aux_joins,
+                c.rehomed_streams,
+                c.frames_recovered,
+                c.frames_lost,
+                c.recovery_time_s,
+            ));
         }
         // multi-primary ingest ledger; omitted for single-primary runs
         // so their rendering stays byte-identical to the PR 1 report
@@ -409,6 +464,7 @@ mod tests {
                 recycled: 90,
             },
             trace: None,
+            churn: None,
         }
     }
 
@@ -483,6 +539,36 @@ mod tests {
         r.to_registry(&mut reg);
         assert_eq!(reg.counter("fleet.trace.events.recorded"), 420);
         assert_eq!(reg.gauge("fleet.trace.time_in_service_s"), Some(30.0));
+    }
+
+    #[test]
+    fn churned_report_renders_and_exports_the_fault_ledger() {
+        let mut r = sample();
+        r.churn = Some(ChurnReport {
+            fault_events: 4,
+            node_kills: 2,
+            node_revives: 1,
+            aux_joins: 1,
+            rehomed_streams: 3,
+            frames_recovered: 7,
+            frames_lost: 2,
+            recovery_time_s: 1.5,
+        });
+        let text = r.render();
+        assert!(
+            text.contains("churn: 4 fault events (2 kills, 1 revives, 1 joins)"),
+            "{text}"
+        );
+        assert!(text.contains("rehomed 3 streams"), "{text}");
+        assert!(text.contains("lost 2 frames"), "{text}");
+        // fault-free rendering carries no churn section at all
+        assert!(!sample().render().contains("churn:"));
+
+        let mut reg = Registry::new();
+        r.to_registry(&mut reg);
+        assert_eq!(reg.counter("fleet.churn.frames_lost"), 2);
+        assert_eq!(reg.counter("fleet.churn.rehomed_streams"), 3);
+        assert_eq!(reg.gauge("fleet.churn.recovery_time_s"), Some(1.5));
     }
 
     #[test]

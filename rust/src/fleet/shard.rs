@@ -24,7 +24,7 @@
 //! (seed, names, weights) tuple, handoff isolation, and weighted balance
 //! within a generous envelope of each primary's fair share.
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 /// FNV-1a over `bytes`, seeded, with a splitmix64 avalanche tail so the
 /// short, similar keys the fleet hashes ("cam-0|p") decorrelate fully.
@@ -56,9 +56,23 @@ fn unit_open(h: u64) -> f64 {
 /// value instead of propagating. Ties (astronomically unlikely) break
 /// toward the lowest primary index.
 pub fn rendezvous_owner(seed: u64, stream: &str, weights: &[f64]) -> usize {
-    let mut best = 0usize;
+    best_owner(seed, stream, weights, None).expect("weights checked non-empty by callers")
+}
+
+/// Shared scoring core: the rendezvous winner over `weights`, optionally
+/// restricted to primaries whose `alive` entry is true. Every candidate
+/// keeps its ORIGINAL index in the hash key, so masking dead primaries
+/// out never perturbs a surviving primary's per-stream score — that is
+/// what makes failover move exactly the dead owner's streams. (Masking
+/// cannot be emulated by zeroing a weight: degenerate weights are
+/// floored to a tiny positive value, not excluded.)
+fn best_owner(seed: u64, stream: &str, weights: &[f64], alive: Option<&[bool]>) -> Option<usize> {
+    let mut best = None;
     let mut best_score = f64::NEG_INFINITY;
     for (p, &w) in weights.iter().enumerate() {
+        if alive.is_some_and(|mask| !mask[p]) {
+            continue;
+        }
         let w = if w.is_finite() && w > 0.0 { w } else { 1e-9 };
         let mut key = Vec::with_capacity(stream.len() + 9);
         key.extend_from_slice(stream.as_bytes());
@@ -68,7 +82,7 @@ pub fn rendezvous_owner(seed: u64, stream: &str, weights: &[f64]) -> usize {
         let score = -w / u.ln();
         if score > best_score {
             best_score = score;
-            best = p;
+            best = Some(p);
         }
     }
     best
@@ -83,6 +97,12 @@ pub struct ShardMap {
     /// Handoff re-homes; `Some(p)` overrides the base owner.
     overrides: Vec<Option<usize>>,
     n_primaries: usize,
+    /// The (seed, names, weights) tuple the base map was derived from —
+    /// kept so [`ShardMap::failover`] can re-score a stream over the
+    /// surviving primaries when its owner dies mid-run.
+    seed: u64,
+    names: Vec<String>,
+    weights: Vec<f64>,
 }
 
 impl ShardMap {
@@ -98,6 +118,9 @@ impl ShardMap {
             overrides: vec![None; base.len()],
             base,
             n_primaries: weights.len(),
+            seed,
+            names: streams.iter().map(|s| s.to_string()).collect(),
+            weights: weights.to_vec(),
         })
     }
 
@@ -131,6 +154,27 @@ impl ShardMap {
         ensure!(p < self.n_primaries, "primary {p} out of range");
         self.overrides[s] = Some(p);
         Ok(())
+    }
+
+    /// Fail stream `s` over to the rendezvous winner among the primaries
+    /// still `alive` — the recovery primitive for a dead owner. Because
+    /// per-stream scores are independent and survivors keep their
+    /// original hash-key indices, failover touches exactly the dead
+    /// primary's streams; live streams never trade places (prop-tested
+    /// in `tests/prop_fleet.rs`). Recorded as an override: a later
+    /// revive does NOT auto-fail-back.
+    pub fn failover(&mut self, s: usize, alive: &[bool]) -> Result<usize> {
+        ensure!(s < self.base.len(), "stream {s} out of range");
+        ensure!(
+            alive.len() == self.n_primaries,
+            "alive mask covers {} primaries, shard map has {}",
+            alive.len(),
+            self.n_primaries
+        );
+        let p = best_owner(self.seed, &self.names[s], &self.weights, Some(alive))
+            .context("no live primary left to fail over to")?;
+        self.overrides[s] = Some(p);
+        Ok(p)
     }
 
     /// Streams whose current owner differs from their base assignment.
@@ -207,6 +251,33 @@ mod tests {
         let even = ShardMap::new(3, &refs, &[1.0, 1.0]).unwrap();
         let half = even.owned_by(0).len();
         assert!((8..=56).contains(&half), "even split badly skewed: {half}/64");
+    }
+
+    #[test]
+    fn failover_moves_only_the_dead_primarys_streams() {
+        let ns = names(24);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        let mut map = ShardMap::new(13, &refs, &[1.0, 1.0, 1.0]).unwrap();
+        let before: Vec<usize> = (0..24).map(|s| map.owner(s)).collect();
+        let dead = 1usize;
+        let alive = [true, false, true];
+        for s in 0..24 {
+            if before[s] == dead {
+                let p = map.failover(s, &alive).unwrap();
+                assert!(alive[p], "failed over to a dead primary");
+                assert_ne!(p, dead);
+            }
+        }
+        // survivors kept every stream they already owned
+        for s in 0..24 {
+            if before[s] != dead {
+                assert_eq!(map.owner(s), before[s], "live stream {s} reshuffled");
+            }
+        }
+        // a failover with no live primary is an error, not a panic
+        assert!(map.failover(0, &[false, false, false]).is_err());
+        // mask length must match the primary count
+        assert!(map.failover(0, &[true]).is_err());
     }
 
     #[test]

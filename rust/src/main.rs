@@ -7,6 +7,7 @@
 //! heteroedge fleet   --nodes <N> --streams <M> [--primaries <P>] [--rounds <k>]
 //!                    [--rate <f>] [--inbox <cap>] [--drain batched|pipelined]
 //!                    [--no-steal] [--masked] [--dedup] [--no-mqtt]
+//!                    [--scenario none|churn] [--dwell <rounds>]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
 //!                    [--trace <out.json>] [--trace-capacity <events>]
 //!                    [--metrics-out <out.prom>]
@@ -18,7 +19,7 @@ use anyhow::{bail, Result};
 use heteroedge::cli::Args;
 use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
 use heteroedge::experiments::{self, Scale};
-use heteroedge::fleet::{Dispatcher, DrainMode, FleetConfig, Transport};
+use heteroedge::fleet::{Dispatcher, DrainMode, FaultPlan, FleetConfig, Transport};
 use heteroedge::metrics::Registry;
 use heteroedge::net::Band;
 use heteroedge::solver::HeteroEdgeSolver;
@@ -122,6 +123,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         _ => DrainMode::Pipelined,
     };
     cfg.work_stealing = !args.flag("no-steal");
+    // handoff hysteresis: a re-homed stream dwells this many rounds
+    // before another voluntary migration (failure rehomes always apply)
+    cfg.handoff_dwell_rounds = args.opt_or("dwell", 0usize)?;
+    let scenario = args.opt_choice("scenario", &["none", "churn"], "none")?;
 
     // "1 primary" keeps the default invocation's header line textually
     // identical to the single-primary releases
@@ -148,6 +153,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let trace_capacity = args.opt_or("trace-capacity", 262_144usize)?;
 
     let mut dispatcher = Dispatcher::new(cfg.clone())?;
+    if scenario == "churn" {
+        // deterministic churn: kill/revive auxiliaries (and a primary
+        // when there are several), admit a fresh aux mid-run, spread
+        // the convoy along the stock mobility trace
+        dispatcher.set_fault_plan(FaultPlan::churn_scenario(&cfg))?;
+    }
     if trace_path.is_some() {
         dispatcher.enable_tracing(trace_capacity);
     }

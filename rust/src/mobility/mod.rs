@@ -63,6 +63,15 @@ impl MobilityModel {
         self.initial_distance_m + self.closing_speed() * t
     }
 
+    /// Distance ADDED after `t` seconds of separation, independent of
+    /// the starting geometry — what the fleet's churn mobility hook adds
+    /// to each primary↔auxiliary pair's own base distance (the pairs
+    /// start at different distances, so the model's `initial_distance_m`
+    /// does not apply there).
+    pub fn displacement_at(&self, t: f64) -> f64 {
+        self.closing_speed() * t.max(0.0)
+    }
+
     /// Time at which distance reaches `d` (None if unreachable/static).
     pub fn time_to_distance(&self, d: f64) -> Option<f64> {
         let v = self.closing_speed();
@@ -163,6 +172,8 @@ mod tests {
         assert_eq!(m.closing_speed(), 4.0);
         assert_eq!(m.distance_at(0.0), 2.0);
         assert_eq!(m.distance_at(6.0), 26.0);
+        assert_eq!(m.displacement_at(6.0), 24.0);
+        assert_eq!(m.displacement_at(-1.0), 0.0, "no time travel");
     }
 
     #[test]

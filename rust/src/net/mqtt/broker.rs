@@ -49,6 +49,11 @@ struct Subscriber {
     /// up). Exported as a per-connection gauge via
     /// [`Broker::queue_depths`].
     depth: Arc<AtomicU64>,
+    /// Messages this connection lost to a full dispatch queue
+    /// (cumulative). The broker→subscriber leg is QoS 0 regardless of
+    /// the publisher's QoS, so these sheds are otherwise silent —
+    /// exported per connection via [`Broker::shed_counts`].
+    shed: Arc<AtomicU64>,
 }
 
 #[derive(Default)]
@@ -141,6 +146,7 @@ impl Broker {
         let (tx, rx) = sync_channel::<Arc<Vec<u8>>>(DISPATCH_QUEUE_DEPTH);
         let alive = Arc::new(AtomicBool::new(true));
         let depth = Arc::new(AtomicU64::new(0));
+        let shed = Arc::new(AtomicU64::new(0));
         let writer_alive = alive.clone();
         let writer_depth = depth.clone();
         let mut writer = stream;
@@ -202,6 +208,7 @@ impl Broker {
                                 queue: tx.clone(),
                                 alive: alive.clone(),
                                 depth: depth.clone(),
+                                shed: shed.clone(),
                             });
                             sh.retained
                                 .iter()
@@ -285,7 +292,15 @@ impl Broker {
             .encode(),
         );
         if retain {
-            sh.retained.insert(topic.clone(), (payload, qos));
+            // MQTT 3.1.1 §3.3.1.3: a retained PUBLISH with a zero-byte
+            // payload clears the retained entry for the topic (and is
+            // not itself stored); it still fans out to current
+            // subscribers like any other message.
+            if payload.is_empty() {
+                sh.retained.remove(&topic);
+            } else {
+                sh.retained.insert(topic.clone(), (payload, qos));
+            }
         }
         sh.subscribers.retain(|sub| {
             if !sub.alive.load(Ordering::Relaxed) {
@@ -307,6 +322,7 @@ impl Broker {
                 // bounded queue full: shed on the q0 leg, keep subscriber
                 Err(TrySendError::Full(_)) => {
                     stats.backpressure_dropped.fetch_add(1, Ordering::Relaxed);
+                    sub.shed.fetch_add(1, Ordering::Relaxed);
                     true
                 }
                 Err(TrySendError::Disconnected(_)) => false,
@@ -331,6 +347,22 @@ impl Broker {
             by_client
                 .entry(sub.client_id.clone())
                 .or_insert_with(|| sub.depth.load(Ordering::Relaxed));
+        }
+        by_client.into_iter().collect()
+    }
+
+    /// Cumulative messages shed per subscribed connection because its
+    /// dispatch queue was full, keyed and sorted by client id. The
+    /// broker→subscriber leg is QoS 0 even for QoS 1 publishes, so this
+    /// counter is the only record of those silent drops. Live thread
+    /// state — export via the metrics registry, never the trace ring.
+    pub fn shed_counts(&self) -> Vec<(String, u64)> {
+        let sh = self.shared.lock().unwrap();
+        let mut by_client: BTreeMap<String, u64> = BTreeMap::new();
+        for sub in &sh.subscribers {
+            by_client
+                .entry(sub.client_id.clone())
+                .or_insert_with(|| sub.shed.load(Ordering::Relaxed));
         }
         by_client.into_iter().collect()
     }

@@ -24,4 +24,4 @@ pub mod topic;
 pub use broker::Broker;
 pub use client::Client;
 pub use packet::{Packet, QoS};
-pub use topic::topic_matches;
+pub use topic::{filter_valid, topic_matches};

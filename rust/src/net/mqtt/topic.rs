@@ -2,9 +2,17 @@
 
 /// Does `filter` match `topic`?
 ///
-/// * `+` matches exactly one level;
+/// * `+` matches exactly one level — **including an empty one**
+///   (MQTT 3.1.1 §4.7.1.3: `"sport/+"` matches `"sport/"` but not
+///   `"sport"`);
 /// * `#` matches any number of trailing levels (must be last);
-/// * otherwise levels compare literally.
+/// * otherwise levels compare literally, and empty levels are real
+///   levels: a trailing slash makes `"a/"` a two-level topic distinct
+///   from `"a"` (§4.7.3 — topic names are not normalized).
+///
+/// `filter_valid` deliberately agrees: filters with empty levels
+/// (`"a/"`, `"/a"`, `"a//b"`) are valid and match only topics with the
+/// same empty levels. `tests/prop_net.rs` pins this correspondence.
 pub fn topic_matches(filter: &str, topic: &str) -> bool {
     let mut f = filter.split('/');
     let mut t = topic.split('/');
@@ -19,7 +27,10 @@ pub fn topic_matches(filter: &str, topic: &str) -> bool {
     }
 }
 
-/// Is this a valid filter? (`#` only final, no empty string)
+/// Is this a valid filter? (`#` only final, wildcards must occupy a
+/// whole level, no empty string). Empty *levels* are allowed — `"a/"`
+/// and `"a//b"` are valid filters per MQTT 3.1.1 §4.7.3 and match the
+/// corresponding empty-level topics in [`topic_matches`].
 pub fn filter_valid(filter: &str) -> bool {
     if filter.is_empty() {
         return false;
@@ -71,5 +82,36 @@ mod tests {
         assert!(!filter_valid("a/b#"));
         assert!(!filter_valid("a/b+"));
         assert!(filter_valid("a/+/c"));
+    }
+
+    #[test]
+    fn empty_levels_are_real_levels() {
+        // MQTT 3.1.1 §4.7.3: a trailing slash adds a distinct empty
+        // level; topic names are never normalized.
+        assert!(!topic_matches("a", "a/"));
+        assert!(!topic_matches("a/", "a"));
+        assert!(topic_matches("a/", "a/"));
+        assert!(topic_matches("a//b", "a//b"));
+        assert!(!topic_matches("a/b", "a//b"));
+    }
+
+    #[test]
+    fn plus_matches_empty_levels() {
+        // §4.7.1.3's own example: "sport/+" matches "sport/" but not
+        // "sport".
+        assert!(topic_matches("sport/+", "sport/"));
+        assert!(!topic_matches("sport/+", "sport"));
+        assert!(topic_matches("+/b", "/b"));
+        assert!(topic_matches("a/+/c", "a//c"));
+        assert!(topic_matches("a/#", "a/"));
+    }
+
+    #[test]
+    fn filters_with_empty_levels_are_valid() {
+        // filter_valid agrees with topic_matches on empty levels: they
+        // are accepted and match exactly the empty-level topics.
+        for f in ["a/", "/a", "a//b", "+/"] {
+            assert!(filter_valid(f), "{f:?} should be valid");
+        }
     }
 }

@@ -24,6 +24,24 @@ pub fn data_rate_bps(
     bandwidth_hz * (1.0 + snr).log2()
 }
 
+/// Achievable data rate in bits/s after `t_s` seconds of separation at
+/// `closing_mps` from a starting distance `d0_m` — the mobility-aware
+/// form the fleet's churn scenarios sample per round as nodes move
+/// along a trace.
+#[allow(clippy::too_many_arguments)]
+pub fn data_rate_bps_at(
+    bandwidth_hz: f64,
+    d0_m: f64,
+    closing_mps: f64,
+    t_s: f64,
+    path_loss_exp: f64,
+    tx_power_w: f64,
+    noise_power_w: f64,
+) -> f64 {
+    let d = d0_m + closing_mps * t_s.max(0.0);
+    data_rate_bps(bandwidth_hz, d, path_loss_exp, tx_power_w, noise_power_w)
+}
+
 /// Transfer latency in seconds for `bytes` at `rate_bps`.
 pub fn transfer_secs(bytes: u64, rate_bps: f64) -> f64 {
     if rate_bps <= 0.0 {
@@ -63,6 +81,16 @@ mod tests {
     fn near_field_clamped() {
         assert_eq!(path_loss_gain(0.1, 2.7), 1.0);
         assert!(path_loss_gain(2.0, 2.7) < 1.0);
+    }
+
+    #[test]
+    fn mobile_rate_decays_as_nodes_separate() {
+        let at = |t| data_rate_bps_at(20e6, 2.0, 4.0, t, 2.7, 0.1, 1e-9);
+        assert_eq!(at(0.0), data_rate_bps(20e6, 2.0, 2.7, 0.1, 1e-9));
+        assert!(at(0.0) > at(5.0) && at(5.0) > at(25.0));
+        // a parked pair (closing speed 0) never degrades
+        let parked = |t| data_rate_bps_at(20e6, 4.0, 0.0, t, 2.7, 0.1, 1e-9);
+        assert_eq!(parked(0.0), parked(100.0));
     }
 
     #[test]

@@ -84,6 +84,18 @@ pub enum EventKind {
     QueueDepth,
     /// Periodic profiler gauge: frame-pool free buffers.
     PoolFree,
+    /// Fault injection: a node died (kill event from the `FaultPlan`).
+    NodeDown,
+    /// Fault injection: a node revived or a fresh auxiliary joined.
+    NodeUp,
+    /// A dead primary's stream re-homed via shard-map failover
+    /// (node = new owner, value = dead owner).
+    Rehome,
+    /// An in-flight frame evicted from a dead auxiliary re-placed on a
+    /// live node (node = new destination, value = dead node).
+    Recover,
+    /// An evicted frame lost mid-transfer — the wire died with the node.
+    FrameLost,
 }
 
 impl EventKind {
@@ -106,6 +118,11 @@ impl EventKind {
             EventKind::Busy => "busy",
             EventKind::QueueDepth => "queue_depth",
             EventKind::PoolFree => "pool_free",
+            EventKind::NodeDown => "node_down",
+            EventKind::NodeUp => "node_up",
+            EventKind::Rehome => "rehome",
+            EventKind::Recover => "recover",
+            EventKind::FrameLost => "frame_lost",
         }
     }
 
@@ -126,11 +143,16 @@ impl EventKind {
                 "stream"
             }
             EventKind::Busy | EventKind::QueueDepth | EventKind::PoolFree => "gauge",
+            EventKind::NodeDown
+            | EventKind::NodeUp
+            | EventKind::Rehome
+            | EventKind::Recover
+            | EventKind::FrameLost => "churn",
         }
     }
 
     /// Every kind, in lifecycle order (docs + exhaustiveness tests).
-    pub const ALL: [EventKind; 16] = [
+    pub const ALL: [EventKind; 21] = [
         EventKind::Ingest,
         EventKind::Admit,
         EventKind::Degrade,
@@ -147,6 +169,11 @@ impl EventKind {
         EventKind::Busy,
         EventKind::QueueDepth,
         EventKind::PoolFree,
+        EventKind::NodeDown,
+        EventKind::NodeUp,
+        EventKind::Rehome,
+        EventKind::Recover,
+        EventKind::FrameLost,
     ];
 }
 

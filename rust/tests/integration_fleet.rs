@@ -4,8 +4,8 @@
 //! byte-identity, transport parity).
 
 use heteroedge::fleet::{
-    AdmissionDecision, Dispatcher, DrainMode, FleetConfig, FleetReport, StreamRegistry,
-    StreamSpec, Transport,
+    AdmissionDecision, Dispatcher, DrainMode, FaultAction, FaultEvent, FaultPlan, FleetConfig,
+    FleetReport, MobilityTrace, StreamRegistry, StreamSpec, Transport,
 };
 
 /// ≥3 nodes × ≥4 streams driven well past capacity: admission must shed,
@@ -387,6 +387,114 @@ fn offload_hot_path_allocates_nothing_after_warmup() {
         long.pool
     );
     assert!(long.pool.recycled > 0);
+}
+
+/// A fixed churn schedule covering every fault path — primary death
+/// (shard failover), aux death with queued frames, a mid-run join, both
+/// revives, plus link mobility — over 4 rounds of a 5-node fleet. The
+/// aux dies at 9.9 s, a hair before the round-1 close at 10 s, so under
+/// `DrainMode::Batched` its whole round-1 allocation is still queued
+/// and the eviction/recovery path provably fires.
+fn churn_reference_plan() -> FaultPlan {
+    let kill = |node, at| FaultEvent { at, action: FaultAction::Kill { node } };
+    let revive = |node, at| FaultEvent { at, action: FaultAction::Revive { node } };
+    FaultPlan {
+        events: vec![
+            kill(0, 8.0),                                          // primary dies round 1
+            kill(3, 9.9),                                          // aux dies, inbox loaded
+            FaultEvent { at: 10.0, action: FaultAction::JoinAux }, // fresh aux, round 2
+            revive(3, 14.0),
+            revive(0, 16.0),
+        ],
+        mobility: Some(MobilityTrace::fleet_default()),
+    }
+}
+
+/// The churn reference dispatcher: 2 primaries + 3 auxiliaries, 6
+/// streams, admission off so ownership only moves through failover,
+/// with stream 0 pinned to the doomed primary so the failover path is
+/// guaranteed to have work.
+fn churn_reference_dispatcher(drain: DrainMode, transport: Transport) -> Dispatcher {
+    let mut cfg = FleetConfig::new(5, 6);
+    cfg.primaries = 2;
+    cfg.rounds = 4;
+    cfg.frames_per_round = 8;
+    cfg.admission_control = false;
+    cfg.drain = drain;
+    cfg.transport = transport;
+    let mut d = Dispatcher::new(cfg).unwrap();
+    d.rehome_stream(0, 0).unwrap();
+    d.set_fault_plan(churn_reference_plan()).unwrap();
+    d
+}
+
+/// Byte-identity under churn: a fixed fault schedule (kills, revives, a
+/// join, mobility drift) plus a fixed seed reproduces the whole run —
+/// recoveries, failovers, and the churn ledger included — across every
+/// DrainMode × Transport combination.
+#[test]
+fn same_seed_churned_runs_are_byte_identical() {
+    for drain in [DrainMode::Batched, DrainMode::Pipelined] {
+        for transport in [Transport::Sim, Transport::Mqtt] {
+            // the shard map is transport-independent: read the doomed
+            // primary's shard off a cheap Sim instance
+            let probe = churn_reference_dispatcher(drain, Transport::Sim);
+            let orphans = (0..6).filter(|&s| probe.stream_owner(s) == Some(0)).count() as u64;
+            assert!(orphans >= 1, "stream 0 was pinned to the doomed primary");
+
+            let run = || -> FleetReport {
+                churn_reference_dispatcher(drain, transport).run().unwrap()
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(
+                a,
+                b,
+                "{} drain over {transport:?} diverged across same-seed churned runs",
+                drain.name()
+            );
+            assert_eq!(a.render(), b.render());
+
+            let c = a.churn.as_ref().expect("a faulted run must carry a churn ledger");
+            assert_eq!(c.fault_events, 5, "every scheduled fault must fire");
+            assert_eq!(c.node_kills, 2);
+            assert_eq!(c.node_revives, 2);
+            assert_eq!(c.aux_joins, 1);
+            // admission is off, so ownership only moves through failover:
+            // exactly the dead primary's streams re-home, nothing else
+            assert_eq!(c.rehomed_streams, orphans, "failover moved the wrong streams");
+            assert_eq!(a.nodes.len(), 6, "the joined aux must appear in the report");
+            // conservation holds with loss in the ledger: every admitted
+            // frame either completes or is accounted lost
+            for s in &a.streams {
+                assert_eq!(s.offered, s.admitted, "admission is off for {}", s.name);
+                assert_eq!(s.completed + s.lost, s.admitted - s.deduped, "{}", s.name);
+            }
+            let lost: u64 = a.streams.iter().map(|s| s.lost).sum();
+            assert_eq!(c.frames_lost, lost, "ledger and per-stream loss disagree");
+        }
+    }
+}
+
+/// The deterministic tracer stays byte-identical under churn: two
+/// same-seed faulted runs export identical Chrome-trace JSON, churn
+/// events (node_down/rehome/recover/node_up) included.
+#[test]
+fn churned_trace_export_is_byte_identical() {
+    let run = || {
+        let mut d = churn_reference_dispatcher(DrainMode::Batched, Transport::Sim);
+        d.enable_tracing(65_536);
+        let rep = d.run().unwrap();
+        let churn = rep.churn.expect("a faulted run must carry a churn ledger");
+        assert!(churn.frames_recovered > 0, "the loaded aux inbox must recover");
+        d.trace_sink().expect("tracing was enabled").chrome_json()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same-seed churned trace exports diverged");
+    for kind in ["node_down", "node_up", "rehome", "recover"] {
+        assert!(a.contains(kind), "trace export is missing {kind} events");
+    }
 }
 
 /// Custom stream registries work end-to-end: mixed priorities and rates,

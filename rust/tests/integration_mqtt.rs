@@ -86,6 +86,31 @@ fn retained_message_updates() {
 }
 
 #[test]
+fn empty_retained_publish_clears_the_entry() {
+    let (_b, addr) = setup();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("p", b"state", QoS::AtLeastOnce, true).unwrap();
+    // MQTT 3.1.1 §3.3.1.3: a zero-byte retained publish clears the
+    // retained message for that topic and must not be stored itself
+    publ.publish("p", b"", QoS::AtLeastOnce, true).unwrap();
+    let mut sub = Client::connect(addr, "late").unwrap();
+    sub.subscribe("p").unwrap();
+    assert!(
+        sub.recv_timeout(Duration::from_millis(200)).is_none(),
+        "cleared topic must replay nothing to a late subscriber"
+    );
+    // a live subscriber still sees the clearing publish as a normal
+    // message; only the retained store is affected
+    let mut live = Client::connect(addr, "live").unwrap();
+    live.subscribe("p").unwrap();
+    publ.publish("p", b"", QoS::AtMostOnce, true).unwrap();
+    let msg = live
+        .recv_timeout(Duration::from_secs(5))
+        .expect("clearing publish must still fan out");
+    assert_eq!(msg.payload, b"");
+}
+
+#[test]
 fn multiple_subscribers_fan_out() {
     let (b, addr) = setup();
     let mut s1 = Client::connect(addr, "s1").unwrap();

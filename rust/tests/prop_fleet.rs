@@ -1,8 +1,8 @@
 //! Property tests: fleet invariants — odds-form split combination,
-//! bounded-inbox conservation under random interleavings, the
-//! stream→primary shard map (total ownership, determinism, handoff
-//! isolation, weighted balance), and the trace ring's overwrite-oldest
-//! overflow contract.
+//! bounded-inbox conservation under random interleavings (including
+//! node-death evictions), the stream→primary shard map (total
+//! ownership, determinism, handoff + failover isolation, weighted
+//! balance), and the trace ring's overwrite-oldest overflow contract.
 //!
 //! `HETEROEDGE_PROP_CASES` (CI's property job sets it) raises every
 //! property's case count without changing the cases that already ran.
@@ -74,10 +74,12 @@ fn prop_inbox_bounded_and_conserving() {
         let cap = g.usize_in(1, 9);
         let mut ib: BoundedInbox<u64> = BoundedInbox::new(cap);
         let mut popped = 0u64;
+        let mut evicted = 0u64;
         let steps = g.usize_in(1, 150);
         for step in 0..steps {
-            // bias toward pushes so small inboxes actually overflow
-            match g.usize_in(0, 4) {
+            // bias toward pushes so small inboxes actually overflow;
+            // the occasional evict_all models a node dying mid-run
+            match g.usize_in(0, 8) {
                 0 => {
                     if ib.pop().is_some() {
                         popped += 1;
@@ -85,6 +87,9 @@ fn prop_inbox_bounded_and_conserving() {
                 }
                 1 => {
                     let _ = ib.push_stolen(step as u64);
+                }
+                2 => {
+                    evicted += ib.evict_all().len() as u64;
                 }
                 _ => {
                     let _ = ib.push(step as u64);
@@ -103,17 +108,19 @@ fn prop_inbox_bounded_and_conserving() {
                     ib.offered, ib.accepted, ib.stolen, ib.rejected
                 ),
             )?;
-            // nothing queued is lost or double-served
+            // nothing queued is lost, double-served, or silently evicted
             prop_assert(
-                ib.accepted + ib.stolen == ib.served + ib.len() as u64,
+                ib.accepted + ib.stolen == ib.served + ib.evicted + ib.len() as u64,
                 format!(
-                    "in {} != served {} + queued {}",
+                    "in {} != served {} + evicted {} + queued {}",
                     ib.accepted + ib.stolen,
                     ib.served,
+                    ib.evicted,
                     ib.len()
                 ),
             )?;
             prop_assert(ib.served == popped, "served must track pops")?;
+            prop_assert(ib.evicted == evicted, "evicted must track evict_all")?;
         }
         Ok(())
     });
@@ -198,6 +205,59 @@ fn prop_shard_handoff_never_reshuffles_unrelated_streams() {
             )?;
         }
         Ok(())
+    });
+}
+
+/// The recovery primitive's isolation contract: failing a dead
+/// primary's streams over to the rendezvous winners among the
+/// survivors moves EXACTLY the dead primary's streams. Survivors keep
+/// their original hash-key indices, so no live stream's score — and
+/// hence no live stream's owner — can change.
+#[test]
+fn prop_shard_failover_rehomes_only_dead_primarys_streams() {
+    check("shard failover isolation", 120, |g| {
+        let p = g.usize_in(2, 6);
+        let n = g.usize_in(2, 48);
+        let seed = g.rng().next_u64();
+        let names = stream_names(n);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let weights = g.vec_f64(p, 0.2, 5.0);
+        let mut map = ShardMap::new(seed, &refs, &weights).map_err(|e| e.to_string())?;
+        let before: Vec<usize> = (0..n).map(|s| map.owner(s)).collect();
+        let dead = g.usize_in(0, p);
+        let alive: Vec<bool> = (0..p).map(|q| q != dead).collect();
+        let mut orphans = 0usize;
+        for s in 0..n {
+            if before[s] == dead {
+                orphans += 1;
+                let new = map.failover(s, &alive).map_err(|e| e.to_string())?;
+                prop_assert(
+                    new != dead && new < p,
+                    format!("stream {s} failed over to {new} (dead {dead}, p {p})"),
+                )?;
+            }
+        }
+        // survivors kept every stream they already owned
+        for s in 0..n {
+            if before[s] != dead {
+                prop_assert(
+                    map.owner(s) == before[s],
+                    format!(
+                        "live stream {s} reshuffled {} -> {} by primary {dead}'s failure",
+                        before[s],
+                        map.owner(s)
+                    ),
+                )?;
+            }
+            prop_assert(
+                map.owner(s) != dead,
+                format!("stream {s} still owned by the dead primary"),
+            )?;
+        }
+        prop_assert(
+            map.rehomed() == orphans,
+            format!("rehomed {} != orphaned {orphans}", map.rehomed()),
+        )
     });
 }
 

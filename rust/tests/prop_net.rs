@@ -2,7 +2,7 @@
 //! channel accounting, topic-matching algebra, packet codec fuzz.
 
 use heteroedge::net::mqtt::packet::{decode_varint, encode_varint, Packet, QoS};
-use heteroedge::net::mqtt::topic_matches;
+use heteroedge::net::mqtt::{filter_valid, topic_matches};
 use heteroedge::net::{shannon, Band, Channel, ChannelConfig};
 use heteroedge::testkit::{check, prop_assert};
 
@@ -121,6 +121,84 @@ fn prop_plus_matches_exactly_one_level() {
         prop_assert(
             !topic_matches(&format!("{a}/+"), &format!("{a}/{b}/z")),
             "must not span levels",
+        )
+    });
+}
+
+#[test]
+fn prop_empty_levels_pin_matcher_and_validator_agreement() {
+    // MQTT 3.1.1 §4.7.3: empty levels are real levels. The validator
+    // accepts filters containing them, and the matcher treats them like
+    // any other level: literal-compared, `+`-matchable, never elided.
+    check("empty level semantics", 60, |g| {
+        // depth ≥ 2: a lone blanked level would be the empty string,
+        // which is invalid as a filter (pinned separately below)
+        let depth = g.usize_in(2, 4);
+        let mut levels: Vec<String> = (0..depth)
+            .map(|_| format!("l{}", g.usize_in(0, 10)))
+            .collect();
+        // blank out one random level (possibly making a leading or
+        // trailing slash)
+        let blank = g.usize_in(0, depth - 1);
+        levels[blank].clear();
+        let topic = levels.join("/");
+        prop_assert(
+            filter_valid(&topic),
+            format!("{topic:?} must be a valid filter"),
+        )?;
+        prop_assert(
+            topic_matches(&topic, &topic),
+            format!("{topic:?} !~ itself"),
+        )?;
+        // `+` at the blank level matches the empty level
+        let mut plussed = levels.clone();
+        plussed[blank] = "+".to_string();
+        let f = plussed.join("/");
+        prop_assert(
+            topic_matches(&f, &topic),
+            format!("{f:?} !~ {topic:?} (+ must match an empty level)"),
+        )?;
+        // dropping the trailing empty level changes the topic: "a/" != "a"
+        if blank == depth - 1 && depth > 1 {
+            let shorter = levels[..depth - 1].join("/");
+            prop_assert(
+                !topic_matches(&shorter, &topic) && !topic_matches(&topic, &shorter),
+                format!("{shorter:?} vs {topic:?} must differ"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_valid_filters_match_their_own_literal_form() {
+    // consistency: any wildcard-free valid filter matches itself as a
+    // topic, and an invalid embedded wildcard never validates
+    check("filter/matcher consistency", 60, |g| {
+        let depth = g.usize_in(1, 5);
+        let levels: Vec<String> = (0..depth)
+            .map(|_| {
+                if g.bool() {
+                    String::new()
+                } else {
+                    format!("n{}", g.usize_in(0, 30))
+                }
+            })
+            .collect();
+        let literal = levels.join("/");
+        if literal.is_empty() {
+            prop_assert(!filter_valid(&literal), "empty string is invalid")?;
+            return Ok(());
+        }
+        prop_assert(filter_valid(&literal), format!("{literal:?} invalid"))?;
+        prop_assert(
+            topic_matches(&literal, &literal),
+            format!("{literal:?} !~ itself"),
+        )?;
+        let embedded = format!("{literal}#x");
+        prop_assert(
+            !filter_valid(&embedded),
+            format!("{embedded:?} must be invalid"),
         )
     });
 }
