@@ -85,7 +85,9 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::profile_exchange::FRAMES_TOPIC_PREFIX;
-use crate::coordinator::{Batcher, NodeHandle, NodeRuntime, Scheduler, SchedulerConfig, SimBackend};
+use crate::coordinator::{
+    Batcher, DeviceProfileMsg, NodeHandle, NodeRuntime, Scheduler, SchedulerConfig, SimBackend,
+};
 use crate::device::{DeviceKind, DeviceProfiler};
 use crate::frames::codec::{self, EncodedFrame};
 use crate::frames::{Frame, FramePool, PoolStats, SceneGenerator};
@@ -187,6 +189,14 @@ pub struct FleetConfig {
     /// the dwell (a dead owner cannot keep a stream). Default 0 — no
     /// hysteresis, byte-identical to earlier PRs.
     pub handoff_dwell_rounds: usize,
+    /// Delivery guarantee for offloaded frames. [`QoS::AtMostOnce`]
+    /// (the default) keeps the historical fire-and-forget fabric and
+    /// churn semantics byte-identical to earlier PRs. With
+    /// [`QoS::AtLeastOnce`] the MQTT fabric publishes at QoS 1 over
+    /// persistent subscriber sessions, and a killed-then-revived
+    /// auxiliary's evicted frames — queued and mid-wire — are parked
+    /// and redelivered on resume instead of counted lost (`--qos 1`).
+    pub qos: QoS,
 }
 
 impl FleetConfig {
@@ -211,6 +221,7 @@ impl FleetConfig {
             work_stealing: true,
             eager_decode: false,
             handoff_dwell_rounds: 0,
+            qos: QoS::AtMostOnce,
         }
     }
 
@@ -339,54 +350,64 @@ struct RunState {
     handoffs: u64,
     /// Fault-injection ledger; `Some` iff the run carries a `FaultPlan`.
     churn: Option<ChurnReport>,
+    /// QoS 1 only: jobs evicted from a killed auxiliary, held through
+    /// its downtime for redelivery at the scheduled revive (keyed by
+    /// node index). Always empty at [`QoS::AtMostOnce`].
+    parked: BTreeMap<usize, Vec<Job>>,
 }
 
 /// Physical MQTT work-queue fabric: one broker, a dispatcher publisher,
-/// one subscribed client per auxiliary.
+/// one subscribed client per auxiliary. Under [`QoS::AtLeastOnce`] the
+/// subscribers open persistent sessions (clean_session=false): a killed
+/// auxiliary's connection drops abruptly but its broker-side session —
+/// subscription, inflight window, backlog — survives for the revive,
+/// which resumes it (CONNACK session-present) without re-subscribing.
 struct MqttFabric {
     broker: Broker,
     publisher: Client,
-    /// Index k serves auxiliary node `k + primaries`.
-    subscribers: Vec<Client>,
+    /// Index k serves auxiliary node `k + primaries`; `None` while the
+    /// node is down under QoS 1 churn (the connection died with it).
+    subscribers: Vec<Option<Client>>,
     /// Per-aux frame topics, precomputed so the per-frame publish
     /// allocates no topic string (index k ↔ `subscribers[k]`).
     topics: Vec<String>,
     primaries: usize,
+    /// Delivery QoS for offloaded frames ([`FleetConfig::qos`]).
+    qos: QoS,
     pub delivered: u64,
 }
 
 impl MqttFabric {
-    fn start(n_nodes: usize, primaries: usize) -> Result<MqttFabric> {
+    fn start(n_nodes: usize, primaries: usize, qos: QoS) -> Result<MqttFabric> {
         let broker = Broker::start().context("starting fleet broker")?;
         let addr = broker.addr();
-        let mut subscribers = Vec::new();
-        let mut topics = Vec::new();
-        for j in primaries..n_nodes {
-            let topic = format!("{FRAMES_TOPIC_PREFIX}/node-{j}");
-            let mut c = Client::connect(addr, &format!("node-{j}"))?;
-            c.subscribe(&topic)?;
-            subscribers.push(c);
-            topics.push(topic);
-        }
-        let publisher = Client::connect(addr, "fleet-dispatcher")?;
-        Ok(MqttFabric {
+        let mut fab = MqttFabric {
             broker,
-            publisher,
-            subscribers,
-            topics,
+            publisher: Client::connect(addr, "fleet-dispatcher")?,
+            subscribers: Vec::new(),
+            topics: Vec::new(),
             primaries,
+            qos,
             delivered: 0,
-        })
+        };
+        for j in primaries..n_nodes {
+            fab.add_aux(j)?;
+        }
+        Ok(fab)
     }
 
-    /// Publish one encoded frame to an auxiliary's topic and confirm the
-    /// subscriber received it. The pooled payload bytes ride the
-    /// client's vectored write straight to the socket — no copy.
+    /// Publish one encoded frame to an auxiliary's topic at the
+    /// fabric's QoS and confirm the subscriber received it. The pooled
+    /// payload bytes ride the client's vectored write straight to the
+    /// socket — no copy.
     fn ship(&mut self, aux_node: usize, payload: &[u8]) -> Result<()> {
-        let topic = &self.topics[aux_node - self.primaries];
-        self.publisher
-            .publish(topic, payload, QoS::AtLeastOnce, false)?;
-        match self.subscribers[aux_node - self.primaries].recv_timeout(Duration::from_secs(10)) {
+        let k = aux_node - self.primaries;
+        let topic = &self.topics[k];
+        self.publisher.publish(topic, payload, self.qos, false)?;
+        let sub = self.subscribers[k]
+            .as_ref()
+            .with_context(|| format!("shipping to node-{aux_node} while its subscriber is down"))?;
+        match sub.recv_timeout(Duration::from_secs(10)) {
             Some(msg) if msg.payload.len() == payload.len() => {
                 self.delivered += 1;
                 Ok(())
@@ -400,14 +421,47 @@ impl MqttFabric {
         }
     }
 
-    /// Connect and subscribe a client for a freshly joined auxiliary.
+    /// Connect and subscribe a client for auxiliary `node`, appending
+    /// its topic slot (startup and mid-run joins). QoS 1 subscribers
+    /// ask for a persistent session.
     fn add_aux(&mut self, node: usize) -> Result<()> {
         let topic = format!("{FRAMES_TOPIC_PREFIX}/node-{node}");
-        let mut c = Client::connect(self.broker.addr(), &format!("node-{node}"))?;
+        let clean = self.qos == QoS::AtMostOnce;
+        let mut c = Client::connect_with(self.broker.addr(), &format!("node-{node}"), clean, 0)?;
         c.subscribe(&topic)?;
-        self.subscribers.push(c);
+        self.subscribers.push(Some(c));
         self.topics.push(topic);
         Ok(())
+    }
+
+    /// A killed auxiliary's subscriber drops without a DISCONNECT —
+    /// exactly how a crashed node leaves the network. Its persistent
+    /// session stays on the broker awaiting the revive.
+    fn kill_aux(&mut self, node: usize) {
+        self.subscribers[node - self.primaries] = None;
+    }
+
+    /// Reconnect a revived auxiliary with clean_session=false: the
+    /// broker must report session-present and needs no re-SUBSCRIBE —
+    /// the stored subscription (and any queued QoS 1 frames) resume.
+    fn revive_aux(&mut self, node: usize) -> Result<()> {
+        let c = Client::connect_with(self.broker.addr(), &format!("node-{node}"), false, 0)?;
+        ensure!(
+            c.session_present(),
+            "broker lost node-{node}'s persistent session across the kill"
+        );
+        self.subscribers[node - self.primaries] = Some(c);
+        Ok(())
+    }
+
+    /// Publish a node's device profile as a retained message on
+    /// `heteroedge/profile/<node>` — late subscribers (operators, fresh
+    /// joiners) immediately see the fleet's shape.
+    fn publish_profile(&mut self, node: usize, profile: &DeviceProfileMsg) -> Result<()> {
+        let topic = DeviceProfileMsg::topic(&format!("node-{node}"));
+        self.publisher
+            .publish(&topic, &profile.encode(), QoS::AtLeastOnce, true)
+            .with_context(|| format!("publishing retained profile for node-{node}"))
     }
 
     /// Sheds per subscriber client id (QoS downgrade observability).
@@ -612,7 +666,15 @@ impl Dispatcher {
             .collect();
         let fabric = match cfg.transport {
             Transport::Sim => None,
-            Transport::Mqtt => Some(MqttFabric::start(cfg.n_nodes, cfg.primaries)?),
+            Transport::Mqtt => {
+                let mut fab = MqttFabric::start(cfg.n_nodes, cfg.primaries, cfg.qos)?;
+                // every node's profile rides a retained
+                // heteroedge/profile/<node> topic from the start
+                for (j, slot) in nodes.iter().enumerate() {
+                    fab.publish_profile(j, &slot.handle.profile())?;
+                }
+                Some(fab)
+            }
         };
         let alive = vec![true; cfg.n_nodes];
         let last_handoff_round = vec![None; registry.len()];
@@ -708,18 +770,43 @@ impl Dispatcher {
                 .load(std::sync::atomic::Ordering::Relaxed),
         ));
         for (k, c) in fab.subscribers.iter().enumerate() {
+            // a down node (QoS 1 churn) has no live client to gauge
+            let Some(c) = c else { continue };
             out.push((
                 format!("mqtt_client_inbox_node_{}", fab.primaries + k),
                 c.pending() as u64,
             ));
         }
-        // per-subscriber shed counters: messages the broker dropped on a
-        // full dispatch queue (the silent QoS1→QoS0 downgrade, now
-        // counted — see docs/OBSERVABILITY.md)
+        // per-subscriber shed counters: QoS 0 messages the broker
+        // dropped on a full dispatch queue (see docs/OBSERVABILITY.md)
         for (id, n) in fab.shed_counts() {
             out.push((format!("mqtt_broker_shed_{id}"), n));
         }
+        // QoS 1 session gauges: unacked inflight window and queued
+        // backlog per session (detached persistent sessions included),
+        // plus the broker's cumulative DUP redeliveries
+        for (id, n) in fab.broker.inflight_counts() {
+            out.push((format!("mqtt_broker_inflight_{id}"), n));
+        }
+        for (id, n) in fab.broker.backlog_counts() {
+            out.push((format!("mqtt_broker_backlog_{id}"), n));
+        }
+        out.push((
+            "mqtt_broker_redelivered".to_string(),
+            fab.broker
+                .stats
+                .redelivered
+                .load(std::sync::atomic::Ordering::Relaxed),
+        ));
         out
+    }
+
+    /// Loopback address of the live MQTT broker backing this fleet
+    /// (`None` under [`Transport::Sim`]) — lets tests and sidecar tools
+    /// attach their own clients to the fabric (e.g. to read the
+    /// retained `heteroedge/profile/<node>` topics).
+    pub fn mqtt_addr(&self) -> Option<std::net::SocketAddr> {
+        self.fabric.as_ref().map(|f| f.broker.addr())
     }
 
     /// Once-per-round telemetry pulse: sample every node's device
@@ -972,6 +1059,7 @@ impl Dispatcher {
             primary_fallbacks: 0,
             handoffs: 0,
             churn: self.fault_plan.is_some().then(ChurnReport::default),
+            parked: BTreeMap::new(),
         };
 
         // baseline the EWMA deltas at the run's starting counters
@@ -1049,6 +1137,26 @@ impl Dispatcher {
         // still execute (pipelined mode only; batched drains each round)
         while let Some(ev) = st.events.pop() {
             self.dispatch_event(ev.payload, ev.at, None, &mut st)?;
+        }
+        // at-least-once still has a horizon: frames parked for a revive
+        // that never fired are genuinely lost — swept here so the
+        // conservation invariant (completed + lost = admitted - deduped)
+        // holds. Defensive: every validated plan's revive does fire.
+        let parked = std::mem::take(&mut st.parked);
+        for (node, jobs) in parked {
+            for job in jobs {
+                st.stream_reports[job.stream].lost += 1;
+                let churn = st.churn.as_mut().expect("parked implies a fault plan");
+                churn.frames_lost += 1;
+                self.tracer.instant(
+                    EventKind::FrameLost,
+                    self.nodes[node].handle.now(),
+                    job.stream as u32,
+                    job.enc.id as u32,
+                    node as u32,
+                    0.0,
+                );
+            }
         }
         ensure!(
             self.nodes.iter().all(|n| n.inbox.is_empty()),
@@ -1188,6 +1296,14 @@ impl Dispatcher {
                 if node < p_count {
                     self.rehome_dead_primary(node, at, st)?;
                 } else {
+                    // QoS 1 over the real fabric: the dead node's MQTT
+                    // connection drops with it; the broker keeps its
+                    // persistent session for the revive
+                    if self.cfg.qos == QoS::AtLeastOnce {
+                        if let Some(fab) = self.fabric.as_mut() {
+                            fab.kill_aux(node);
+                        }
+                    }
                     self.recover_dead_aux(node, at, st)?;
                 }
             }
@@ -1199,6 +1315,17 @@ impl Dispatcher {
                 self.nodes[node].handle.sync_to(at);
                 self.tracer
                     .instant(EventKind::NodeUp, at, NO_ID, NO_ID, node as u32, 0.0);
+                if node >= p_count {
+                    // resume the persistent session first (the broker
+                    // must report session-present), then re-ship every
+                    // frame parked through the downtime
+                    if self.cfg.qos == QoS::AtLeastOnce {
+                        if let Some(fab) = self.fabric.as_mut() {
+                            fab.revive_aux(node)?;
+                        }
+                    }
+                    self.redeliver_parked(node, at, st)?;
+                }
             }
             FaultAction::JoinAux => {
                 churn.aux_joins += 1;
@@ -1239,15 +1366,30 @@ impl Dispatcher {
         Ok(())
     }
 
-    /// An auxiliary died: evict its queued frames. Frames still on the
-    /// wire (`ready > at`) die with the node; landed frames re-enter
-    /// the cheapest-first steal path across live siblings and fall back
-    /// to the owning primary when every sibling refuses.
+    /// An auxiliary died: evict its queued frames. At the default
+    /// [`QoS::AtMostOnce`], frames still on the wire (`ready > at`) die
+    /// with the node and landed frames re-enter the cheapest-first
+    /// steal path across live siblings, falling back to the owning
+    /// primary when every sibling refuses. At [`QoS::AtLeastOnce`]
+    /// nothing is lost: if the fault plan revives this node later, the
+    /// whole eviction parks for session-resume redelivery; otherwise
+    /// every frame — mid-wire included — re-enters the steal path,
+    /// charged a fresh transfer.
     fn recover_dead_aux(&mut self, dead: usize, at: f64, st: &mut RunState) -> Result<()> {
         let p_count = self.cfg.primaries;
         let pool = self.pool.clone();
         let jobs = self.nodes[dead].inbox.evict_all();
         if jobs.is_empty() {
+            return Ok(());
+        }
+        let qos1 = self.cfg.qos == QoS::AtLeastOnce;
+        if qos1
+            && self
+                .fault_plan
+                .as_ref()
+                .is_some_and(|p| p.has_future_revive(dead, at))
+        {
+            st.parked.entry(dead).or_default().extend(jobs);
             return Ok(());
         }
         // live siblings cheapest-first by the admission-path secs/image
@@ -1266,8 +1408,8 @@ impl Dispatcher {
         let mut recovery_end = at;
         for mut job in jobs {
             let s = job.stream;
-            if job.ready > at {
-                // mid-transfer: the wire died with the node
+            if job.ready > at && !qos1 {
+                // mid-transfer at most-once: the wire died with the node
                 st.stream_reports[s].lost += 1;
                 let churn = st.churn.as_mut().expect("fault implies ledger");
                 churn.frames_lost += 1;
@@ -1368,6 +1510,68 @@ impl Dispatcher {
         Ok(())
     }
 
+    /// A revived auxiliary resumes its session: every frame parked
+    /// through its downtime is re-shipped — a fresh serialized transfer
+    /// on the owning primary's pairwise link, and under the Mqtt
+    /// transport a fresh publish through the revived subscriber's
+    /// resumed session — then lands back in the node's inbox. This is
+    /// the at-least-once guarantee at fleet level: a kill with a
+    /// scheduled revive loses nothing, queued or mid-wire.
+    fn redeliver_parked(&mut self, node: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let Some(jobs) = st.parked.remove(&node) else {
+            return Ok(());
+        };
+        let p_count = self.cfg.primaries;
+        let k = node - p_count;
+        let mut xfer = 0.0f64;
+        let mut first_ready: Option<f64> = None;
+        let mut redelivery_end = at;
+        for mut job in jobs {
+            let s = job.stream;
+            let owner = self.shard.owner(s);
+            let w = self.pairs[owner][k].link.send(job.enc.wire_bytes() as u64);
+            st.offload_bytes += job.enc.wire_bytes() as u64;
+            xfer += w;
+            job.ready = at + xfer;
+            let ready = job.ready;
+            let enc_id = job.enc.id as u32;
+            let wire = job.enc.wire_bytes() as f64;
+            if let Some(fab) = self.fabric.as_mut() {
+                fab.ship(node, &job.enc.bytes)?;
+                self.tracer
+                    .instant(EventKind::Publish, ready, s as u32, enc_id, node as u32, wire);
+            }
+            ensure!(
+                self.nodes[node].inbox.push(job).is_ok(),
+                "revived inbox refused a parked frame"
+            );
+            self.tracer
+                .instant(EventKind::Redeliver, ready, s as u32, enc_id, node as u32, wire);
+            let churn = st.churn.as_mut().expect("fault implies ledger");
+            churn.frames_redelivered += 1;
+            redelivery_end = redelivery_end.max(ready);
+            if first_ready.is_none() {
+                first_ready = Some(ready);
+            }
+        }
+        match self.cfg.drain {
+            DrainMode::Pipelined => {
+                if let Some(t) = first_ready {
+                    if !st.busy[k] {
+                        st.busy[k] = true;
+                        st.events.schedule(t, FleetEvent::Service { aux: k });
+                    }
+                }
+            }
+            // legacy comparator: the node waits out the redelivery,
+            // then executes at round close
+            DrainMode::Batched => self.nodes[node].handle.sync_to(redelivery_end),
+        }
+        let churn = st.churn.as_mut().expect("fault implies ledger");
+        churn.recovery_time_s += redelivery_end - at;
+        Ok(())
+    }
+
     /// A fresh auxiliary joins mid-run: append one node slot and one
     /// pair column per primary, using the constructor's exact seeding
     /// formulas so surviving nodes' RNG streams are untouched —
@@ -1420,6 +1624,7 @@ impl Dispatcher {
         }
         if let Some(fab) = self.fabric.as_mut() {
             fab.add_aux(j)?;
+            fab.publish_profile(j, &self.nodes[j].handle.profile())?;
         }
         Ok(j)
     }

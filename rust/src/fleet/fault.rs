@@ -143,6 +143,16 @@ impl FaultPlan {
         Ok(())
     }
 
+    /// Does the schedule revive `node` strictly after instant `after`?
+    /// The dispatcher's QoS 1 path parks a dead auxiliary's evicted
+    /// frames for redelivery exactly when this holds — otherwise the
+    /// node is gone for good and the frames re-enter the steal path.
+    pub fn has_future_revive(&self, node: usize, after: f64) -> bool {
+        self.events.iter().any(|ev| {
+            ev.at > after && matches!(ev.action, FaultAction::Revive { node: n } if n == node)
+        })
+    }
+
     /// The stock churn scenario, derived deterministically from the
     /// fleet seed: kill an auxiliary a third of the way in and revive
     /// it later, kill a second auxiliary for good if the pool is deep
@@ -256,6 +266,21 @@ mod tests {
         // non-finite time
         let p = FaultPlan { events: vec![kill(2, f64::NAN)], mobility: None };
         assert!(p.validate(&c).is_err());
+    }
+
+    #[test]
+    fn has_future_revive_matches_node_and_time() {
+        let revive = |node, at| FaultEvent { at, action: FaultAction::Revive { node } };
+        let kill = |node, at| FaultEvent { at, action: FaultAction::Kill { node } };
+        let p = FaultPlan {
+            events: vec![kill(2, 5.0), revive(2, 9.0), kill(3, 10.0)],
+            mobility: None,
+        };
+        assert!(p.has_future_revive(2, 5.0), "revive at 9.0 is ahead of the kill");
+        assert!(!p.has_future_revive(2, 9.0), "strictly-later semantics");
+        assert!(!p.has_future_revive(3, 10.0), "node 3 never revives");
+        assert!(!p.has_future_revive(4, 0.0), "unknown node");
+        assert!(!FaultPlan::default().has_future_revive(0, 0.0));
     }
 
     #[test]

@@ -149,6 +149,10 @@ pub struct ChurnReport {
     pub frames_recovered: u64,
     /// Evicted frames lost mid-transfer — the wire died with the node.
     pub frames_lost: u64,
+    /// Frames parked through a dead auxiliary's downtime and re-shipped
+    /// when it revived (the QoS 1 at-least-once path; 0 under QoS 0,
+    /// where eviction recovers or loses frames immediately).
+    pub frames_redelivered: u64,
     /// Σ over kill events of (fault instant → last recovered frame
     /// re-placed/served), seconds.
     pub recovery_time_s: f64,
@@ -252,6 +256,7 @@ impl FleetReport {
             reg.inc_static("fleet.churn.rehomed_streams", c.rehomed_streams);
             reg.inc_static("fleet.churn.frames_recovered", c.frames_recovered);
             reg.inc_static("fleet.churn.frames_lost", c.frames_lost);
+            reg.inc_static("fleet.churn.frames_redelivered", c.frames_redelivered);
             reg.set_static("fleet.churn.recovery_time_s", c.recovery_time_s);
         }
     }
@@ -330,7 +335,7 @@ impl FleetReport {
             out.push_str(&format!(
                 "churn: {} fault events ({} kills, {} revives, {} joins) | \
                  rehomed {} streams | recovered {} frames | lost {} frames | \
-                 recovery {:.3} s\n",
+                 redelivered {} frames | recovery {:.3} s\n",
                 c.fault_events,
                 c.node_kills,
                 c.node_revives,
@@ -338,6 +343,7 @@ impl FleetReport {
                 c.rehomed_streams,
                 c.frames_recovered,
                 c.frames_lost,
+                c.frames_redelivered,
                 c.recovery_time_s,
             ));
         }
@@ -552,6 +558,7 @@ mod tests {
             rehomed_streams: 3,
             frames_recovered: 7,
             frames_lost: 2,
+            frames_redelivered: 5,
             recovery_time_s: 1.5,
         });
         let text = r.render();
@@ -561,12 +568,14 @@ mod tests {
         );
         assert!(text.contains("rehomed 3 streams"), "{text}");
         assert!(text.contains("lost 2 frames"), "{text}");
+        assert!(text.contains("redelivered 5 frames"), "{text}");
         // fault-free rendering carries no churn section at all
         assert!(!sample().render().contains("churn:"));
 
         let mut reg = Registry::new();
         r.to_registry(&mut reg);
         assert_eq!(reg.counter("fleet.churn.frames_lost"), 2);
+        assert_eq!(reg.counter("fleet.churn.frames_redelivered"), 5);
         assert_eq!(reg.counter("fleet.churn.rehomed_streams"), 3);
         assert_eq!(reg.gauge("fleet.churn.recovery_time_s"), Some(1.5));
     }

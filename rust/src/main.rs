@@ -7,7 +7,7 @@
 //! heteroedge fleet   --nodes <N> --streams <M> [--primaries <P>] [--rounds <k>]
 //!                    [--rate <f>] [--inbox <cap>] [--drain batched|pipelined]
 //!                    [--no-steal] [--masked] [--dedup] [--no-mqtt]
-//!                    [--scenario none|churn] [--dwell <rounds>]
+//!                    [--qos 0|1] [--scenario none|churn] [--dwell <rounds>]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
 //!                    [--trace <out.json>] [--trace-capacity <events>]
 //!                    [--metrics-out <out.prom>]
@@ -21,6 +21,7 @@ use heteroedge::coordinator::{RunConfig, SplitMode, Testbed};
 use heteroedge::experiments::{self, Scale};
 use heteroedge::fleet::{Dispatcher, DrainMode, FaultPlan, FleetConfig, Transport};
 use heteroedge::metrics::Registry;
+use heteroedge::net::mqtt::QoS;
 use heteroedge::net::Band;
 use heteroedge::solver::HeteroEdgeSolver;
 use heteroedge::workload::Workload;
@@ -122,6 +123,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "batched" => DrainMode::Batched,
         _ => DrainMode::Pipelined,
     };
+    // --qos 1: at-least-once offload delivery over persistent MQTT
+    // sessions; churned runs park and redeliver a revived auxiliary's
+    // frames instead of counting them lost
+    cfg.qos = match args.opt_choice("qos", &["0", "1"], "0")? {
+        "1" => QoS::AtLeastOnce,
+        _ => QoS::AtMostOnce,
+    };
     cfg.work_stealing = !args.flag("no-steal");
     // handoff hysteresis: a re-homed stream dwells this many rounds
     // before another voluntary migration (failure rehomes always apply)
@@ -136,14 +144,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         format!("{} primaries", cfg.primaries)
     };
     println!(
-        "fleet: {} nodes ({} + {} auxiliaries), {} streams, transport {:?}, {} drain{}",
+        "fleet: {} nodes ({} + {} auxiliaries), {} streams, transport {:?}, {} drain{}{}",
         cfg.n_nodes,
         primary_label,
         cfg.n_nodes.saturating_sub(cfg.primaries),
         cfg.n_streams,
         cfg.transport,
         cfg.drain.name(),
-        if cfg.work_stealing { "" } else { ", stealing off" }
+        if cfg.work_stealing { "" } else { ", stealing off" },
+        // the default header stays textually identical to QoS 0 releases
+        if cfg.qos == QoS::AtLeastOnce {
+            ", qos 1 at-least-once"
+        } else {
+            ""
+        }
     );
     // observability taps: --trace arms the deterministic lineage tracer
     // (Chrome trace-event JSON), --metrics-out dumps the registry as

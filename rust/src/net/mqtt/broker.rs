@@ -1,66 +1,142 @@
-//! The broker: TCP listener, one reader thread per connection, shared
-//! subscription registry, retained messages — and a bounded per-connection
-//! dispatch queue so one slow subscriber cannot head-of-line-block the
-//! publisher's connection thread.
+//! The broker: TCP listener, one reader thread per connection, a
+//! per-client-id session store, retained messages — and a bounded
+//! per-connection dispatch queue so one slow subscriber cannot
+//! head-of-line-block the publisher's connection thread.
 //!
 //! Every connection gets exactly one writer thread that owns the socket's
 //! write half; all packets (control acks and routed PUBLISHes) funnel
-//! through its queue, so writes never interleave mid-packet. Routing uses
-//! `try_send`: a full queue drops the message on the QoS-0
-//! broker→subscriber leg and counts the shed in
-//! [`BrokerStats::backpressure_dropped`] (observable from tests/benches,
-//! like the other broker stats).
+//! through its queue, so writes never interleave mid-packet.
 //!
-//! Fan-out is zero-copy: a routed PUBLISH is encoded once and the
-//! resulting buffer is shared (`Arc`) across every matching subscriber's
-//! dispatch queue — the seed cloned the encoded frame per subscriber.
-//! The encode itself borrows the published payload (`Cow`), so the only
-//! copy on the broker data path is the single payload→wire-frame encode.
+//! **Connection identity is an epoch, not a client id.** Each accepted
+//! connection draws a unique `u64` epoch; the registry maps epoch →
+//! connection and client id → session, and a session records which epoch
+//! is currently attached. A second CONNECT with the same client id takes
+//! the session over (MQTT 3.1.1 §3.1.4: the old connection is shut down),
+//! and the old connection's late cleanup checks the attached epoch before
+//! detaching — so a half-open socket dying after a reconnect can no
+//! longer tear down the *new* connection's subscriptions.
+//!
+//! **Delivery follows the publish QoS.** QoS 0 keeps the zero-copy
+//! fan-out: one encode, the buffer `Arc`-shared across every matching
+//! connection's dispatch queue, `try_send` shedding (counted per
+//! connection) when a queue is full. QoS 1 routes through the session's
+//! inflight window instead: each delivery gets a real packet id
+//! (1..=65535, never reused while unacknowledged), a PUBACK retires it,
+//! a full window or a detached persistent session queues the message,
+//! and a resumed session (CONNECT clean_session=false) gets every
+//! unacknowledged message redelivered with the DUP flag before the
+//! backlog drains. Keep-alive expiry (1.5× the CONNECT interval, §3.1.2.10)
+//! reaps half-open connections that stop sending.
 
 use std::borrow::Cow;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::BufReader;
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::packet::{Packet, QoS};
+use super::session::{DedupRing, PacketIds};
 use super::topic::{filter_valid, topic_matches};
 
 /// Depth of each connection's dispatch queue (packets). Beyond this the
-/// broker sheds load instead of blocking the publishing connection.
+/// broker sheds load (QoS 0) or defers to the session backlog (QoS 1)
+/// instead of blocking the publishing connection.
 pub const DISPATCH_QUEUE_DEPTH: usize = 1024;
 
-/// Registered subscriber: its filter and the owning connection's
-/// dispatch-queue handle.
-struct Subscriber {
+/// Maximum unacknowledged QoS 1 deliveries outstanding per session.
+pub const INFLIGHT_WINDOW: usize = 32;
+
+/// Maximum QoS 1 messages a session backlog holds (window-full or
+/// detached-session queueing). Past this the newest message is dropped
+/// and counted in [`BrokerStats::backpressure_dropped`].
+pub const SESSION_BACKLOG_LIMIT: usize = 8192;
+
+/// A queued QoS 1 application message awaiting delivery.
+struct OutMsg {
+    topic: String,
+    payload: Arc<Vec<u8>>,
+    retain: bool,
+}
+
+/// A QoS 1 delivery sent to the attached connection and not yet PUBACKed.
+struct Inflight {
+    packet_id: u16,
+    msg: OutMsg,
+}
+
+/// Per-client-id session state. Created on CONNECT; survives disconnects
+/// when clean_session=false, discarded otherwise.
+struct Session {
+    /// CONNECT clean_session flag of the most recent attach.
+    clean: bool,
+    /// Epoch of the currently attached connection, if any.
+    attached: Option<u64>,
+    /// Deduplicated subscription filters (re-subscribing replaces).
+    filters: Vec<String>,
+    ids: PacketIds,
+    /// Sent, unacknowledged QoS 1 deliveries (redelivered with DUP on
+    /// session resume).
+    inflight: VecDeque<Inflight>,
+    /// Not-yet-sent QoS 1 backlog: window-full overflow and messages
+    /// routed while the session was detached.
+    pending: VecDeque<OutMsg>,
+    /// Recently seen inbound publisher packet ids (DUP dedup).
+    seen: DedupRing,
+}
+
+impl Session {
+    fn fresh(clean: bool) -> Session {
+        Session {
+            clean,
+            attached: None,
+            filters: Vec::new(),
+            ids: PacketIds::new(),
+            inflight: VecDeque::new(),
+            pending: VecDeque::new(),
+            seen: DedupRing::default(),
+        }
+    }
+
+    fn matches(&self, topic: &str) -> bool {
+        self.filters.iter().any(|f| topic_matches(f, topic))
+    }
+}
+
+/// Live connection state, keyed by epoch in the registry.
+struct ConnHandle {
     client_id: String,
-    filter: String,
     queue: SyncSender<Arc<Vec<u8>>>,
-    /// Cleared by the writer thread when the socket dies; routing prunes
-    /// dead entries lazily.
+    /// Cleared by the writer thread when the socket dies; routing skips
+    /// dead connections.
     alive: Arc<AtomicBool>,
-    /// Packets sitting in this connection's dispatch queue right now
-    /// (incremented on enqueue, decremented when the writer picks one
-    /// up). Exported as a per-connection gauge via
-    /// [`Broker::queue_depths`].
+    /// Packets sitting in this connection's dispatch queue right now.
     depth: Arc<AtomicU64>,
-    /// Messages this connection lost to a full dispatch queue
-    /// (cumulative). The broker→subscriber leg is QoS 0 regardless of
-    /// the publisher's QoS, so these sheds are otherwise silent —
-    /// exported per connection via [`Broker::shed_counts`].
+    /// QoS 0 messages this connection lost to a full dispatch queue.
     shed: Arc<AtomicU64>,
+    /// Milliseconds (since broker start) of the last packet read from
+    /// this connection — the keep-alive freshness stamp.
+    last_seen: Arc<AtomicU64>,
+    /// CONNECT keep-alive interval; 0 disables expiry.
+    keep_alive_secs: u16,
+    /// Clone of the socket, for forced shutdown on takeover or expiry.
+    stream: TcpStream,
 }
 
 #[derive(Default)]
 struct Shared {
-    subscribers: Vec<Subscriber>,
+    /// client id → session (subscriptions, QoS 1 windows, dedup).
+    sessions: HashMap<String, Session>,
+    /// epoch → live connection.
+    conns: HashMap<u64, ConnHandle>,
     /// topic -> retained payload (+qos)
     retained: HashMap<String, (Vec<u8>, QoS)>,
+    next_epoch: u64,
 }
 
 /// Broker statistics (observable from tests/benches).
@@ -70,11 +146,17 @@ pub struct BrokerStats {
     pub published: AtomicU64,
     pub delivered: AtomicU64,
     pub bytes_routed: AtomicU64,
-    /// Messages shed because a subscriber's dispatch queue was full.
+    /// Messages shed because a subscriber's dispatch queue (QoS 0) or
+    /// session backlog (QoS 1) was full.
     pub backpressure_dropped: AtomicU64,
     /// Deepest any connection's dispatch queue has been (packets) —
     /// the headroom-vs-[`DISPATCH_QUEUE_DEPTH`] signal.
     pub queue_peak: AtomicU64,
+    /// QoS 1 deliveries re-sent with the DUP flag to a resumed session.
+    pub redelivered: AtomicU64,
+    /// Inbound QoS 1 publishes suppressed as duplicates (DUP set, packet
+    /// id already seen) — acked but not routed again.
+    pub dup_drops: AtomicU64,
 }
 
 /// An MQTT-like broker bound to a local TCP port.
@@ -84,6 +166,84 @@ pub struct Broker {
     pub stats: Arc<BrokerStats>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    housekeeper: Option<JoinHandle<()>>,
+}
+
+/// Encode one QoS 1 delivery (header + payload in one buffer).
+fn encode_qos1(msg: &OutMsg, packet_id: u16, dup: bool) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(msg.topic.len() + msg.payload.len() + 9);
+    Packet::encode_publish_header(
+        &msg.topic,
+        msg.payload.len(),
+        QoS::AtLeastOnce,
+        packet_id,
+        msg.retain,
+        dup,
+        &mut buf,
+    );
+    buf.extend_from_slice(&msg.payload);
+    buf
+}
+
+/// Enqueue an encoded packet on a connection's dispatch queue, keeping
+/// the depth/peak/delivered accounting. Returns false if the queue was
+/// full or the writer is gone (the caller decides shed vs. defer).
+fn enqueue(conn: &ConnHandle, bytes: Arc<Vec<u8>>, stats: &BrokerStats) -> bool {
+    let n = bytes.len() as u64;
+    match conn.queue.try_send(bytes) {
+        Ok(()) => {
+            let d = conn.depth.fetch_add(1, Ordering::Relaxed) + 1;
+            stats.queue_peak.fetch_max(d, Ordering::Relaxed);
+            stats.delivered.fetch_add(1, Ordering::Relaxed);
+            stats.bytes_routed.fetch_add(n, Ordering::Relaxed);
+            true
+        }
+        Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => false,
+    }
+}
+
+/// Move session backlog into the inflight window while there is room,
+/// assigning fresh packet ids and enqueueing on the attached connection.
+fn flush_session(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats) {
+    if !conn.alive.load(Ordering::Relaxed) {
+        return;
+    }
+    while sess.inflight.len() < INFLIGHT_WINDOW {
+        let Some(msg) = sess.pending.pop_front() else {
+            break;
+        };
+        let inflight = &sess.inflight;
+        let Some(pid) = sess
+            .ids
+            .assign(|id| inflight.iter().any(|i| i.packet_id == id))
+        else {
+            sess.pending.push_front(msg);
+            break;
+        };
+        let bytes = Arc::new(encode_qos1(&msg, pid, false));
+        if enqueue(conn, bytes, stats) {
+            sess.inflight.push_back(Inflight {
+                packet_id: pid,
+                msg,
+            });
+        } else {
+            // dispatch queue full: leave the message queued, retry on
+            // the next PUBACK or route — QoS 1 never sheds here
+            sess.pending.push_front(msg);
+            break;
+        }
+    }
+}
+
+/// Redeliver every unacknowledged inflight message (same packet id,
+/// DUP=1) to a freshly resumed session's connection.
+fn redeliver_inflight(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats) {
+    for inf in &sess.inflight {
+        let bytes = Arc::new(encode_qos1(&inf.msg, inf.packet_id, true));
+        if enqueue(conn, bytes, stats) {
+            stats.redelivered.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 impl Broker {
@@ -94,6 +254,7 @@ impl Broker {
         let shared = Arc::new(Mutex::new(Shared::default()));
         let stats = Arc::new(BrokerStats::default());
         let stop = Arc::new(AtomicBool::new(false));
+        let t0 = Instant::now();
 
         let accept_shared = shared.clone();
         let accept_stats = stats.clone();
@@ -112,8 +273,39 @@ impl Broker {
                     let _ = std::thread::Builder::new()
                         .name("mqtt-broker-conn".into())
                         .spawn(move || {
-                            let _ = Self::serve_connection(stream, sh, st);
+                            let _ = Self::serve_connection(stream, sh, st, t0);
                         });
+                }
+            })?;
+
+        // Keep-alive reaper: a connection that advertised a keep-alive
+        // and then goes silent for 1.5× the interval (§3.1.2.10) gets
+        // its socket shut down; its reader thread then runs the normal
+        // cleanup path.
+        let hk_shared = shared.clone();
+        let hk_stop = stop.clone();
+        let housekeeper = std::thread::Builder::new()
+            .name("mqtt-broker-keepalive".into())
+            .spawn(move || {
+                while !hk_stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(100));
+                    let now_ms = t0.elapsed().as_millis() as u64;
+                    let expired: Vec<TcpStream> = {
+                        let sh = hk_shared.lock().unwrap();
+                        sh.conns
+                            .values()
+                            .filter(|c| {
+                                c.keep_alive_secs > 0
+                                    && c.alive.load(Ordering::Relaxed)
+                                    && now_ms.saturating_sub(c.last_seen.load(Ordering::Relaxed))
+                                        > c.keep_alive_secs as u64 * 1500
+                            })
+                            .filter_map(|c| c.stream.try_clone().ok())
+                            .collect()
+                    };
+                    for s in expired {
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
                 }
             })?;
 
@@ -123,6 +315,7 @@ impl Broker {
             stats,
             stop,
             accept_thread: Some(accept_thread),
+            housekeeper: Some(housekeeper),
         })
     }
 
@@ -135,6 +328,7 @@ impl Broker {
         stream: TcpStream,
         shared: Arc<Mutex<Shared>>,
         stats: Arc<BrokerStats>,
+        t0: Instant,
     ) -> Result<()> {
         let mut reader = BufReader::new(stream.try_clone()?);
 
@@ -142,14 +336,16 @@ impl Broker {
         // the socket. Control packets from this connection's reader loop
         // use a blocking `send`; PUBLISH routing from other connections
         // uses `try_send` (see `route`). Queued buffers are shared, not
-        // owned: a fan-out to N subscribers enqueues N refs to one encode.
+        // owned: a QoS 0 fan-out to N subscribers enqueues N refs to one
+        // encode.
         let (tx, rx) = sync_channel::<Arc<Vec<u8>>>(DISPATCH_QUEUE_DEPTH);
         let alive = Arc::new(AtomicBool::new(true));
         let depth = Arc::new(AtomicU64::new(0));
         let shed = Arc::new(AtomicU64::new(0));
+        let last_seen = Arc::new(AtomicU64::new(t0.elapsed().as_millis() as u64));
         let writer_alive = alive.clone();
         let writer_depth = depth.clone();
-        let mut writer = stream;
+        let mut writer = stream.try_clone()?;
         let writer_thread = std::thread::Builder::new()
             .name("mqtt-broker-writer".into())
             .spawn(move || {
@@ -180,21 +376,91 @@ impl Broker {
         };
 
         // The serving loop runs in a closure so that cleanup below
-        // (subscription removal + writer join) covers every exit path.
-        let mut client_id: Option<String> = None;
+        // (session detach + writer join) covers every exit path.
+        let mut identity: Option<(String, u64)> = None;
         let result = (|| -> Result<()> {
-            let cid = match Packet::read_from(&mut reader)? {
-                Packet::Connect { client_id } => client_id,
+            let (cid, clean, keep_alive_secs) = match Packet::read_from(&mut reader)? {
+                Packet::Connect {
+                    client_id,
+                    clean_session,
+                    keep_alive_secs,
+                } => (client_id, clean_session, keep_alive_secs),
                 other => anyhow::bail!("expected CONNECT, got {other:?}"),
             };
-            client_id = Some(cid.clone());
-            send_ctl(Packet::ConnAck)?;
+
+            let (epoch, session_present) = {
+                let mut guard = shared.lock().unwrap();
+                let sh = &mut *guard;
+                let epoch = sh.next_epoch;
+                sh.next_epoch += 1;
+
+                // §3.1.4 takeover: a second CONNECT with the same client
+                // id disconnects the old connection. Detach it here (so
+                // its late cleanup, keyed by epoch, becomes a no-op) and
+                // shut its socket down.
+                if let Some(old) = sh.sessions.get(&cid).and_then(|s| s.attached) {
+                    if let Some(oldc) = sh.conns.remove(&old) {
+                        oldc.alive.store(false, Ordering::Relaxed);
+                        let _ = oldc.stream.shutdown(Shutdown::Both);
+                    }
+                }
+
+                let session_present = if clean {
+                    // clean start discards any stored state
+                    sh.sessions.insert(cid.clone(), Session::fresh(true));
+                    false
+                } else {
+                    let present = sh.sessions.contains_key(&cid);
+                    sh.sessions
+                        .entry(cid.clone())
+                        .or_insert_with(|| Session::fresh(false))
+                        .clean = false;
+                    present
+                };
+                let sess = sh.sessions.get_mut(&cid).expect("session just ensured");
+                sess.attached = Some(epoch);
+
+                sh.conns.insert(
+                    epoch,
+                    ConnHandle {
+                        client_id: cid.clone(),
+                        queue: tx.clone(),
+                        alive: alive.clone(),
+                        depth: depth.clone(),
+                        shed: shed.clone(),
+                        last_seen: last_seen.clone(),
+                        keep_alive_secs,
+                        stream: stream.try_clone()?,
+                    },
+                );
+                (epoch, session_present)
+            };
+            identity = Some((cid.clone(), epoch));
+            send_ctl(Packet::ConnAck {
+                session_present,
+                return_code: 0,
+            })?;
+
+            // Session resume: redeliver the unacknowledged window with
+            // DUP set, then start draining the offline backlog — all
+            // ordered after the CONNACK through the dispatch queue.
+            if session_present {
+                let mut guard = shared.lock().unwrap();
+                let sh = &mut *guard;
+                if let Some(sess) = sh.sessions.get_mut(&cid) {
+                    if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
+                        redeliver_inflight(sess, conn, &stats);
+                        flush_session(sess, conn, &stats);
+                    }
+                }
+            }
 
             loop {
                 let pkt = match Packet::read_from(&mut reader) {
                     Ok(p) => p,
                     Err(_) => return Ok(()), // peer went away
                 };
+                last_seen.store(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
                 match pkt {
                     Packet::Subscribe { packet_id, filter } => {
                         if !filter_valid(&filter) {
@@ -202,14 +468,16 @@ impl Broker {
                         }
                         let retained: Vec<(String, Vec<u8>, QoS)> = {
                             let mut sh = shared.lock().unwrap();
-                            sh.subscribers.push(Subscriber {
-                                client_id: cid.clone(),
-                                filter: filter.clone(),
-                                queue: tx.clone(),
-                                alive: alive.clone(),
-                                depth: depth.clone(),
-                                shed: shed.clone(),
-                            });
+                            let sess = sh
+                                .sessions
+                                .get_mut(&cid)
+                                .context("session vanished mid-connection")?;
+                            // replace, don't append: re-subscribing to a
+                            // filter this session already holds is a
+                            // no-op, never a duplicate registry entry
+                            if !sess.filters.contains(&filter) {
+                                sess.filters.push(filter.clone());
+                            }
                             sh.retained
                                 .iter()
                                 .filter(|(t, _)| topic_matches(&filter, t))
@@ -218,15 +486,39 @@ impl Broker {
                         };
                         send_ctl(Packet::SubAck { packet_id })?;
                         // deliver retained messages to the new subscriber
-                        // (in queue order, after the SUBACK)
+                        // (in queue order, after the SUBACK). QoS 1
+                        // replays ride the session's inflight window —
+                        // real packet ids, PUBACK-tracked — never a
+                        // fabricated id 0.
                         for (topic, payload, qos) in retained {
-                            let _ = send_ctl(Packet::Publish {
-                                topic,
-                                payload: payload.into(),
-                                qos,
-                                packet_id: 0,
-                                retain: true,
-                            });
+                            match qos {
+                                QoS::AtMostOnce => {
+                                    let _ = send_ctl(Packet::Publish {
+                                        topic,
+                                        payload: payload.into(),
+                                        qos,
+                                        packet_id: 0,
+                                        retain: true,
+                                        dup: false,
+                                    });
+                                }
+                                QoS::AtLeastOnce => {
+                                    let mut guard = shared.lock().unwrap();
+                                    let sh = &mut *guard;
+                                    if let Some(sess) = sh.sessions.get_mut(&cid) {
+                                        sess.pending.push_back(OutMsg {
+                                            topic,
+                                            payload: Arc::new(payload),
+                                            retain: true,
+                                        });
+                                        if let Some(conn) =
+                                            sess.attached.and_then(|e| sh.conns.get(&e))
+                                        {
+                                            flush_session(sess, conn, &stats);
+                                        }
+                                    }
+                                }
+                            }
                         }
                     }
                     Packet::Publish {
@@ -235,32 +527,76 @@ impl Broker {
                         qos,
                         packet_id,
                         retain,
+                        dup,
                     } => {
                         stats.published.fetch_add(1, Ordering::Relaxed);
+                        // DUP dedup: a retransmitted QoS 1 publish whose
+                        // packet id this session already routed is acked
+                        // again but routed once
+                        let mut duplicate = false;
+                        if qos == QoS::AtLeastOnce {
+                            let mut sh = shared.lock().unwrap();
+                            if let Some(sess) = sh.sessions.get_mut(&cid) {
+                                if dup && sess.seen.contains(packet_id) {
+                                    duplicate = true;
+                                    stats.dup_drops.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    sess.seen.insert(packet_id);
+                                }
+                            }
+                        }
                         // ack before routing — and before taking the shared
                         // lock, so a full own-queue can't stall the registry
                         if qos == QoS::AtLeastOnce {
                             send_ctl(Packet::PubAck { packet_id })?;
                         }
-                        Self::route(&shared, &stats, topic, payload.into_owned(), qos, retain);
+                        if !duplicate {
+                            Self::route(&shared, &stats, topic, payload.into_owned(), qos, retain);
+                        }
                     }
                     Packet::PingReq => send_ctl(Packet::PingResp)?,
                     Packet::Disconnect => return Ok(()),
-                    Packet::PubAck { .. } => {} // qos1 ack from a subscriber leg
+                    Packet::PubAck { packet_id } => {
+                        // subscriber acked a QoS 1 delivery: retire it
+                        // from the inflight window and refill from the
+                        // backlog
+                        let mut guard = shared.lock().unwrap();
+                        let sh = &mut *guard;
+                        if let Some(sess) = sh.sessions.get_mut(&cid) {
+                            if let Some(pos) =
+                                sess.inflight.iter().position(|i| i.packet_id == packet_id)
+                            {
+                                sess.inflight.remove(pos);
+                            }
+                            if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
+                                flush_session(sess, conn, &stats);
+                            }
+                        }
+                    }
                     other => anyhow::bail!("unexpected packet {other:?}"),
                 }
             }
         })();
 
-        // connection closed: remove this client's subscriptions (dropping
-        // their queue handles), then release ours so the writer exits
+        // Connection closed: detach from the session — but only if this
+        // epoch is still the attached one (a §3.1.4 takeover by a newer
+        // connection with our client id must not be clobbered by this
+        // late cleanup). Clean sessions are discarded; persistent
+        // sessions keep filters + windows for resume.
         alive.store(false, Ordering::Relaxed);
-        if let Some(cid) = &client_id {
-            shared
-                .lock()
-                .unwrap()
-                .subscribers
-                .retain(|s| s.client_id != *cid);
+        if let Some((cid, epoch)) = &identity {
+            let mut sh = shared.lock().unwrap();
+            let mut discard = false;
+            if let Some(sess) = sh.sessions.get_mut(cid) {
+                if sess.attached == Some(*epoch) {
+                    sess.attached = None;
+                    discard = sess.clean;
+                }
+            }
+            if discard {
+                sh.sessions.remove(cid);
+            }
+            sh.conns.remove(epoch);
         }
         drop(send_ctl);
         drop(tx);
@@ -269,7 +605,8 @@ impl Broker {
     }
 
     /// Route one published message: retain bookkeeping, then fan out to
-    /// matching subscribers via their bounded dispatch queues.
+    /// every session with a matching filter — zero-copy `try_send` for
+    /// QoS 0, the per-session inflight window for QoS 1.
     fn route(
         shared: &Arc<Mutex<Shared>>,
         stats: &Arc<BrokerStats>,
@@ -278,19 +615,61 @@ impl Broker {
         qos: QoS,
         retain: bool,
     ) {
-        let mut sh = shared.lock().unwrap();
-        // encode once, borrowing the payload; every matching subscriber
-        // shares the same buffer (the per-subscriber copy is gone)
-        let bytes = Arc::new(
-            Packet::Publish {
-                topic: topic.clone(),
-                payload: Cow::Borrowed(&payload[..]),
-                qos: QoS::AtMostOnce, // broker->subscriber leg is q0
-                packet_id: 0,
-                retain: false,
+        let mut guard = shared.lock().unwrap();
+        let sh = &mut *guard;
+        match qos {
+            QoS::AtMostOnce => {
+                // encode once, borrowing the payload; every matching
+                // subscriber shares the same buffer
+                let bytes = Arc::new(
+                    Packet::Publish {
+                        topic: topic.clone(),
+                        payload: Cow::Borrowed(&payload[..]),
+                        qos: QoS::AtMostOnce,
+                        packet_id: 0,
+                        retain: false,
+                        dup: false,
+                    }
+                    .encode(),
+                );
+                for sess in sh.sessions.values() {
+                    if !sess.matches(&topic) {
+                        continue;
+                    }
+                    let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) else {
+                        continue; // detached session: QoS 0 is not stored
+                    };
+                    if !conn.alive.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    if !enqueue(conn, Arc::clone(&bytes), stats) {
+                        // bounded queue full: shed on the q0 leg
+                        stats.backpressure_dropped.fetch_add(1, Ordering::Relaxed);
+                        conn.shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
             }
-            .encode(),
-        );
+            QoS::AtLeastOnce => {
+                let shared_payload = Arc::new(payload.clone());
+                for sess in sh.sessions.values_mut() {
+                    if !sess.matches(&topic) {
+                        continue;
+                    }
+                    if sess.inflight.len() + sess.pending.len() >= SESSION_BACKLOG_LIMIT {
+                        stats.backpressure_dropped.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    sess.pending.push_back(OutMsg {
+                        topic: topic.clone(),
+                        payload: Arc::clone(&shared_payload),
+                        retain: false,
+                    });
+                    if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
+                        flush_session(sess, conn, stats);
+                    }
+                }
+            }
+        }
         if retain {
             // MQTT 3.1.1 §3.3.1.3: a retained PUBLISH with a zero-byte
             // payload clears the retained entry for the topic (and is
@@ -299,40 +678,22 @@ impl Broker {
             if payload.is_empty() {
                 sh.retained.remove(&topic);
             } else {
-                sh.retained.insert(topic.clone(), (payload, qos));
+                sh.retained.insert(topic, (payload, qos));
             }
         }
-        sh.subscribers.retain(|sub| {
-            if !sub.alive.load(Ordering::Relaxed) {
-                return false; // writer saw the socket die
-            }
-            if !topic_matches(&sub.filter, &topic) {
-                return true;
-            }
-            match sub.queue.try_send(Arc::clone(&bytes)) {
-                Ok(()) => {
-                    let d = sub.depth.fetch_add(1, Ordering::Relaxed) + 1;
-                    stats.queue_peak.fetch_max(d, Ordering::Relaxed);
-                    stats.delivered.fetch_add(1, Ordering::Relaxed);
-                    stats
-                        .bytes_routed
-                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
-                    true
-                }
-                // bounded queue full: shed on the q0 leg, keep subscriber
-                Err(TrySendError::Full(_)) => {
-                    stats.backpressure_dropped.fetch_add(1, Ordering::Relaxed);
-                    sub.shed.fetch_add(1, Ordering::Relaxed);
-                    true
-                }
-                Err(TrySendError::Disconnected(_)) => false,
-            }
-        });
     }
 
-    /// Current number of live subscriptions.
+    /// Current number of live subscriptions (filters across all stored
+    /// sessions — a persistent detached session keeps counting until it
+    /// is cleaned by a clean_session=true reconnect).
     pub fn subscription_count(&self) -> usize {
-        self.shared.lock().unwrap().subscribers.len()
+        self.shared
+            .lock()
+            .unwrap()
+            .sessions
+            .values()
+            .map(|s| s.filters.len())
+            .sum()
     }
 
     /// Instantaneous dispatch-queue depth per subscribed connection,
@@ -341,30 +702,59 @@ impl Broker {
     /// read live thread state — export them via the metrics registry,
     /// never into the deterministic trace ring.
     pub fn queue_depths(&self) -> Vec<(String, u64)> {
+        self.live_gauge(|c| c.depth.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative QoS 0 messages shed per subscribed connection because
+    /// its dispatch queue was full, keyed and sorted by client id. Live
+    /// thread state — export via the metrics registry, never the trace
+    /// ring.
+    pub fn shed_counts(&self) -> Vec<(String, u64)> {
+        self.live_gauge(|c| c.shed.load(Ordering::Relaxed))
+    }
+
+    fn live_gauge(&self, f: impl Fn(&ConnHandle) -> u64) -> Vec<(String, u64)> {
         let sh = self.shared.lock().unwrap();
         let mut by_client: BTreeMap<String, u64> = BTreeMap::new();
-        for sub in &sh.subscribers {
-            by_client
-                .entry(sub.client_id.clone())
-                .or_insert_with(|| sub.depth.load(Ordering::Relaxed));
+        for sess in sh.sessions.values() {
+            if sess.filters.is_empty() {
+                continue;
+            }
+            if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
+                by_client
+                    .entry(conn.client_id.clone())
+                    .or_insert_with(|| f(conn));
+            }
         }
         by_client.into_iter().collect()
     }
 
-    /// Cumulative messages shed per subscribed connection because its
-    /// dispatch queue was full, keyed and sorted by client id. The
-    /// broker→subscriber leg is QoS 0 even for QoS 1 publishes, so this
-    /// counter is the only record of those silent drops. Live thread
-    /// state — export via the metrics registry, never the trace ring.
-    pub fn shed_counts(&self) -> Vec<(String, u64)> {
+    /// Unacknowledged QoS 1 deliveries per session (inflight window
+    /// occupancy), keyed and sorted by client id — detached persistent
+    /// sessions included. Live thread state: registry only.
+    pub fn inflight_counts(&self) -> Vec<(String, u64)> {
         let sh = self.shared.lock().unwrap();
-        let mut by_client: BTreeMap<String, u64> = BTreeMap::new();
-        for sub in &sh.subscribers {
-            by_client
-                .entry(sub.client_id.clone())
-                .or_insert_with(|| sub.shed.load(Ordering::Relaxed));
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for (cid, sess) in &sh.sessions {
+            if !sess.filters.is_empty() {
+                out.insert(cid.clone(), sess.inflight.len() as u64);
+            }
         }
-        by_client.into_iter().collect()
+        out.into_iter().collect()
+    }
+
+    /// Queued-but-unsent QoS 1 backlog per session (window overflow plus
+    /// messages stored for a detached persistent session). Live thread
+    /// state: registry only.
+    pub fn backlog_counts(&self) -> Vec<(String, u64)> {
+        let sh = self.shared.lock().unwrap();
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for (cid, sess) in &sh.sessions {
+            if !sess.filters.is_empty() {
+                out.insert(cid.clone(), sess.pending.len() as u64);
+            }
+        }
+        out.into_iter().collect()
     }
 
     /// Stop accepting (existing connections drain on their own).
@@ -373,6 +763,9 @@ impl Broker {
         // poke the accept loop awake
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.housekeeper.take() {
             let _ = h.join();
         }
     }

@@ -8,8 +8,16 @@
 //! never copied into an intermediate packet buffer. `ping` measures the
 //! true request→response round trip: the reader thread signals every
 //! PINGRESP through the inbox condvar.
+//!
+//! QoS 1 receive leg: the reader thread PUBACKs every inbound QoS 1
+//! PUBLISH (the socket's write half is behind a mutex shared with the
+//! publish path, so acks never interleave mid-packet) and drops
+//! DUP-flagged redeliveries whose packet id it has already consumed —
+//! at-least-once on the wire, at-most-once into the inbox per
+//! connection. [`Client::connect_with`] opens persistent sessions
+//! (clean_session=false) and exposes the broker's session-present flag.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -19,6 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::packet::{write_all_vectored, Packet, QoS};
+use super::session::DedupRing;
 
 /// A received application message.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,7 +121,9 @@ impl Inbox {
 /// MQTT-like client handle.
 pub struct Client {
     id: String,
-    writer: TcpStream,
+    /// Write half, shared with the reader thread (it sends PUBACKs for
+    /// inbound QoS 1 deliveries); the mutex keeps packets whole.
+    writer: Arc<Mutex<TcpStream>>,
     inbox: Arc<Inbox>,
     acks: Receiver<Packet<'static>>,
     next_packet_id: u16,
@@ -122,47 +133,108 @@ pub struct Client {
     pings_sent: u64,
     /// Reusable PUBLISH header scratch for the vectored publish path.
     pub_head: Vec<u8>,
+    /// Acks that arrived while a different op was waiting — keyed
+    /// (is_suback, packet_id), consumed by the op they belong to instead
+    /// of being discarded.
+    pending_acks: HashSet<(bool, u16)>,
+    /// CONNACK session-present flag: the broker resumed a stored
+    /// session for this client id.
+    session_present: bool,
 }
 
 impl Client {
-    /// Connect and complete the CONNECT/CONNACK handshake.
+    /// Connect with a clean session and no keep-alive (the historical
+    /// default). See [`Client::connect_with`].
     pub fn connect(addr: SocketAddr, client_id: &str) -> Result<Client> {
+        Self::connect_with(addr, client_id, true, 0)
+    }
+
+    /// Connect and complete the CONNECT/CONNACK handshake.
+    /// `clean_session=false` opens (or resumes) a persistent session:
+    /// subscriptions and undelivered QoS 1 messages survive disconnects,
+    /// and [`Client::session_present`] reports whether the broker held
+    /// prior state. `keep_alive_secs > 0` arms the broker-side idle
+    /// timeout (call [`Client::ping`] within 1.5× the interval).
+    pub fn connect_with(
+        addr: SocketAddr,
+        client_id: &str,
+        clean_session: bool,
+        keep_alive_secs: u16,
+    ) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to broker {addr}"))?;
         stream.set_nodelay(true).ok();
-        let mut writer = stream.try_clone()?;
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
         Packet::Connect {
             client_id: client_id.to_string(),
+            clean_session,
+            keep_alive_secs,
         }
-        .write_to(&mut writer)?;
+        .write_to(&mut *writer.lock().unwrap())?;
 
         let mut reader = BufReader::new(stream.try_clone()?);
-        match Packet::read_from(&mut reader)? {
-            Packet::ConnAck => {}
+        let session_present = match Packet::read_from(&mut reader)? {
+            Packet::ConnAck {
+                session_present,
+                return_code: 0,
+            } => session_present,
+            Packet::ConnAck { return_code, .. } => {
+                bail!("broker refused connection (return code {return_code})")
+            }
             other => bail!("expected CONNACK, got {other:?}"),
-        }
+        };
 
         // Reader thread: pushes PUBLISHes to the inbox (waking any blocked
-        // receiver), signals PINGRESPs through the same condvar, control
-        // acks to a channel the caller-thread ops wait on. Closing the
-        // inbox on exit unblocks receivers right away.
+        // receiver), PUBACKs inbound QoS 1 deliveries and drops DUP
+        // replays it already consumed, signals PINGRESPs through the same
+        // condvar, control acks to a channel the caller-thread ops wait
+        // on. Closing the inbox on exit unblocks receivers right away.
         let inbox: Arc<Inbox> = Arc::new(Inbox::default());
         let (ack_tx, ack_rx): (Sender<Packet<'static>>, Receiver<Packet<'static>>) =
             mpsc::channel();
         let inbox_bg = inbox.clone();
+        let writer_bg = writer.clone();
         std::thread::Builder::new()
             .name(format!("mqtt-client-{client_id}"))
             .spawn(move || {
+                let mut seen = DedupRing::default();
                 loop {
                     match Packet::read_from(&mut reader) {
-                        Ok(Packet::Publish { topic, payload, .. }) => {
-                            inbox_bg.push(Message {
-                                topic,
-                                payload: payload.into_owned(),
-                            });
+                        Ok(Packet::Publish {
+                            topic,
+                            payload,
+                            qos,
+                            packet_id,
+                            dup,
+                            ..
+                        }) => {
+                            let mut fresh = true;
+                            if qos == QoS::AtLeastOnce {
+                                // DUP dedup before the ack: a redelivery
+                                // of a packet id this connection already
+                                // consumed is acked but not re-queued
+                                if dup && seen.contains(packet_id) {
+                                    fresh = false;
+                                } else {
+                                    seen.insert(packet_id);
+                                }
+                                if let Ok(mut w) = writer_bg.lock() {
+                                    if Packet::PubAck { packet_id }.write_to(&mut *w).is_err() {
+                                        break;
+                                    }
+                                } else {
+                                    break;
+                                }
+                            }
+                            if fresh {
+                                inbox_bg.push(Message {
+                                    topic,
+                                    payload: payload.into_owned(),
+                                });
+                            }
                         }
                         Ok(Packet::PingResp) => inbox_bg.pong(),
-                        Ok(Packet::ConnAck) => {}
+                        Ok(Packet::ConnAck { .. }) => {}
                         Ok(p @ (Packet::PubAck { .. } | Packet::SubAck { .. })) => {
                             if ack_tx.send(p).is_err() {
                                 break;
@@ -183,11 +255,19 @@ impl Client {
             next_packet_id: 1,
             pings_sent: 0,
             pub_head: Vec::new(),
+            pending_acks: HashSet::new(),
+            session_present,
         })
     }
 
     pub fn id(&self) -> &str {
         &self.id
+    }
+
+    /// Did the broker resume a stored session at CONNECT
+    /// (clean_session=false reconnect)?
+    pub fn session_present(&self) -> bool {
+        self.session_present
     }
 
     fn take_packet_id(&mut self) -> u16 {
@@ -196,18 +276,30 @@ impl Client {
         id
     }
 
-    fn wait_ack(&self, want_suback: bool, packet_id: u16, timeout: Duration) -> Result<()> {
+    /// Wait for the ack matching `packet_id`. Acks that belong to a
+    /// *different* in-flight op are parked in `pending_acks` (keyed by
+    /// packet id) for that op to consume — never discarded.
+    fn wait_ack(&mut self, want_suback: bool, packet_id: u16, timeout: Duration) -> Result<()> {
+        if self.pending_acks.remove(&(want_suback, packet_id)) {
+            return Ok(());
+        }
         let deadline = Instant::now() + timeout;
         loop {
             let remain = deadline.saturating_duration_since(Instant::now());
             match self.acks.recv_timeout(remain) {
-                Ok(Packet::SubAck { packet_id: id }) if want_suback && id == packet_id => {
-                    return Ok(())
+                Ok(Packet::SubAck { packet_id: id }) => {
+                    if want_suback && id == packet_id {
+                        return Ok(());
+                    }
+                    self.pending_acks.insert((true, id));
                 }
-                Ok(Packet::PubAck { packet_id: id }) if !want_suback && id == packet_id => {
-                    return Ok(())
+                Ok(Packet::PubAck { packet_id: id }) => {
+                    if !want_suback && id == packet_id {
+                        return Ok(());
+                    }
+                    self.pending_acks.insert((false, id));
                 }
-                Ok(_) => continue, // stale ack from an earlier op
+                Ok(_) => {}
                 Err(RecvTimeoutError::Timeout) => bail!("ack timeout"),
                 Err(RecvTimeoutError::Disconnected) => bail!("connection lost"),
             }
@@ -221,7 +313,7 @@ impl Client {
             packet_id,
             filter: filter.to_string(),
         }
-        .write_to(&mut self.writer)?;
+        .write_to(&mut *self.writer.lock().unwrap())?;
         self.wait_ack(true, packet_id, Duration::from_secs(5))
     }
 
@@ -239,9 +331,13 @@ impl Client {
             qos,
             packet_id,
             retain,
+            false,
             &mut self.pub_head,
         );
-        write_all_vectored(&mut self.writer, &self.pub_head, payload)?;
+        {
+            let mut w = self.writer.lock().unwrap();
+            write_all_vectored(&mut *w, &self.pub_head, payload)?;
+        }
         if qos == QoS::AtLeastOnce {
             self.wait_ack(false, packet_id, Duration::from_secs(10))?;
         }
@@ -279,14 +375,18 @@ impl Client {
         self.pings_sent += 1;
         let target = self.pings_sent;
         let t0 = Instant::now();
-        Packet::PingReq.write_to(&mut self.writer)?;
+        Packet::PingReq.write_to(&mut *self.writer.lock().unwrap())?;
         if !self.inbox.wait_pong(target, Duration::from_secs(5)) {
             bail!("ping timed out (no PINGRESP)");
         }
         Ok(t0.elapsed())
     }
 
-    pub fn disconnect(mut self) -> Result<()> {
-        Packet::Disconnect.write_to(&mut self.writer)
+    /// Graceful disconnect (sends DISCONNECT). Dropping a `Client`
+    /// without calling this models an abrupt death: the broker keeps a
+    /// clean session's registry entry only until its reader notices the
+    /// closed socket, and keeps a persistent session's state for resume.
+    pub fn disconnect(self) -> Result<()> {
+        Packet::Disconnect.write_to(&mut *self.writer.lock().unwrap())
     }
 }

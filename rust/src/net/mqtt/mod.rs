@@ -5,12 +5,41 @@
 //! module implements the protocol subset HeteroEdge needs on std::net +
 //! threads:
 //!
-//! * packet types: CONNECT/CONNACK, PUBLISH (QoS 0/1), PUBACK,
-//!   SUBSCRIBE/SUBACK, PINGREQ/PINGRESP, DISCONNECT;
+//! * packet types: CONNECT/CONNACK (clean-session, keep-alive,
+//!   session-present, return code), PUBLISH (QoS 0/1, DUP, RETAIN),
+//!   PUBACK, SUBSCRIBE/SUBACK, PINGREQ/PINGRESP, DISCONNECT;
 //! * MQTT-style variable-length remaining-length encoding;
 //! * topic filters with `+` (single-level) and `#` (multi-level)
 //!   wildcards;
-//! * retained messages (latest profile survives a late subscriber).
+//! * retained messages (latest profile survives a late subscriber);
+//! * **QoS 1 at-least-once delivery with persistent sessions**: per
+//!   client-id session state (`broker.rs`/`session.rs`) carries the
+//!   subscription set, an inflight window of unacknowledged deliveries
+//!   with real packet ids (1..=65535, never reused while inflight), an
+//!   offline backlog, and DUP dedup rings on both ends.
+//!
+//! ## QoS 1 state machines
+//!
+//! *Broker → subscriber*: a QoS 1 publish enters every matching
+//! session's backlog; while the session is attached and its inflight
+//! window (≤ [`broker::INFLIGHT_WINDOW`]) has room, messages move
+//! backlog → inflight with a fresh packet id and go out on the
+//! connection's dispatch queue. The subscriber's PUBACK retires the
+//! inflight entry and refills from the backlog. A disconnect freezes
+//! the session (clean_session=false); on resume (CONNACK
+//! session-present=1) every inflight message is redelivered with DUP=1
+//! under its original id, then the backlog drains.
+//!
+//! *Publisher → broker*: the client blocks each QoS 1 publish on the
+//! broker's PUBACK; the broker dedups retransmissions (DUP=1, seen id)
+//! before routing. The client reader PUBACKs inbound QoS 1 deliveries
+//! and drops DUP replays it already consumed.
+//!
+//! Session identity is epoch-based: a reconnect with the same client id
+//! takes the session over (MQTT 3.1.1 §3.1.4, the stale connection is
+//! shut down) and the old socket's late cleanup cannot clobber the new
+//! one. Keep-alive expiry (1.5× the CONNECT interval) reaps half-open
+//! connections.
 //!
 //! The broker is loopback-TCP real; *simulated* channel latency (distance,
 //! band) is charged by the coordinator on top, keeping protocol realism
@@ -19,9 +48,11 @@
 pub mod broker;
 pub mod client;
 pub mod packet;
+pub mod session;
 pub mod topic;
 
 pub use broker::Broker;
 pub use client::Client;
 pub use packet::{Packet, QoS};
+pub use session::{DedupRing, PacketIds};
 pub use topic::{filter_valid, topic_matches};

@@ -39,8 +39,24 @@ impl QoS {
 /// `Packet<'static>` (owned payload).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Packet<'p> {
-    Connect { client_id: String },
-    ConnAck,
+    Connect {
+        client_id: String,
+        /// MQTT 3.1.1 §3.1.2.4: `true` discards any stored session
+        /// state on both ends; `false` asks the broker to resume (or
+        /// create) a persistent session for this client id.
+        clean_session: bool,
+        /// Keep-alive interval in seconds; 0 disables the broker-side
+        /// idle timeout (§3.1.2.10).
+        keep_alive_secs: u16,
+    },
+    ConnAck {
+        /// §3.2.2.2: the broker found stored session state for the
+        /// client id (only ever `true` for clean_session=false).
+        session_present: bool,
+        /// §3.2.2.3: 0 = accepted. Non-zero codes are reserved for
+        /// refusals; this broker currently always accepts.
+        return_code: u8,
+    },
     Publish {
         topic: String,
         /// Borrowed on the outbound path (pooled encoded bytes ship
@@ -49,6 +65,9 @@ pub enum Packet<'p> {
         qos: QoS,
         packet_id: u16,
         retain: bool,
+        /// §3.3.1.1: set on re-delivery of an unacknowledged QoS 1
+        /// message (fixed-header bit 3).
+        dup: bool,
     },
     PubAck { packet_id: u16 },
     Subscribe { packet_id: u16, filter: String },
@@ -190,11 +209,12 @@ impl Packet<'_> {
         qos: QoS,
         packet_id: u16,
         retain: bool,
+        dup: bool,
         out: &mut Vec<u8>,
     ) {
         out.clear();
         let body_len = 2 + topic.len() + 2 + payload_len;
-        let flags = ((qos as u8) << 1) | (retain as u8);
+        let flags = ((dup as u8) << 3) | ((qos as u8) << 1) | (retain as u8);
         out.push((T_PUBLISH << 4) | (flags & 0x0F));
         encode_varint(body_len, out);
         write_str(out, topic);
@@ -204,24 +224,34 @@ impl Packet<'_> {
     /// Serialize to wire bytes.
     pub fn encode(&self) -> Vec<u8> {
         let (ty, flags, body) = match self {
-            Packet::Connect { client_id } => {
+            Packet::Connect {
+                client_id,
+                clean_session,
+                keep_alive_secs,
+            } => {
                 let mut b = Vec::new();
                 write_str(&mut b, client_id);
+                b.push(*clean_session as u8);
+                write_u16(&mut b, *keep_alive_secs);
                 (T_CONNECT, 0, b)
             }
-            Packet::ConnAck => (T_CONNACK, 0, Vec::new()),
+            Packet::ConnAck {
+                session_present,
+                return_code,
+            } => (T_CONNACK, 0, vec![*session_present as u8, *return_code]),
             Packet::Publish {
                 topic,
                 payload,
                 qos,
                 packet_id,
                 retain,
+                dup,
             } => {
                 let mut b = Vec::new();
                 write_str(&mut b, topic);
                 write_u16(&mut b, *packet_id);
                 b.extend_from_slice(payload);
-                let flags = ((*qos as u8) << 1) | (*retain as u8);
+                let flags = ((*dup as u8) << 3) | ((*qos as u8) << 1) | (*retain as u8);
                 (T_PUBLISH, flags, b)
             }
             Packet::PubAck { packet_id } => {
@@ -266,10 +296,38 @@ impl Packet<'_> {
         r.read_exact(&mut body).context("reading packet body")?;
         let mut at = 0usize;
         let pkt = match ty {
-            T_CONNECT => Packet::Connect {
-                client_id: read_str(&body, &mut at)?,
-            },
-            T_CONNACK => Packet::ConnAck,
+            T_CONNECT => {
+                let client_id = read_str(&body, &mut at)?;
+                // tolerant of the pre-session wire format: a CONNECT
+                // body holding only the client id is a clean session
+                // with keep-alive disabled
+                let clean_session = if at < body.len() {
+                    let b = body[at];
+                    at += 1;
+                    b != 0
+                } else {
+                    true
+                };
+                let keep_alive_secs = if at + 2 <= body.len() {
+                    read_u16(&body, &mut at)?
+                } else {
+                    0
+                };
+                Packet::Connect {
+                    client_id,
+                    clean_session,
+                    keep_alive_secs,
+                }
+            }
+            T_CONNACK => {
+                // tolerant of the pre-session wire format (empty body)
+                let session_present = at < body.len() && body[at] != 0;
+                let return_code = if at + 1 < body.len() { body[at + 1] } else { 0 };
+                Packet::ConnAck {
+                    session_present,
+                    return_code,
+                }
+            }
             T_PUBLISH => {
                 let topic = read_str(&body, &mut at)?;
                 let packet_id = read_u16(&body, &mut at)?;
@@ -280,6 +338,7 @@ impl Packet<'_> {
                     qos: QoS::from_u8((flags >> 1) & 0x3)?,
                     packet_id,
                     retain: flags & 1 == 1,
+                    dup: flags & 0x08 != 0,
                 }
             }
             T_PUBACK => Packet::PubAck {
@@ -324,14 +383,20 @@ mod tests {
         let pkts = vec![
             Packet::Connect {
                 client_id: "nano-1".into(),
+                clean_session: false,
+                keep_alive_secs: 30,
             },
-            Packet::ConnAck,
+            Packet::ConnAck {
+                session_present: true,
+                return_code: 0,
+            },
             Packet::Publish {
                 topic: "heteroedge/frames".into(),
                 payload: vec![1, 2, 3, 255].into(),
                 qos: QoS::AtLeastOnce,
                 packet_id: 42,
                 retain: true,
+                dup: true,
             },
             Packet::PubAck { packet_id: 42 },
             Packet::Subscribe {
@@ -346,6 +411,58 @@ mod tests {
         for p in pkts {
             assert_eq!(roundtrip(p.clone()), p, "{p:?}");
         }
+    }
+
+    #[test]
+    fn legacy_short_bodies_decode_with_session_defaults() {
+        // a CONNECT body holding only the client id (the pre-session
+        // format) decodes as clean_session=true, keep_alive=0
+        let mut body = Vec::new();
+        write_str(&mut body, "old-client");
+        let mut bytes = vec![T_CONNECT << 4];
+        encode_varint(body.len(), &mut bytes);
+        bytes.extend_from_slice(&body);
+        assert_eq!(
+            Packet::read_from(&mut Cursor::new(bytes)).unwrap(),
+            Packet::Connect {
+                client_id: "old-client".into(),
+                clean_session: true,
+                keep_alive_secs: 0,
+            }
+        );
+        // an empty CONNACK body decodes as session_present=false, rc 0
+        let bytes = vec![T_CONNACK << 4, 0];
+        assert_eq!(
+            Packet::read_from(&mut Cursor::new(bytes)).unwrap(),
+            Packet::ConnAck {
+                session_present: false,
+                return_code: 0,
+            }
+        );
+    }
+
+    #[test]
+    fn dup_bit_is_fixed_header_bit_3() {
+        let p = Packet::Publish {
+            topic: "t".into(),
+            payload: vec![1].into(),
+            qos: QoS::AtLeastOnce,
+            packet_id: 5,
+            retain: false,
+            dup: true,
+        };
+        let bytes = p.encode();
+        assert_eq!(bytes[0] & 0x08, 0x08, "dup must set bit 3");
+        assert_eq!(roundtrip(p.clone()), p);
+        let undup = Packet::Publish {
+            topic: "t".into(),
+            payload: vec![1].into(),
+            qos: QoS::AtLeastOnce,
+            packet_id: 5,
+            retain: false,
+            dup: false,
+        };
+        assert_eq!(undup.encode()[0] & 0x08, 0);
     }
 
     #[test]
@@ -432,6 +549,7 @@ mod tests {
             qos: QoS::AtMostOnce,
             packet_id: 0,
             retain: false,
+            dup: false,
         };
         match roundtrip(p) {
             Packet::Publish { payload: got, .. } => assert_eq!(got, payload),
@@ -441,10 +559,11 @@ mod tests {
 
     #[test]
     fn publish_header_plus_payload_matches_encode() {
-        for (qos, retain, payload_len) in [
-            (QoS::AtMostOnce, false, 0usize),
-            (QoS::AtLeastOnce, true, 777),
-            (QoS::AtLeastOnce, false, 200_000),
+        for (qos, retain, dup, payload_len) in [
+            (QoS::AtMostOnce, false, false, 0usize),
+            (QoS::AtLeastOnce, true, false, 777),
+            (QoS::AtLeastOnce, false, true, 777),
+            (QoS::AtLeastOnce, false, false, 200_000),
         ] {
             let payload = vec![0x5A; payload_len];
             let whole = Packet::Publish {
@@ -453,6 +572,7 @@ mod tests {
                 qos,
                 packet_id: 91,
                 retain,
+                dup,
             }
             .encode();
             let mut head = Vec::new();
@@ -462,10 +582,14 @@ mod tests {
                 qos,
                 91,
                 retain,
+                dup,
                 &mut head,
             );
             head.extend_from_slice(&payload);
-            assert_eq!(head, whole, "qos {qos:?} retain {retain} len {payload_len}");
+            assert_eq!(
+                head, whole,
+                "qos {qos:?} retain {retain} dup {dup} len {payload_len}"
+            );
         }
     }
 

@@ -1,0 +1,133 @@
+//! QoS 1 session state: packet-id assignment and duplicate detection.
+//!
+//! The broker keeps one [`PacketIds`] allocator and one [`DedupRing`]
+//! per client-id session (see `broker.rs`). They live in their own
+//! module because their invariants are the protocol-critical ones —
+//! an id is never 0, never reused while inflight, and wraps through
+//! 65535 — and they are prop-tested directly (`tests/prop_net.rs`)
+//! without standing up a broker.
+
+use std::collections::VecDeque;
+
+/// MQTT 3.1.1 packet-id allocator. Ids are in `1..=65535` (0 is
+/// protocol-invalid, §2.3.1) and an id is never handed out again while
+/// the caller still reports it in use (i.e. sitting in an inflight
+/// window awaiting its PUBACK).
+#[derive(Debug, Clone)]
+pub struct PacketIds {
+    next: u16,
+}
+
+impl Default for PacketIds {
+    fn default() -> Self {
+        PacketIds { next: 1 }
+    }
+}
+
+impl PacketIds {
+    pub fn new() -> PacketIds {
+        PacketIds::default()
+    }
+
+    /// Start the cycle at `next` (clamped into 1..=65535) — lets tests
+    /// put the allocator right before the wrap without burning 65534
+    /// assigns.
+    pub fn starting_at(next: u16) -> PacketIds {
+        PacketIds { next: next.max(1) }
+    }
+
+    /// Hand out the next free id, skipping any id for which `in_use`
+    /// returns true. Wraps 65535 → 1 (never 0). Returns `None` only if
+    /// every one of the 65535 ids is in use — an inflight window that
+    /// large is a caller bug, not a protocol state.
+    pub fn assign<F: FnMut(u16) -> bool>(&mut self, mut in_use: F) -> Option<u16> {
+        for _ in 0..u16::MAX {
+            let id = self.next;
+            self.next = if self.next == u16::MAX { 1 } else { self.next + 1 };
+            if !in_use(id) {
+                return Some(id);
+            }
+        }
+        None
+    }
+}
+
+/// Bounded ring of recently seen inbound packet ids — the dedup state
+/// behind the DUP flag. A publisher that retransmits an unacknowledged
+/// QoS 1 PUBLISH (DUP=1) with an id already in the ring is acked but
+/// not routed again.
+#[derive(Debug, Clone, Default)]
+pub struct DedupRing {
+    ids: VecDeque<u16>,
+}
+
+/// How many inbound packet ids a session remembers for DUP dedup.
+pub const DEDUP_RING_CAPACITY: usize = 256;
+
+impl DedupRing {
+    pub fn contains(&self, id: u16) -> bool {
+        self.ids.contains(&id)
+    }
+
+    /// Record a freshly seen id, evicting the oldest past capacity.
+    pub fn insert(&mut self, id: u16) {
+        if self.ids.len() == DEDUP_RING_CAPACITY {
+            self.ids.pop_front();
+        }
+        self.ids.push_back(id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn ids_start_at_one_and_never_hit_zero() {
+        let mut ids = PacketIds::new();
+        assert_eq!(ids.assign(|_| false), Some(1));
+        assert_eq!(ids.assign(|_| false), Some(2));
+        for _ in 0..200_000 {
+            let id = ids.assign(|_| false).unwrap();
+            assert_ne!(id, 0);
+        }
+    }
+
+    #[test]
+    fn wrap_at_65535_skips_zero_and_inflight_ids() {
+        let mut ids = PacketIds { next: u16::MAX };
+        // 1 and 2 are inflight; the wrap must land on 3
+        let inflight: HashSet<u16> = [u16::MAX, 1, 2].into_iter().collect();
+        assert_eq!(ids.assign(|id| inflight.contains(&id)), Some(3));
+    }
+
+    #[test]
+    fn exhausted_id_space_returns_none() {
+        let mut ids = PacketIds::new();
+        assert_eq!(ids.assign(|_| true), None);
+    }
+
+    #[test]
+    fn dedup_ring_remembers_and_evicts() {
+        let mut ring = DedupRing::default();
+        assert!(ring.is_empty());
+        for id in 0..DEDUP_RING_CAPACITY as u16 {
+            ring.insert(id + 1);
+        }
+        assert_eq!(ring.len(), DEDUP_RING_CAPACITY);
+        assert!(ring.contains(1));
+        ring.insert(9999);
+        assert!(!ring.contains(1), "oldest id must be evicted");
+        assert!(ring.contains(9999));
+        assert_eq!(ring.len(), DEDUP_RING_CAPACITY);
+    }
+}

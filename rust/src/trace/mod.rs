@@ -96,6 +96,10 @@ pub enum EventKind {
     Recover,
     /// An evicted frame lost mid-transfer — the wire died with the node.
     FrameLost,
+    /// A frame parked during an auxiliary's downtime re-shipped to the
+    /// revived node under the QoS 1 at-least-once path (node = revived
+    /// destination).
+    Redeliver,
 }
 
 impl EventKind {
@@ -123,6 +127,7 @@ impl EventKind {
             EventKind::Rehome => "rehome",
             EventKind::Recover => "recover",
             EventKind::FrameLost => "frame_lost",
+            EventKind::Redeliver => "redeliver",
         }
     }
 
@@ -147,12 +152,13 @@ impl EventKind {
             | EventKind::NodeUp
             | EventKind::Rehome
             | EventKind::Recover
-            | EventKind::FrameLost => "churn",
+            | EventKind::FrameLost
+            | EventKind::Redeliver => "churn",
         }
     }
 
     /// Every kind, in lifecycle order (docs + exhaustiveness tests).
-    pub const ALL: [EventKind; 21] = [
+    pub const ALL: [EventKind; 22] = [
         EventKind::Ingest,
         EventKind::Admit,
         EventKind::Degrade,
@@ -174,6 +180,7 @@ impl EventKind {
         EventKind::Rehome,
         EventKind::Recover,
         EventKind::FrameLost,
+        EventKind::Redeliver,
     ];
 }
 

@@ -2,12 +2,34 @@
 
 use std::time::Duration;
 
-use heteroedge::net::mqtt::{Broker, Client, QoS};
+use heteroedge::net::mqtt::{Broker, Client, Packet, QoS};
 
 fn setup() -> (Broker, std::net::SocketAddr) {
     let b = Broker::start().unwrap();
     let addr = b.addr();
     (b, addr)
+}
+
+/// Raw-socket CONNECT (no background reader): lets a test observe wire
+/// packets — DUP flags, packet ids — and withhold PUBACKs on purpose.
+fn raw_connect(addr: std::net::SocketAddr, id: &str, clean: bool) -> (std::net::TcpStream, bool) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).ok();
+    Packet::Connect {
+        client_id: id.to_string(),
+        clean_session: clean,
+        keep_alive_secs: 0,
+    }
+    .write_to(&mut s)
+    .unwrap();
+    let present = match Packet::read_from(&mut s).unwrap() {
+        Packet::ConnAck {
+            session_present,
+            return_code: 0,
+        } => session_present,
+        other => panic!("expected CONNACK, got {other:?}"),
+    };
+    (s, present)
 }
 
 #[test]
@@ -225,6 +247,298 @@ fn concurrent_publishers() {
         got += 1;
     }
     assert_eq!(got, 100, "all concurrent publishes delivered");
+}
+
+#[test]
+fn session_takeover_disconnects_old_connection() {
+    // MQTT 3.1.1 §3.1.4: a second CONNECT with the same client id takes
+    // the session over and the broker disconnects the old connection.
+    let (b, addr) = setup();
+    let mut c1 = Client::connect(addr, "twin").unwrap();
+    c1.subscribe("take/t").unwrap();
+    let mut c2 = Client::connect(addr, "twin").unwrap();
+    c2.subscribe("take/t").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("take/t", b"after", QoS::AtLeastOnce, false)
+        .unwrap();
+    assert_eq!(
+        c2.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"after"
+    );
+    // the old connection's socket was shut down by the takeover, so its
+    // reader closed the inbox: the receive returns promptly with nothing
+    assert!(c1.recv_timeout(Duration::from_secs(2)).is_none());
+    assert_eq!(b.subscription_count(), 1, "one session, one filter");
+}
+
+#[test]
+fn stale_cleanup_cannot_strip_the_new_connections_session() {
+    // Reconnect-race pin: the seed's cleanup removed subscriptions by
+    // *client id*, so the old connection's late teardown tore down the
+    // new connection's subscriptions. Epoch-keyed detach must keep the
+    // resumed session routable after the stale socket finishes dying.
+    let (b, addr) = setup();
+    let mut c1 = Client::connect_with(addr, "racer", false, 0).unwrap();
+    c1.subscribe("race/t").unwrap();
+    let c2 = Client::connect_with(addr, "racer", false, 0).unwrap();
+    assert!(c2.session_present(), "persistent session must resume");
+    // give the kicked connection's reader time to run its cleanup path
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(
+        b.subscription_count(),
+        1,
+        "stale cleanup must not remove the live session's filter"
+    );
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("race/t", b"still-routed", QoS::AtLeastOnce, false)
+        .unwrap();
+    assert_eq!(
+        c2.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"still-routed"
+    );
+}
+
+#[test]
+fn duplicate_subscribe_is_not_double_delivered() {
+    // Re-subscribing to a filter the session already holds must be a
+    // no-op (the seed appended a second registry entry and delivered
+    // every message twice).
+    let (b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("dup/sub").unwrap();
+    sub.subscribe("dup/sub").unwrap();
+    assert_eq!(b.subscription_count(), 1);
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("dup/sub", b"once", QoS::AtMostOnce, false)
+        .unwrap();
+    publ.publish("dup/sub", b"twice", QoS::AtLeastOnce, false)
+        .unwrap();
+    assert_eq!(
+        sub.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"once"
+    );
+    assert_eq!(
+        sub.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"twice"
+    );
+    assert!(
+        sub.recv_timeout(Duration::from_millis(300)).is_none(),
+        "each publish must be delivered exactly once"
+    );
+}
+
+#[test]
+fn retained_qos1_replay_carries_a_real_packet_id() {
+    // The seed replayed retained QoS 1 messages with a fabricated
+    // packet id 0 (protocol-invalid) and no ack tracking. The replay
+    // must ride the session's inflight window: nonzero id, PUBACK
+    // retires it.
+    let (b, addr) = setup();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("ret/q1", b"state", QoS::AtLeastOnce, true)
+        .unwrap();
+    let (mut raw, present) = raw_connect(addr, "rawlate", false);
+    assert!(!present);
+    Packet::Subscribe {
+        packet_id: 1,
+        filter: "ret/q1".to_string(),
+    }
+    .write_to(&mut raw)
+    .unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw).unwrap(),
+        Packet::SubAck { packet_id: 1 }
+    ));
+    let pid = match Packet::read_from(&mut raw).unwrap() {
+        Packet::Publish {
+            topic,
+            payload,
+            qos,
+            packet_id,
+            retain,
+            dup,
+        } => {
+            assert_eq!(topic, "ret/q1");
+            assert_eq!(payload.as_ref(), b"state");
+            assert_eq!(qos, QoS::AtLeastOnce);
+            assert!(retain);
+            assert!(!dup);
+            assert_ne!(packet_id, 0, "packet id 0 is protocol-invalid");
+            packet_id
+        }
+        other => panic!("expected retained PUBLISH, got {other:?}"),
+    };
+    assert_eq!(b.inflight_counts(), vec![("rawlate".to_string(), 1)]);
+    Packet::PubAck { packet_id: pid }.write_to(&mut raw).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(
+        b.inflight_counts(),
+        vec![("rawlate".to_string(), 0)],
+        "PUBACK must retire the tracked delivery"
+    );
+}
+
+#[test]
+fn persistent_session_queues_while_down_and_delivers_exactly_once() {
+    // A clean_session=false subscriber that disconnects, misses a burst
+    // of QoS 1 publishes, and reconnects must receive every missed
+    // message exactly once — without re-subscribing.
+    let (_b, addr) = setup();
+    let mut sub = Client::connect_with(addr, "persist", false, 0).unwrap();
+    assert!(!sub.session_present());
+    sub.subscribe("q/backlog").unwrap();
+    sub.disconnect().unwrap();
+    std::thread::sleep(Duration::from_millis(300)); // broker notices the close
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    for i in 0..40u32 {
+        publ.publish("q/backlog", &i.to_le_bytes(), QoS::AtLeastOnce, false)
+            .unwrap();
+    }
+    let sub2 = Client::connect_with(addr, "persist", false, 0).unwrap();
+    assert!(sub2.session_present(), "broker must resume the session");
+    // no re-subscribe: the stored filter set routes immediately
+    for i in 0..40u32 {
+        let msg = sub2
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|| panic!("missing queued message {i}"));
+        assert_eq!(msg.payload, i.to_le_bytes(), "in publish order");
+    }
+    assert!(
+        sub2.recv_timeout(Duration::from_millis(300)).is_none(),
+        "at-least-once must collapse to exactly-once into the inbox"
+    );
+    assert_eq!(sub2.pending(), 0);
+}
+
+#[test]
+fn unacked_inflight_is_redelivered_with_dup_on_resume() {
+    // A subscriber that receives a QoS 1 delivery, never acks it, and
+    // dies abruptly must get the same message again on resume — same
+    // packet id, DUP=1.
+    let (b, addr) = setup();
+    let (mut raw, _) = raw_connect(addr, "rawdup", false);
+    Packet::Subscribe {
+        packet_id: 1,
+        filter: "dup/wire".to_string(),
+    }
+    .write_to(&mut raw)
+    .unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw).unwrap(),
+        Packet::SubAck { packet_id: 1 }
+    ));
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("dup/wire", b"once-more", QoS::AtLeastOnce, false)
+        .unwrap();
+    let first_pid = match Packet::read_from(&mut raw).unwrap() {
+        Packet::Publish {
+            packet_id, dup, ..
+        } => {
+            assert!(!dup, "first delivery is not a duplicate");
+            packet_id
+        }
+        other => panic!("expected PUBLISH, got {other:?}"),
+    };
+    // abrupt death: close without PUBACK or DISCONNECT
+    raw.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(raw);
+    std::thread::sleep(Duration::from_millis(300));
+    let (mut raw2, present) = raw_connect(addr, "rawdup", false);
+    assert!(present);
+    match Packet::read_from(&mut raw2).unwrap() {
+        Packet::Publish {
+            payload,
+            packet_id,
+            dup,
+            ..
+        } => {
+            assert_eq!(payload.as_ref(), b"once-more");
+            assert_eq!(packet_id, first_pid, "redelivery keeps the original id");
+            assert!(dup, "redelivery must set the DUP flag");
+        }
+        other => panic!("expected DUP redelivery, got {other:?}"),
+    }
+    Packet::PubAck {
+        packet_id: first_pid,
+    }
+    .write_to(&mut raw2)
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(
+        b.stats.redelivered.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn keep_alive_expiry_reaps_a_silent_connection() {
+    // §3.1.2.10: a connection that advertises a keep-alive and then goes
+    // silent for 1.5× the interval is reaped by the broker.
+    let (b, addr) = setup();
+    let mut c = Client::connect_with(addr, "ka", true, 1).unwrap();
+    c.subscribe("ka/t").unwrap();
+    assert_eq!(b.subscription_count(), 1);
+    std::thread::sleep(Duration::from_millis(2600));
+    assert_eq!(
+        b.subscription_count(),
+        0,
+        "silent keep-alive connection must be reaped"
+    );
+    // the reaped socket closed the client's inbox
+    assert!(c.recv_timeout(Duration::from_millis(100)).is_none());
+}
+
+#[test]
+fn early_ack_is_parked_for_the_op_it_belongs_to() {
+    // Regression for the wait_ack fix: an ack that arrives while a
+    // *different* op is waiting used to be consumed and discarded, so
+    // the op it belonged to timed out. A scripted broker sends the
+    // PUBACK for the client's *next* publish before the SUBACK the
+    // client is currently waiting on; the publish must still complete.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        match Packet::read_from(&mut s).unwrap() {
+            Packet::Connect { .. } => {}
+            other => panic!("expected CONNECT, got {other:?}"),
+        }
+        Packet::ConnAck {
+            session_present: false,
+            return_code: 0,
+        }
+        .write_to(&mut s)
+        .unwrap();
+        let sid = match Packet::read_from(&mut s).unwrap() {
+            Packet::Subscribe { packet_id, .. } => packet_id,
+            other => panic!("expected SUBSCRIBE, got {other:?}"),
+        };
+        // the stray ack first (for the publish the client has not sent
+        // yet), then the one the client is blocked on
+        Packet::PubAck {
+            packet_id: sid.wrapping_add(1),
+        }
+        .write_to(&mut s)
+        .unwrap();
+        Packet::SubAck { packet_id: sid }.write_to(&mut s).unwrap();
+        match Packet::read_from(&mut s).unwrap() {
+            Packet::Publish { packet_id, .. } => {
+                assert_eq!(packet_id, sid.wrapping_add(1));
+            }
+            other => panic!("expected PUBLISH, got {other:?}"),
+        }
+        // no further PUBACK: the early one must satisfy the publish
+    });
+    let mut c = Client::connect(addr, "scripted").unwrap();
+    c.subscribe("a").unwrap();
+    let t0 = std::time::Instant::now();
+    c.publish("t", b"x", QoS::AtLeastOnce, false)
+        .expect("parked ack must complete the publish");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "publish must not ride out the ack timeout"
+    );
+    server.join().unwrap();
 }
 
 #[test]

@@ -1,8 +1,10 @@
 //! Property tests: network substrate — Shannon capacity monotonicity,
 //! channel accounting, topic-matching algebra, packet codec fuzz.
 
+use std::collections::HashSet;
+
 use heteroedge::net::mqtt::packet::{decode_varint, encode_varint, Packet, QoS};
-use heteroedge::net::mqtt::{filter_valid, topic_matches};
+use heteroedge::net::mqtt::{filter_valid, topic_matches, PacketIds};
 use heteroedge::net::{shannon, Band, Channel, ChannelConfig};
 use heteroedge::testkit::{check, prop_assert};
 
@@ -226,6 +228,7 @@ fn prop_publish_packet_roundtrip_fuzz() {
             qos: if g.bool() { QoS::AtMostOnce } else { QoS::AtLeastOnce },
             packet_id: g.usize_in(0, 65535) as u16,
             retain: g.bool(),
+            dup: g.bool(),
         };
         let back =
             Packet::read_from(&mut std::io::Cursor::new(p.encode())).map_err(|e| e.to_string())?;
@@ -242,22 +245,72 @@ fn prop_publish_header_plus_payload_equals_whole_encode() {
         let qos = if g.bool() { QoS::AtMostOnce } else { QoS::AtLeastOnce };
         let packet_id = g.usize_in(0, 65535) as u16;
         let retain = g.bool();
+        let dup = g.bool();
         let whole = Packet::Publish {
             topic: topic.clone(),
             payload: std::borrow::Cow::Borrowed(&payload[..]),
             qos,
             packet_id,
             retain,
+            dup,
         }
         .encode();
         let mut head = Vec::new();
-        Packet::encode_publish_header(&topic, payload.len(), qos, packet_id, retain, &mut head);
+        Packet::encode_publish_header(&topic, payload.len(), qos, packet_id, retain, dup, &mut head);
         head.extend_from_slice(&payload);
         prop_assert(
             head == whole,
             "split header + payload diverged from the one-buffer encode",
         )
     });
+}
+
+#[test]
+fn prop_packet_ids_never_reused_while_inflight() {
+    // a random mix of assigns and acks: an assigned id is never 0 and
+    // never collides with one still awaiting its PUBACK — including
+    // across the 65535 → 1 wrap, which the allocator is pushed through
+    // every case by starting near the top of the id space
+    check("packet-id no reuse while inflight", 60, |g| {
+        // random start point near the top of the id space so cases
+        // straddle the wrap
+        let mut ids = PacketIds::starting_at(g.usize_in(65_300, 65_535) as u16);
+        let mut inflight: Vec<u16> = Vec::new();
+        for _ in 0..g.usize_in(50, 600) {
+            if !inflight.is_empty() && g.bool() {
+                // ack a random inflight message, freeing its id
+                let at = g.usize_in(0, inflight.len() - 1);
+                inflight.swap_remove(at);
+            } else {
+                let got = ids.assign(|id| inflight.contains(&id));
+                let Some(id) = got else {
+                    return Err("allocator refused with free ids".into());
+                };
+                prop_assert(id != 0, "id 0 is protocol-invalid")?;
+                prop_assert(
+                    !inflight.contains(&id),
+                    format!("id {id} reused while inflight"),
+                )?;
+                inflight.push(id);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packet_ids_full_wrap_is_collision_free() {
+    // drain the entire id space with nothing inflight: 65535 distinct
+    // ids, no zero, then the cycle repeats from 1
+    let mut ids = PacketIds::new();
+    let mut seen = HashSet::new();
+    for _ in 0..u16::MAX {
+        let id = ids.assign(|_| false).expect("space is free");
+        assert_ne!(id, 0);
+        assert!(seen.insert(id), "id {id} repeated within one wrap");
+    }
+    assert_eq!(seen.len(), u16::MAX as usize);
+    assert_eq!(ids.assign(|_| false), Some(1), "wrap restarts at 1");
 }
 
 #[test]
@@ -269,6 +322,7 @@ fn prop_truncated_packets_never_panic() {
             qos: QoS::AtLeastOnce,
             packet_id: 9,
             retain: false,
+            dup: false,
         };
         let mut bytes = p.encode();
         let cut = g.usize_in(0, bytes.len());
