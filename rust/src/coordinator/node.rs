@@ -41,6 +41,16 @@ pub trait NodeHandle {
     /// Charge `dt` seconds of non-inference work (masking, admin).
     fn advance(&mut self, dt: f64);
 
+    /// Charge `dt` seconds of *execution* slowdown — thermal throttling,
+    /// contention, a brownout. Unlike [`NodeHandle::advance`], this
+    /// counts toward [`NodeHandle::exec_secs`], so the fleet's
+    /// throughput estimator observes the degraded service rate and can
+    /// shed the node. Default implementations that don't track exec
+    /// time fall back to a plain clock advance.
+    fn charge_slowdown(&mut self, dt: f64) {
+        self.advance(dt);
+    }
+
     /// Latest device-profile snapshot — exactly what
     /// [`DeviceProfileMsg`] publishes over MQTT in the real testbed.
     fn profile(&self) -> DeviceProfileMsg;
@@ -321,6 +331,14 @@ impl<B: ExecBackend> NodeHandle for NodeRuntime<B> {
         self.clock.advance(dt);
     }
 
+    fn charge_slowdown(&mut self, dt: f64) {
+        self.clock.advance(dt);
+        // the extra wall time is spent *executing* (slower), so it
+        // lands in exec_secs — observed_secs_per_image rises and the
+        // admission EWMA sheds the degraded node
+        self.exec_secs += dt;
+    }
+
     fn profile(&self) -> DeviceProfileMsg {
         DeviceProfileMsg {
             at: self.clock.now(),
@@ -443,6 +461,24 @@ mod tests {
         assert_eq!(sa, sb, "per-frame seam charges the same cost");
         assert_eq!(a.frames_done(), 1);
         assert_eq!(a.now(), b.now());
+    }
+
+    #[test]
+    fn charge_slowdown_feeds_the_observed_rate() {
+        let mut n = NodeRuntime::new(DeviceKind::Xavier, SimBackend::new(), 3);
+        let w = Workload::calibration();
+        let secs = n.execute(w, &frames(10), 1.0, false).unwrap();
+        let healthy = n.observed_secs_per_image().unwrap();
+        // a 10× brownout charges 9 extra units of exec time per unit of
+        // real service; the observed per-image rate must rise with it
+        NodeHandle::charge_slowdown(&mut n, 9.0 * secs);
+        let degraded = n.observed_secs_per_image().unwrap();
+        assert!((degraded - 10.0 * healthy).abs() < 1e-9, "{degraded}");
+        assert!((n.clock.now() - 10.0 * secs).abs() < 1e-9);
+        // advance(), by contrast, moves the clock only
+        let before = n.exec_secs;
+        NodeHandle::advance(&mut n, 1.0);
+        assert_eq!(n.exec_secs, before);
     }
 
     #[test]

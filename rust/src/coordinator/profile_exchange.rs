@@ -17,6 +17,12 @@ pub const FRAMES_TOPIC_PREFIX: &str = "heteroedge/frames";
 /// Result topic prefix (`heteroedge/results/<node>`).
 pub const RESULTS_TOPIC_PREFIX: &str = "heteroedge/results";
 
+/// Node-liveness topic prefix (`heteroedge/status/<node>`): each fleet
+/// node's MQTT last will publishes `offline` here when its connection
+/// drops ungracefully, so at QoS 1 the dispatcher hears about a dead
+/// auxiliary from the broker itself.
+pub const STATUS_TOPIC_PREFIX: &str = "heteroedge/status";
+
 /// A device profile snapshot exchanged between nodes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceProfileMsg {

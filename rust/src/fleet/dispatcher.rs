@@ -84,7 +84,7 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::profile_exchange::FRAMES_TOPIC_PREFIX;
+use crate::coordinator::profile_exchange::{FRAMES_TOPIC_PREFIX, STATUS_TOPIC_PREFIX};
 use crate::coordinator::{
     Batcher, DeviceProfileMsg, NodeHandle, NodeRuntime, Scheduler, SchedulerConfig, SimBackend,
 };
@@ -92,7 +92,7 @@ use crate::device::{DeviceKind, DeviceProfiler};
 use crate::frames::codec::{self, EncodedFrame};
 use crate::frames::{Frame, FramePool, PoolStats, SceneGenerator};
 use crate::metrics::Histogram;
-use crate::net::mqtt::{Broker, Client, QoS};
+use crate::net::mqtt::{Broker, Client, LastWill, QoS};
 use crate::net::{Band, Channel, ChannelConfig};
 use crate::sim::EventQueue;
 use crate::trace::{EventKind, NodeTimeline, TraceSink, TraceSummary, Tracer, NO_ID};
@@ -332,6 +332,10 @@ enum FleetEvent {
     /// The `idx`-th event of the run's `FaultPlan` fires. Scheduled
     /// before any arrival, so same-timestamp ties resolve fault-first.
     Fault { idx: usize },
+    /// A windowed fault (`Degrade`/`Partition`) reaches its `until`
+    /// instant and heals. Scheduled alongside the opening `Fault`, so
+    /// heal/arrival ties also resolve fault-first.
+    FaultEnd { idx: usize },
 }
 
 /// Mutable accounting for one `run()`.
@@ -375,12 +379,29 @@ struct MqttFabric {
     /// Delivery QoS for offloaded frames ([`FleetConfig::qos`]).
     qos: QoS,
     pub delivered: u64,
+    /// QoS 1 only: a dispatcher-side watcher subscribed to
+    /// `heteroedge/status/+` — the broker-native liveness channel each
+    /// auxiliary's registered last will publishes `offline` on when its
+    /// connection dies without a DISCONNECT.
+    status: Option<Client>,
+    /// Last-will `offline` notices the status watcher received. Real
+    /// broker-thread deliveries, so the count feeds the Prometheus-only
+    /// side of the report, never cross-transport parity.
+    pub wills_observed: u64,
 }
 
 impl MqttFabric {
     fn start(n_nodes: usize, primaries: usize, qos: QoS) -> Result<MqttFabric> {
         let broker = Broker::start().context("starting fleet broker")?;
         let addr = broker.addr();
+        let status = if qos == QoS::AtLeastOnce {
+            let mut c = Client::connect(addr, "fleet-status-watch")
+                .context("starting the liveness status watcher")?;
+            c.subscribe(&format!("{STATUS_TOPIC_PREFIX}/+"))?;
+            Some(c)
+        } else {
+            None
+        };
         let mut fab = MqttFabric {
             broker,
             publisher: Client::connect(addr, "fleet-dispatcher")?,
@@ -389,11 +410,25 @@ impl MqttFabric {
             primaries,
             qos,
             delivered: 0,
+            status,
+            wills_observed: 0,
         };
         for j in primaries..n_nodes {
             fab.add_aux(j)?;
         }
         Ok(fab)
+    }
+
+    /// The last will every auxiliary registers at CONNECT: `offline` on
+    /// its `heteroedge/status/<node>` topic, fired by the broker if and
+    /// only if the connection ends without a clean DISCONNECT.
+    fn will_for(&self, node: usize) -> LastWill {
+        LastWill {
+            topic: format!("{STATUS_TOPIC_PREFIX}/node-{node}"),
+            payload: b"offline".to_vec(),
+            qos: self.qos,
+            retain: false,
+        }
     }
 
     /// Publish one encoded frame to an auxiliary's topic at the
@@ -423,11 +458,19 @@ impl MqttFabric {
 
     /// Connect and subscribe a client for auxiliary `node`, appending
     /// its topic slot (startup and mid-run joins). QoS 1 subscribers
-    /// ask for a persistent session.
+    /// ask for a persistent session and register their last will so
+    /// the broker itself announces an ungraceful death.
     fn add_aux(&mut self, node: usize) -> Result<()> {
         let topic = format!("{FRAMES_TOPIC_PREFIX}/node-{node}");
         let clean = self.qos == QoS::AtMostOnce;
-        let mut c = Client::connect_with(self.broker.addr(), &format!("node-{node}"), clean, 0)?;
+        let will = (self.qos == QoS::AtLeastOnce).then(|| self.will_for(node));
+        let mut c = Client::connect_full(
+            self.broker.addr(),
+            &format!("node-{node}"),
+            clean,
+            0,
+            will,
+        )?;
         c.subscribe(&topic)?;
         self.subscribers.push(Some(c));
         self.topics.push(topic);
@@ -435,23 +478,58 @@ impl MqttFabric {
     }
 
     /// A killed auxiliary's subscriber drops without a DISCONNECT —
-    /// exactly how a crashed node leaves the network. Its persistent
-    /// session stays on the broker awaiting the revive.
+    /// exactly how a crashed node leaves the network. The socket is
+    /// torn down hard so the broker sees an ungraceful close and fires
+    /// the registered last will; the persistent session stays on the
+    /// broker awaiting the revive.
     fn kill_aux(&mut self, node: usize) {
-        self.subscribers[node - self.primaries] = None;
+        if let Some(c) = self.subscribers[node - self.primaries].take() {
+            c.abort();
+        }
     }
 
     /// Reconnect a revived auxiliary with clean_session=false: the
     /// broker must report session-present and needs no re-SUBSCRIBE —
     /// the stored subscription (and any queued QoS 1 frames) resume.
+    /// The will re-arms with the fresh connection (a revived node can
+    /// die again).
     fn revive_aux(&mut self, node: usize) -> Result<()> {
-        let c = Client::connect_with(self.broker.addr(), &format!("node-{node}"), false, 0)?;
+        let will = Some(self.will_for(node));
+        let c = Client::connect_full(
+            self.broker.addr(),
+            &format!("node-{node}"),
+            false,
+            0,
+            will,
+        )?;
         ensure!(
             c.session_present(),
             "broker lost node-{node}'s persistent session across the kill"
         );
         self.subscribers[node - self.primaries] = Some(c);
         Ok(())
+    }
+
+    /// Block until the status watcher hears the dead node's last will —
+    /// the broker-native liveness signal the dispatcher acts on instead
+    /// of waiting out an application-level timeout.
+    fn observe_will(&mut self, node: usize) -> Result<()> {
+        let Some(watch) = self.status.as_ref() else {
+            return Ok(());
+        };
+        let want = format!("{STATUS_TOPIC_PREFIX}/node-{node}");
+        match watch.recv_timeout(Duration::from_secs(10)) {
+            Some(msg) if msg.topic == want && msg.payload == b"offline" => {
+                self.wills_observed += 1;
+                Ok(())
+            }
+            Some(msg) => bail!(
+                "unexpected status message on {} ({} bytes) while awaiting node-{node}'s will",
+                msg.topic,
+                msg.payload.len()
+            ),
+            None => bail!("node-{node}'s last will never reached the status watcher"),
+        }
     }
 
     /// Publish a node's device profile as a retained message on
@@ -533,6 +611,25 @@ pub struct Dispatcher {
     /// Liveness per node. All-true without a fault plan; kills/revives
     /// flip entries mid-run, `run()` resets them.
     alive: Vec<bool>,
+    /// Gray-failure service-time multiplier per node (1.0 = healthy).
+    /// A `Degrade` fault raises it for the fault window; every service
+    /// site charges `(factor - 1) × exec` of extra clock so the
+    /// throughput EWMA *observes* the brownout and sheds the node.
+    degrade: Vec<f64>,
+    /// While a `Partition` is active: the group index each node sits
+    /// in (`None` = unlisted, reachable from everyone). Reset on heal.
+    partition_group: Vec<Option<usize>>,
+    /// Whether a `Partition` window is currently open.
+    partition_active: bool,
+    /// Per node: a brownout is open and the admission path has not yet
+    /// been observed shedding it (the shed-latency detector's arm bit).
+    shed_pending: Vec<bool>,
+    /// Round in which each node's open brownout began (shed latency
+    /// measurement baseline).
+    degrade_start_round: Vec<Option<usize>>,
+    /// Admission-path secs/image estimate captured at brownout onset —
+    /// the healthy baseline a shed is detected against.
+    healthy_est: Vec<f64>,
     /// Scripted churn applied to the next `run()` (see
     /// [`Dispatcher::set_fault_plan`]); `None` = fault-free.
     fault_plan: Option<FaultPlan>,
@@ -677,6 +774,7 @@ impl Dispatcher {
             }
         };
         let alive = vec![true; cfg.n_nodes];
+        let n = cfg.n_nodes;
         let last_handoff_round = vec![None; registry.len()];
         Ok(Dispatcher {
             cfg,
@@ -693,6 +791,12 @@ impl Dispatcher {
             tracer: Tracer::off(),
             profilers: None,
             alive,
+            degrade: vec![1.0; n],
+            partition_group: vec![None; n],
+            partition_active: false,
+            shed_pending: vec![false; n],
+            degrade_start_round: vec![None; n],
+            healthy_est: vec![0.0; n],
             fault_plan: None,
             last_handoff_round,
         })
@@ -898,6 +1002,18 @@ impl Dispatcher {
         }
     }
 
+    /// Can node `a` exchange frames with node `b` right now? True
+    /// unless an open `Partition` places them in different groups.
+    /// Nodes unlisted by the partition (e.g. a mid-partition `JoinAux`)
+    /// are reachable from everyone.
+    fn reachable(&self, a: usize, b: usize) -> bool {
+        !self.partition_active
+            || match (self.partition_group[a], self.partition_group[b]) {
+                (Some(x), Some(y)) => x == y,
+                _ => true,
+            }
+    }
+
     /// Node `j`'s frame capacity for the round ending at `round_end`:
     /// its remaining wall-clock budget divided by its per-image cost.
     /// The budget is capped at one round period — a node whose clock
@@ -930,6 +1046,11 @@ impl Dispatcher {
         let aux_frac = 1.0 / self.cfg.primaries as f64;
         let mut acc = self.node_capacity_frames(p, round_end, round_secs);
         for a in self.cfg.primaries..self.nodes.len() {
+            // an aux across an open partition contributes nothing to
+            // this primary's budget — admission sheds to local capacity
+            if !self.reachable(p, a) {
+                continue;
+            }
             acc += self.node_capacity_frames(a, round_end, round_secs) * aux_frac;
         }
         acc
@@ -994,7 +1115,11 @@ impl Dispatcher {
                         .is_some_and(|r0| round.saturating_sub(r0) < dwell);
                 let target = (0..p_count)
                     .filter(|&q| {
-                        !dwelling && q != owner && self.alive[q] && remaining[q] >= rate as f64
+                        !dwelling
+                            && q != owner
+                            && self.alive[q]
+                            && self.reachable(owner, q)
+                            && remaining[q] >= rate as f64
                     })
                     .max_by(|&a, &b| {
                         remaining[a]
@@ -1070,14 +1195,27 @@ impl Dispatcher {
             );
         }
 
-        // everyone starts alive; schedule the fault schedule up front so
-        // same-timestamp ties with arrivals resolve fault-first (the
-        // event queue breaks ties by insertion order)
+        // everyone starts alive and healthy; schedule the fault schedule
+        // up front so same-timestamp ties with arrivals resolve
+        // fault-first (the event queue breaks ties by insertion order).
+        // Windowed faults (brownouts, partitions) also schedule their
+        // heal at `until`.
         self.alive = vec![true; self.nodes.len()];
+        self.degrade = vec![1.0; self.nodes.len()];
+        self.partition_group = vec![None; self.nodes.len()];
+        self.partition_active = false;
+        self.shed_pending = vec![false; self.nodes.len()];
+        self.degrade_start_round = vec![None; self.nodes.len()];
+        self.healthy_est = vec![0.0; self.nodes.len()];
         self.last_handoff_round = vec![None; self.registry.len()];
         if let Some(plan) = &self.fault_plan {
             for (idx, ev) in plan.events.iter().enumerate() {
                 st.events.schedule(ev.at, FleetEvent::Fault { idx });
+                if let FaultAction::Degrade { until, .. } | FaultAction::Partition { until, .. } =
+                    &ev.action
+                {
+                    st.events.schedule(*until, FleetEvent::FaultEnd { idx });
+                }
             }
         }
 
@@ -1109,6 +1247,7 @@ impl Dispatcher {
 
             let admission = if cfg.admission_control {
                 self.observe_round_throughput();
+                self.detect_sheds(round, &mut st);
                 self.plan_round_admission(round, round_end, cfg.round_secs, &mut st)
             } else {
                 vec![AdmissionDecision::Admit; self.registry.len()]
@@ -1239,6 +1378,7 @@ impl Dispatcher {
             primary_fallbacks: st.primary_fallbacks,
             stream_handoffs: st.handoffs,
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
+            wills_observed: self.fabric.as_ref().map(|f| f.wills_observed).unwrap_or(0),
             pool: self.pool.stats().since(pool_start),
             trace,
             churn: st.churn,
@@ -1270,6 +1410,7 @@ impl Dispatcher {
             // needed): a revive scheduled past the last round still
             // lands
             FleetEvent::Fault { idx } => self.apply_fault(idx, at, st),
+            FleetEvent::FaultEnd { idx } => self.end_fault(idx, at, st),
         }
     }
 
@@ -1283,7 +1424,8 @@ impl Dispatcher {
             .as_ref()
             .context("fault event without a plan")?
             .events[idx]
-            .action;
+            .action
+            .clone();
         let churn = st.churn.as_mut().context("fault event without a ledger")?;
         churn.fault_events += 1;
         let p_count = self.cfg.primaries;
@@ -1297,11 +1439,20 @@ impl Dispatcher {
                     self.rehome_dead_primary(node, at, st)?;
                 } else {
                     // QoS 1 over the real fabric: the dead node's MQTT
-                    // connection drops with it; the broker keeps its
-                    // persistent session for the revive
+                    // connection drops ungracefully (no DISCONNECT), so
+                    // the broker fires its registered last will on
+                    // heteroedge/status/<node> and keeps the persistent
+                    // session for the revive. The will-fired mark is
+                    // traced at the sim kill instant under BOTH
+                    // transports so same-seed traces stay
+                    // transport-identical; the real observation feeds
+                    // only the Prometheus-side wills_observed counter.
                     if self.cfg.qos == QoS::AtLeastOnce {
+                        self.tracer
+                            .instant(EventKind::WillFired, at, NO_ID, NO_ID, node as u32, 0.0);
                         if let Some(fab) = self.fabric.as_mut() {
                             fab.kill_aux(node);
+                            fab.observe_will(node)?;
                         }
                     }
                     self.recover_dead_aux(node, at, st)?;
@@ -1315,7 +1466,12 @@ impl Dispatcher {
                 self.nodes[node].handle.sync_to(at);
                 self.tracer
                     .instant(EventKind::NodeUp, at, NO_ID, NO_ID, node as u32, 0.0);
-                if node >= p_count {
+                if node < p_count {
+                    // fail-back: the revived primary reclaims its
+                    // rendezvous-owned streams (dwell hysteresis wins
+                    // where the window is still open)
+                    self.failback_primary(node, at, st)?;
+                } else {
                     // resume the persistent session first (the broker
                     // must report session-present), then re-ship every
                     // frame parked through the downtime
@@ -1333,6 +1489,126 @@ impl Dispatcher {
                 self.tracer
                     .instant(EventKind::NodeUp, at, NO_ID, NO_ID, node as u32, 1.0);
             }
+            FaultAction::Degrade { node, factor, .. } => {
+                churn.brownouts += 1;
+                let round = (at / self.cfg.round_secs).floor().max(0.0) as usize;
+                let est = self.per_img_est(node);
+                self.degrade[node] = factor;
+                self.shed_pending[node] = true;
+                self.degrade_start_round[node] = Some(round);
+                self.healthy_est[node] = est;
+                self.tracer
+                    .instant(EventKind::Brownout, at, NO_ID, NO_ID, node as u32, factor);
+            }
+            FaultAction::Partition { groups, .. } => {
+                churn.partitions += 1;
+                self.partition_group = vec![None; self.nodes.len()];
+                for (g, members) in groups.iter().enumerate() {
+                    for &m in members {
+                        self.partition_group[m] = Some(g);
+                    }
+                }
+                self.partition_active = true;
+                self.tracer.instant(
+                    EventKind::Partition,
+                    at,
+                    NO_ID,
+                    NO_ID,
+                    NO_ID,
+                    groups.len() as f64,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// A windowed fault's `until` instant: restore healthy state and
+    /// trace the heal. Heals do not count toward `fault_events` — the
+    /// ledger counts scheduled fault *injections*, and the heal closes
+    /// the same incident.
+    fn end_fault(&mut self, idx: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let action = self
+            .fault_plan
+            .as_ref()
+            .context("fault-end event without a plan")?
+            .events[idx]
+            .action
+            .clone();
+        let churn = st.churn.as_mut().context("fault-end without a ledger")?;
+        match action {
+            FaultAction::Degrade { node, .. } => {
+                self.degrade[node] = 1.0;
+                self.shed_pending[node] = false;
+                self.degrade_start_round[node] = None;
+                self.tracer
+                    .instant(EventKind::Heal, at, NO_ID, NO_ID, node as u32, 1.0);
+            }
+            FaultAction::Partition { groups, .. } => {
+                churn.heals += 1;
+                self.partition_active = false;
+                self.partition_group = vec![None; self.nodes.len()];
+                self.tracer
+                    .instant(EventKind::Heal, at, NO_ID, NO_ID, NO_ID, groups.len() as f64);
+            }
+            _ => bail!("fault-end scheduled for a non-windowed action"),
+        }
+        Ok(())
+    }
+
+    /// Once per round, right after the throughput EWMA folds in the
+    /// previous round's observations: check every armed brownout for
+    /// the moment the admission-path estimate crosses 2× its healthy
+    /// baseline — the point the capacity budget (and with it the
+    /// odds-form split ratios' admission share) has demonstrably shed
+    /// the degraded node. Records the worst onset→shed latency.
+    fn detect_sheds(&mut self, round: usize, st: &mut RunState) {
+        let Some(churn) = st.churn.as_mut() else {
+            return;
+        };
+        for j in 0..self.nodes.len() {
+            if !self.shed_pending[j] {
+                continue;
+            }
+            if self.per_img_est(j) >= 2.0 * self.healthy_est[j] {
+                churn.sheds += 1;
+                let since = round.saturating_sub(self.degrade_start_round[j].unwrap_or(round));
+                churn.shed_latency_rounds = churn.shed_latency_rounds.max(since as u64);
+                self.shed_pending[j] = false;
+            }
+        }
+    }
+
+    /// Fail-back: a revived primary reclaims every stream whose
+    /// rendezvous base owner it is from the interim owners the failover
+    /// installed. A stream still inside its handoff dwell window stays
+    /// put — hysteresis wins over reclamation, so a flapping primary
+    /// cannot make its streams ping-pong (`--dwell`).
+    fn failback_primary(&mut self, node: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let round = (at / self.cfg.round_secs).floor().max(0.0) as usize;
+        let dwell = self.cfg.handoff_dwell_rounds;
+        let prev: Vec<usize> = (0..self.shard.len()).map(|s| self.shard.owner(s)).collect();
+        let reclaimed = self.shard.failback(node)?;
+        for s in reclaimed {
+            let dwelling = dwell > 0
+                && self.last_handoff_round[s]
+                    .is_some_and(|r0| round.saturating_sub(r0) < dwell);
+            if dwelling {
+                // veto: the interim owner keeps it until the window
+                // expires (rehome cannot fail: prev[s] is a primary)
+                self.shard.rehome(s, prev[s])?;
+                continue;
+            }
+            self.last_handoff_round[s] = Some(round);
+            let churn = st.churn.as_mut().expect("fault implies ledger");
+            churn.failback_streams += 1;
+            self.tracer.instant(
+                EventKind::Failback,
+                at,
+                s as u32,
+                NO_ID,
+                node as u32,
+                prev[s] as f64,
+            );
         }
         Ok(())
     }
@@ -1426,6 +1702,11 @@ impl Dispatcher {
             let owner = self.shard.owner(s);
             let mut placed = None;
             for &j in &order {
+                // a sibling across an open partition cannot take the
+                // frame — the owner's side serves it locally instead
+                if !self.reachable(owner, j) {
+                    continue;
+                }
                 if self.nodes[j].inbox.free() == 0 {
                     self.nodes[j].inbox.refuse();
                     st.backpressure_events += 1;
@@ -1493,6 +1774,12 @@ impl Dispatcher {
                     let start = primary.handle.now().max(at);
                     primary.handle.sync_to(start);
                     primary.handle.run_one(workload, &frame, 0.0, masked)?;
+                    // brownout charge (see serve_one)
+                    let factor = self.degrade[owner];
+                    if factor > 1.0 {
+                        let extra = (factor - 1.0) * (primary.handle.now() - start);
+                        primary.handle.charge_slowdown(extra);
+                    }
                     let done = primary.handle.now();
                     self.tracer
                         .span(EventKind::Serve, start, done - start, s as u32, enc_id, owner as u32, 0.0);
@@ -1505,8 +1792,12 @@ impl Dispatcher {
                 }
             }
         }
+        // per-incident window: this eviction's own fault→re-placed span.
+        // Overlapping faults each contribute their own duration — the
+        // ledger sums incidents, it does not stretch one global span.
         let churn = st.churn.as_mut().expect("fault implies ledger");
         churn.recovery_time_s += recovery_end - at;
+        churn.recovery_incidents += 1;
         Ok(())
     }
 
@@ -1569,6 +1860,7 @@ impl Dispatcher {
         }
         let churn = st.churn.as_mut().expect("fault implies ledger");
         churn.recovery_time_s += redelivery_end - at;
+        churn.recovery_incidents += 1;
         Ok(())
     }
 
@@ -1617,6 +1909,13 @@ impl Dispatcher {
         self.ewma.push(ThroughputEwma::new(self.cfg.ewma_alpha));
         self.ewma_snap.push((0, 0.0));
         self.alive.push(true);
+        self.degrade.push(1.0);
+        // a joiner is outside any open partition's groups: reachable
+        // from everyone (see `reachable`)
+        self.partition_group.push(None);
+        self.shed_pending.push(false);
+        self.degrade_start_round.push(None);
+        self.healthy_est.push(0.0);
         st.busy.push(false);
         if let Some(profilers) = self.profilers.as_mut() {
             let interval = (self.cfg.round_secs * 0.5).max(1e-9);
@@ -1699,8 +1998,18 @@ impl Dispatcher {
         let mut ratios: Vec<f64> = Vec::with_capacity(tail.len());
         for (k, aux) in tail.iter_mut().enumerate() {
             // a dead aux attracts nothing; skipping `decide` also
-            // freezes the pair's β hysteresis until it revives
-            if !self.alive[p_count + k] {
+            // freezes the pair's β hysteresis until it revives. An aux
+            // across an open partition is equally unreachable for the
+            // window's duration (inlined reachability test — `tail`
+            // holds the split borrow of `self.nodes`, so the `&self`
+            // helper is off-limits here). Zeroed ratios also exclude
+            // the node from the steal order below.
+            let severed = self.partition_active
+                && matches!(
+                    (self.partition_group[owner], self.partition_group[p_count + k]),
+                    (Some(x), Some(y)) if x != y
+                );
+            if !self.alive[p_count + k] || severed {
                 ratios.push(0.0);
                 continue;
             }
@@ -1927,6 +2236,12 @@ impl Dispatcher {
             primary
                 .handle
                 .run(workload, &local, offload_frac, masked)?;
+            // brownout charge (see serve_one): degraded primaries slow too
+            let factor = self.degrade[owner];
+            if factor > 1.0 {
+                let extra = (factor - 1.0) * (primary.handle.now() - run_start);
+                primary.handle.charge_slowdown(extra);
+            }
             let done = primary.handle.now();
             st.stream_reports[s].completed += n_local;
             for _ in 0..n_local {
@@ -1985,6 +2300,14 @@ impl Dispatcher {
             job.enc.wire_bytes() as f64,
         );
         slot.handle.run_one(spec.workload, &frame, r, spec.masked)?;
+        // brownout: a degraded node takes (factor - 1)× extra clock and
+        // exec time — the inflation the throughput EWMA observes, which
+        // is exactly the shed-detection signal
+        let factor = self.degrade[node];
+        if factor > 1.0 {
+            let extra = (factor - 1.0) * (slot.handle.now() - start);
+            slot.handle.charge_slowdown(extra);
+        }
         let done = slot.handle.now();
         self.tracer.span(
             EventKind::Serve,
@@ -2052,6 +2375,12 @@ impl Dispatcher {
                 }
                 aux.handle
                     .run(spec.workload, &frames, aux.last_r, spec.masked)?;
+                // brownout charge (see serve_one)
+                let factor = self.degrade[p_count + kk];
+                if factor > 1.0 {
+                    let extra = (factor - 1.0) * (aux.handle.now() - group_start);
+                    aux.handle.charge_slowdown(extra);
+                }
                 let done = aux.handle.now();
                 if self.tracer.enabled() {
                     let dur = (done - group_start) / served.len() as f64;
@@ -2474,6 +2803,185 @@ mod tests {
         cfg.rounds = 4;
         cfg.frames_per_round = 8;
         assert!(Dispatcher::new(cfg).unwrap().run().unwrap().churn.is_none());
+    }
+
+    #[test]
+    fn brownout_is_shed_within_bounded_rounds() {
+        // degrade one aux 10x mid-run: the EWMA must observe the
+        // inflated secs/image and the shed detector must fire within a
+        // few rounds of onset — without the node ever dying
+        let mut cfg = FleetConfig::new(3, 3);
+        cfg.rounds = 6;
+        cfg.frames_per_round = 6;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        d.set_fault_plan(FaultPlan {
+            events: vec![FaultEvent {
+                at: 6.0,
+                action: FaultAction::Degrade {
+                    node: 2,
+                    factor: 10.0,
+                    until: 25.0,
+                },
+            }],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        let c = rep.churn.as_ref().expect("fault run carries a ledger");
+        assert_eq!(c.brownouts, 1);
+        assert_eq!(c.node_kills, 0, "a brownout is not a death");
+        assert!(c.sheds >= 1, "the degraded aux was never shed");
+        assert!(
+            (1..=3).contains(&c.shed_latency_rounds),
+            "shed latency {} rounds outside the EWMA bound",
+            c.shed_latency_rounds
+        );
+        assert_eq!(c.frames_lost, 0, "brownouts slow frames, never lose them");
+        for s in &rep.streams {
+            assert_eq!(s.offered, s.admitted + s.degraded + s.rejected, "{}", s.name);
+            assert_eq!(s.completed, s.admitted - s.deduped, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn partition_severs_offload_and_heals_without_double_serving() {
+        // evens vs odds for the fault window: each primary may only use
+        // its own side's auxes; on heal the full fleet resumes. No frame
+        // may ever be served twice (completed never exceeds admitted).
+        let mut cfg = FleetConfig::new(6, 6);
+        cfg.primaries = 2;
+        cfg.rounds = 6;
+        cfg.frames_per_round = 6;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        d.set_fault_plan(FaultPlan {
+            events: vec![FaultEvent {
+                at: 10.0,
+                action: FaultAction::Partition {
+                    groups: vec![vec![0, 2, 4], vec![1, 3, 5]],
+                    until: 25.0,
+                },
+            }],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        let c = rep.churn.as_ref().unwrap();
+        assert_eq!(c.partitions, 1);
+        assert_eq!(c.heals, 1, "the partition must heal inside the run");
+        assert_eq!(c.frames_lost, 0, "both sides keep serving locally");
+        for s in &rep.streams {
+            assert_eq!(s.offered, s.admitted + s.degraded + s.rejected, "{}", s.name);
+            // exactly-once: every admitted frame served once, none twice
+            assert_eq!(s.completed, s.admitted - s.deduped, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn revived_primary_fails_back_its_streams() {
+        let mut cfg = FleetConfig::new(5, 8);
+        cfg.primaries = 2;
+        cfg.rounds = 5;
+        cfg.frames_per_round = 4;
+        // admission off: no voluntary handoffs, so ownership changes are
+        // attributable to failover + fail-back alone
+        cfg.admission_control = false;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        let before: Vec<usize> = (0..8).map(|s| d.stream_owner(s).unwrap()).collect();
+        let orphaned = before.iter().filter(|&&p| p == 0).count() as u64;
+        assert!(orphaned > 0, "primary 0 must own streams for this test");
+        d.set_fault_plan(FaultPlan {
+            events: vec![
+                kill(0, 7.5),
+                FaultEvent {
+                    at: 16.0,
+                    action: FaultAction::Revive { node: 0 },
+                },
+            ],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        let c = rep.churn.as_ref().unwrap();
+        assert_eq!(c.rehomed_streams, orphaned);
+        assert_eq!(
+            c.failback_streams, orphaned,
+            "the revived primary must reclaim every stream it lost"
+        );
+        for (s, &owner_before) in before.iter().enumerate() {
+            assert_eq!(
+                d.stream_owner(s).unwrap(),
+                owner_before,
+                "stream {s} must return to its rendezvous owner"
+            );
+        }
+        for s in &rep.streams {
+            assert_eq!(s.completed + s.lost, s.admitted - s.deduped, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn dwell_hysteresis_vetoes_an_immediate_failback() {
+        // kill and revive inside one dwell window: hysteresis wins, the
+        // interim owner keeps the streams, and no reclaim is counted
+        let mut cfg = FleetConfig::new(5, 8);
+        cfg.primaries = 2;
+        cfg.rounds = 5;
+        cfg.frames_per_round = 4;
+        cfg.admission_control = false;
+        cfg.handoff_dwell_rounds = 1000;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        let orphaned = (0..8)
+            .filter(|&s| d.stream_owner(s).unwrap() == 0)
+            .count() as u64;
+        assert!(orphaned > 0);
+        d.set_fault_plan(FaultPlan {
+            events: vec![
+                kill(0, 7.5),
+                FaultEvent {
+                    at: 16.0,
+                    action: FaultAction::Revive { node: 0 },
+                },
+            ],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        let c = rep.churn.as_ref().unwrap();
+        assert_eq!(c.rehomed_streams, orphaned);
+        assert_eq!(c.failback_streams, 0, "dwell must veto the reclaim");
+        assert!(
+            (0..8).all(|s| d.stream_owner(s).unwrap() == 1),
+            "vetoed streams stay with the interim owner"
+        );
+    }
+
+    #[test]
+    fn overlapping_faults_count_separate_recovery_incidents() {
+        // two aux kills 0.2 s apart: each eviction contributes its own
+        // recovery window — the ledger sums per-incident durations, not
+        // one global first-fault→last-recovery span
+        let mut cfg = FleetConfig::new(4, 2);
+        cfg.rounds = 3;
+        cfg.frames_per_round = 12;
+        cfg.admission_control = false;
+        cfg.drain = DrainMode::Batched;
+        let mut d = Dispatcher::new(cfg).unwrap();
+        d.set_fault_plan(FaultPlan {
+            events: vec![kill(2, 9.7), kill(3, 9.9)],
+            mobility: None,
+        })
+        .unwrap();
+        let rep = d.run().unwrap();
+        let c = rep.churn.as_ref().unwrap();
+        assert_eq!(c.node_kills, 2);
+        assert_eq!(
+            c.recovery_incidents, 2,
+            "each eviction is its own recovery incident"
+        );
+        assert!(c.recovery_time_s > 0.0);
+        for s in &rep.streams {
+            assert_eq!(s.completed + s.lost, s.admitted - s.deduped, "{}", s.name);
+        }
     }
 
     #[test]

@@ -17,6 +17,14 @@
 //! synthetic prior), so after one round the estimate equals the lifetime
 //! mean exactly and a cold node keeps using the Table I anchors via
 //! [`estimate_or`](ThroughputEwma::estimate_or).
+//!
+//! This estimator is also the fleet's **brownout detector**: a
+//! `Degrade` fault inflates a node's charged exec time without killing
+//! it, the next round's observation lands `factor×` above the healthy
+//! rate, and the dispatcher counts the node as shed once the estimate
+//! crosses 2× the baseline captured at brownout onset — within a
+//! bounded number of rounds for any alpha ≥ 0.5 at factor ≥ 10 (the
+//! property test in `tests/prop_fleet.rs` pins the bound).
 
 /// Exponentially weighted moving average of a node's secs/image.
 #[derive(Debug, Clone)]

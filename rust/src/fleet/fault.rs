@@ -9,8 +9,15 @@
 //! included (checked by `tests/integration_fleet.rs`).
 //!
 //! The plan is either scripted by hand (tests, targeted what-ifs) or
-//! generated from the fleet seed ([`FaultPlan::churn_scenario`], the
-//! `heteroedge fleet --scenario churn` CLI path). An optional
+//! generated from the fleet seed — [`FaultPlan::churn_scenario`] (the
+//! fixed kill/revive/join script), [`FaultPlan::sustained_scenario`]
+//! (Poisson node lifetimes: every auxiliary alternates exponentially
+//! distributed up- and down-time, so recovery machinery runs
+//! continuously), [`FaultPlan::brownout_scenario`] (gray failure: a
+//! node serves N× slower without dying — the throughput EWMA must shed
+//! it), and [`FaultPlan::partition_scenario`] (the fleet splits into
+//! isolated groups and heals) — the `heteroedge fleet --scenario
+//! churn|sustained|brownout|partition` CLI paths. An optional
 //! [`MobilityTrace`] makes the per-pair Shannon rates drift as the
 //! convoy spreads out: every round start, each primary↔auxiliary link's
 //! distance is advanced along the trace, so transfer costs — and with
@@ -26,8 +33,8 @@ use super::dispatcher::FleetConfig;
 use crate::mobility::MobilityModel;
 use crate::util::rng::Rng;
 
-/// One membership change applied at a scheduled instant.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One membership or health change applied at a scheduled instant.
+#[derive(Debug, Clone, PartialEq)]
 pub enum FaultAction {
     /// Node `node` dies. A primary's streams immediately fail over via
     /// the shard map (only its streams move); an auxiliary's in-flight
@@ -36,17 +43,34 @@ pub enum FaultAction {
     /// wire, which are lost.
     Kill { node: usize },
     /// A previously killed node comes back, clock synced to the revive
-    /// instant. No automatic fail-back: a revived primary wins streams
-    /// again only through the ordinary handoff pass.
+    /// instant. A revived **primary** reclaims its rendezvous-owned
+    /// streams (fail-back) subject to the handoff-dwell hysteresis; a
+    /// revived auxiliary under QoS 1 resumes its broker session and
+    /// drains parked frames.
     Revive { node: usize },
     /// A brand-new auxiliary joins the pool, appended at the current
     /// node count with the same deterministic seeding formulas the
     /// constructor uses — surviving nodes' RNG streams are untouched.
     JoinAux,
+    /// Gray failure (brownout): node `node` keeps serving, but every
+    /// service takes `factor`× as long until sim time `until`. The
+    /// extra time is charged as execution, so the admission EWMA
+    /// observes the degraded rate and sheds the node within a bounded
+    /// number of rounds (`ChurnReport::sheds` /
+    /// `shed_latency_rounds`).
+    Degrade { node: usize, factor: f64, until: f64 },
+    /// Network partition until sim time `until`: nodes listed in
+    /// different groups cannot reach each other — primary↔primary
+    /// handoff, offload, steal and recovery placement are all severed
+    /// across the cut while each side keeps serving locally. Nodes not
+    /// listed in any group (e.g. an auxiliary joining mid-partition)
+    /// remain reachable from everyone. Heal-time reconciliation never
+    /// double-serves a frame.
+    Partition { groups: Vec<Vec<usize>>, until: f64 },
 }
 
 /// A [`FaultAction`] with its sim-clock firing time.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FaultEvent {
     /// Sim-clock seconds; ties with frame arrivals resolve fault-first
     /// (faults are scheduled before any arrival).
@@ -95,15 +119,22 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
-    /// Validate the schedule against a fleet shape: times finite, sorted
-    /// and non-negative; every node index valid at its firing time
-    /// (joins extend the valid range as they occur); no killing the
-    /// dead or reviving the living; and at least one primary alive at
-    /// every instant — a fleet with no ingest path cannot recover.
+    /// Validate the schedule against a fleet shape: times finite, sorted,
+    /// non-negative and inside the run horizon; every node index valid
+    /// at its firing time (joins extend the valid range as they occur);
+    /// no killing the dead or reviving the living; no overlapping
+    /// brownouts on one node or concurrent partitions; and at least one
+    /// primary alive at every instant — a fleet with no ingest path
+    /// cannot recover.
     pub fn validate(&self, cfg: &FleetConfig) -> Result<()> {
+        let horizon = cfg.rounds as f64 * cfg.round_secs;
         let mut alive: Vec<bool> = vec![true; cfg.n_nodes];
         let mut live_primaries = cfg.primaries;
         let mut last_at = 0.0f64;
+        // active-window tracking: a second Degrade on a node (or a
+        // second Partition) may only start once the first has lapsed
+        let mut degrade_until: Vec<f64> = vec![0.0; cfg.n_nodes];
+        let mut partition_until = 0.0f64;
         for (i, ev) in self.events.iter().enumerate() {
             ensure!(
                 ev.at.is_finite() && ev.at >= 0.0,
@@ -115,9 +146,15 @@ impl FaultPlan {
                 "fault event {i}: times must be sorted ({} < {last_at})",
                 ev.at
             );
+            ensure!(
+                ev.at <= horizon,
+                "fault event {i}: t={} is past the run horizon {horizon}",
+                ev.at
+            );
             last_at = ev.at;
-            match ev.action {
+            match &ev.action {
                 FaultAction::Kill { node } => {
+                    let node = *node;
                     ensure!(node < alive.len(), "fault event {i}: node {node} out of range");
                     ensure!(alive[node], "fault event {i}: node {node} is already dead");
                     alive[node] = false;
@@ -130,6 +167,7 @@ impl FaultPlan {
                     }
                 }
                 FaultAction::Revive { node } => {
+                    let node = *node;
                     ensure!(node < alive.len(), "fault event {i}: node {node} out of range");
                     ensure!(!alive[node], "fault event {i}: node {node} is already alive");
                     alive[node] = true;
@@ -137,7 +175,72 @@ impl FaultPlan {
                         live_primaries += 1;
                     }
                 }
-                FaultAction::JoinAux => alive.push(true),
+                FaultAction::JoinAux => {
+                    alive.push(true);
+                    degrade_until.push(0.0);
+                }
+                FaultAction::Degrade {
+                    node,
+                    factor,
+                    until,
+                } => {
+                    let (node, factor, until) = (*node, *factor, *until);
+                    ensure!(node < alive.len(), "fault event {i}: node {node} out of range");
+                    ensure!(
+                        alive[node],
+                        "fault event {i}: cannot degrade dead node {node}"
+                    );
+                    ensure!(
+                        factor.is_finite() && factor >= 1.0,
+                        "fault event {i}: degrade factor {factor} must be finite and >= 1"
+                    );
+                    ensure!(
+                        until.is_finite() && until > ev.at,
+                        "fault event {i}: degrade window must end after it starts"
+                    );
+                    ensure!(
+                        until <= horizon,
+                        "fault event {i}: degrade end {until} is past the run horizon {horizon}"
+                    );
+                    ensure!(
+                        ev.at >= degrade_until[node],
+                        "fault event {i}: node {node} is already degraded until {}",
+                        degrade_until[node]
+                    );
+                    degrade_until[node] = until;
+                }
+                FaultAction::Partition { groups, until } => {
+                    let until = *until;
+                    ensure!(
+                        groups.len() >= 2,
+                        "fault event {i}: a partition needs at least two groups"
+                    );
+                    ensure!(
+                        until.is_finite() && until > ev.at,
+                        "fault event {i}: partition must heal after it starts"
+                    );
+                    ensure!(
+                        until <= horizon,
+                        "fault event {i}: partition heal {until} is past the run horizon {horizon}"
+                    );
+                    ensure!(
+                        ev.at >= partition_until,
+                        "fault event {i}: a partition is already active until {partition_until}"
+                    );
+                    let mut seen = vec![false; alive.len()];
+                    for g in groups {
+                        ensure!(!g.is_empty(), "fault event {i}: empty partition group");
+                        for &n in g {
+                            ensure!(n < alive.len(), "fault event {i}: node {n} out of range");
+                            ensure!(
+                                !seen[n],
+                                "fault event {i}: node {n} appears in two partition groups"
+                            );
+                            seen[n] = true;
+                        }
+                    }
+                    partition_until = until;
+                }
             }
         }
         Ok(())
@@ -194,6 +297,91 @@ impl FaultPlan {
         }
         events.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("fractions of a finite total"));
         FaultPlan { events, mobility: Some(MobilityTrace::fleet_default()) }
+    }
+
+    /// Sustained churn: every auxiliary alternates exponentially
+    /// distributed lifetimes and downtimes (a Poisson failure process
+    /// at `churn_rate` failures per second per node, downtimes 4×
+    /// shorter on average), derived deterministically from the fleet
+    /// seed. Kills stop at 90 % of the horizon so late victims still
+    /// get a chance to recover; a non-finite or non-positive rate falls
+    /// back to 0.05 Hz. Primaries are never touched, so the plan is
+    /// valid by construction for any fleet shape.
+    pub fn sustained_scenario(cfg: &FleetConfig, churn_rate: f64) -> FaultPlan {
+        fn exp(rng: &mut Rng, lambda: f64) -> f64 {
+            -(1.0 - rng.f64()).ln() / lambda
+        }
+        let horizon = cfg.rounds as f64 * cfg.round_secs;
+        let rate = if churn_rate.is_finite() && churn_rate > 0.0 { churn_rate } else { 0.05 };
+        let min_gap = 0.5 * cfg.round_secs;
+        let mut rng = Rng::new(cfg.seed ^ 0xC0FF_EE01);
+        let mut events = Vec::new();
+        for node in cfg.primaries..cfg.n_nodes {
+            let mut t = exp(&mut rng, rate);
+            while t < 0.9 * horizon {
+                events.push(FaultEvent { at: t, action: FaultAction::Kill { node } });
+                let back = t + exp(&mut rng, 4.0 * rate).max(min_gap);
+                if back >= horizon {
+                    break; // down for good — no time left to recover
+                }
+                events.push(FaultEvent { at: back, action: FaultAction::Revive { node } });
+                t = back + exp(&mut rng, rate).max(min_gap);
+            }
+        }
+        // stable sort: per-node kill-before-revive order survives ties
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("exponential samples are finite"));
+        FaultPlan { events, mobility: None }
+    }
+
+    /// Gray-failure scenario: a seed-chosen auxiliary browns out to
+    /// 10× its healthy service time over the middle of the run (and a
+    /// second one to 3× when the pool is deep enough) without ever
+    /// dying. The admission EWMA must notice purely from observed
+    /// throughput and shed the node — there is no membership signal.
+    pub fn brownout_scenario(cfg: &FleetConfig) -> FaultPlan {
+        let total = cfg.rounds as f64 * cfg.round_secs;
+        let auxes = cfg.n_nodes.saturating_sub(cfg.primaries);
+        let mut rng = Rng::new(cfg.seed ^ 0xC0FF_EE02);
+        let mut events = Vec::new();
+        if auxes >= 1 {
+            let victim = cfg.primaries + (rng.next_u64() as usize) % auxes;
+            events.push(FaultEvent {
+                at: 0.30 * total,
+                action: FaultAction::Degrade { node: victim, factor: 10.0, until: 0.70 * total },
+            });
+            if auxes >= 2 {
+                let mut second = cfg.primaries + (rng.next_u64() as usize) % auxes;
+                if second == victim {
+                    second = cfg.primaries + (second - cfg.primaries + 1) % auxes;
+                }
+                events.push(FaultEvent {
+                    at: 0.45 * total,
+                    action: FaultAction::Degrade { node: second, factor: 3.0, until: 0.80 * total },
+                });
+            }
+        }
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("fractions of a finite total"));
+        FaultPlan { events, mobility: None }
+    }
+
+    /// Partition scenario: the fleet splits even/odd into two isolated
+    /// groups over the middle of the run, then heals. With the default
+    /// interleaved shape this puts primaries on both sides of the cut,
+    /// so each side keeps serving its own streams while handoff, steal
+    /// and offload across the cut are severed; heal-time reconciliation
+    /// must serve every admitted frame exactly once.
+    pub fn partition_scenario(cfg: &FleetConfig) -> FaultPlan {
+        let total = cfg.rounds as f64 * cfg.round_secs;
+        let (evens, odds): (Vec<usize>, Vec<usize>) =
+            (0..cfg.n_nodes).partition(|i| i % 2 == 0);
+        let mut events = Vec::new();
+        if !evens.is_empty() && !odds.is_empty() {
+            events.push(FaultEvent {
+                at: 0.30 * total,
+                action: FaultAction::Partition { groups: vec![evens, odds], until: 0.70 * total },
+            });
+        }
+        FaultPlan { events, mobility: None }
     }
 }
 
@@ -266,6 +454,197 @@ mod tests {
         // non-finite time
         let p = FaultPlan { events: vec![kill(2, f64::NAN)], mobility: None };
         assert!(p.validate(&c).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_events_past_the_horizon() {
+        // FleetConfig::new defaults: 6 rounds x 5 s => horizon 30 s
+        let c = cfg(2, 4);
+        let kill = |node, at| FaultEvent { at, action: FaultAction::Kill { node } };
+        let p = FaultPlan { events: vec![kill(2, 30.0)], mobility: None };
+        p.validate(&c).unwrap();
+        let p = FaultPlan { events: vec![kill(2, 30.001)], mobility: None };
+        assert!(p.validate(&c).is_err(), "events after the run ends never fire");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_degrades() {
+        let c = cfg(2, 4);
+        let degrade = |node, at, factor, until| FaultEvent {
+            at,
+            action: FaultAction::Degrade { node, factor, until },
+        };
+        // speed-ups and non-finite factors are not brownouts
+        assert!(FaultPlan { events: vec![degrade(2, 1.0, 0.5, 5.0)], mobility: None }
+            .validate(&c)
+            .is_err());
+        assert!(FaultPlan { events: vec![degrade(2, 1.0, f64::NAN, 5.0)], mobility: None }
+            .validate(&c)
+            .is_err());
+        // window must end after it starts and inside the horizon
+        assert!(FaultPlan { events: vec![degrade(2, 5.0, 2.0, 5.0)], mobility: None }
+            .validate(&c)
+            .is_err());
+        assert!(FaultPlan { events: vec![degrade(2, 5.0, 2.0, 31.0)], mobility: None }
+            .validate(&c)
+            .is_err());
+        // a dead node has no service time to inflate
+        let p = FaultPlan {
+            events: vec![
+                FaultEvent { at: 1.0, action: FaultAction::Kill { node: 2 } },
+                degrade(2, 2.0, 2.0, 5.0),
+            ],
+            mobility: None,
+        };
+        assert!(p.validate(&c).is_err());
+        // overlapping brownouts on one node are rejected...
+        let p = FaultPlan {
+            events: vec![degrade(2, 1.0, 2.0, 10.0), degrade(2, 5.0, 4.0, 12.0)],
+            mobility: None,
+        };
+        assert!(p.validate(&c).is_err());
+        // ...but back-to-back on one node, or concurrent on two, are fine
+        FaultPlan {
+            events: vec![degrade(2, 1.0, 2.0, 10.0), degrade(2, 10.0, 4.0, 12.0)],
+            mobility: None,
+        }
+        .validate(&c)
+        .unwrap();
+        FaultPlan {
+            events: vec![degrade(2, 1.0, 2.0, 10.0), degrade(3, 5.0, 4.0, 12.0)],
+            mobility: None,
+        }
+        .validate(&c)
+        .unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_partitions() {
+        let c = cfg(2, 4);
+        let part = |groups: Vec<Vec<usize>>, at, until| FaultEvent {
+            at,
+            action: FaultAction::Partition { groups, until },
+        };
+        // fewer than two groups is not a partition
+        assert!(FaultPlan { events: vec![part(vec![vec![0, 1]], 1.0, 5.0)], mobility: None }
+            .validate(&c)
+            .is_err());
+        // empty group
+        assert!(
+            FaultPlan { events: vec![part(vec![vec![0, 1], vec![]], 1.0, 5.0)], mobility: None }
+                .validate(&c)
+                .is_err()
+        );
+        // a node cannot sit on both sides of the cut
+        assert!(FaultPlan {
+            events: vec![part(vec![vec![0, 1], vec![1, 2]], 1.0, 5.0)],
+            mobility: None
+        }
+        .validate(&c)
+        .is_err());
+        // out of range, heal bounds, overlap
+        assert!(FaultPlan {
+            events: vec![part(vec![vec![0], vec![9]], 1.0, 5.0)],
+            mobility: None
+        }
+        .validate(&c)
+        .is_err());
+        assert!(FaultPlan {
+            events: vec![part(vec![vec![0], vec![1]], 5.0, 5.0)],
+            mobility: None
+        }
+        .validate(&c)
+        .is_err());
+        assert!(FaultPlan {
+            events: vec![part(vec![vec![0], vec![1]], 1.0, 31.0)],
+            mobility: None
+        }
+        .validate(&c)
+        .is_err());
+        assert!(FaultPlan {
+            events: vec![
+                part(vec![vec![0], vec![1]], 1.0, 10.0),
+                part(vec![vec![0], vec![2]], 5.0, 12.0),
+            ],
+            mobility: None
+        }
+        .validate(&c)
+        .is_err());
+        // sequential partitions, and a group list leaving node 3
+        // reachable from everyone, are fine
+        FaultPlan {
+            events: vec![
+                part(vec![vec![0, 2], vec![1]], 1.0, 10.0),
+                part(vec![vec![0], vec![1, 2]], 10.0, 12.0),
+            ],
+            mobility: None,
+        }
+        .validate(&c)
+        .unwrap();
+    }
+
+    #[test]
+    fn sustained_scenario_is_deterministic_and_valid() {
+        for (p, n) in [(1usize, 2usize), (1, 4), (2, 5), (3, 8)] {
+            let c = cfg(p, n);
+            // a rate high enough that every shape sees real churn
+            let a = FaultPlan::sustained_scenario(&c, 0.5);
+            let b = FaultPlan::sustained_scenario(&c, 0.5);
+            assert_eq!(a.events, b.events, "same seed must script identically");
+            a.validate(&c).unwrap();
+            assert!(
+                a.events
+                    .iter()
+                    .any(|e| matches!(e.action, FaultAction::Kill { .. })),
+                "rate 0.5 over a 30 s horizon must kill someone"
+            );
+            assert!(
+                a.events.iter().all(|e| !matches!(
+                    e.action,
+                    FaultAction::Kill { node } | FaultAction::Revive { node } if node < p
+                )),
+                "sustained churn must never touch a primary"
+            );
+        }
+        // garbage rates fall back to the default instead of panicking
+        let c = cfg(2, 5);
+        FaultPlan::sustained_scenario(&c, f64::NAN).validate(&c).unwrap();
+        FaultPlan::sustained_scenario(&c, -1.0).validate(&c).unwrap();
+        // the rate shapes the schedule
+        assert_ne!(
+            FaultPlan::sustained_scenario(&c, 0.5).events,
+            FaultPlan::sustained_scenario(&c, 0.9).events
+        );
+    }
+
+    #[test]
+    fn brownout_and_partition_scenarios_are_deterministic_and_valid() {
+        for (p, n) in [(1usize, 2usize), (2, 5), (3, 8)] {
+            let c = cfg(p, n);
+            let a = FaultPlan::brownout_scenario(&c);
+            assert_eq!(a.events, FaultPlan::brownout_scenario(&c).events);
+            a.validate(&c).unwrap();
+            assert!(
+                a.events
+                    .iter()
+                    .all(|e| matches!(e.action, FaultAction::Degrade { .. })),
+                "brownouts never change membership"
+            );
+            assert!(!a.events.is_empty());
+
+            let q = FaultPlan::partition_scenario(&c);
+            assert_eq!(q.events, FaultPlan::partition_scenario(&c).events);
+            q.validate(&c).unwrap();
+            assert_eq!(q.events.len(), 1);
+            match &q.events[0].action {
+                FaultAction::Partition { groups, until } => {
+                    assert_eq!(groups.len(), 2);
+                    assert_eq!(groups[0].len() + groups[1].len(), n);
+                    assert!(*until > q.events[0].at);
+                }
+                other => panic!("expected a partition, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -86,20 +86,42 @@
 //! via the registry only — never the trace ring — to keep traces
 //! deterministic. See `docs/OBSERVABILITY.md`.
 //!
-//! ## Fault injection and churn
+//! ## Fault injection, churn, and gray failures
 //!
-//! [`fault`] scripts deterministic membership churn onto the same event
-//! timeline: a [`FaultPlan`] kills/revives primaries and auxiliaries
-//! and admits fresh auxiliaries mid-run (`--scenario churn`). A dead
-//! primary's streams fail over through the shard map without
+//! [`fault`] scripts deterministic faults onto the same event timeline.
+//! Beyond scripted membership churn (`--scenario churn`: kills,
+//! revives, mid-run joins, an optional mobility trace drifting every
+//! pair's Shannon rate), the plan language covers the gray-failure
+//! regime:
+//!
+//! * **Sustained churn** (`--scenario sustained --churn-rate λ`):
+//!   seed-derived Poisson lifetimes and downtimes per auxiliary — the
+//!   fleet never reaches a steady membership;
+//! * **Brownouts** (`Degrade`): a node slows by a factor without dying.
+//!   Every service site charges the slowdown onto the node's clock and
+//!   exec time, the [`estimator`] EWMA observes the inflated
+//!   secs/image, and admission sheds the node within bounded rounds
+//!   (`ChurnReport.sheds` / `shed_latency_rounds`);
+//! * **Partitions** (`Partition`): reachability groups that sever
+//!   primary↔primary handoff and cross-group offload/steal while each
+//!   side keeps serving locally; heal-time reconciliation never serves
+//!   a frame twice;
+//! * **Fail-back** (`Revive` of a primary): a revived primary reclaims
+//!   its rendezvous-owned streams from their interim owners, unless
+//!   handoff dwell hysteresis vetoes the move (`--dwell`).
+//!
+//! A dead primary's streams fail over through the shard map without
 //! reshuffling live streams; a dead auxiliary's in-flight frames
 //! re-enter the cheapest-first steal path (frames still on the wire
-//! are lost); pair/link state grows incrementally on joins; an
-//! optional mobility trace drifts every pair's Shannon rate as the
-//! convoy spreads. Recovery accounting (`recovery_time`,
-//! `frames_lost`, `rehomed_streams`) lands in `FleetReport.churn`, and
-//! `FleetConfig::handoff_dwell_rounds` adds handoff hysteresis so
-//! boundary streams stop ping-ponging under churn.
+//! are lost at QoS 0, parked and redelivered at QoS 1); pair/link
+//! state grows incrementally on joins. Recovery accounting —
+//! per-incident `recovery_time_s`/`recovery_incidents`, `frames_lost`,
+//! `rehomed_streams`, the gray-failure ledger — lands in
+//! `FleetReport.churn`. Under the MQTT transport at QoS 1 every
+//! auxiliary registers a broker **last will** on
+//! `heteroedge/status/<node>`; an ungraceful death makes the broker
+//! itself announce the loss to the dispatcher's status watcher
+//! (`wills_observed`), with no application-level timeout.
 
 pub mod dispatcher;
 pub mod estimator;

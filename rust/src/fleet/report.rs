@@ -119,6 +119,13 @@ pub struct FleetReport {
     /// Frames physically round-tripped through the MQTT broker (0 when
     /// the run used the simulated transport).
     pub mqtt_delivered: u64,
+    /// Last-will "offline" notices the dispatcher's status watcher
+    /// received from the broker when killed auxiliaries' connections
+    /// dropped ungracefully (QoS 1 over the Mqtt transport only —
+    /// broker-native liveness; 0 under the simulated transport, and
+    /// excluded from cross-transport parity checks exactly like
+    /// `mqtt_delivered`).
+    pub wills_observed: u64,
     /// Frame-pool counters for this run: `fresh_allocs` is the number
     /// the zero-copy pipeline exists to bound — once the pool is warm,
     /// per-frame buffer allocations stop (the integration tests assert
@@ -153,8 +160,31 @@ pub struct ChurnReport {
     /// when it revived (the QoS 1 at-least-once path; 0 under QoS 0,
     /// where eviction recovers or loses frames immediately).
     pub frames_redelivered: u64,
-    /// Σ over kill events of (fault instant → last recovered frame
-    /// re-placed/served), seconds.
+    /// Gray-failure windows opened: `Degrade` actions that multiplied a
+    /// node's service time without killing it.
+    pub brownouts: u64,
+    /// Degraded nodes the admission path stopped placing on — the
+    /// throughput EWMA observed the inflated per-image cost and shed
+    /// the node (counted once per brownout incident).
+    pub sheds: u64,
+    /// Worst-case rounds from a brownout starting to its node being
+    /// shed (0 when nothing was shed) — the bounded-shed-latency
+    /// guarantee, prop-tested in `tests/prop_fleet.rs`.
+    pub shed_latency_rounds: u64,
+    /// Network partitions applied (`Partition` actions).
+    pub partitions: u64,
+    /// Partitions that healed inside the run (reachability restored).
+    pub heals: u64,
+    /// Streams a revived primary reclaimed from their interim owners
+    /// (fail-back; dwell-vetoed reclaims are not counted).
+    pub failback_streams: u64,
+    /// Recovery windows summed into `recovery_time_s`: one per aux
+    /// eviction re-placement and one per parked-frame redelivery.
+    pub recovery_incidents: u64,
+    /// Σ of **per-incident** recovery windows (fault/revive instant →
+    /// that incident's last frame re-placed or served), seconds. A sum
+    /// of durations, not a global first-fault→last-recovery span —
+    /// overlapping incidents each contribute their own window.
     pub recovery_time_s: f64,
 }
 
@@ -209,6 +239,7 @@ impl FleetReport {
         reg.inc("fleet.handoff.streams", self.stream_handoffs);
         reg.inc("fleet.offload.bytes", self.offload_bytes);
         reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
+        reg.inc("fleet.mqtt.wills_observed", self.wills_observed);
         reg.inc("fleet.pool.checkouts", self.pool.checkouts);
         reg.inc("fleet.pool.fresh_allocs", self.pool.fresh_allocs);
         reg.inc("fleet.pool.handle_allocs", self.pool.handle_allocs);
@@ -257,6 +288,16 @@ impl FleetReport {
             reg.inc_static("fleet.churn.frames_recovered", c.frames_recovered);
             reg.inc_static("fleet.churn.frames_lost", c.frames_lost);
             reg.inc_static("fleet.churn.frames_redelivered", c.frames_redelivered);
+            reg.inc_static("fleet.churn.brownouts", c.brownouts);
+            reg.inc_static("fleet.churn.sheds", c.sheds);
+            reg.set_static(
+                "fleet.churn.shed_latency_rounds",
+                c.shed_latency_rounds as f64,
+            );
+            reg.inc_static("fleet.churn.partitions", c.partitions);
+            reg.inc_static("fleet.churn.heals", c.heals);
+            reg.inc_static("fleet.churn.failback_streams", c.failback_streams);
+            reg.inc_static("fleet.churn.recovery_incidents", c.recovery_incidents);
             reg.set_static("fleet.churn.recovery_time_s", c.recovery_time_s);
         }
     }
@@ -294,6 +335,12 @@ impl FleetReport {
             out.push_str(&format!(
                 "mqtt: {} frames routed through the broker\n",
                 self.mqtt_delivered
+            ));
+        }
+        if self.wills_observed > 0 {
+            out.push_str(&format!(
+                "liveness: {} broker last-will notices observed\n",
+                self.wills_observed
             ));
         }
         if self.pool.checkouts > 0 {
@@ -335,7 +382,7 @@ impl FleetReport {
             out.push_str(&format!(
                 "churn: {} fault events ({} kills, {} revives, {} joins) | \
                  rehomed {} streams | recovered {} frames | lost {} frames | \
-                 redelivered {} frames | recovery {:.3} s\n",
+                 redelivered {} frames | recovery {:.3} s over {} incidents\n",
                 c.fault_events,
                 c.node_kills,
                 c.node_revives,
@@ -345,7 +392,22 @@ impl FleetReport {
                 c.frames_lost,
                 c.frames_redelivered,
                 c.recovery_time_s,
+                c.recovery_incidents,
             ));
+            // gray-failure sub-line; omitted for pure kill/revive/join
+            // plans so their rendering only gains the incident count
+            if c.brownouts + c.partitions + c.failback_streams > 0 {
+                out.push_str(&format!(
+                    "gray: {} brownouts ({} shed, worst {} rounds) | \
+                     {} partitions ({} healed) | failback {} streams\n",
+                    c.brownouts,
+                    c.sheds,
+                    c.shed_latency_rounds,
+                    c.partitions,
+                    c.heals,
+                    c.failback_streams,
+                ));
+            }
         }
         // multi-primary ingest ledger; omitted for single-primary runs
         // so their rendering stays byte-identical to the PR 1 report
@@ -463,6 +525,7 @@ mod tests {
             primary_fallbacks: 1,
             stream_handoffs: 0,
             mqtt_delivered: 0,
+            wills_observed: 0,
             pool: PoolStats {
                 checkouts: 100,
                 fresh_allocs: 10,
@@ -559,6 +622,13 @@ mod tests {
             frames_recovered: 7,
             frames_lost: 2,
             frames_redelivered: 5,
+            brownouts: 0,
+            sheds: 0,
+            shed_latency_rounds: 0,
+            partitions: 0,
+            heals: 0,
+            failback_streams: 0,
+            recovery_incidents: 2,
             recovery_time_s: 1.5,
         });
         let text = r.render();
@@ -569,6 +639,9 @@ mod tests {
         assert!(text.contains("rehomed 3 streams"), "{text}");
         assert!(text.contains("lost 2 frames"), "{text}");
         assert!(text.contains("redelivered 5 frames"), "{text}");
+        assert!(text.contains("recovery 1.500 s over 2 incidents"), "{text}");
+        // a pure membership-churn ledger carries no gray-failure line
+        assert!(!text.contains("gray:"), "{text}");
         // fault-free rendering carries no churn section at all
         assert!(!sample().render().contains("churn:"));
 
@@ -577,7 +650,47 @@ mod tests {
         assert_eq!(reg.counter("fleet.churn.frames_lost"), 2);
         assert_eq!(reg.counter("fleet.churn.frames_redelivered"), 5);
         assert_eq!(reg.counter("fleet.churn.rehomed_streams"), 3);
+        assert_eq!(reg.counter("fleet.churn.recovery_incidents"), 2);
         assert_eq!(reg.gauge("fleet.churn.recovery_time_s"), Some(1.5));
+    }
+
+    #[test]
+    fn gray_failure_ledger_renders_and_exports() {
+        let mut r = sample();
+        r.wills_observed = 2;
+        r.churn = Some(ChurnReport {
+            fault_events: 3,
+            brownouts: 2,
+            sheds: 1,
+            shed_latency_rounds: 2,
+            partitions: 1,
+            heals: 1,
+            failback_streams: 3,
+            ..ChurnReport::default()
+        });
+        let text = r.render();
+        assert!(
+            text.contains("gray: 2 brownouts (1 shed, worst 2 rounds)"),
+            "{text}"
+        );
+        assert!(text.contains("1 partitions (1 healed)"), "{text}");
+        assert!(text.contains("failback 3 streams"), "{text}");
+        assert!(
+            text.contains("liveness: 2 broker last-will notices observed"),
+            "{text}"
+        );
+        // will-free runs render no liveness line
+        assert!(!sample().render().contains("liveness:"));
+
+        let mut reg = Registry::new();
+        r.to_registry(&mut reg);
+        assert_eq!(reg.counter("fleet.churn.brownouts"), 2);
+        assert_eq!(reg.counter("fleet.churn.sheds"), 1);
+        assert_eq!(reg.gauge("fleet.churn.shed_latency_rounds"), Some(2.0));
+        assert_eq!(reg.counter("fleet.churn.partitions"), 1);
+        assert_eq!(reg.counter("fleet.churn.heals"), 1);
+        assert_eq!(reg.counter("fleet.churn.failback_streams"), 3);
+        assert_eq!(reg.counter("fleet.mqtt.wills_observed"), 2);
     }
 
     #[test]

@@ -177,6 +177,31 @@ impl ShardMap {
         Ok(p)
     }
 
+    /// Fail-back for a revived primary `p`: clear the override on every
+    /// stream whose HRW **base** owner is `p` but which is currently
+    /// re-homed elsewhere, returning the reclaimed stream indices
+    /// (ascending). Streams `p` never owned at base — including streams
+    /// handed off *to* other primaries on purpose — are untouched, so
+    /// fail-back exactly undoes what failover did and nothing more. The
+    /// dispatcher layers dwell hysteresis on top by filtering the
+    /// returned list before committing.
+    pub fn failback(&mut self, p: usize) -> Result<Vec<usize>> {
+        ensure!(p < self.n_primaries, "primary {p} out of range");
+        let mut reclaimed = Vec::new();
+        for s in 0..self.base.len() {
+            if self.base[s] == p && self.overrides[s].is_some_and(|o| o != p) {
+                self.overrides[s] = None;
+                reclaimed.push(s);
+            }
+        }
+        Ok(reclaimed)
+    }
+
+    /// The HRW base owner of stream `s`, ignoring overrides.
+    pub fn base_owner(&self, s: usize) -> usize {
+        self.base[s]
+    }
+
     /// Streams whose current owner differs from their base assignment.
     pub fn rehomed(&self) -> usize {
         (0..self.base.len())
@@ -278,6 +303,33 @@ mod tests {
         assert!(map.failover(0, &[false, false, false]).is_err());
         // mask length must match the primary count
         assert!(map.failover(0, &[true]).is_err());
+    }
+
+    #[test]
+    fn failback_reclaims_exactly_the_failed_over_streams() {
+        let ns = names(24);
+        let refs: Vec<&str> = ns.iter().map(|s| s.as_str()).collect();
+        let mut map = ShardMap::new(13, &refs, &[1.0, 1.0, 1.0]).unwrap();
+        let before: Vec<usize> = (0..24).map(|s| map.owner(s)).collect();
+        let dead = 1usize;
+        let alive = [true, false, true];
+        let lost: Vec<usize> = (0..24).filter(|&s| before[s] == dead).collect();
+        for &s in &lost {
+            map.failover(s, &alive).unwrap();
+        }
+        // a deliberate handoff of someone else's stream must survive
+        let foreign = (0..24).find(|&s| before[s] == 0).unwrap();
+        map.rehome(foreign, 2).unwrap();
+        let reclaimed = map.failback(dead).unwrap();
+        assert_eq!(reclaimed, lost, "fail-back must undo failover exactly");
+        for s in 0..24 {
+            let expect = if s == foreign { 2 } else { before[s] };
+            assert_eq!(map.owner(s), expect, "stream {s}");
+            assert_eq!(map.base_owner(s), before[s]);
+        }
+        // idempotent: nothing left to reclaim
+        assert!(map.failback(dead).unwrap().is_empty());
+        assert!(map.failback(9).is_err(), "primary out of range");
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! heteroedge fleet   --nodes <N> --streams <M> [--primaries <P>] [--rounds <k>]
 //!                    [--rate <f>] [--inbox <cap>] [--drain batched|pipelined]
 //!                    [--no-steal] [--masked] [--dedup] [--no-mqtt]
-//!                    [--qos 0|1] [--scenario none|churn] [--dwell <rounds>]
+//!                    [--qos 0|1] [--dwell <rounds>]
+//!                    [--scenario none|churn|sustained|brownout|partition]
+//!                    [--churn-rate <per-sec>]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
 //!                    [--trace <out.json>] [--trace-capacity <events>]
 //!                    [--metrics-out <out.prom>]
@@ -134,7 +136,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // handoff hysteresis: a re-homed stream dwells this many rounds
     // before another voluntary migration (failure rehomes always apply)
     cfg.handoff_dwell_rounds = args.opt_or("dwell", 0usize)?;
-    let scenario = args.opt_choice("scenario", &["none", "churn"], "none")?;
+    let scenario = args.opt_choice(
+        "scenario",
+        &["none", "churn", "sustained", "brownout", "partition"],
+        "none",
+    )?;
+    // sustained-churn intensity: mean Poisson failures per aux per
+    // second (only read by --scenario sustained)
+    let churn_rate = args.opt_or("churn-rate", 0.05f64)?;
 
     // "1 primary" keeps the default invocation's header line textually
     // identical to the single-primary releases
@@ -167,11 +176,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let trace_capacity = args.opt_or("trace-capacity", 262_144usize)?;
 
     let mut dispatcher = Dispatcher::new(cfg.clone())?;
-    if scenario == "churn" {
+    // every generator is seed-derived: a fixed (seed, scenario) pair
+    // reproduces the same fault schedule, and with it the same report
+    match scenario {
         // deterministic churn: kill/revive auxiliaries (and a primary
         // when there are several), admit a fresh aux mid-run, spread
         // the convoy along the stock mobility trace
-        dispatcher.set_fault_plan(FaultPlan::churn_scenario(&cfg))?;
+        "churn" => dispatcher.set_fault_plan(FaultPlan::churn_scenario(&cfg))?,
+        // gray-failure regime: Poisson lifetimes/downtimes per aux,
+        // service-time brownouts the EWMA must shed, or an evens/odds
+        // reachability partition that heals mid-run
+        "sustained" => {
+            dispatcher.set_fault_plan(FaultPlan::sustained_scenario(&cfg, churn_rate))?
+        }
+        "brownout" => dispatcher.set_fault_plan(FaultPlan::brownout_scenario(&cfg))?,
+        "partition" => dispatcher.set_fault_plan(FaultPlan::partition_scenario(&cfg))?,
+        _ => {}
     }
     if trace_path.is_some() {
         dispatcher.enable_tracing(trace_capacity);

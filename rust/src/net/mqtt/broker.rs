@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::packet::{Packet, QoS};
+use super::packet::{LastWill, Packet, QoS};
 use super::session::{DedupRing, PacketIds};
 use super::topic::{filter_valid, topic_matches};
 
@@ -126,6 +126,9 @@ struct ConnHandle {
     keep_alive_secs: u16,
     /// Clone of the socket, for forced shutdown on takeover or expiry.
     stream: TcpStream,
+    /// Last-will testament bound at CONNECT (§3.1.2.5); published when
+    /// this connection ends ungracefully, discarded on clean DISCONNECT.
+    will: Option<LastWill>,
 }
 
 #[derive(Default)]
@@ -157,6 +160,9 @@ pub struct BrokerStats {
     /// Inbound QoS 1 publishes suppressed as duplicates (DUP set, packet
     /// id already seen) — acked but not routed again.
     pub dup_drops: AtomicU64,
+    /// Last-will messages published on ungraceful disconnects (socket
+    /// death, keep-alive expiry, §3.1.4 takeover).
+    pub wills_fired: AtomicU64,
 }
 
 /// An MQTT-like broker bound to a local TCP port.
@@ -376,19 +382,24 @@ impl Broker {
         };
 
         // The serving loop runs in a closure so that cleanup below
-        // (session detach + writer join) covers every exit path.
+        // (session detach + will firing + writer join) covers every exit
+        // path. `graceful` flips only on a clean DISCONNECT — every
+        // other exit (socket death, keep-alive expiry shutdown, protocol
+        // error) leaves it false and fires the connection's will.
         let mut identity: Option<(String, u64)> = None;
+        let mut graceful = false;
         let result = (|| -> Result<()> {
-            let (cid, clean, keep_alive_secs) = match Packet::read_from(&mut reader)? {
+            let (cid, clean, keep_alive_secs, will) = match Packet::read_from(&mut reader)? {
                 Packet::Connect {
                     client_id,
                     clean_session,
                     keep_alive_secs,
-                } => (client_id, clean_session, keep_alive_secs),
+                    will,
+                } => (client_id, clean_session, keep_alive_secs, will),
                 other => anyhow::bail!("expected CONNECT, got {other:?}"),
             };
 
-            let (epoch, session_present) = {
+            let (epoch, session_present, takeover_will) = {
                 let mut guard = shared.lock().unwrap();
                 let sh = &mut *guard;
                 let epoch = sh.next_epoch;
@@ -397,11 +408,14 @@ impl Broker {
                 // §3.1.4 takeover: a second CONNECT with the same client
                 // id disconnects the old connection. Detach it here (so
                 // its late cleanup, keyed by epoch, becomes a no-op) and
-                // shut its socket down.
+                // shut its socket down. The old connection ends
+                // ungracefully, so its will fires (after this lock).
+                let mut takeover_will = None;
                 if let Some(old) = sh.sessions.get(&cid).and_then(|s| s.attached) {
                     if let Some(oldc) = sh.conns.remove(&old) {
                         oldc.alive.store(false, Ordering::Relaxed);
                         let _ = oldc.stream.shutdown(Shutdown::Both);
+                        takeover_will = oldc.will;
                     }
                 }
 
@@ -431,11 +445,16 @@ impl Broker {
                         last_seen: last_seen.clone(),
                         keep_alive_secs,
                         stream: stream.try_clone()?,
+                        will,
                     },
                 );
-                (epoch, session_present)
+                (epoch, session_present, takeover_will)
             };
             identity = Some((cid.clone(), epoch));
+            if let Some(w) = takeover_will {
+                stats.wills_fired.fetch_add(1, Ordering::Relaxed);
+                Self::route(&shared, &stats, w.topic, w.payload, w.qos, w.retain);
+            }
             send_ctl(Packet::ConnAck {
                 session_present,
                 return_code: 0,
@@ -555,7 +574,11 @@ impl Broker {
                         }
                     }
                     Packet::PingReq => send_ctl(Packet::PingResp)?,
-                    Packet::Disconnect => return Ok(()),
+                    Packet::Disconnect => {
+                        // clean shutdown (§3.14): the will is discarded
+                        graceful = true;
+                        return Ok(());
+                    }
                     Packet::PubAck { packet_id } => {
                         // subscriber acked a QoS 1 delivery: retire it
                         // from the inflight window and refill from the
@@ -582,8 +605,12 @@ impl Broker {
         // epoch is still the attached one (a §3.1.4 takeover by a newer
         // connection with our client id must not be clobbered by this
         // late cleanup). Clean sessions are discarded; persistent
-        // sessions keep filters + windows for resume.
+        // sessions keep filters + windows for resume. An ungraceful end
+        // fires the connection's will — a takeover already removed our
+        // ConnHandle (and fired the will itself), so the remove() below
+        // returning it proves no one else has.
         alive.store(false, Ordering::Relaxed);
+        let mut fire_will = None;
         if let Some((cid, epoch)) = &identity {
             let mut sh = shared.lock().unwrap();
             let mut discard = false;
@@ -596,7 +623,16 @@ impl Broker {
             if discard {
                 sh.sessions.remove(cid);
             }
-            sh.conns.remove(epoch);
+            if let Some(conn) = sh.conns.remove(epoch) {
+                if !graceful {
+                    fire_will = conn.will;
+                }
+            }
+        }
+        // route() takes the shared lock itself — fire after releasing it
+        if let Some(w) = fire_will {
+            stats.wills_fired.fetch_add(1, Ordering::Relaxed);
+            Self::route(&shared, &stats, w.topic, w.payload, w.qos, w.retain);
         }
         drop(send_ctl);
         drop(tx);

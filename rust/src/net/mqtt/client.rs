@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::packet::{write_all_vectored, Packet, QoS};
+use super::packet::{write_all_vectored, LastWill, Packet, QoS};
 use super::session::DedupRing;
 
 /// A received application message.
@@ -161,6 +161,20 @@ impl Client {
         clean_session: bool,
         keep_alive_secs: u16,
     ) -> Result<Client> {
+        Self::connect_full(addr, client_id, clean_session, keep_alive_secs, None)
+    }
+
+    /// [`Client::connect_with`] plus a last-will testament: the broker
+    /// stores `will` with this connection and publishes it if the
+    /// connection ends ungracefully (socket death, keep-alive expiry,
+    /// §3.1.4 takeover) — but not on a clean [`Client::disconnect`].
+    pub fn connect_full(
+        addr: SocketAddr,
+        client_id: &str,
+        clean_session: bool,
+        keep_alive_secs: u16,
+        will: Option<LastWill>,
+    ) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to broker {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -169,6 +183,7 @@ impl Client {
             client_id: client_id.to_string(),
             clean_session,
             keep_alive_secs,
+            will,
         }
         .write_to(&mut *writer.lock().unwrap())?;
 
@@ -388,5 +403,17 @@ impl Client {
     /// closed socket, and keeps a persistent session's state for resume.
     pub fn disconnect(self) -> Result<()> {
         Packet::Disconnect.write_to(&mut *self.writer.lock().unwrap())
+    }
+
+    /// Ungraceful death: shut the socket down with **no** DISCONNECT,
+    /// as a crashed or power-cut node would. The broker's reader sees
+    /// the stream end, treats the drop as ungraceful, and fires this
+    /// connection's last will. (Merely dropping a `Client` leaves the
+    /// socket open — the reader thread holds a clone of the stream — so
+    /// modeling a crash needs this explicit shutdown.)
+    pub fn abort(self) {
+        if let Ok(w) = self.writer.lock() {
+            w.shutdown(std::net::Shutdown::Both).ok();
+        }
     }
 }

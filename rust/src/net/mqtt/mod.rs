@@ -41,6 +41,17 @@
 //! one. Keep-alive expiry (1.5× the CONNECT interval) reaps half-open
 //! connections.
 //!
+//! ## Last-will testament (§3.1.2.5)
+//!
+//! CONNECT can bind a [`packet::LastWill`] (topic, payload, qos,
+//! retain) to the connection. The broker stores it per connection and
+//! publishes it through the normal routing path when the connection
+//! ends **ungracefully** — socket death, keep-alive expiry, or a
+//! §3.1.4 takeover — and discards it on a clean DISCONNECT. The fleet
+//! uses wills on `heteroedge/status/<node>` for broker-native liveness:
+//! at `--qos 1` the dispatcher hears about a crashed auxiliary from the
+//! broker itself rather than only from the sim fault plan.
+//!
 //! The broker is loopback-TCP real; *simulated* channel latency (distance,
 //! band) is charged by the coordinator on top, keeping protocol realism
 //! and physics separately testable.
@@ -53,6 +64,6 @@ pub mod topic;
 
 pub use broker::Broker;
 pub use client::Client;
-pub use packet::{Packet, QoS};
+pub use packet::{LastWill, Packet, QoS};
 pub use session::{DedupRing, PacketIds};
 pub use topic::{filter_valid, topic_matches};

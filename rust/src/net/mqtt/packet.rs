@@ -34,6 +34,18 @@ impl QoS {
     }
 }
 
+/// A last-will message carried in CONNECT (§3.1.2.5–§3.1.2.7): the
+/// broker stores it with the connection and publishes it when — and
+/// only when — the connection ends ungracefully (socket death,
+/// keep-alive expiry, §3.1.4 takeover). A clean DISCONNECT discards it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LastWill {
+    pub topic: String,
+    pub payload: Vec<u8>,
+    pub qos: QoS,
+    pub retain: bool,
+}
+
 /// Control packets (the subset HeteroEdge uses). `'p` is the lifetime
 /// of a borrowed PUBLISH payload; packets read from the wire are
 /// `Packet<'static>` (owned payload).
@@ -48,6 +60,8 @@ pub enum Packet<'p> {
         /// Keep-alive interval in seconds; 0 disables the broker-side
         /// idle timeout (§3.1.2.10).
         keep_alive_secs: u16,
+        /// Last-will testament the broker fires on ungraceful drop.
+        will: Option<LastWill>,
     },
     ConnAck {
         /// §3.2.2.2: the broker found stored session state for the
@@ -228,11 +242,26 @@ impl Packet<'_> {
                 client_id,
                 clean_session,
                 keep_alive_secs,
+                will,
             } => {
                 let mut b = Vec::new();
                 write_str(&mut b, client_id);
                 b.push(*clean_session as u8);
                 write_u16(&mut b, *keep_alive_secs);
+                // will block: present flag, then topic / u16-len
+                // payload / qos / retain — appended after keep-alive so
+                // pre-will decoders that stop early stay compatible
+                match will {
+                    Some(w) => {
+                        b.push(1);
+                        write_str(&mut b, &w.topic);
+                        write_u16(&mut b, w.payload.len() as u16);
+                        b.extend_from_slice(&w.payload);
+                        b.push(w.qos as u8);
+                        b.push(w.retain as u8);
+                    }
+                    None => b.push(0),
+                }
                 (T_CONNECT, 0, b)
             }
             Packet::ConnAck {
@@ -313,10 +342,37 @@ impl Packet<'_> {
                 } else {
                     0
                 };
+                // will block is likewise optional on the wire: a body
+                // ending at keep-alive (or the absent flag) carries no
+                // will; once the present flag is set the rest is strict
+                let will = if at < body.len() && body[at] != 0 {
+                    at += 1;
+                    let topic = read_str(&body, &mut at)?;
+                    let n = read_u16(&body, &mut at)? as usize;
+                    if at + n > body.len() {
+                        bail!("truncated will payload");
+                    }
+                    let payload = body[at..at + n].to_vec();
+                    at += n;
+                    if at + 2 > body.len() {
+                        bail!("truncated will qos/retain");
+                    }
+                    let qos = QoS::from_u8(body[at])?;
+                    let retain = body[at + 1] != 0;
+                    Some(LastWill {
+                        topic,
+                        payload,
+                        qos,
+                        retain,
+                    })
+                } else {
+                    None
+                };
                 Packet::Connect {
                     client_id,
                     clean_session,
                     keep_alive_secs,
+                    will,
                 }
             }
             T_CONNACK => {
@@ -385,6 +441,18 @@ mod tests {
                 client_id: "nano-1".into(),
                 clean_session: false,
                 keep_alive_secs: 30,
+                will: None,
+            },
+            Packet::Connect {
+                client_id: "aux-3".into(),
+                clean_session: false,
+                keep_alive_secs: 5,
+                will: Some(LastWill {
+                    topic: "heteroedge/status/node-3".into(),
+                    payload: b"offline".to_vec(),
+                    qos: QoS::AtLeastOnce,
+                    retain: true,
+                }),
             },
             Packet::ConnAck {
                 session_present: true,
@@ -428,6 +496,25 @@ mod tests {
                 client_id: "old-client".into(),
                 clean_session: true,
                 keep_alive_secs: 0,
+                will: None,
+            }
+        );
+        // the pre-will format (client id + clean flag + keep-alive,
+        // no will-present byte) decodes with no will
+        let mut body = Vec::new();
+        write_str(&mut body, "pr8-client");
+        body.push(0);
+        write_u16(&mut body, 30);
+        let mut bytes = vec![T_CONNECT << 4];
+        encode_varint(body.len(), &mut bytes);
+        bytes.extend_from_slice(&body);
+        assert_eq!(
+            Packet::read_from(&mut Cursor::new(bytes)).unwrap(),
+            Packet::Connect {
+                client_id: "pr8-client".into(),
+                clean_session: false,
+                keep_alive_secs: 30,
+                will: None,
             }
         );
         // an empty CONNACK body decodes as session_present=false, rc 0

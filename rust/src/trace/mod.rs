@@ -100,6 +100,23 @@ pub enum EventKind {
     /// revived node under the QoS 1 at-least-once path (node = revived
     /// destination).
     Redeliver,
+    /// Gray failure: a node's service time multiplied by a brownout
+    /// factor without killing it (value = the factor; 1.0 = restored).
+    Brownout,
+    /// A network partition split the fleet into isolated groups
+    /// (value = group count).
+    Partition,
+    /// A gray-failure window closed: a brownout lifted or a partition
+    /// healed (value = 1.0 for brownouts, group count for partitions).
+    Heal,
+    /// A revived primary reclaimed one of its rendezvous-owned streams
+    /// (node = the primary, value = the interim owner it reclaimed
+    /// from).
+    Failback,
+    /// Broker-native liveness: a dead node's MQTT last will fired on
+    /// `heteroedge/status/<node>` (QoS 1 runs; emitted at the sim-clock
+    /// kill instant in both transports so traces stay byte-identical).
+    WillFired,
 }
 
 impl EventKind {
@@ -128,6 +145,11 @@ impl EventKind {
             EventKind::Recover => "recover",
             EventKind::FrameLost => "frame_lost",
             EventKind::Redeliver => "redeliver",
+            EventKind::Brownout => "brownout",
+            EventKind::Partition => "partition",
+            EventKind::Heal => "heal",
+            EventKind::Failback => "failback",
+            EventKind::WillFired => "will_fired",
         }
     }
 
@@ -153,12 +175,17 @@ impl EventKind {
             | EventKind::Rehome
             | EventKind::Recover
             | EventKind::FrameLost
-            | EventKind::Redeliver => "churn",
+            | EventKind::Redeliver
+            | EventKind::Brownout
+            | EventKind::Partition
+            | EventKind::Heal
+            | EventKind::Failback
+            | EventKind::WillFired => "churn",
         }
     }
 
     /// Every kind, in lifecycle order (docs + exhaustiveness tests).
-    pub const ALL: [EventKind; 22] = [
+    pub const ALL: [EventKind; 27] = [
         EventKind::Ingest,
         EventKind::Admit,
         EventKind::Degrade,
@@ -181,6 +208,11 @@ impl EventKind {
         EventKind::Recover,
         EventKind::FrameLost,
         EventKind::Redeliver,
+        EventKind::Brownout,
+        EventKind::Partition,
+        EventKind::Heal,
+        EventKind::Failback,
+        EventKind::WillFired,
     ];
 }
 

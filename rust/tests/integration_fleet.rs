@@ -562,6 +562,159 @@ fn qos1_churn_redelivers_every_parked_frame() {
     }
 }
 
+/// Gray-failure acceptance: every scenario generator (`sustained`
+/// Poisson churn, `brownout` degradation, even/odd `partition`) is
+/// deterministic end to end — same seed and config reproduce a
+/// byte-identical `FleetReport` AND Chrome-trace export — for every
+/// DrainMode × Transport combination, while each scenario's churn
+/// ledger proves its failure class actually fired: sustained kills
+/// exactly what it scripted, the brownout is shed within bounded
+/// rounds without a kill, and the partition heals without ever serving
+/// a frame twice.
+#[test]
+fn gray_failure_scenarios_are_byte_identical_across_drain_and_transport() {
+    let base = |drain: DrainMode, transport: Transport| {
+        let mut cfg = FleetConfig::new(5, 6);
+        cfg.primaries = 2;
+        cfg.rounds = 4;
+        cfg.frames_per_round = 8;
+        cfg.drain = drain;
+        cfg.transport = transport;
+        cfg
+    };
+    let plan_for = |scenario: &str, cfg: &FleetConfig| match scenario {
+        "sustained" => FaultPlan::sustained_scenario(cfg, 0.25),
+        "brownout" => FaultPlan::brownout_scenario(cfg),
+        _ => FaultPlan::partition_scenario(cfg),
+    };
+    // the generators read only (seed, shape), so the schedule — and the
+    // expected ledger signature — is identical across every combination
+    let probe = base(DrainMode::Pipelined, Transport::Sim);
+    let scripted_kills = FaultPlan::sustained_scenario(&probe, 0.25)
+        .events
+        .iter()
+        .filter(|e| matches!(e.action, FaultAction::Kill { .. }))
+        .count() as u64;
+    assert!(scripted_kills >= 1, "rate 0.25 over 20 s must script a kill");
+
+    for scenario in ["sustained", "brownout", "partition"] {
+        for drain in [DrainMode::Batched, DrainMode::Pipelined] {
+            for transport in [Transport::Sim, Transport::Mqtt] {
+                let run = || {
+                    let cfg = base(drain, transport);
+                    let plan = plan_for(scenario, &cfg);
+                    let mut d = Dispatcher::new(cfg).unwrap();
+                    d.set_fault_plan(plan).unwrap();
+                    d.enable_tracing(65_536);
+                    let rep = d.run().unwrap();
+                    let json = d.trace_sink().expect("tracing on").chrome_json();
+                    (rep, json)
+                };
+                let (a, ja) = run();
+                let (b, jb) = run();
+                assert_eq!(
+                    a, b,
+                    "{scenario} over {} drain × {transport:?} diverged across same-seed runs",
+                    drain.name()
+                );
+                assert_eq!(a.render(), b.render());
+                assert_eq!(
+                    ja, jb,
+                    "{scenario} trace export diverged over {} × {transport:?}",
+                    drain.name()
+                );
+
+                let c = a.churn.as_ref().expect("scenario run carries a ledger");
+                match scenario {
+                    "sustained" => {
+                        assert_eq!(c.node_kills, scripted_kills, "every scripted kill fires");
+                        assert_eq!(c.brownouts + c.partitions, 0);
+                        assert!(ja.contains("node_down"), "kills must land in the trace");
+                    }
+                    "brownout" => {
+                        assert_eq!(c.brownouts, 2, "3 auxes script two degrades");
+                        assert_eq!(c.node_kills, 0, "brownouts never kill");
+                        assert_eq!(c.frames_lost, 0, "nothing dies, nothing is lost");
+                        assert!(c.sheds >= 1, "the 10x victim must be shed");
+                        assert!(
+                            (1..=4).contains(&c.shed_latency_rounds),
+                            "shed latency {} rounds unbounded",
+                            c.shed_latency_rounds
+                        );
+                        assert!(ja.contains("brownout") && ja.contains("heal"));
+                    }
+                    _ => {
+                        assert_eq!((c.partitions, c.heals), (1, 1), "partition must heal");
+                        assert_eq!(c.node_kills, 0);
+                        assert_eq!(c.frames_lost, 0, "no node died across the cut");
+                        assert!(ja.contains("partition") && ja.contains("heal"));
+                    }
+                }
+                // conservation across every mode: each admitted frame is
+                // served exactly once or accounted lost — never twice
+                for s in &a.streams {
+                    assert_eq!(
+                        s.offered,
+                        s.admitted + s.degraded + s.rejected,
+                        "{scenario}: {}",
+                        s.name
+                    );
+                    assert_eq!(
+                        s.completed + s.lost,
+                        s.admitted - s.deduped,
+                        "{scenario}: {} double-served or silently dropped",
+                        s.name
+                    );
+                }
+                let lost: u64 = a.streams.iter().map(|s| s.lost).sum();
+                assert_eq!(c.frames_lost, lost, "{scenario}: ledger/stream loss disagree");
+            }
+        }
+    }
+}
+
+/// Broker-native liveness: over the real MQTT transport at QoS 1, an
+/// auxiliary killed mid-run drops its connection *ungracefully*, the
+/// broker fires its registered last will on `heteroedge/status/<node>`,
+/// and the dispatcher's status watcher observes it (`wills_observed`) —
+/// no application-level timeout involved. A fault-free run over the
+/// same config tears down with clean DISCONNECTs and observes none.
+#[test]
+fn ungraceful_aux_death_at_qos1_fires_its_broker_will() {
+    let mut cfg = FleetConfig::new(3, 4);
+    cfg.rounds = 3;
+    cfg.frames_per_round = 6;
+    cfg.admission_control = false;
+    cfg.transport = Transport::Mqtt;
+    cfg.qos = QoS::AtLeastOnce;
+    let mut d = Dispatcher::new(cfg.clone()).unwrap();
+    d.set_fault_plan(FaultPlan {
+        events: vec![
+            FaultEvent { at: 7.0, action: FaultAction::Kill { node: 2 } },
+            FaultEvent { at: 11.0, action: FaultAction::Revive { node: 2 } },
+        ],
+        mobility: None,
+    })
+    .unwrap();
+    d.enable_tracing(65_536);
+    let rep = d.run().unwrap();
+    assert_eq!(
+        rep.wills_observed, 1,
+        "the broker must announce the ungraceful drop exactly once"
+    );
+    assert!(
+        d.trace_sink().unwrap().chrome_json().contains("will_fired"),
+        "the will must land in the trace taxonomy"
+    );
+    assert_eq!(rep.churn.as_ref().unwrap().frames_lost, 0, "qos 1 loses nothing");
+
+    let clean = Dispatcher::new(cfg).unwrap().run().unwrap();
+    assert_eq!(
+        clean.wills_observed, 0,
+        "clean disconnects must never fire a will"
+    );
+}
+
 /// Device profiles ride retained publishes on `heteroedge/profile/<node>`:
 /// a probe subscribing *after* fleet construction still receives one
 /// decodable profile per node — the paper's late-joiner profile exchange.

@@ -2,7 +2,7 @@
 
 use std::time::Duration;
 
-use heteroedge::net::mqtt::{Broker, Client, Packet, QoS};
+use heteroedge::net::mqtt::{Broker, Client, LastWill, Packet, QoS};
 
 fn setup() -> (Broker, std::net::SocketAddr) {
     let b = Broker::start().unwrap();
@@ -19,6 +19,7 @@ fn raw_connect(addr: std::net::SocketAddr, id: &str, clean: bool) -> (std::net::
         client_id: id.to_string(),
         clean_session: clean,
         keep_alive_secs: 0,
+        will: None,
     }
     .write_to(&mut s)
     .unwrap();
@@ -539,6 +540,126 @@ fn early_ack_is_parked_for_the_op_it_belongs_to() {
         "publish must not ride out the ack timeout"
     );
     server.join().unwrap();
+}
+
+fn status_will(node: &str) -> LastWill {
+    LastWill {
+        topic: format!("heteroedge/status/{node}"),
+        payload: b"offline".to_vec(),
+        qos: QoS::AtLeastOnce,
+        retain: false,
+    }
+}
+
+#[test]
+fn ungraceful_disconnect_fires_the_last_will() {
+    // §3.1.2.5: the will bound at CONNECT publishes when the connection
+    // dies without a DISCONNECT — here via an explicit socket abort.
+    let (b, addr) = setup();
+    let mut watcher = Client::connect(addr, "watcher").unwrap();
+    watcher.subscribe("heteroedge/status/+").unwrap();
+    let node =
+        Client::connect_full(addr, "node-3", true, 0, Some(status_will("node-3"))).unwrap();
+    node.abort();
+    let msg = watcher
+        .recv_timeout(Duration::from_secs(5))
+        .expect("will not fired on ungraceful drop");
+    assert_eq!(msg.topic, "heteroedge/status/node-3");
+    assert_eq!(msg.payload, b"offline");
+    assert_eq!(
+        b.stats.wills_fired.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn clean_disconnect_discards_the_last_will() {
+    let (b, addr) = setup();
+    let mut watcher = Client::connect(addr, "watcher").unwrap();
+    watcher.subscribe("heteroedge/status/+").unwrap();
+    let node =
+        Client::connect_full(addr, "node-4", true, 0, Some(status_will("node-4"))).unwrap();
+    node.disconnect().unwrap();
+    assert!(
+        watcher.recv_timeout(Duration::from_millis(500)).is_none(),
+        "clean DISCONNECT must not fire the will"
+    );
+    assert_eq!(
+        b.stats.wills_fired.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn keep_alive_expiry_fires_the_last_will() {
+    // a silent connection reaped at 1.5× keep-alive ends ungracefully,
+    // so its will fires through the same cleanup path
+    let (b, addr) = setup();
+    let mut watcher = Client::connect(addr, "watcher").unwrap();
+    watcher.subscribe("heteroedge/status/+").unwrap();
+    let _node =
+        Client::connect_full(addr, "node-5", true, 1, Some(status_will("node-5"))).unwrap();
+    let msg = watcher
+        .recv_timeout(Duration::from_secs(5))
+        .expect("will not fired on keep-alive expiry");
+    assert_eq!(msg.topic, "heteroedge/status/node-5");
+    assert_eq!(
+        b.stats.wills_fired.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn session_takeover_fires_the_old_connections_will() {
+    // §3.1.4: the broker disconnects the old connection on takeover —
+    // an ungraceful end for that connection, so its will fires; the new
+    // connection's will stays armed.
+    let (b, addr) = setup();
+    let mut watcher = Client::connect(addr, "watcher").unwrap();
+    watcher.subscribe("heteroedge/status/+").unwrap();
+    let _old =
+        Client::connect_full(addr, "twin-w", true, 0, Some(status_will("twin-w"))).unwrap();
+    let new =
+        Client::connect_full(addr, "twin-w", true, 0, Some(status_will("twin-w"))).unwrap();
+    let msg = watcher
+        .recv_timeout(Duration::from_secs(5))
+        .expect("takeover must fire the displaced connection's will");
+    assert_eq!(msg.topic, "heteroedge/status/twin-w");
+    assert_eq!(
+        b.stats.wills_fired.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    // the new connection disconnects cleanly: no second will
+    new.disconnect().unwrap();
+    assert!(watcher.recv_timeout(Duration::from_millis(500)).is_none());
+}
+
+#[test]
+fn retained_will_reaches_a_late_subscriber() {
+    // a retained will doubles as a liveness tombstone: a dispatcher that
+    // subscribes after the crash still learns the node is gone
+    let (_b, addr) = setup();
+    let node = Client::connect_full(
+        addr,
+        "node-6",
+        true,
+        0,
+        Some(LastWill {
+            topic: "heteroedge/status/node-6".into(),
+            payload: b"offline".to_vec(),
+            qos: QoS::AtLeastOnce,
+            retain: true,
+        }),
+    )
+    .unwrap();
+    node.abort();
+    std::thread::sleep(Duration::from_millis(300));
+    let mut late = Client::connect(addr, "late").unwrap();
+    late.subscribe("heteroedge/status/node-6").unwrap();
+    let msg = late
+        .recv_timeout(Duration::from_secs(5))
+        .expect("retained will must replay to a late subscriber");
+    assert_eq!(msg.payload, b"offline");
 }
 
 #[test]

@@ -2,12 +2,16 @@
 //! bounded-inbox conservation under random interleavings (including
 //! node-death evictions), the stream→primary shard map (total
 //! ownership, determinism, handoff + failover isolation, weighted
-//! balance), and the trace ring's overwrite-oldest overflow contract.
+//! balance), the trace ring's overwrite-oldest overflow contract, and
+//! the gray-failure regime (Poisson churn schedules, partition-heal
+//! frame conservation, bounded brownout shed latency).
 //!
 //! `HETEROEDGE_PROP_CASES` (CI's property job sets it) raises every
 //! property's case count without changing the cases that already ran.
 
-use heteroedge::fleet::{combine_odds, BoundedInbox, ShardMap};
+use heteroedge::fleet::{
+    combine_odds, BoundedInbox, Dispatcher, FaultPlan, FleetConfig, ShardMap,
+};
 use heteroedge::testkit::{check, prop_assert};
 
 #[test]
@@ -348,6 +352,135 @@ fn prop_trace_ring_overflow_drops_oldest_never_grows() {
             format!("retained window diverged: {frames:?} vs {expect:?}"),
         )?;
         prop_assert(ring.snapshot().len() == kept, "snapshot length")
+    });
+}
+
+/// The sustained-churn generator's contract over arbitrary fleet
+/// shapes: the Poisson kill/revive schedule is a pure function of
+/// `(seed, rate, shape)`, always passes `FaultPlan::validate` (no
+/// kill-of-dead, no revive-of-alive, nothing past the horizon), and
+/// never touches a primary — so `--scenario sustained` can be handed
+/// any fleet without pre-flight checks.
+#[test]
+fn prop_sustained_churn_schedule_is_deterministic_and_valid() {
+    check("sustained churn schedule", 120, |g| {
+        let p = g.usize_in(1, 4);
+        let n = p + g.usize_in(1, 7);
+        let mut cfg = FleetConfig::new(n, g.usize_in(1, 9));
+        cfg.primaries = p;
+        cfg.rounds = g.usize_in(2, 10);
+        cfg.seed = g.rng().next_u64();
+        let rate = g.f64_in(0.005, 0.5);
+        let a = FaultPlan::sustained_scenario(&cfg, rate);
+        let b = FaultPlan::sustained_scenario(&cfg, rate);
+        prop_assert(
+            a.events == b.events,
+            "same (seed, rate, shape) must script identically",
+        )?;
+        a.validate(&cfg)
+            .map_err(|e| format!("generated schedule failed validate: {e}"))?;
+        let horizon = cfg.rounds as f64 * cfg.round_secs;
+        for (i, ev) in a.events.iter().enumerate() {
+            prop_assert(
+                ev.at.is_finite() && ev.at >= 0.0 && ev.at < horizon,
+                format!("event {i} at {} outside [0, {horizon})", ev.at),
+            )?;
+        }
+        // a different seed eventually moves the schedule (vacuously true
+        // for the rare empty schedule at tiny rates)
+        let mut other = cfg.clone();
+        other.seed ^= 0x5a5a;
+        let c = FaultPlan::sustained_scenario(&other, rate);
+        prop_assert(
+            a.events.is_empty() || c.events != a.events || a.events.len() < 2,
+            "seed change never altered a multi-event schedule",
+        )
+    });
+}
+
+/// Partition-heal frame conservation: across random fleet shapes and
+/// seeds, a mid-run reachability partition that later heals must leave
+/// every admitted frame served exactly once or counted lost — never
+/// double-served (`completed > admitted - deduped - lost` is the
+/// double-serve signature) and never silently dropped.
+#[test]
+fn prop_partition_heal_conserves_frames() {
+    check("partition heal conservation", 30, |g| {
+        let p = g.usize_in(2, 4);
+        let n = p + g.usize_in(2, 5);
+        let mut cfg = FleetConfig::new(n, g.usize_in(3, 8));
+        cfg.primaries = p;
+        cfg.rounds = g.usize_in(4, 8);
+        cfg.frames_per_round = g.usize_in(4, 10);
+        cfg.seed = g.rng().next_u64();
+        cfg.admission_control = g.bool();
+        cfg.work_stealing = g.bool();
+        let plan = FaultPlan::partition_scenario(&cfg);
+        plan.validate(&cfg)
+            .map_err(|e| format!("generated partition plan invalid: {e}"))?;
+        let mut d = Dispatcher::new(cfg).map_err(|e| e.to_string())?;
+        d.set_fault_plan(plan).map_err(|e| e.to_string())?;
+        let rep = d.run().map_err(|e| e.to_string())?;
+        let c = rep.churn.as_ref().ok_or("fault run must carry a ledger")?;
+        prop_assert(
+            c.partitions == 1 && c.heals == 1,
+            format!("expected one healed partition, got {}/{}", c.partitions, c.heals),
+        )?;
+        for s in &rep.streams {
+            prop_assert(
+                s.offered == s.admitted + s.degraded + s.rejected,
+                format!(
+                    "{}: offered {} != admitted {} + degraded {} + rejected {}",
+                    s.name, s.offered, s.admitted, s.degraded, s.rejected
+                ),
+            )?;
+            prop_assert(
+                s.completed + s.lost == s.admitted - s.deduped,
+                format!(
+                    "{}: completed {} + lost {} != admitted {} - deduped {} \
+                     (double-serve or silent drop across the heal)",
+                    s.name, s.completed, s.lost, s.admitted, s.deduped
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Bounded brownout shed latency: a 10×-degraded auxiliary must be
+/// noticed by the admission EWMA purely from observed throughput and
+/// shed within a few rounds of onset. Worst case at alpha 0.5: the
+/// onset round's observation is only partially inflated, the next full
+/// round folds ≥ 5× into the estimate (crossing the 2× shed
+/// threshold), and detection lands at the following round boundary —
+/// latency ≤ 3; the bound adds one round of margin.
+#[test]
+fn prop_brownout_shed_latency_is_bounded() {
+    check("brownout shed latency", 30, |g| {
+        let n = 1 + g.usize_in(1, 4);
+        let mut cfg = FleetConfig::new(n, g.usize_in(2, 6));
+        cfg.rounds = g.usize_in(6, 10);
+        cfg.frames_per_round = g.usize_in(6, 12);
+        cfg.seed = g.rng().next_u64();
+        cfg.ewma_alpha = g.f64_in(0.5, 0.95);
+        let plan = FaultPlan::brownout_scenario(&cfg);
+        let mut d = Dispatcher::new(cfg).map_err(|e| e.to_string())?;
+        d.set_fault_plan(plan).map_err(|e| e.to_string())?;
+        let rep = d.run().map_err(|e| e.to_string())?;
+        let c = rep.churn.as_ref().ok_or("fault run must carry a ledger")?;
+        prop_assert(
+            c.brownouts >= 1,
+            format!("brownout scenario scripted {} brownouts", c.brownouts),
+        )?;
+        prop_assert(c.node_kills == 0, "brownouts must not kill anyone")?;
+        prop_assert(
+            c.sheds >= 1,
+            format!("a 10x-degraded aux was never shed ({} brownouts)", c.brownouts),
+        )?;
+        prop_assert(
+            (1..=4).contains(&c.shed_latency_rounds),
+            format!("shed latency {} rounds outside [1, 4]", c.shed_latency_rounds),
+        )
     });
 }
 
