@@ -84,7 +84,9 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::profile_exchange::{FRAMES_TOPIC_PREFIX, STATUS_TOPIC_PREFIX};
+use crate::coordinator::profile_exchange::{
+    FRAMES_TOPIC_PREFIX, STATUS_TOPIC_PREFIX, TOPIC_PREFIX as PROFILE_TOPIC_PREFIX,
+};
 use crate::coordinator::{
     Batcher, DeviceProfileMsg, NodeHandle, NodeRuntime, Scheduler, SchedulerConfig, SimBackend,
 };
@@ -196,6 +198,11 @@ pub struct FleetConfig {
     /// persistent subscriber sessions, and a killed-then-revived
     /// auxiliary's evicted frames — queued and mid-wire — are parked
     /// and redelivered on resume instead of counted lost (`--qos 1`).
+    /// [`QoS::ExactlyOnce`] keeps those churn semantics and upgrades
+    /// every fabric publish to the QoS 2 two-phase handshake
+    /// (PUBLISH → PUBREC → PUBREL → PUBCOMP): zero loss AND zero
+    /// double-serves without leaning on the QoS 1 dedup rings
+    /// (`--qos 2`).
     pub qos: QoS,
 }
 
@@ -242,6 +249,14 @@ impl FleetConfig {
 /// finite and stops one aux from monopolizing the batch. The single
 /// source of truth for both the odds combination and `last_r` shaping.
 pub const MAX_PAIR_RATIO: f64 = 0.98;
+
+/// Relative EWMA drift that triggers a retained profile republish: a
+/// node whose admission-path secs/image estimate moves more than this
+/// fraction away from its last-published `heteroedge/profile/<node>`
+/// message republishes it (retained), so sibling primaries and later
+/// joiners bootstrap from the observed rate instead of the Table I
+/// anchors.
+pub const PROFILE_DRIFT_REL: f64 = 0.25;
 
 /// Combine per-pair Algorithm-1 split ratios into one fleet-level
 /// offload decision, in odds form.
@@ -354,23 +369,32 @@ struct RunState {
     handoffs: u64,
     /// Fault-injection ledger; `Some` iff the run carries a `FaultPlan`.
     churn: Option<ChurnReport>,
-    /// QoS 1 only: jobs evicted from a killed auxiliary, held through
-    /// its downtime for redelivery at the scheduled revive (keyed by
-    /// node index). Always empty at [`QoS::AtMostOnce`].
+    /// Reliable delivery (QoS 1/2) only: jobs evicted from a killed
+    /// auxiliary, held through its downtime for redelivery at the
+    /// scheduled revive (keyed by node index). Always empty at
+    /// [`QoS::AtMostOnce`].
     parked: BTreeMap<usize, Vec<Job>>,
+    /// §III profile loop: estimators seeded from the retained
+    /// `heteroedge/profile/+` view (mid-run joins and revives).
+    profile_bootstraps: u64,
+    /// §III profile loop: retained profiles republished after the
+    /// admission EWMA drifted past [`PROFILE_DRIFT_REL`].
+    profile_republishes: u64,
 }
 
 /// Physical MQTT work-queue fabric: one broker, a dispatcher publisher,
-/// one subscribed client per auxiliary. Under [`QoS::AtLeastOnce`] the
-/// subscribers open persistent sessions (clean_session=false): a killed
-/// auxiliary's connection drops abruptly but its broker-side session —
-/// subscription, inflight window, backlog — survives for the revive,
-/// which resumes it (CONNACK session-present) without re-subscribing.
+/// one subscribed client per auxiliary. Under [`QoS::AtLeastOnce`] and
+/// [`QoS::ExactlyOnce`] the subscribers open persistent sessions
+/// (clean_session=false): a killed auxiliary's connection drops
+/// abruptly but its broker-side session — subscription, inflight
+/// window (QoS 2 handshake phases included), backlog — survives for
+/// the revive, which resumes it (CONNACK session-present) without
+/// re-subscribing.
 struct MqttFabric {
     broker: Broker,
     publisher: Client,
     /// Index k serves auxiliary node `k + primaries`; `None` while the
-    /// node is down under QoS 1 churn (the connection died with it).
+    /// node is down under QoS 1/2 churn (the connection died with it).
     subscribers: Vec<Option<Client>>,
     /// Per-aux frame topics, precomputed so the per-frame publish
     /// allocates no topic string (index k ↔ `subscribers[k]`).
@@ -379,7 +403,7 @@ struct MqttFabric {
     /// Delivery QoS for offloaded frames ([`FleetConfig::qos`]).
     qos: QoS,
     pub delivered: u64,
-    /// QoS 1 only: a dispatcher-side watcher subscribed to
+    /// QoS 1/2 only: a dispatcher-side watcher subscribed to
     /// `heteroedge/status/+` — the broker-native liveness channel each
     /// auxiliary's registered last will publishes `offline` on when its
     /// connection dies without a DISCONNECT.
@@ -388,13 +412,16 @@ struct MqttFabric {
     /// broker-thread deliveries, so the count feeds the Prometheus-only
     /// side of the report, never cross-transport parity.
     pub wills_observed: u64,
+    /// Bootstrap fetches performed so far (unique client ids for the
+    /// one-shot retained-profile subscribers).
+    boot_fetches: u64,
 }
 
 impl MqttFabric {
     fn start(n_nodes: usize, primaries: usize, qos: QoS) -> Result<MqttFabric> {
         let broker = Broker::start().context("starting fleet broker")?;
         let addr = broker.addr();
-        let status = if qos == QoS::AtLeastOnce {
+        let status = if qos != QoS::AtMostOnce {
             let mut c = Client::connect(addr, "fleet-status-watch")
                 .context("starting the liveness status watcher")?;
             c.subscribe(&format!("{STATUS_TOPIC_PREFIX}/+"))?;
@@ -412,6 +439,7 @@ impl MqttFabric {
             delivered: 0,
             status,
             wills_observed: 0,
+            boot_fetches: 0,
         };
         for j in primaries..n_nodes {
             fab.add_aux(j)?;
@@ -457,13 +485,13 @@ impl MqttFabric {
     }
 
     /// Connect and subscribe a client for auxiliary `node`, appending
-    /// its topic slot (startup and mid-run joins). QoS 1 subscribers
+    /// its topic slot (startup and mid-run joins). QoS 1/2 subscribers
     /// ask for a persistent session and register their last will so
     /// the broker itself announces an ungraceful death.
     fn add_aux(&mut self, node: usize) -> Result<()> {
         let topic = format!("{FRAMES_TOPIC_PREFIX}/node-{node}");
         let clean = self.qos == QoS::AtMostOnce;
-        let will = (self.qos == QoS::AtLeastOnce).then(|| self.will_for(node));
+        let will = (self.qos != QoS::AtMostOnce).then(|| self.will_for(node));
         let mut c = Client::connect_full(
             self.broker.addr(),
             &format!("node-{node}"),
@@ -540,6 +568,43 @@ impl MqttFabric {
         self.publisher
             .publish(&topic, &profile.encode(), QoS::AtLeastOnce, true)
             .with_context(|| format!("publishing retained profile for node-{node}"))
+    }
+
+    /// The §III bootstrap read path: a fresh one-shot client subscribes
+    /// `heteroedge/profile/+` and decodes the retained
+    /// [`DeviceProfileMsg`] replay — exactly what a primary joining this
+    /// fleet from outside would see. Blocks until `expect` distinct node
+    /// profiles arrive (the retained replay is immediate, so this is one
+    /// subscribe round trip in practice).
+    fn fetch_retained_profiles(
+        &mut self,
+        expect: usize,
+    ) -> Result<BTreeMap<usize, DeviceProfileMsg>> {
+        self.boot_fetches += 1;
+        let mut c = Client::connect(
+            self.broker.addr(),
+            &format!("fleet-boot-{}", self.boot_fetches),
+        )
+        .context("connecting the profile-bootstrap client")?;
+        c.subscribe(&format!("{PROFILE_TOPIC_PREFIX}/+"))?;
+        let mut out = BTreeMap::new();
+        while out.len() < expect {
+            let Some(msg) = c.recv_timeout(Duration::from_secs(10)) else {
+                bail!(
+                    "retained profile fetch stalled at {}/{expect} profiles",
+                    out.len()
+                );
+            };
+            let node: usize = msg
+                .topic
+                .strip_prefix(&format!("{PROFILE_TOPIC_PREFIX}/node-"))
+                .and_then(|s| s.parse().ok())
+                .with_context(|| format!("unexpected profile topic {}", msg.topic))?;
+            let prof = DeviceProfileMsg::decode(&msg.payload)
+                .with_context(|| format!("decoding retained profile for node-{node}"))?;
+            out.insert(node, prof);
+        }
+        Ok(out)
     }
 
     /// Sheds per subscriber client id (QoS downgrade observability).
@@ -630,6 +695,14 @@ pub struct Dispatcher {
     /// Admission-path secs/image estimate captured at brownout onset —
     /// the healthy baseline a shed is detected against.
     healthy_est: Vec<f64>,
+    /// Deterministic mirror of the retained `heteroedge/profile/<node>`
+    /// view: exactly what has been published per node (under
+    /// [`Transport::Mqtt`] the same bytes sit retained on the broker).
+    /// Kept under BOTH transports so bootstrap seeds and drift
+    /// republish decisions are transport-identical — the f64 LE wire
+    /// format round-trips exactly, so a value decoded off the broker
+    /// equals its mirror entry bit for bit.
+    retained_profiles: BTreeMap<usize, DeviceProfileMsg>,
     /// Scripted churn applied to the next `run()` (see
     /// [`Dispatcher::set_fault_plan`]); `None` = fault-free.
     fault_plan: Option<FaultPlan>,
@@ -761,14 +834,21 @@ impl Dispatcher {
                 b
             })
             .collect();
+        // the in-process mirror of the retained profile view, seeded for
+        // every founding node under both transports (see the field doc)
+        let retained_profiles: BTreeMap<usize, DeviceProfileMsg> = nodes
+            .iter()
+            .enumerate()
+            .map(|(j, slot)| (j, slot.handle.profile()))
+            .collect();
         let fabric = match cfg.transport {
             Transport::Sim => None,
             Transport::Mqtt => {
                 let mut fab = MqttFabric::start(cfg.n_nodes, cfg.primaries, cfg.qos)?;
                 // every node's profile rides a retained
                 // heteroedge/profile/<node> topic from the start
-                for (j, slot) in nodes.iter().enumerate() {
-                    fab.publish_profile(j, &slot.handle.profile())?;
+                for (j, profile) in &retained_profiles {
+                    fab.publish_profile(*j, profile)?;
                 }
                 Some(fab)
             }
@@ -797,6 +877,7 @@ impl Dispatcher {
             shed_pending: vec![false; n],
             degrade_start_round: vec![None; n],
             healthy_est: vec![0.0; n],
+            retained_profiles,
             fault_plan: None,
             last_handoff_round,
         })
@@ -902,6 +983,20 @@ impl Dispatcher {
                 .redelivered
                 .load(std::sync::atomic::Ordering::Relaxed),
         ));
+        // QoS 2 phase gauges: the effective inflight window (a broker
+        // config field since the window became tunable), plus the two
+        // handshake stores per session — receiver-side PUBREC-held ids
+        // and sender-side PUBREL-pending deliveries
+        out.push((
+            "mqtt_broker_inflight_window".to_string(),
+            fab.broker.inflight_window() as u64,
+        ));
+        for (id, n) in fab.broker.pubrec_held_counts() {
+            out.push((format!("mqtt_broker_pubrec_held_{id}"), n));
+        }
+        for (id, n) in fab.broker.pubrel_pending_counts() {
+            out.push((format!("mqtt_broker_pubrel_pending_{id}"), n));
+        }
         out
     }
 
@@ -1000,6 +1095,95 @@ impl Dispatcher {
             }
             self.ewma_snap[j] = (frames, secs);
         }
+    }
+
+    /// §III profile loop, publish half: once per round (right after the
+    /// EWMA folds in the previous round), any live node whose
+    /// admission-path estimate drifted more than [`PROFILE_DRIFT_REL`]
+    /// from its last-published retained profile republishes
+    /// `heteroedge/profile/<node>` (retained) carrying the fresh
+    /// estimate plus its live busy/power state. The decision reads only
+    /// deterministic sim state — the EWMA and the in-process mirror —
+    /// so republish counts are transport-identical; under
+    /// [`Transport::Mqtt`] the message really lands retained on the
+    /// broker for sibling primaries and later joiners.
+    fn republish_drifted_profiles(&mut self, st: &mut RunState) -> Result<()> {
+        for j in 0..self.nodes.len() {
+            if !self.alive[j] {
+                continue;
+            }
+            let Some(est) = self.ewma[j].estimate() else {
+                continue;
+            };
+            let Some(prev) = self.retained_profiles.get(&j) else {
+                continue;
+            };
+            if (est - prev.secs_per_image).abs()
+                <= PROFILE_DRIFT_REL * prev.secs_per_image.max(1e-9)
+            {
+                continue;
+            }
+            let mut msg = self.nodes[j].handle.profile();
+            msg.secs_per_image = est;
+            if let Some(fab) = self.fabric.as_mut() {
+                fab.publish_profile(j, &msg)?;
+            }
+            self.retained_profiles.insert(j, msg);
+            st.profile_republishes += 1;
+        }
+        Ok(())
+    }
+
+    /// §III profile loop, subscribe half: seed auxiliary `node`'s
+    /// throughput estimator from the retained `heteroedge/profile/+`
+    /// view instead of letting it start cold on the static Table I
+    /// anchor. A reviving node seeds from its own retained profile; a
+    /// fresh joiner (no retained entry yet) seeds from the mean over its
+    /// sibling auxiliaries' retained estimates. The seed value comes
+    /// from the deterministic mirror so same-seed runs stay
+    /// byte-identical across transports; under [`Transport::Mqtt`] the
+    /// bootstrap additionally performs the real read path — a one-shot
+    /// client subscribes the wildcard, decodes every retained
+    /// [`DeviceProfileMsg`], and the topic set is checked against the
+    /// mirror (the broker acks a retained publish just before storing
+    /// it, so value equality is asserted by the integration tests after
+    /// the run, not on this hot path).
+    fn bootstrap_estimator(&mut self, node: usize, at: f64, st: &mut RunState) -> Result<()> {
+        let p_count = self.cfg.primaries;
+        let finite = |s: f64| s.is_finite() && s > 0.0;
+        let seed = match self.retained_profiles.get(&node) {
+            Some(p) if finite(p.secs_per_image) => Some(p.secs_per_image),
+            _ => {
+                let sibs: Vec<f64> = self
+                    .retained_profiles
+                    .iter()
+                    .filter(|(&j, _)| j >= p_count && j != node)
+                    .map(|(_, p)| p.secs_per_image)
+                    .filter(|&s| finite(s))
+                    .collect();
+                (!sibs.is_empty()).then(|| sibs.iter().sum::<f64>() / sibs.len() as f64)
+            }
+        };
+        let Some(seed) = seed else {
+            return Ok(());
+        };
+        if let Some(fab) = self.fabric.as_mut() {
+            let fetched = fab.fetch_retained_profiles(self.retained_profiles.len())?;
+            ensure!(
+                fetched.keys().eq(self.retained_profiles.keys()),
+                "broker retained profile view diverged from the dispatcher mirror"
+            );
+            ensure!(
+                fetched.values().all(|p| finite(p.secs_per_image)),
+                "retained profile view carries a degenerate secs/image"
+            );
+        }
+        self.ewma[node] = ThroughputEwma::new(self.cfg.ewma_alpha);
+        self.ewma[node].observe(seed);
+        st.profile_bootstraps += 1;
+        self.tracer
+            .instant(EventKind::ProfileSeed, at, NO_ID, NO_ID, node as u32, seed);
+        Ok(())
     }
 
     /// Can node `a` exchange frames with node `b` right now? True
@@ -1185,6 +1369,8 @@ impl Dispatcher {
             handoffs: 0,
             churn: self.fault_plan.is_some().then(ChurnReport::default),
             parked: BTreeMap::new(),
+            profile_bootstraps: 0,
+            profile_republishes: 0,
         };
 
         // baseline the EWMA deltas at the run's starting counters
@@ -1247,6 +1433,7 @@ impl Dispatcher {
 
             let admission = if cfg.admission_control {
                 self.observe_round_throughput();
+                self.republish_drifted_profiles(&mut st)?;
                 self.detect_sheds(round, &mut st);
                 self.plan_round_admission(round, round_end, cfg.round_secs, &mut st)
             } else {
@@ -1277,7 +1464,7 @@ impl Dispatcher {
         while let Some(ev) = st.events.pop() {
             self.dispatch_event(ev.payload, ev.at, None, &mut st)?;
         }
-        // at-least-once still has a horizon: frames parked for a revive
+        // reliable delivery (QoS 1/2) still has a horizon: frames parked for a revive
         // that never fired are genuinely lost — swept here so the
         // conservation invariant (completed + lost = admitted - deduped)
         // holds. Defensive: every validated plan's revive does fire.
@@ -1379,6 +1566,8 @@ impl Dispatcher {
             stream_handoffs: st.handoffs,
             mqtt_delivered: self.fabric.as_ref().map(|f| f.delivered).unwrap_or(0),
             wills_observed: self.fabric.as_ref().map(|f| f.wills_observed).unwrap_or(0),
+            profile_bootstraps: st.profile_bootstraps,
+            profile_republishes: st.profile_republishes,
             pool: self.pool.stats().since(pool_start),
             trace,
             churn: st.churn,
@@ -1438,7 +1627,7 @@ impl Dispatcher {
                 if node < p_count {
                     self.rehome_dead_primary(node, at, st)?;
                 } else {
-                    // QoS 1 over the real fabric: the dead node's MQTT
+                    // QoS 1/2 over the real fabric: the dead node's MQTT
                     // connection drops ungracefully (no DISCONNECT), so
                     // the broker fires its registered last will on
                     // heteroedge/status/<node> and keeps the persistent
@@ -1447,7 +1636,7 @@ impl Dispatcher {
                     // transports so same-seed traces stay
                     // transport-identical; the real observation feeds
                     // only the Prometheus-side wills_observed counter.
-                    if self.cfg.qos == QoS::AtLeastOnce {
+                    if self.cfg.qos != QoS::AtMostOnce {
                         self.tracer
                             .instant(EventKind::WillFired, at, NO_ID, NO_ID, node as u32, 0.0);
                         if let Some(fab) = self.fabric.as_mut() {
@@ -1473,13 +1662,16 @@ impl Dispatcher {
                     self.failback_primary(node, at, st)?;
                 } else {
                     // resume the persistent session first (the broker
-                    // must report session-present), then re-ship every
+                    // must report session-present), then re-seed the
+                    // node's throughput estimator from the fleet's
+                    // retained profile view before re-shipping every
                     // frame parked through the downtime
-                    if self.cfg.qos == QoS::AtLeastOnce {
+                    if self.cfg.qos != QoS::AtMostOnce {
                         if let Some(fab) = self.fabric.as_mut() {
                             fab.revive_aux(node)?;
                         }
                     }
+                    self.bootstrap_estimator(node, at, st)?;
                     self.redeliver_parked(node, at, st)?;
                 }
             }
@@ -1646,11 +1838,12 @@ impl Dispatcher {
     /// [`QoS::AtMostOnce`], frames still on the wire (`ready > at`) die
     /// with the node and landed frames re-enter the cheapest-first
     /// steal path across live siblings, falling back to the owning
-    /// primary when every sibling refuses. At [`QoS::AtLeastOnce`]
-    /// nothing is lost: if the fault plan revives this node later, the
-    /// whole eviction parks for session-resume redelivery; otherwise
-    /// every frame — mid-wire included — re-enters the steal path,
-    /// charged a fresh transfer.
+    /// primary when every sibling refuses. Under reliable delivery
+    /// ([`QoS::AtLeastOnce`] or [`QoS::ExactlyOnce`]) nothing is lost:
+    /// if the fault plan revives this node later, the whole eviction
+    /// parks for session-resume redelivery; otherwise every frame —
+    /// mid-wire included — re-enters the steal path, charged a fresh
+    /// transfer.
     fn recover_dead_aux(&mut self, dead: usize, at: f64, st: &mut RunState) -> Result<()> {
         let p_count = self.cfg.primaries;
         let pool = self.pool.clone();
@@ -1658,8 +1851,8 @@ impl Dispatcher {
         if jobs.is_empty() {
             return Ok(());
         }
-        let qos1 = self.cfg.qos == QoS::AtLeastOnce;
-        if qos1
+        let reliable = self.cfg.qos != QoS::AtMostOnce;
+        if reliable
             && self
                 .fault_plan
                 .as_ref()
@@ -1684,7 +1877,7 @@ impl Dispatcher {
         let mut recovery_end = at;
         for mut job in jobs {
             let s = job.stream;
-            if job.ready > at && !qos1 {
+            if job.ready > at && !reliable {
                 // mid-transfer at most-once: the wire died with the node
                 st.stream_reports[s].lost += 1;
                 let churn = st.churn.as_mut().expect("fault implies ledger");
@@ -1921,10 +2114,15 @@ impl Dispatcher {
             let interval = (self.cfg.round_secs * 0.5).max(1e-9);
             profilers.push(DeviceProfiler::new(DeviceKind::Xavier.name(), interval));
         }
+        // §III bootstrap: seed the joiner's cold estimator from the
+        // fleet's retained profile view BEFORE its own profile joins it
+        self.bootstrap_estimator(j, at, st)?;
+        let profile = self.nodes[j].handle.profile();
         if let Some(fab) = self.fabric.as_mut() {
             fab.add_aux(j)?;
-            fab.publish_profile(j, &self.nodes[j].handle.profile())?;
+            fab.publish_profile(j, &profile)?;
         }
+        self.retained_profiles.insert(j, profile);
         Ok(j)
     }
 

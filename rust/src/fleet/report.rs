@@ -126,6 +126,16 @@ pub struct FleetReport {
     /// excluded from cross-transport parity checks exactly like
     /// `mqtt_delivered`).
     pub wills_observed: u64,
+    /// §III profile loop: times a joining or reviving auxiliary's
+    /// throughput estimator was seeded from the retained
+    /// `heteroedge/profile/+` view instead of starting cold on the
+    /// Table I anchors (0 for fault-free runs).
+    pub profile_bootstraps: u64,
+    /// §III profile loop: retained `heteroedge/profile/<node>`
+    /// messages republished after a node's admission EWMA drifted past
+    /// the republish threshold (0 while estimates track their
+    /// last-published profiles).
+    pub profile_republishes: u64,
     /// Frame-pool counters for this run: `fresh_allocs` is the number
     /// the zero-copy pipeline exists to bound — once the pool is warm,
     /// per-frame buffer allocations stop (the integration tests assert
@@ -216,6 +226,17 @@ impl FleetReport {
         self.streams.iter().map(|s| s.degraded).sum()
     }
 
+    /// Frames suppressed by scene-change dedup after admission.
+    pub fn total_deduped(&self) -> u64 {
+        self.streams.iter().map(|s| s.deduped).sum()
+    }
+
+    /// Frames lost to faults across every stream (0 outside faulted
+    /// runs and under reliable delivery).
+    pub fn total_lost(&self) -> u64 {
+        self.streams.iter().map(|s| s.lost).sum()
+    }
+
     /// Fleet-wide p99 arrival→completion latency (s).
     pub fn p99_latency_s(&self) -> f64 {
         self.latency.p(99.0)
@@ -233,6 +254,10 @@ impl FleetReport {
         reg.inc("fleet.frames.completed", self.total_completed());
         reg.inc("fleet.frames.rejected", self.total_rejected());
         reg.inc("fleet.frames.degraded", self.total_degraded());
+        // admitted/deduped close the exactly-once conservation check
+        // (completed + lost == admitted - deduped) for external gates
+        reg.inc("fleet.frames.admitted", self.total_admitted());
+        reg.inc("fleet.frames.deduped", self.total_deduped());
         reg.inc("fleet.backpressure.events", self.backpressure_events);
         reg.inc("fleet.steal.frames", self.stolen_frames);
         reg.inc("fleet.steal.primary_fallbacks", self.primary_fallbacks);
@@ -240,6 +265,8 @@ impl FleetReport {
         reg.inc("fleet.offload.bytes", self.offload_bytes);
         reg.inc("fleet.mqtt.delivered", self.mqtt_delivered);
         reg.inc("fleet.mqtt.wills_observed", self.wills_observed);
+        reg.inc("fleet.profile.bootstraps", self.profile_bootstraps);
+        reg.inc("fleet.profile.republishes", self.profile_republishes);
         reg.inc("fleet.pool.checkouts", self.pool.checkouts);
         reg.inc("fleet.pool.fresh_allocs", self.pool.fresh_allocs);
         reg.inc("fleet.pool.handle_allocs", self.pool.handle_allocs);
@@ -341,6 +368,14 @@ impl FleetReport {
             out.push_str(&format!(
                 "liveness: {} broker last-will notices observed\n",
                 self.wills_observed
+            ));
+        }
+        // profile-loop section; omitted while zero so earlier-PR runs
+        // render byte-identically
+        if self.profile_bootstraps + self.profile_republishes > 0 {
+            out.push_str(&format!(
+                "profiles: {} estimator bootstraps | {} retained republishes\n",
+                self.profile_bootstraps, self.profile_republishes
             ));
         }
         if self.pool.checkouts > 0 {
@@ -526,6 +561,8 @@ mod tests {
             stream_handoffs: 0,
             mqtt_delivered: 0,
             wills_observed: 0,
+            profile_bootstraps: 0,
+            profile_republishes: 0,
             pool: PoolStats {
                 checkouts: 100,
                 fresh_allocs: 10,
@@ -691,6 +728,24 @@ mod tests {
         assert_eq!(reg.counter("fleet.churn.heals"), 1);
         assert_eq!(reg.counter("fleet.churn.failback_streams"), 3);
         assert_eq!(reg.counter("fleet.mqtt.wills_observed"), 2);
+    }
+
+    #[test]
+    fn profile_loop_counters_render_and_export() {
+        let mut r = sample();
+        // zero counters render no profiles line at all
+        assert!(!r.render().contains("profiles:"));
+        r.profile_bootstraps = 2;
+        r.profile_republishes = 5;
+        let text = r.render();
+        assert!(
+            text.contains("profiles: 2 estimator bootstraps | 5 retained republishes"),
+            "{text}"
+        );
+        let mut reg = Registry::new();
+        r.to_registry(&mut reg);
+        assert_eq!(reg.counter("fleet.profile.bootstraps"), 2);
+        assert_eq!(reg.counter("fleet.profile.republishes"), 5);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! heteroedge fleet   --nodes <N> --streams <M> [--primaries <P>] [--rounds <k>]
 //!                    [--rate <f>] [--inbox <cap>] [--drain batched|pipelined]
 //!                    [--no-steal] [--masked] [--dedup] [--no-mqtt]
-//!                    [--qos 0|1] [--dwell <rounds>]
+//!                    [--qos 0|1|2] [--dwell <rounds>]
 //!                    [--scenario none|churn|sustained|brownout|partition]
 //!                    [--churn-rate <per-sec>]
 //!                    [--no-baseline] [--seed <s>] [--band <b>]
@@ -127,9 +127,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     // --qos 1: at-least-once offload delivery over persistent MQTT
     // sessions; churned runs park and redeliver a revived auxiliary's
-    // frames instead of counting them lost
-    cfg.qos = match args.opt_choice("qos", &["0", "1"], "0")? {
+    // frames instead of counting them lost. --qos 2: exactly-once —
+    // the same churn semantics plus the PUBREC/PUBREL/PUBCOMP
+    // handshake on every fabric publish, so nothing is lost AND
+    // nothing is served twice
+    cfg.qos = match args.opt_choice("qos", &["0", "1", "2"], "0")? {
         "1" => QoS::AtLeastOnce,
+        "2" => QoS::ExactlyOnce,
         _ => QoS::AtMostOnce,
     };
     cfg.work_stealing = !args.flag("no-steal");
@@ -162,10 +166,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.drain.name(),
         if cfg.work_stealing { "" } else { ", stealing off" },
         // the default header stays textually identical to QoS 0 releases
-        if cfg.qos == QoS::AtLeastOnce {
-            ", qos 1 at-least-once"
-        } else {
-            ""
+        match cfg.qos {
+            QoS::AtMostOnce => "",
+            QoS::AtLeastOnce => ", qos 1 at-least-once",
+            QoS::ExactlyOnce => ", qos 2 exactly-once",
         }
     );
     // observability taps: --trace arms the deterministic lineage tracer

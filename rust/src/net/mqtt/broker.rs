@@ -27,6 +27,17 @@
 //! unacknowledged message redelivered with the DUP flag before the
 //! backlog drains. Keep-alive expiry (1.5× the CONNECT interval, §3.1.2.10)
 //! reaps half-open connections that stop sending.
+//!
+//! **QoS 2 is exactly-once on both legs.** Inbound, the session's
+//! [`Qos2Held`] store (spec §4.3.3 "method A") routes a publisher's
+//! packet id the first time it is seen, answers every retransmit with
+//! PUBREC without routing again, and releases the id at PUBREL — no
+//! reliance on the QoS 1 DUP/seen-ring heuristics. Outbound, each QoS 2
+//! delivery moves through the inflight window with an explicit
+//! [`Qos2Phase`]: phase 1 (PUBLISH out, awaiting PUBREC) re-publishes
+//! under the original packet id with DUP on session resume; phase 2
+//! (PUBREL out, awaiting PUBCOMP) replays only the PUBREL, so the
+//! payload can never be delivered twice.
 
 use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -41,33 +52,68 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::packet::{LastWill, Packet, QoS};
-use super::session::{DedupRing, PacketIds};
+use super::session::{DedupRing, PacketIds, Qos2Held, Qos2Phase};
 use super::topic::{filter_valid, topic_matches};
 
 /// Depth of each connection's dispatch queue (packets). Beyond this the
-/// broker sheds load (QoS 0) or defers to the session backlog (QoS 1)
+/// broker sheds load (QoS 0) or defers to the session backlog (QoS 1/2)
 /// instead of blocking the publishing connection.
 pub const DISPATCH_QUEUE_DEPTH: usize = 1024;
 
-/// Maximum unacknowledged QoS 1 deliveries outstanding per session.
+/// Default maximum unacknowledged QoS 1/2 deliveries outstanding per
+/// session (see [`BrokerConfig::inflight_window`]).
 pub const INFLIGHT_WINDOW: usize = 32;
 
-/// Maximum QoS 1 messages a session backlog holds (window-full or
+/// Maximum QoS 1/2 messages a session backlog holds (window-full or
 /// detached-session queueing). Past this the newest message is dropped
 /// and counted in [`BrokerStats::backpressure_dropped`].
 pub const SESSION_BACKLOG_LIMIT: usize = 8192;
 
-/// A queued QoS 1 application message awaiting delivery.
+/// Tunable broker knobs, validated at [`Broker::start_with`].
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Maximum unacknowledged QoS 1/2 deliveries outstanding per
+    /// session. Must be ≥ 1 — a window of 1 serializes deliveries one
+    /// handshake at a time but still drains any backlog in order.
+    pub inflight_window: usize,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            inflight_window: INFLIGHT_WINDOW,
+        }
+    }
+}
+
+impl BrokerConfig {
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.inflight_window >= 1,
+            "inflight_window must be >= 1, got {}",
+            self.inflight_window
+        );
+        Ok(())
+    }
+}
+
+/// A queued QoS 1/2 application message awaiting delivery.
 struct OutMsg {
     topic: String,
     payload: Arc<Vec<u8>>,
     retain: bool,
+    qos: QoS,
 }
 
-/// A QoS 1 delivery sent to the attached connection and not yet PUBACKed.
+/// A delivery sent to the attached connection and not yet fully
+/// acknowledged: QoS 1 awaits its PUBACK (`phase: None`); QoS 2 walks
+/// the two-phase handshake.
 struct Inflight {
     packet_id: u16,
     msg: OutMsg,
+    /// `Some` for QoS 2 deliveries, tracking which half of the
+    /// handshake is outstanding; `None` for QoS 1.
+    phase: Option<Qos2Phase>,
 }
 
 /// Per-client-id session state. Created on CONNECT; survives disconnects
@@ -83,11 +129,14 @@ struct Session {
     /// Sent, unacknowledged QoS 1 deliveries (redelivered with DUP on
     /// session resume).
     inflight: VecDeque<Inflight>,
-    /// Not-yet-sent QoS 1 backlog: window-full overflow and messages
+    /// Not-yet-sent QoS 1/2 backlog: window-full overflow and messages
     /// routed while the session was detached.
     pending: VecDeque<OutMsg>,
-    /// Recently seen inbound publisher packet ids (DUP dedup).
+    /// Recently seen inbound publisher packet ids (QoS 1 DUP dedup).
     seen: DedupRing,
+    /// Inbound QoS 2 packet ids already routed, PUBREL pending — the
+    /// protocol-level exactly-once store (persists across reconnects).
+    held: Qos2Held,
 }
 
 impl Session {
@@ -100,6 +149,7 @@ impl Session {
             inflight: VecDeque::new(),
             pending: VecDeque::new(),
             seen: DedupRing::default(),
+            held: Qos2Held::default(),
         }
     }
 
@@ -133,13 +183,15 @@ struct ConnHandle {
 
 #[derive(Default)]
 struct Shared {
-    /// client id → session (subscriptions, QoS 1 windows, dedup).
+    /// client id → session (subscriptions, QoS 1/2 windows, dedup).
     sessions: HashMap<String, Session>,
     /// epoch → live connection.
     conns: HashMap<u64, ConnHandle>,
     /// topic -> retained payload (+qos)
     retained: HashMap<String, (Vec<u8>, QoS)>,
     next_epoch: u64,
+    /// Effective per-session inflight window ([`BrokerConfig`]).
+    inflight_window: usize,
 }
 
 /// Broker statistics (observable from tests/benches).
@@ -175,13 +227,14 @@ pub struct Broker {
     housekeeper: Option<JoinHandle<()>>,
 }
 
-/// Encode one QoS 1 delivery (header + payload in one buffer).
-fn encode_qos1(msg: &OutMsg, packet_id: u16, dup: bool) -> Vec<u8> {
+/// Encode one QoS 1/2 delivery (header + payload in one buffer) at the
+/// message's own QoS.
+fn encode_delivery(msg: &OutMsg, packet_id: u16, dup: bool) -> Vec<u8> {
     let mut buf = Vec::with_capacity(msg.topic.len() + msg.payload.len() + 9);
     Packet::encode_publish_header(
         &msg.topic,
         msg.payload.len(),
-        QoS::AtLeastOnce,
+        msg.qos,
         packet_id,
         msg.retain,
         dup,
@@ -210,11 +263,12 @@ fn enqueue(conn: &ConnHandle, bytes: Arc<Vec<u8>>, stats: &BrokerStats) -> bool 
 
 /// Move session backlog into the inflight window while there is room,
 /// assigning fresh packet ids and enqueueing on the attached connection.
-fn flush_session(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats) {
+/// A QoS 2 message enters the window in phase 1 (awaiting PUBREC).
+fn flush_session(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats, window: usize) {
     if !conn.alive.load(Ordering::Relaxed) {
         return;
     }
-    while sess.inflight.len() < INFLIGHT_WINDOW {
+    while sess.inflight.len() < window {
         let Some(msg) = sess.pending.pop_front() else {
             break;
         };
@@ -226,26 +280,41 @@ fn flush_session(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats) {
             sess.pending.push_front(msg);
             break;
         };
-        let bytes = Arc::new(encode_qos1(&msg, pid, false));
+        let bytes = Arc::new(encode_delivery(&msg, pid, false));
         if enqueue(conn, bytes, stats) {
+            let phase = (msg.qos == QoS::ExactlyOnce).then_some(Qos2Phase::AwaitingPubRec);
             sess.inflight.push_back(Inflight {
                 packet_id: pid,
                 msg,
+                phase,
             });
         } else {
             // dispatch queue full: leave the message queued, retry on
-            // the next PUBACK or route — QoS 1 never sheds here
+            // the next ack or route — QoS 1/2 never sheds here
             sess.pending.push_front(msg);
             break;
         }
     }
 }
 
-/// Redeliver every unacknowledged inflight message (same packet id,
-/// DUP=1) to a freshly resumed session's connection.
+/// Redeliver every unacknowledged inflight message to a freshly resumed
+/// session's connection, replaying the correct handshake phase: QoS 1
+/// and phase-1 QoS 2 re-publish under the original packet id with
+/// DUP=1; phase-2 QoS 2 replays only the PUBREL (the payload already
+/// landed — re-publishing it would break exactly-once).
 fn redeliver_inflight(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats) {
     for inf in &sess.inflight {
-        let bytes = Arc::new(encode_qos1(&inf.msg, inf.packet_id, true));
+        let bytes = match inf.phase {
+            None | Some(Qos2Phase::AwaitingPubRec) => {
+                Arc::new(encode_delivery(&inf.msg, inf.packet_id, true))
+            }
+            Some(Qos2Phase::AwaitingPubComp) => Arc::new(
+                Packet::PubRel {
+                    packet_id: inf.packet_id,
+                }
+                .encode(),
+            ),
+        };
         if enqueue(conn, bytes, stats) {
             stats.redelivered.fetch_add(1, Ordering::Relaxed);
         }
@@ -253,11 +322,22 @@ fn redeliver_inflight(sess: &mut Session, conn: &ConnHandle, stats: &BrokerStats
 }
 
 impl Broker {
-    /// Bind to `127.0.0.1:0` (ephemeral port) and start accepting.
+    /// Bind to `127.0.0.1:0` (ephemeral port) and start accepting with
+    /// the default configuration.
     pub fn start() -> Result<Broker> {
+        Self::start_with(BrokerConfig::default())
+    }
+
+    /// Bind to `127.0.0.1:0` (ephemeral port) and start accepting with
+    /// an explicit (validated) configuration.
+    pub fn start_with(cfg: BrokerConfig) -> Result<Broker> {
+        cfg.validate()?;
         let listener = TcpListener::bind("127.0.0.1:0").context("binding broker")?;
         let addr = listener.local_addr()?;
-        let shared = Arc::new(Mutex::new(Shared::default()));
+        let shared = Arc::new(Mutex::new(Shared {
+            inflight_window: cfg.inflight_window,
+            ..Shared::default()
+        }));
         let stats = Arc::new(BrokerStats::default());
         let stop = Arc::new(AtomicBool::new(false));
         let t0 = Instant::now();
@@ -466,10 +546,11 @@ impl Broker {
             if session_present {
                 let mut guard = shared.lock().unwrap();
                 let sh = &mut *guard;
+                let window = sh.inflight_window;
                 if let Some(sess) = sh.sessions.get_mut(&cid) {
                     if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
                         redeliver_inflight(sess, conn, &stats);
-                        flush_session(sess, conn, &stats);
+                        flush_session(sess, conn, &stats, window);
                     }
                 }
             }
@@ -505,9 +586,9 @@ impl Broker {
                         };
                         send_ctl(Packet::SubAck { packet_id })?;
                         // deliver retained messages to the new subscriber
-                        // (in queue order, after the SUBACK). QoS 1
+                        // (in queue order, after the SUBACK). QoS 1/2
                         // replays ride the session's inflight window —
-                        // real packet ids, PUBACK-tracked — never a
+                        // real packet ids, ack-tracked — never a
                         // fabricated id 0.
                         for (topic, payload, qos) in retained {
                             match qos {
@@ -521,19 +602,21 @@ impl Broker {
                                         dup: false,
                                     });
                                 }
-                                QoS::AtLeastOnce => {
+                                QoS::AtLeastOnce | QoS::ExactlyOnce => {
                                     let mut guard = shared.lock().unwrap();
                                     let sh = &mut *guard;
+                                    let window = sh.inflight_window;
                                     if let Some(sess) = sh.sessions.get_mut(&cid) {
                                         sess.pending.push_back(OutMsg {
                                             topic,
                                             payload: Arc::new(payload),
                                             retain: true,
+                                            qos,
                                         });
                                         if let Some(conn) =
                                             sess.attached.and_then(|e| sh.conns.get(&e))
                                         {
-                                            flush_session(sess, conn, &stats);
+                                            flush_session(sess, conn, &stats, window);
                                         }
                                     }
                                 }
@@ -549,25 +632,42 @@ impl Broker {
                         dup,
                     } => {
                         stats.published.fetch_add(1, Ordering::Relaxed);
-                        // DUP dedup: a retransmitted QoS 1 publish whose
-                        // packet id this session already routed is acked
-                        // again but routed once
+                        // Inbound dedup. QoS 1: a retransmitted publish
+                        // (DUP set) whose packet id this session already
+                        // routed is acked again but routed once. QoS 2:
+                        // the held store routes each id exactly once per
+                        // handshake — any re-publish of a held id (DUP or
+                        // not) gets its PUBREC but never routes again.
                         let mut duplicate = false;
-                        if qos == QoS::AtLeastOnce {
-                            let mut sh = shared.lock().unwrap();
-                            if let Some(sess) = sh.sessions.get_mut(&cid) {
-                                if dup && sess.seen.contains(packet_id) {
-                                    duplicate = true;
-                                    stats.dup_drops.fetch_add(1, Ordering::Relaxed);
-                                } else {
-                                    sess.seen.insert(packet_id);
+                        match qos {
+                            QoS::AtMostOnce => {}
+                            QoS::AtLeastOnce => {
+                                let mut sh = shared.lock().unwrap();
+                                if let Some(sess) = sh.sessions.get_mut(&cid) {
+                                    if dup && sess.seen.contains(packet_id) {
+                                        duplicate = true;
+                                        stats.dup_drops.fetch_add(1, Ordering::Relaxed);
+                                    } else {
+                                        sess.seen.insert(packet_id);
+                                    }
+                                }
+                            }
+                            QoS::ExactlyOnce => {
+                                let mut sh = shared.lock().unwrap();
+                                if let Some(sess) = sh.sessions.get_mut(&cid) {
+                                    if !sess.held.hold(packet_id) {
+                                        duplicate = true;
+                                        stats.dup_drops.fetch_add(1, Ordering::Relaxed);
+                                    }
                                 }
                             }
                         }
                         // ack before routing — and before taking the shared
                         // lock, so a full own-queue can't stall the registry
-                        if qos == QoS::AtLeastOnce {
-                            send_ctl(Packet::PubAck { packet_id })?;
+                        match qos {
+                            QoS::AtMostOnce => {}
+                            QoS::AtLeastOnce => send_ctl(Packet::PubAck { packet_id })?,
+                            QoS::ExactlyOnce => send_ctl(Packet::PubRec { packet_id })?,
                         }
                         if !duplicate {
                             Self::route(&shared, &stats, topic, payload.into_owned(), qos, retain);
@@ -585,6 +685,7 @@ impl Broker {
                         // backlog
                         let mut guard = shared.lock().unwrap();
                         let sh = &mut *guard;
+                        let window = sh.inflight_window;
                         if let Some(sess) = sh.sessions.get_mut(&cid) {
                             if let Some(pos) =
                                 sess.inflight.iter().position(|i| i.packet_id == packet_id)
@@ -592,7 +693,58 @@ impl Broker {
                                 sess.inflight.remove(pos);
                             }
                             if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
-                                flush_session(sess, conn, &stats);
+                                flush_session(sess, conn, &stats, window);
+                            }
+                        }
+                    }
+                    Packet::PubRec { packet_id } => {
+                        // subscriber holds our QoS 2 delivery: advance the
+                        // inflight entry to phase 2 and answer PUBREL.
+                        // Idempotent — a duplicate PUBREC re-PUBRELs
+                        // without touching the (already advanced) phase.
+                        {
+                            let mut sh = shared.lock().unwrap();
+                            if let Some(sess) = sh.sessions.get_mut(&cid) {
+                                if let Some(inf) = sess
+                                    .inflight
+                                    .iter_mut()
+                                    .find(|i| i.packet_id == packet_id && i.phase.is_some())
+                                {
+                                    inf.phase = Some(Qos2Phase::AwaitingPubComp);
+                                }
+                            }
+                        }
+                        send_ctl(Packet::PubRel { packet_id })?;
+                    }
+                    Packet::PubRel { packet_id } => {
+                        // publisher committed a QoS 2 handshake: release
+                        // the held id so it becomes reusable, and always
+                        // answer PUBCOMP (a duplicate PUBREL releases
+                        // nothing but still completes)
+                        {
+                            let mut sh = shared.lock().unwrap();
+                            if let Some(sess) = sh.sessions.get_mut(&cid) {
+                                sess.held.release(packet_id);
+                            }
+                        }
+                        send_ctl(Packet::PubComp { packet_id })?;
+                    }
+                    Packet::PubComp { packet_id } => {
+                        // subscriber completed a QoS 2 handshake: retire
+                        // the phase-2 inflight entry and refill
+                        let mut guard = shared.lock().unwrap();
+                        let sh = &mut *guard;
+                        let window = sh.inflight_window;
+                        if let Some(sess) = sh.sessions.get_mut(&cid) {
+                            if let Some(pos) = sess
+                                .inflight
+                                .iter()
+                                .position(|i| i.packet_id == packet_id && i.phase.is_some())
+                            {
+                                sess.inflight.remove(pos);
+                            }
+                            if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
+                                flush_session(sess, conn, &stats, window);
                             }
                         }
                     }
@@ -642,7 +794,7 @@ impl Broker {
 
     /// Route one published message: retain bookkeeping, then fan out to
     /// every session with a matching filter — zero-copy `try_send` for
-    /// QoS 0, the per-session inflight window for QoS 1.
+    /// QoS 0, the per-session inflight window for QoS 1/2.
     fn route(
         shared: &Arc<Mutex<Shared>>,
         stats: &Arc<BrokerStats>,
@@ -685,8 +837,9 @@ impl Broker {
                     }
                 }
             }
-            QoS::AtLeastOnce => {
+            QoS::AtLeastOnce | QoS::ExactlyOnce => {
                 let shared_payload = Arc::new(payload.clone());
+                let window = sh.inflight_window;
                 for sess in sh.sessions.values_mut() {
                     if !sess.matches(&topic) {
                         continue;
@@ -699,9 +852,10 @@ impl Broker {
                         topic: topic.clone(),
                         payload: Arc::clone(&shared_payload),
                         retain: false,
+                        qos,
                     });
                     if let Some(conn) = sess.attached.and_then(|e| sh.conns.get(&e)) {
-                        flush_session(sess, conn, stats);
+                        flush_session(sess, conn, stats, window);
                     }
                 }
             }
@@ -765,7 +919,7 @@ impl Broker {
         by_client.into_iter().collect()
     }
 
-    /// Unacknowledged QoS 1 deliveries per session (inflight window
+    /// Unacknowledged QoS 1/2 deliveries per session (inflight window
     /// occupancy), keyed and sorted by client id — detached persistent
     /// sessions included. Live thread state: registry only.
     pub fn inflight_counts(&self) -> Vec<(String, u64)> {
@@ -774,6 +928,44 @@ impl Broker {
         for (cid, sess) in &sh.sessions {
             if !sess.filters.is_empty() {
                 out.insert(cid.clone(), sess.inflight.len() as u64);
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// The effective per-session inflight window ([`BrokerConfig`]).
+    pub fn inflight_window(&self) -> usize {
+        self.shared.lock().unwrap().inflight_window
+    }
+
+    /// Inbound QoS 2 packet ids held per session (routed, PUBREL
+    /// pending — receiver phase 1 occupancy), keyed and sorted by
+    /// client id. Live thread state: registry only.
+    pub fn pubrec_held_counts(&self) -> Vec<(String, u64)> {
+        let sh = self.shared.lock().unwrap();
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for (cid, sess) in &sh.sessions {
+            if !sess.held.is_empty() {
+                out.insert(cid.clone(), sess.held.len() as u64);
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// Outbound QoS 2 deliveries sitting in phase 2 (PUBREL sent,
+    /// PUBCOMP pending) per session, keyed and sorted by client id.
+    /// Live thread state: registry only.
+    pub fn pubrel_pending_counts(&self) -> Vec<(String, u64)> {
+        let sh = self.shared.lock().unwrap();
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for (cid, sess) in &sh.sessions {
+            let n = sess
+                .inflight
+                .iter()
+                .filter(|i| i.phase == Some(Qos2Phase::AwaitingPubComp))
+                .count() as u64;
+            if n > 0 {
+                out.insert(cid.clone(), n);
             }
         }
         out.into_iter().collect()

@@ -16,8 +16,16 @@
 //! at-least-once on the wire, at-most-once into the inbox per
 //! connection. [`Client::connect_with`] opens persistent sessions
 //! (clean_session=false) and exposes the broker's session-present flag.
+//!
+//! QoS 2 receive leg: exactly-once without the dedup ring. The reader
+//! holds each inbound packet id ([`Qos2Held`]), delivers to the inbox
+//! only on the first PUBLISH of a hold, answers every (re)transmit with
+//! PUBREC, and releases the id at PUBREL with a PUBCOMP — so a broker
+//! replaying either handshake phase after a reconnect can never land
+//! the same message in the inbox twice. The send leg walks the full
+//! PUBLISH → PUBREC → PUBREL → PUBCOMP exchange before returning.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -27,7 +35,25 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::packet::{write_all_vectored, LastWill, Packet, QoS};
-use super::session::DedupRing;
+use super::session::{DedupRing, Qos2Held};
+
+/// Default ack deadline for subscribe/publish/ping waits
+/// (see [`Client::set_ack_timeout`]).
+pub const DEFAULT_ACK_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Maximum acks parked for other in-flight ops before the oldest parked
+/// entry is evicted — the bound that keeps a peer who never completes
+/// its handshakes from growing the map without limit.
+pub const PENDING_ACK_CAP: usize = 1024;
+
+/// Which control ack an op is waiting for (parking key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum AckKind {
+    SubAck,
+    PubAck,
+    PubRec,
+    PubComp,
+}
 
 /// A received application message.
 #[derive(Debug, Clone, PartialEq)]
@@ -134,9 +160,12 @@ pub struct Client {
     /// Reusable PUBLISH header scratch for the vectored publish path.
     pub_head: Vec<u8>,
     /// Acks that arrived while a different op was waiting — keyed
-    /// (is_suback, packet_id), consumed by the op they belong to instead
-    /// of being discarded.
-    pending_acks: HashSet<(bool, u16)>,
+    /// (kind, packet_id) with their arrival instant, consumed by the op
+    /// they belong to. Bounded ([`PENDING_ACK_CAP`]) and expired past
+    /// the ack deadline, so an abandoned handshake cannot leak forever.
+    pending_acks: HashMap<(AckKind, u16), Instant>,
+    /// Deadline for every ack wait (subscribe, publish, ping).
+    ack_timeout: Duration,
     /// CONNACK session-present flag: the broker resumed a stored
     /// session for this client id.
     session_present: bool,
@@ -213,6 +242,9 @@ impl Client {
             .name(format!("mqtt-client-{client_id}"))
             .spawn(move || {
                 let mut seen = DedupRing::default();
+                // receiver-side QoS 2 exactly-once store: ids delivered
+                // to the inbox whose PUBREL has not yet arrived
+                let mut held = Qos2Held::default();
                 loop {
                     match Packet::read_from(&mut reader) {
                         Ok(Packet::Publish {
@@ -224,21 +256,39 @@ impl Client {
                             ..
                         }) => {
                             let mut fresh = true;
-                            if qos == QoS::AtLeastOnce {
-                                // DUP dedup before the ack: a redelivery
-                                // of a packet id this connection already
-                                // consumed is acked but not re-queued
-                                if dup && seen.contains(packet_id) {
-                                    fresh = false;
-                                } else {
-                                    seen.insert(packet_id);
-                                }
-                                if let Ok(mut w) = writer_bg.lock() {
-                                    if Packet::PubAck { packet_id }.write_to(&mut *w).is_err() {
+                            match qos {
+                                QoS::AtMostOnce => {}
+                                QoS::AtLeastOnce => {
+                                    // DUP dedup before the ack: a redelivery
+                                    // of a packet id this connection already
+                                    // consumed is acked but not re-queued
+                                    if dup && seen.contains(packet_id) {
+                                        fresh = false;
+                                    } else {
+                                        seen.insert(packet_id);
+                                    }
+                                    if let Ok(mut w) = writer_bg.lock() {
+                                        if Packet::PubAck { packet_id }.write_to(&mut *w).is_err()
+                                        {
+                                            break;
+                                        }
+                                    } else {
                                         break;
                                     }
-                                } else {
-                                    break;
+                                }
+                                QoS::ExactlyOnce => {
+                                    // exactly-once: deliver only on the
+                                    // first PUBLISH of a hold; every
+                                    // (re)transmit is answered PUBREC
+                                    fresh = held.hold(packet_id);
+                                    if let Ok(mut w) = writer_bg.lock() {
+                                        if Packet::PubRec { packet_id }.write_to(&mut *w).is_err()
+                                        {
+                                            break;
+                                        }
+                                    } else {
+                                        break;
+                                    }
                                 }
                             }
                             if fresh {
@@ -248,9 +298,26 @@ impl Client {
                                 });
                             }
                         }
+                        Ok(Packet::PubRel { packet_id }) => {
+                            // sender committed: release the hold (the id
+                            // becomes reusable) and complete the handshake
+                            held.release(packet_id);
+                            if let Ok(mut w) = writer_bg.lock() {
+                                if Packet::PubComp { packet_id }.write_to(&mut *w).is_err() {
+                                    break;
+                                }
+                            } else {
+                                break;
+                            }
+                        }
                         Ok(Packet::PingResp) => inbox_bg.pong(),
                         Ok(Packet::ConnAck { .. }) => {}
-                        Ok(p @ (Packet::PubAck { .. } | Packet::SubAck { .. })) => {
+                        Ok(
+                            p @ (Packet::PubAck { .. }
+                            | Packet::SubAck { .. }
+                            | Packet::PubRec { .. }
+                            | Packet::PubComp { .. }),
+                        ) => {
                             if ack_tx.send(p).is_err() {
                                 break;
                             }
@@ -270,7 +337,8 @@ impl Client {
             next_packet_id: 1,
             pings_sent: 0,
             pub_head: Vec::new(),
-            pending_acks: HashSet::new(),
+            pending_acks: HashMap::new(),
+            ack_timeout: DEFAULT_ACK_TIMEOUT,
             session_present,
         })
     }
@@ -291,33 +359,65 @@ impl Client {
         id
     }
 
-    /// Wait for the ack matching `packet_id`. Acks that belong to a
-    /// *different* in-flight op are parked in `pending_acks` (keyed by
-    /// packet id) for that op to consume — never discarded.
-    fn wait_ack(&mut self, want_suback: bool, packet_id: u16, timeout: Duration) -> Result<()> {
-        if self.pending_acks.remove(&(want_suback, packet_id)) {
+    /// Set the deadline every ack wait uses (subscribe's SUBACK, QoS 1's
+    /// PUBACK, QoS 2's PUBREC/PUBCOMP, ping's PINGRESP). Parked acks
+    /// older than this are also expired. Defaults to
+    /// [`DEFAULT_ACK_TIMEOUT`].
+    pub fn set_ack_timeout(&mut self, timeout: Duration) {
+        self.ack_timeout = timeout;
+    }
+
+    /// Acks currently parked for other in-flight ops — the leak gauge
+    /// the pending-ack cap and expiry bound (observable from tests).
+    pub fn parked_acks(&self) -> usize {
+        self.pending_acks.len()
+    }
+
+    /// Park an ack another op will consume, expiring entries older than
+    /// the ack deadline and evicting the oldest past
+    /// [`PENDING_ACK_CAP`] — the map can never grow without bound even
+    /// against a peer that abandons every handshake.
+    fn park_ack(&mut self, key: (AckKind, u16)) {
+        let now = Instant::now();
+        let deadline = self.ack_timeout;
+        self.pending_acks
+            .retain(|_, parked| now.duration_since(*parked) <= deadline);
+        if self.pending_acks.len() >= PENDING_ACK_CAP {
+            if let Some(oldest) = self
+                .pending_acks
+                .iter()
+                .min_by_key(|(_, parked)| **parked)
+                .map(|(k, _)| *k)
+            {
+                self.pending_acks.remove(&oldest);
+            }
+        }
+        self.pending_acks.insert(key, now);
+    }
+
+    /// Wait for the ack matching `(want, packet_id)`. Acks that belong
+    /// to a *different* in-flight op are parked in `pending_acks` for
+    /// that op to consume — never discarded while fresh.
+    fn wait_ack(&mut self, want: AckKind, packet_id: u16) -> Result<()> {
+        if self.pending_acks.remove(&(want, packet_id)).is_some() {
             return Ok(());
         }
-        let deadline = Instant::now() + timeout;
+        let deadline = Instant::now() + self.ack_timeout;
         loop {
             let remain = deadline.saturating_duration_since(Instant::now());
-            match self.acks.recv_timeout(remain) {
-                Ok(Packet::SubAck { packet_id: id }) => {
-                    if want_suback && id == packet_id {
-                        return Ok(());
-                    }
-                    self.pending_acks.insert((true, id));
-                }
-                Ok(Packet::PubAck { packet_id: id }) => {
-                    if !want_suback && id == packet_id {
-                        return Ok(());
-                    }
-                    self.pending_acks.insert((false, id));
-                }
-                Ok(_) => {}
+            let (kind, id) = match self.acks.recv_timeout(remain) {
+                Ok(Packet::SubAck { packet_id: id }) => (AckKind::SubAck, id),
+                Ok(Packet::PubAck { packet_id: id }) => (AckKind::PubAck, id),
+                Ok(Packet::PubRec { packet_id: id }) => (AckKind::PubRec, id),
+                Ok(Packet::PubComp { packet_id: id }) => (AckKind::PubComp, id),
+                Ok(_) => continue,
                 Err(RecvTimeoutError::Timeout) => bail!("ack timeout"),
                 Err(RecvTimeoutError::Disconnected) => bail!("connection lost"),
+            };
+            if kind == want && id == packet_id {
+                return Ok(());
             }
+            self.park_ack((kind, id));
         }
     }
 
@@ -329,10 +429,12 @@ impl Client {
             filter: filter.to_string(),
         }
         .write_to(&mut *self.writer.lock().unwrap())?;
-        self.wait_ack(true, packet_id, Duration::from_secs(5))
+        self.wait_ack(AckKind::SubAck, packet_id)
     }
 
-    /// Publish. QoS1 blocks until the broker's PUBACK.
+    /// Publish. QoS 1 blocks until the broker's PUBACK; QoS 2 completes
+    /// the full exactly-once handshake (PUBREC → PUBREL → PUBCOMP)
+    /// before returning.
     ///
     /// Zero-copy: the header is encoded into a reusable scratch and the
     /// payload rides a vectored write straight from the caller's buffer
@@ -353,8 +455,14 @@ impl Client {
             let mut w = self.writer.lock().unwrap();
             write_all_vectored(&mut *w, &self.pub_head, payload)?;
         }
-        if qos == QoS::AtLeastOnce {
-            self.wait_ack(false, packet_id, Duration::from_secs(10))?;
+        match qos {
+            QoS::AtMostOnce => {}
+            QoS::AtLeastOnce => self.wait_ack(AckKind::PubAck, packet_id)?,
+            QoS::ExactlyOnce => {
+                self.wait_ack(AckKind::PubRec, packet_id)?;
+                Packet::PubRel { packet_id }.write_to(&mut *self.writer.lock().unwrap())?;
+                self.wait_ack(AckKind::PubComp, packet_id)?;
+            }
         }
         Ok(())
     }
@@ -391,7 +499,7 @@ impl Client {
         let target = self.pings_sent;
         let t0 = Instant::now();
         Packet::PingReq.write_to(&mut *self.writer.lock().unwrap())?;
-        if !self.inbox.wait_pong(target, Duration::from_secs(5)) {
+        if !self.inbox.wait_pong(target, self.ack_timeout) {
             bail!("ping timed out (no PINGRESP)");
         }
         Ok(t0.elapsed())

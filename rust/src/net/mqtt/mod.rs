@@ -6,8 +6,9 @@
 //! threads:
 //!
 //! * packet types: CONNECT/CONNACK (clean-session, keep-alive,
-//!   session-present, return code), PUBLISH (QoS 0/1, DUP, RETAIN),
-//!   PUBACK, SUBSCRIBE/SUBACK, PINGREQ/PINGRESP, DISCONNECT;
+//!   session-present, return code), PUBLISH (QoS 0/1/2, DUP, RETAIN),
+//!   PUBACK, PUBREC/PUBREL/PUBCOMP, SUBSCRIBE/SUBACK,
+//!   PINGREQ/PINGRESP, DISCONNECT;
 //! * MQTT-style variable-length remaining-length encoding;
 //! * topic filters with `+` (single-level) and `#` (multi-level)
 //!   wildcards;
@@ -16,7 +17,13 @@
 //!   client-id session state (`broker.rs`/`session.rs`) carries the
 //!   subscription set, an inflight window of unacknowledged deliveries
 //!   with real packet ids (1..=65535, never reused while inflight), an
-//!   offline backlog, and DUP dedup rings on both ends.
+//!   offline backlog, and DUP dedup rings on both ends;
+//! * **QoS 2 exactly-once delivery**: two-phase state machines on both
+//!   ends ([`session::Qos2Phase`], [`session::Qos2Held`]) — the
+//!   receiver routes each inbound packet id exactly once per hold and
+//!   the sender replays the correct handshake phase (DUP re-publish or
+//!   bare PUBREL) across reconnects, with no reliance on the QoS 1
+//!   dedup rings.
 //!
 //! ## QoS 1 state machines
 //!
@@ -35,6 +42,23 @@
 //! before routing. The client reader PUBACKs inbound QoS 1 deliveries
 //! and drops DUP replays it already consumed.
 //!
+//! ## QoS 2 state machines
+//!
+//! *Sender (broker → subscriber, client → broker)*: a QoS 2 message
+//! enters the inflight window in **phase 1** (PUBLISH out, awaiting
+//! PUBREC). PUBREC advances it to **phase 2** (PUBREL out, awaiting
+//! PUBCOMP); PUBCOMP retires it. On session resume a phase-1 entry is
+//! re-published under its original packet id with DUP=1, while a
+//! phase-2 entry replays only the PUBREL — the payload is never sent
+//! twice once the receiver has acknowledged holding it.
+//!
+//! *Receiver (both ends)*: the first PUBLISH of a packet id routes the
+//! message and holds the id ([`session::Qos2Held`], §4.3.3 "method A");
+//! every (re)transmit of a held id is answered with PUBREC but not
+//! routed again; PUBREL releases the id (making it reusable) and is
+//! answered with PUBCOMP. Exactly-once therefore comes from the
+//! handshake state itself, not from the bounded QoS 1 seen-rings.
+//!
 //! Session identity is epoch-based: a reconnect with the same client id
 //! takes the session over (MQTT 3.1.1 §3.1.4, the stale connection is
 //! shut down) and the old socket's late cleanup cannot clobber the new
@@ -49,8 +73,9 @@
 //! ends **ungracefully** — socket death, keep-alive expiry, or a
 //! §3.1.4 takeover — and discards it on a clean DISCONNECT. The fleet
 //! uses wills on `heteroedge/status/<node>` for broker-native liveness:
-//! at `--qos 1` the dispatcher hears about a crashed auxiliary from the
-//! broker itself rather than only from the sim fault plan.
+//! under reliable delivery (`--qos 1`/`--qos 2`) the dispatcher hears
+//! about a crashed auxiliary from the broker itself rather than only
+//! from the sim fault plan.
 //!
 //! The broker is loopback-TCP real; *simulated* channel latency (distance,
 //! band) is charged by the coordinator on top, keeping protocol realism
@@ -62,8 +87,8 @@ pub mod packet;
 pub mod session;
 pub mod topic;
 
-pub use broker::Broker;
+pub use broker::{Broker, BrokerConfig};
 pub use client::Client;
 pub use packet::{LastWill, Packet, QoS};
-pub use session::{DedupRing, PacketIds};
+pub use session::{DedupRing, PacketIds, Qos2Held, Qos2Phase};
 pub use topic::{filter_valid, topic_matches};

@@ -22,6 +22,8 @@ pub enum QoS {
     AtMostOnce = 0,
     /// Acknowledged delivery (PUBACK).
     AtLeastOnce = 1,
+    /// Exactly-once delivery (PUBREC → PUBREL → PUBCOMP).
+    ExactlyOnce = 2,
 }
 
 impl QoS {
@@ -29,6 +31,7 @@ impl QoS {
         match v {
             0 => Ok(QoS::AtMostOnce),
             1 => Ok(QoS::AtLeastOnce),
+            2 => Ok(QoS::ExactlyOnce),
             _ => bail!("unsupported QoS {v}"),
         }
     }
@@ -84,6 +87,14 @@ pub enum Packet<'p> {
         dup: bool,
     },
     PubAck { packet_id: u16 },
+    /// QoS 2 phase 1 response (§3.5): the receiver holds the packet id
+    /// and the sender stops re-publishing once this arrives.
+    PubRec { packet_id: u16 },
+    /// QoS 2 phase 2 release (§3.6): the sender tells the receiver the
+    /// handshake for this id is committed; fixed-header flags are 0b0010.
+    PubRel { packet_id: u16 },
+    /// QoS 2 completion (§3.7): the receiver releases the held id.
+    PubComp { packet_id: u16 },
     Subscribe { packet_id: u16, filter: String },
     SubAck { packet_id: u16 },
     PingReq,
@@ -95,6 +106,9 @@ const T_CONNECT: u8 = 1;
 const T_CONNACK: u8 = 2;
 const T_PUBLISH: u8 = 3;
 const T_PUBACK: u8 = 4;
+const T_PUBREC: u8 = 5;
+const T_PUBREL: u8 = 6;
+const T_PUBCOMP: u8 = 7;
 const T_SUBSCRIBE: u8 = 8;
 const T_SUBACK: u8 = 9;
 const T_PINGREQ: u8 = 12;
@@ -288,6 +302,22 @@ impl Packet<'_> {
                 write_u16(&mut b, *packet_id);
                 (T_PUBACK, 0, b)
             }
+            Packet::PubRec { packet_id } => {
+                let mut b = Vec::new();
+                write_u16(&mut b, *packet_id);
+                (T_PUBREC, 0, b)
+            }
+            Packet::PubRel { packet_id } => {
+                let mut b = Vec::new();
+                write_u16(&mut b, *packet_id);
+                // §3.6.1: PUBREL's fixed-header flags are reserved 0b0010
+                (T_PUBREL, 0b0010, b)
+            }
+            Packet::PubComp { packet_id } => {
+                let mut b = Vec::new();
+                write_u16(&mut b, *packet_id);
+                (T_PUBCOMP, 0, b)
+            }
             Packet::Subscribe { packet_id, filter } => {
                 let mut b = Vec::new();
                 write_u16(&mut b, *packet_id);
@@ -400,6 +430,15 @@ impl Packet<'_> {
             T_PUBACK => Packet::PubAck {
                 packet_id: read_u16(&body, &mut at)?,
             },
+            T_PUBREC => Packet::PubRec {
+                packet_id: read_u16(&body, &mut at)?,
+            },
+            T_PUBREL => Packet::PubRel {
+                packet_id: read_u16(&body, &mut at)?,
+            },
+            T_PUBCOMP => Packet::PubComp {
+                packet_id: read_u16(&body, &mut at)?,
+            },
             T_SUBSCRIBE => {
                 let packet_id = read_u16(&body, &mut at)?;
                 let filter = read_str(&body, &mut at)?;
@@ -467,6 +506,17 @@ mod tests {
                 dup: true,
             },
             Packet::PubAck { packet_id: 42 },
+            Packet::Publish {
+                topic: "heteroedge/frames".into(),
+                payload: vec![9, 9, 9].into(),
+                qos: QoS::ExactlyOnce,
+                packet_id: 77,
+                retain: false,
+                dup: false,
+            },
+            Packet::PubRec { packet_id: 77 },
+            Packet::PubRel { packet_id: 77 },
+            Packet::PubComp { packet_id: 77 },
             Packet::Subscribe {
                 packet_id: 7,
                 filter: "profile/#".into(),
@@ -713,6 +763,33 @@ mod tests {
     fn qos_from_u8() {
         assert_eq!(QoS::from_u8(0).unwrap(), QoS::AtMostOnce);
         assert_eq!(QoS::from_u8(1).unwrap(), QoS::AtLeastOnce);
-        assert!(QoS::from_u8(2).is_err());
+        assert_eq!(QoS::from_u8(2).unwrap(), QoS::ExactlyOnce);
+        assert!(QoS::from_u8(3).is_err());
+    }
+
+    #[test]
+    fn pubrel_carries_the_reserved_flag_nibble() {
+        // §3.6.1: PUBREL is the one ack whose fixed-header flags are
+        // 0b0010, not 0b0000 — conforming receivers may reject otherwise
+        let bytes = Packet::PubRel { packet_id: 9 }.encode();
+        assert_eq!(bytes[0], (T_PUBREL << 4) | 0b0010);
+        // its siblings keep the zero nibble
+        assert_eq!(Packet::PubRec { packet_id: 9 }.encode()[0], T_PUBREC << 4);
+        assert_eq!(Packet::PubComp { packet_id: 9 }.encode()[0], T_PUBCOMP << 4);
+    }
+
+    #[test]
+    fn qos2_publish_flags_roundtrip() {
+        let p = Packet::Publish {
+            topic: "t".into(),
+            payload: vec![1].into(),
+            qos: QoS::ExactlyOnce,
+            packet_id: 5,
+            retain: true,
+            dup: true,
+        };
+        let bytes = p.encode();
+        assert_eq!(bytes[0] & 0x06, 0x04, "qos 2 is bits 2-1 = 0b10");
+        assert_eq!(roundtrip(p.clone()), p);
     }
 }

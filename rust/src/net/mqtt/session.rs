@@ -1,10 +1,12 @@
-//! QoS 1 session state: packet-id assignment and duplicate detection.
+//! QoS 1/2 session state: packet-id assignment, duplicate detection,
+//! and the QoS 2 two-phase bookkeeping.
 //!
-//! The broker keeps one [`PacketIds`] allocator and one [`DedupRing`]
-//! per client-id session (see `broker.rs`). They live in their own
-//! module because their invariants are the protocol-critical ones —
-//! an id is never 0, never reused while inflight, and wraps through
-//! 65535 — and they are prop-tested directly (`tests/prop_net.rs`)
+//! The broker keeps one [`PacketIds`] allocator, one [`DedupRing`], and
+//! one [`Qos2Held`] store per client-id session (see `broker.rs`). They
+//! live in their own module because their invariants are the
+//! protocol-critical ones — an id is never 0, never reused while
+//! inflight, wraps through 65535, and a QoS 2 id routes exactly once
+//! per hold — and they are prop-tested directly (`tests/prop_net.rs`)
 //! without standing up a broker.
 
 use std::collections::VecDeque;
@@ -86,6 +88,82 @@ impl DedupRing {
     }
 }
 
+/// Sender-side QoS 2 handshake phase for one inflight message.
+///
+/// Phase 1 (`AwaitingPubRec`): the PUBLISH is out; on reconnect it is
+/// re-published under its original packet id with DUP=1. Phase 2
+/// (`AwaitingPubComp`): the receiver's PUBREC arrived and the payload
+/// will never be re-sent — on reconnect only the PUBREL is replayed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Qos2Phase {
+    /// PUBLISH sent, PUBREC not yet received (re-publish on resume).
+    AwaitingPubRec,
+    /// PUBREL sent, PUBCOMP not yet received (re-PUBREL on resume).
+    AwaitingPubComp,
+}
+
+/// Receiver-side QoS 2 exactly-once store: the packet ids of inbound
+/// QoS 2 PUBLISHes that have been routed/delivered but whose PUBREL has
+/// not yet arrived (spec §4.3.3 "method A"). A re-PUBLISH under a held
+/// id is acknowledged with PUBREC but **not** routed again — this is
+/// the protocol-level dedup that replaces the QoS 1 seen-ring for
+/// QoS 2 flows. Bounded like the dedup ring so a peer that never sends
+/// PUBREL cannot grow the store without limit.
+#[derive(Debug, Clone, Default)]
+pub struct Qos2Held {
+    ids: VecDeque<u16>,
+}
+
+/// How many released-pending packet ids a session holds at once. A
+/// well-behaved sender's holds clear at PUBREL, so this bound only
+/// matters against a peer that abandons handshakes; it comfortably
+/// exceeds any inflight window the broker will run.
+pub const QOS2_HELD_CAPACITY: usize = 1024;
+
+impl Qos2Held {
+    /// Is this inbound id mid-handshake (already routed, PUBREL
+    /// pending)?
+    pub fn contains(&self, id: u16) -> bool {
+        self.ids.contains(&id)
+    }
+
+    /// Record a newly routed inbound id. Returns `true` if the id was
+    /// fresh (the caller should route), `false` if it was already held
+    /// (a retransmit — PUBREC again, but do not route). Past capacity
+    /// the oldest abandoned hold is evicted.
+    pub fn hold(&mut self, id: u16) -> bool {
+        if self.contains(id) {
+            return false;
+        }
+        if self.ids.len() == QOS2_HELD_CAPACITY {
+            self.ids.pop_front();
+        }
+        self.ids.push_back(id);
+        true
+    }
+
+    /// PUBREL arrived: the handshake for `id` is complete. Returns
+    /// whether the id was actually held (a spurious PUBREL still gets
+    /// its PUBCOMP, it just releases nothing).
+    pub fn release(&mut self, id: u16) -> bool {
+        match self.ids.iter().position(|&h| h == id) {
+            Some(at) => {
+                self.ids.remove(at);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +192,30 @@ mod tests {
     fn exhausted_id_space_returns_none() {
         let mut ids = PacketIds::new();
         assert_eq!(ids.assign(|_| true), None);
+    }
+
+    #[test]
+    fn qos2_hold_routes_exactly_once_per_id() {
+        let mut held = Qos2Held::default();
+        assert!(held.hold(42), "first PUBLISH routes");
+        assert!(!held.hold(42), "retransmit must not route again");
+        assert!(held.contains(42));
+        assert!(held.release(42), "PUBREL clears the hold");
+        assert!(!held.release(42), "double PUBREL releases nothing");
+        assert!(held.hold(42), "a completed id is reusable");
+    }
+
+    #[test]
+    fn qos2_held_store_is_bounded() {
+        let mut held = Qos2Held::default();
+        for id in 1..=QOS2_HELD_CAPACITY as u32 {
+            assert!(held.hold(id as u16));
+        }
+        assert_eq!(held.len(), QOS2_HELD_CAPACITY);
+        assert!(held.hold(60_000));
+        assert_eq!(held.len(), QOS2_HELD_CAPACITY, "capacity must hold");
+        assert!(!held.contains(1), "oldest abandoned hold evicted");
+        assert!(held.contains(60_000));
     }
 
     #[test]

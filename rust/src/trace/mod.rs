@@ -117,6 +117,11 @@ pub enum EventKind {
     /// `heteroedge/status/<node>` (QoS 1 runs; emitted at the sim-clock
     /// kill instant in both transports so traces stay byte-identical).
     WillFired,
+    /// A joining or reviving node seeded its throughput estimator from
+    /// the broker's retained `heteroedge/profile/<node>` view instead
+    /// of starting cold (node = the seeded node, value = the seeded
+    /// secs/image estimate).
+    ProfileSeed,
 }
 
 impl EventKind {
@@ -150,6 +155,7 @@ impl EventKind {
             EventKind::Heal => "heal",
             EventKind::Failback => "failback",
             EventKind::WillFired => "will_fired",
+            EventKind::ProfileSeed => "profile_seed",
         }
     }
 
@@ -180,12 +186,13 @@ impl EventKind {
             | EventKind::Partition
             | EventKind::Heal
             | EventKind::Failback
-            | EventKind::WillFired => "churn",
+            | EventKind::WillFired
+            | EventKind::ProfileSeed => "churn",
         }
     }
 
     /// Every kind, in lifecycle order (docs + exhaustiveness tests).
-    pub const ALL: [EventKind; 27] = [
+    pub const ALL: [EventKind; 28] = [
         EventKind::Ingest,
         EventKind::Admit,
         EventKind::Degrade,
@@ -213,6 +220,7 @@ impl EventKind {
         EventKind::Heal,
         EventKind::Failback,
         EventKind::WillFired,
+        EventKind::ProfileSeed,
     ];
 }
 

@@ -562,6 +562,109 @@ fn qos1_churn_redelivers_every_parked_frame() {
     }
 }
 
+/// QoS 2 exactly-once over the same schedule: zero frames lost AND zero
+/// double-serves — `completed == admitted - deduped` per stream proves
+/// each admitted frame was served exactly once — for every DrainMode ×
+/// Transport combination, deterministically. Unlike QoS 1 this does not
+/// lean on the bounded dedup rings: over `Transport::Mqtt` every
+/// offloaded frame walks the full PUBLISH → PUBREC → PUBREL → PUBCOMP
+/// handshake through the broker's phase-tracked inflight window, and
+/// the revive resumes the handshake mid-phase. The run also exercises
+/// the §III profile loop: the JoinAux joiner and the revived aux both
+/// seed their throughput estimators from the retained profile view.
+#[test]
+fn qos2_churn_is_exactly_once_without_the_dedup_rings() {
+    for drain in [DrainMode::Batched, DrainMode::Pipelined] {
+        for transport in [Transport::Sim, Transport::Mqtt] {
+            let run = || -> FleetReport {
+                churn_reference_dispatcher_qos(drain, transport, QoS::ExactlyOnce)
+                    .run()
+                    .unwrap()
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(
+                a,
+                b,
+                "{} drain over {transport:?} diverged across same-seed qos-2 runs",
+                drain.name()
+            );
+            assert_eq!(a.render(), b.render());
+
+            let c = a.churn.as_ref().expect("a faulted run must carry a churn ledger");
+            assert_eq!(c.fault_events, 5, "every scheduled fault must fire");
+            assert_eq!(
+                c.frames_lost,
+                0,
+                "exactly-once must lose nothing ({} over {transport:?})",
+                drain.name()
+            );
+            if drain == DrainMode::Batched {
+                assert!(c.frames_redelivered > 0, "loaded aux inbox never redelivered");
+            }
+            for s in &a.streams {
+                assert_eq!(s.lost, 0, "{}", s.name);
+                assert_eq!(
+                    s.completed,
+                    s.admitted - s.deduped,
+                    "{} was double-served or silently dropped",
+                    s.name
+                );
+            }
+            // the profile loop fired once for the joiner and once for the
+            // revived aux — and nowhere else on this schedule
+            assert_eq!(
+                a.profile_bootstraps, 2,
+                "JoinAux and the aux revive must each seed from the retained view"
+            );
+            assert!(
+                a.render().contains("2 estimator bootstraps"),
+                "the report must surface the profile loop"
+            );
+        }
+    }
+}
+
+/// The §III profile loop closes on join: a node added mid-run seeds its
+/// [`ThroughputEwma`] from the fleet's retained `heteroedge/profile/+`
+/// view instead of starting cold — the estimator is inside the shed
+/// bound in the join round itself (zero rounds of samples), where a
+/// cold-start estimator has no estimate at all until its first full
+/// round. The seed lands in the trace as a `profile_seed` instant.
+#[test]
+fn profile_bootstrap_seeds_the_joining_estimator() {
+    use heteroedge::fleet::ThroughputEwma;
+
+    let mut d = churn_reference_dispatcher_qos(
+        DrainMode::Batched,
+        Transport::Sim,
+        QoS::ExactlyOnce,
+    );
+    d.enable_tracing(65_536);
+    let rep = d.run().unwrap();
+    assert_eq!(rep.profile_bootstraps, 2, "join + revive each bootstrap");
+    let json = d.trace_sink().expect("tracing on").chrome_json();
+    assert!(
+        json.contains("profile_seed"),
+        "estimator seeding must land in the trace taxonomy"
+    );
+
+    // The convergence contrast the bootstrap buys: seeded from the
+    // sibling profiles, the joiner's estimator answers inside the shed
+    // bound before it has processed a single frame; cold, it answers
+    // nothing until its first observation arrives a round later.
+    let sibling_mean = 0.2;
+    let mut seeded = ThroughputEwma::new(0.3);
+    seeded.observe(sibling_mean);
+    let cold = ThroughputEwma::new(0.3);
+    assert!(cold.estimate().is_none(), "cold start has no round-0 estimate");
+    let est = seeded.estimate().expect("seeded estimator answers at round 0");
+    assert!(
+        est > 0.5 * sibling_mean && est < 2.0 * sibling_mean,
+        "seed {est} must sit inside the 2x shed bound of the sibling anchor"
+    );
+}
+
 /// Gray-failure acceptance: every scenario generator (`sustained`
 /// Poisson churn, `brownout` degradation, even/odd `partition`) is
 /// deterministic end to end — same seed and config reproduce a

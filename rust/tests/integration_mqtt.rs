@@ -2,7 +2,7 @@
 
 use std::time::Duration;
 
-use heteroedge::net::mqtt::{Broker, Client, LastWill, Packet, QoS};
+use heteroedge::net::mqtt::{Broker, BrokerConfig, Client, LastWill, Packet, QoS};
 
 fn setup() -> (Broker, std::net::SocketAddr) {
     let b = Broker::start().unwrap();
@@ -660,6 +660,300 @@ fn retained_will_reaches_a_late_subscriber() {
         .recv_timeout(Duration::from_secs(5))
         .expect("retained will must replay to a late subscriber");
     assert_eq!(msg.payload, b"offline");
+}
+
+#[test]
+fn qos2_publish_is_delivered_exactly_once() {
+    // Client-level QoS 2: every publish walks the full
+    // PUBLISH → PUBREC → PUBREL → PUBCOMP exchange and the subscriber's
+    // inbox sees each message exactly once, in order.
+    let (b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("eo/t").unwrap();
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    for i in 0..20u32 {
+        publ.publish("eo/t", &i.to_le_bytes(), QoS::ExactlyOnce, false)
+            .unwrap();
+    }
+    for i in 0..20u32 {
+        let msg = sub
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|| panic!("missing QoS 2 message {i}"));
+        assert_eq!(msg.payload, i.to_le_bytes());
+    }
+    assert!(
+        sub.recv_timeout(Duration::from_millis(300)).is_none(),
+        "exactly-once must not double-deliver"
+    );
+    // every handshake completed: nothing held, nothing pending PUBCOMP
+    assert!(b.pubrec_held_counts().is_empty());
+    assert!(b.pubrel_pending_counts().is_empty());
+}
+
+#[test]
+fn qos2_republish_of_a_held_id_is_not_rerouted() {
+    // §4.3.3 "method A": the broker routes a QoS 2 publish at the first
+    // PUBLISH of a packet id and holds the id until PUBREL. A retransmit
+    // of the held id gets its PUBREC but must never route again; after
+    // PUBREL releases the id, the same id is a fresh message.
+    let (b, addr) = setup();
+    let mut sub = Client::connect(addr, "sub").unwrap();
+    sub.subscribe("eo/dup").unwrap();
+    let (mut raw, _) = raw_connect(addr, "rawq2", false);
+    let send_pub = |raw: &mut std::net::TcpStream, payload: &[u8], dup: bool| {
+        Packet::Publish {
+            topic: "eo/dup".to_string(),
+            payload: payload.into(),
+            qos: QoS::ExactlyOnce,
+            packet_id: 7,
+            retain: false,
+            dup,
+        }
+        .write_to(raw)
+        .unwrap();
+        assert!(matches!(
+            Packet::read_from(raw).unwrap(),
+            Packet::PubRec { packet_id: 7 }
+        ));
+    };
+    send_pub(&mut raw, b"first", false);
+    assert_eq!(b.pubrec_held_counts(), vec![("rawq2".to_string(), 1)]);
+    // retransmit before PUBREL: PUBREC again, but no second routing
+    send_pub(&mut raw, b"first", true);
+    assert_eq!(
+        sub.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"first"
+    );
+    assert!(
+        sub.recv_timeout(Duration::from_millis(300)).is_none(),
+        "held id must route exactly once"
+    );
+    assert_eq!(
+        b.stats.dup_drops.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    // PUBREL commits the handshake and releases the id
+    Packet::PubRel { packet_id: 7 }.write_to(&mut raw).unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw).unwrap(),
+        Packet::PubComp { packet_id: 7 }
+    ));
+    assert!(b.pubrec_held_counts().is_empty());
+    // the released id carries a fresh message
+    send_pub(&mut raw, b"second", false);
+    assert_eq!(
+        sub.recv_timeout(Duration::from_secs(5)).unwrap().payload,
+        b"second"
+    );
+}
+
+#[test]
+fn qos2_phase1_resume_republishes_with_dup() {
+    // A subscriber that dies before sending PUBREC resumes into phase 1:
+    // the broker re-publishes the payload under the original packet id
+    // with DUP=1, then the handshake completes normally.
+    let (b, addr) = setup();
+    let (mut raw, _) = raw_connect(addr, "q2p1", false);
+    Packet::Subscribe {
+        packet_id: 1,
+        filter: "eo/p1".to_string(),
+    }
+    .write_to(&mut raw)
+    .unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw).unwrap(),
+        Packet::SubAck { packet_id: 1 }
+    ));
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("eo/p1", b"phase1", QoS::ExactlyOnce, false)
+        .unwrap();
+    let pid = match Packet::read_from(&mut raw).unwrap() {
+        Packet::Publish {
+            qos, packet_id, dup, ..
+        } => {
+            assert_eq!(qos, QoS::ExactlyOnce);
+            assert!(!dup);
+            packet_id
+        }
+        other => panic!("expected QoS 2 PUBLISH, got {other:?}"),
+    };
+    // die without PUBREC
+    raw.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(raw);
+    std::thread::sleep(Duration::from_millis(300));
+    let (mut raw2, present) = raw_connect(addr, "q2p1", false);
+    assert!(present);
+    match Packet::read_from(&mut raw2).unwrap() {
+        Packet::Publish {
+            payload,
+            qos,
+            packet_id,
+            dup,
+            ..
+        } => {
+            assert_eq!(payload.as_ref(), b"phase1");
+            assert_eq!(qos, QoS::ExactlyOnce);
+            assert_eq!(packet_id, pid, "phase-1 resume keeps the original id");
+            assert!(dup, "phase-1 re-publish must set DUP");
+        }
+        other => panic!("expected DUP re-publish, got {other:?}"),
+    }
+    Packet::PubRec { packet_id: pid }.write_to(&mut raw2).unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw2).unwrap(),
+        Packet::PubRel { packet_id } if packet_id == pid
+    ));
+    Packet::PubComp { packet_id: pid }
+        .write_to(&mut raw2)
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(b.inflight_counts(), vec![("q2p1".to_string(), 0)]);
+}
+
+#[test]
+fn qos2_phase2_resume_replays_only_the_pubrel() {
+    // A subscriber that PUBRECs and then dies resumes into phase 2: the
+    // broker replays the bare PUBREL — never the payload, which the
+    // receiver already holds.
+    let (b, addr) = setup();
+    let (mut raw, _) = raw_connect(addr, "q2p2", false);
+    Packet::Subscribe {
+        packet_id: 1,
+        filter: "eo/p2".to_string(),
+    }
+    .write_to(&mut raw)
+    .unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw).unwrap(),
+        Packet::SubAck { packet_id: 1 }
+    ));
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    publ.publish("eo/p2", b"phase2", QoS::ExactlyOnce, false)
+        .unwrap();
+    let pid = match Packet::read_from(&mut raw).unwrap() {
+        Packet::Publish { packet_id, .. } => packet_id,
+        other => panic!("expected PUBLISH, got {other:?}"),
+    };
+    Packet::PubRec { packet_id: pid }.write_to(&mut raw).unwrap();
+    assert!(matches!(
+        Packet::read_from(&mut raw).unwrap(),
+        Packet::PubRel { packet_id } if packet_id == pid
+    ));
+    assert_eq!(b.pubrel_pending_counts(), vec![("q2p2".to_string(), 1)]);
+    // die without PUBCOMP
+    raw.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(raw);
+    std::thread::sleep(Duration::from_millis(300));
+    let (mut raw2, present) = raw_connect(addr, "q2p2", false);
+    assert!(present);
+    match Packet::read_from(&mut raw2).unwrap() {
+        Packet::PubRel { packet_id } => {
+            assert_eq!(packet_id, pid, "phase-2 resume replays the original id");
+        }
+        other => panic!("expected bare PUBREL (no re-publish), got {other:?}"),
+    }
+    Packet::PubComp { packet_id: pid }
+        .write_to(&mut raw2)
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(b.pubrel_pending_counts().is_empty());
+    assert_eq!(b.inflight_counts(), vec![("q2p2".to_string(), 0)]);
+}
+
+#[test]
+fn window_of_one_still_drains_a_deep_backlog_in_order() {
+    // The inflight window is now broker configuration: the degenerate
+    // window of 1 serializes every delivery behind its ack but must
+    // still drain a deep offline backlog completely and in order.
+    let b = Broker::start_with(BrokerConfig { inflight_window: 1 }).unwrap();
+    assert_eq!(b.inflight_window(), 1);
+    let addr = b.addr();
+    let mut sub = Client::connect_with(addr, "narrow", false, 0).unwrap();
+    sub.subscribe("win/one").unwrap();
+    sub.disconnect().unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    let mut publ = Client::connect(addr, "pub").unwrap();
+    for i in 0..40u32 {
+        publ.publish("win/one", &i.to_le_bytes(), QoS::AtLeastOnce, false)
+            .unwrap();
+    }
+    // the resumed client's reader acks each delivery, releasing the next
+    let sub2 = Client::connect_with(addr, "narrow", false, 0).unwrap();
+    assert!(sub2.session_present());
+    for i in 0..40u32 {
+        let msg = sub2
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|| panic!("backlog stalled at message {i}"));
+        assert_eq!(msg.payload, i.to_le_bytes(), "in publish order");
+    }
+    assert!(sub2.recv_timeout(Duration::from_millis(300)).is_none());
+}
+
+#[test]
+fn zero_inflight_window_is_rejected() {
+    assert!(
+        Broker::start_with(BrokerConfig { inflight_window: 0 }).is_err(),
+        "a window of 0 can never deliver anything"
+    );
+}
+
+#[test]
+fn pending_ack_map_is_bounded_and_expires() {
+    use heteroedge::net::mqtt::client::PENDING_ACK_CAP;
+    // A peer that showers the client with acks for handshakes that never
+    // complete must not grow the pending-ack map without bound; parked
+    // entries older than the ack deadline are expired.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        match Packet::read_from(&mut s).unwrap() {
+            Packet::Connect { .. } => {}
+            other => panic!("expected CONNECT, got {other:?}"),
+        }
+        Packet::ConnAck {
+            session_present: false,
+            return_code: 0,
+        }
+        .write_to(&mut s)
+        .unwrap();
+        let sid1 = match Packet::read_from(&mut s).unwrap() {
+            Packet::Subscribe { packet_id, .. } => packet_id,
+            other => panic!("expected SUBSCRIBE, got {other:?}"),
+        };
+        // a flood of stray acks the client will park, then the SUBACK
+        for i in 0..(PENDING_ACK_CAP as u16 + 6) {
+            Packet::PubAck {
+                packet_id: 1000 + i,
+            }
+            .write_to(&mut s)
+            .unwrap();
+        }
+        Packet::SubAck { packet_id: sid1 }.write_to(&mut s).unwrap();
+        let sid2 = match Packet::read_from(&mut s).unwrap() {
+            Packet::Subscribe { packet_id, .. } => packet_id,
+            other => panic!("expected SUBSCRIBE, got {other:?}"),
+        };
+        // one more stray: parking it expires the stale flood
+        Packet::PubAck { packet_id: 5 }.write_to(&mut s).unwrap();
+        Packet::SubAck { packet_id: sid2 }.write_to(&mut s).unwrap();
+    });
+    let mut c = Client::connect(addr, "flooded").unwrap();
+    c.subscribe("a").unwrap();
+    assert_eq!(
+        c.parked_acks(),
+        PENDING_ACK_CAP,
+        "flood must be capped, not accumulated"
+    );
+    c.set_ack_timeout(Duration::from_millis(100));
+    std::thread::sleep(Duration::from_millis(150));
+    c.subscribe("b").unwrap();
+    assert_eq!(
+        c.parked_acks(),
+        1,
+        "stale parked acks past the deadline must be expired"
+    );
+    server.join().unwrap();
 }
 
 #[test]

@@ -1,7 +1,8 @@
 //! Property tests: coordinator invariants — batching conservation,
-//! scheduler output ranges, β hysteresis, testbed accounting.
+//! scheduler output ranges, β hysteresis, testbed accounting, profile
+//! wire-format round-trips.
 
-use heteroedge::coordinator::{Batcher, RunConfig, SplitMode, Testbed};
+use heteroedge::coordinator::{Batcher, DeviceProfileMsg, RunConfig, SplitMode, Testbed};
 use heteroedge::frames::SceneGenerator;
 use heteroedge::mobility::BetaThreshold;
 use heteroedge::net::Band;
@@ -139,6 +140,48 @@ fn prop_static_run_accounting() {
             prop_assert(rep.t3_s == 0.0, "phantom offload latency")?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_profile_msg_roundtrip_is_exact() {
+    check("profile msg roundtrip", 80, |g| {
+        let m = DeviceProfileMsg {
+            at: g.f64_in(0.0, 1e6),
+            mem_pct: g.f64_in(0.0, 100.0),
+            power_w: g.f64_in(0.0, 50.0),
+            busy: g.f64_in(0.0, 1.0),
+            secs_per_image: g.f64_in(1e-6, 10.0),
+            p_available_w: g.f64_in(-5.0, 25.0),
+        };
+        let wire = m.encode();
+        prop_assert(wire.len() == 48, format!("wire length {}", wire.len()))?;
+        let back = DeviceProfileMsg::decode(&wire).map_err(|e| e.to_string())?;
+        // bit-for-bit: the retained profile view must equal the publisher's
+        prop_assert(back == m, "f64 LE round-trip must be exact")
+    });
+}
+
+#[test]
+fn prop_profile_msg_decode_never_panics() {
+    check("profile msg fuzz", 150, |g| {
+        // truncated, oversized, and garbage payloads: decode must return a
+        // clean Err (or a fully finite message at the exact wire length) —
+        // never panic, whatever the bytes
+        let len = g.usize_in(0, 96);
+        let bytes: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        match DeviceProfileMsg::decode(&bytes) {
+            Err(_) => Ok(()),
+            Ok(m) => {
+                prop_assert(len == 48, format!("accepted wrong length {len}"))?;
+                prop_assert(
+                    [m.at, m.mem_pct, m.power_w, m.busy, m.secs_per_image]
+                        .iter()
+                        .all(|v| v.is_finite()),
+                    "validated fields must be finite on Ok",
+                )
+            }
+        }
     });
 }
 
